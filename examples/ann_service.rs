@@ -1,0 +1,78 @@
+//! ANN search service: build the Alg. 3 graph once, then serve nearest-
+//! neighbor queries from it (§4.3's application of the KNN graph).
+//!
+//! Reports per-query latency and recall against exact search — the
+//! serving-side numbers behind the paper's "<3 ms per query at recall
+//! >0.9" claim (at their 100M scale; this runs the same pipeline at a
+//! laptop scale).
+//!
+//! ```bash
+//! cargo run --release --example ann_service -- [--n 20000] [--queries 500] [--ef 64]
+//! ```
+
+use gkmeans::data::synth;
+use gkmeans::gkm::ann::{self, SearchParams};
+use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::runtime::Backend;
+use gkmeans::util::cli;
+use gkmeans::util::rng::Rng;
+use gkmeans::util::timer::Timer;
+
+fn main() {
+    let args = cli::parse_env(&["n", "queries", "ef", "kappa", "tau"]);
+    let n = args.usize_or("n", 20_000);
+    let nq = args.usize_or("queries", 500);
+    let ef = args.usize_or("ef", 64);
+    let kappa = args.usize_or("kappa", 20);
+    let tau = args.usize_or("tau", 16);
+    let backend = Backend::auto();
+
+    println!("indexing: n={n} SIFT-like descriptors, kappa={kappa}, tau={tau}");
+    let data = synth::sift_like(n, 20170707);
+    let build = construct::build(
+        &data,
+        &ConstructParams { kappa, xi: 50, tau, seed: 1 },
+        &backend,
+    );
+    println!("graph built in {:.2}s", build.total_seconds);
+
+    // serve queries
+    let mut rng = Rng::new(99);
+    let sp = SearchParams { ef, entries: 48, seed: 5 };
+    let mut latencies = Vec::with_capacity(nq);
+    let mut hits = 0usize;
+    for _ in 0..nq {
+        let qi = rng.below(n);
+        let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.5 * rng.normal()).collect();
+        // exact answer for recall accounting
+        let mut best = f32::INFINITY;
+        let mut want = 0u32;
+        for j in 0..n {
+            let dd = gkmeans::core_ops::dist::d2(&q, data.row(j));
+            if dd < best {
+                best = dd;
+                want = j as u32;
+            }
+        }
+        let t = Timer::start();
+        let (res, _) = ann::search(&data, &build.graph, &q, 10, &sp, &mut rng);
+        latencies.push(t.elapsed_s());
+        if res.first().map(|r| r.1) == Some(want) {
+            hits += 1;
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = latencies.iter().sum::<f64>() / nq as f64;
+    println!("served {nq} queries (top-10, ef={ef}):");
+    println!("  recall@1 = {:.3}", hits as f64 / nq as f64);
+    println!(
+        "  latency: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+        mean * 1e3,
+        latencies[nq / 2] * 1e3,
+        latencies[(nq * 99 / 100).min(nq - 1)] * 1e3
+    );
+    println!(
+        "  throughput: {:.0} queries/s (single thread)",
+        1.0 / mean
+    );
+}

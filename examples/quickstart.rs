@@ -1,0 +1,39 @@
+//! Quickstart: cluster a synthetic dataset with GK-means in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::gkm::{self, gkmeans::GkMeansParams};
+use gkmeans::runtime::Backend;
+
+fn main() {
+    // 10K 32-d points with blob structure.
+    let data = blobs(&BlobSpec::quick(10_000, 32, 64), 42);
+
+    // PJRT-compiled Pallas kernels when `make artifacts` has run; the
+    // native mirror otherwise.
+    let backend = Backend::auto();
+
+    // GK-means end to end: Alg. 3 builds the KNN graph, Alg. 2 clusters
+    // with it. κ = 20 neighbors consulted per sample.
+    let params = GkMeansParams { kappa: 20, ..Default::default() };
+    let out = gkm::cluster(&data, 100, &params, &backend);
+
+    println!("clustered n={} into k=100 on backend={}", data.rows(), backend.name());
+    println!("distortion      = {:.4}", out.distortion());
+    println!("total time      = {:.2}s (init {:.2}s)", out.total_seconds, out.init_seconds);
+    println!("epochs run      = {}", out.history.len() - 1);
+    let sizes: Vec<u32> = out.clustering.counts.clone();
+    println!(
+        "cluster sizes   = min {} / median {} / max {}",
+        sizes.iter().min().unwrap(),
+        {
+            let mut s = sizes.clone();
+            s.sort_unstable();
+            s[s.len() / 2]
+        },
+        sizes.iter().max().unwrap()
+    );
+}

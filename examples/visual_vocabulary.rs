@@ -1,0 +1,105 @@
+//! End-to-end driver: visual-vocabulary construction — the workload the
+//! paper's introduction motivates (large-scale image retrieval needs 10⁴–
+//! 10⁶ visual words from SIFT descriptors, and k-means is the bottleneck).
+//!
+//! Pipeline, all three layers composing:
+//!   1. dataset: SIFT-like descriptors (synthetic stand-in; drop a real
+//!      `.fvecs` path in `--data` to use SIFT1M);
+//!   2. GK-means builds its KNN graph (Alg. 3) and clusters into k visual
+//!      words (Alg. 2) — bulk distance math running through the
+//!      AOT-compiled Pallas kernel on PJRT when artifacts exist;
+//!   3. baselines (BKM, Lloyd, closure, Mini-Batch) on the same data;
+//!   4. report: per-method time/distortion, the GK-means speed-up factors,
+//!      and a quantization demo (assigning unseen descriptors to words).
+//!
+//! This run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! cargo run --release --example visual_vocabulary -- [--n 30000] [--k 300]
+//! ```
+
+use gkmeans::coordinator::job::{ClusterJob, Method};
+use gkmeans::coordinator::pipeline;
+use gkmeans::data::DatasetSpec;
+use gkmeans::eval::report::{f, Table};
+use gkmeans::runtime::Backend;
+use gkmeans::util::cli;
+
+fn main() {
+    let args = cli::parse_env(&["n", "k", "data", "iters"]);
+    let n = args.usize_or("n", 30_000);
+    let k = args.usize_or("k", 300);
+    let iters = args.usize_or("iters", 20);
+    let backend = Backend::auto();
+
+    let spec = match args.get("data") {
+        Some(path) => DatasetSpec::File { path: path.into() },
+        None => DatasetSpec::Synth { kind: "sift".into(), n, seed: 20170707 },
+    };
+    let data = spec.load().expect("dataset");
+    println!(
+        "visual vocabulary: n={} d={} -> k={k} words (backend={})",
+        data.rows(),
+        data.dim(),
+        backend.name()
+    );
+
+    let mut table = Table::new(&["method", "init_s", "iter_s", "total_s", "distortion", "speedup_vs_bkm"]);
+    let mut results = Vec::new();
+    for &m in &[Method::GkMeans, Method::Closure, Method::MiniBatch, Method::Boost, Method::Lloyd] {
+        let mut job = ClusterJob::new(spec.clone(), m, k);
+        job.kappa = 30;
+        job.tau = 8;
+        job.base.max_iters = iters;
+        let r = pipeline::run_job_on(&job, &data, &backend);
+        println!(
+            "  {:<18} total={:>7.2}s  E={:.2}",
+            m.name(),
+            r.total_seconds,
+            r.distortion
+        );
+        results.push(r);
+    }
+    let bkm_total = results
+        .iter()
+        .find(|r| r.method == Method::Boost)
+        .map(|r| r.total_seconds)
+        .unwrap_or(f64::NAN);
+    for r in &results {
+        table.row(&[
+            r.method.name().into(),
+            f(r.init_seconds),
+            f(r.iter_seconds),
+            f(r.total_seconds),
+            f(r.distortion),
+            format!("{:.1}x", bkm_total / r.total_seconds),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    // --- quantization demo: assign 1000 unseen descriptors to words ---
+    // re-run GK-means through the library API to get the actual vocabulary
+    let vocab = gkmeans::gkm::cluster(
+        &data,
+        k,
+        &gkmeans::gkm::gkmeans::GkMeansParams {
+            kappa: 30,
+            base: gkmeans::kmeans::common::KmeansParams { max_iters: iters, ..Default::default() },
+        },
+        &backend,
+    );
+    let centroids = vocab.clustering.centroids();
+    let unseen = gkmeans::data::synth::sift_like(1_000, 777);
+    let timer = gkmeans::util::timer::Timer::start();
+    let acc = backend.assign_blocks(unseen.flat(), centroids.flat(), data.dim(), k);
+    let q_secs = timer.elapsed_s();
+    let used: std::collections::HashSet<u32> = acc.idx.iter().copied().collect();
+    println!(
+        "quantized 1000 unseen descriptors in {:.1} ms ({} distinct words used)",
+        q_secs * 1e3,
+        used.len()
+    );
+    table
+        .write_csv(&gkmeans::eval::report::results_dir().join("visual_vocabulary.csv"))
+        .ok();
+}

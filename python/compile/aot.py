@@ -1,0 +1,116 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO *text* artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per data dimension D in ``DIMS``:
+
+    block_l2_d{D}.hlo.txt          (256 x D, 256 x D) -> 256 x 256
+    block_l2_small_d{D}.hlo.txt    ( 64 x D,  64 x D) ->  64 x 64
+    assign_argmin_d{D}.hlo.txt     (256 x D, 256 x D) -> (i32 256, f32 256)
+    bisect_assign_d{D}.hlo.txt     (256 x D,   2 x D) -> (i32 256, f32 256)
+    centroid_update_d{D}.hlo.txt   (256 x D, i32 256) -> (256 x D, 256)
+
+plus ``manifest.tsv`` (entry<TAB>dim<TAB>bm<TAB>bn<TAB>outputs<TAB>file) that
+the Rust runtime reads to discover artifacts.
+
+HLO **text** is the interchange format, NOT ``lowered.compile().serialize()``
+or the HloModuleProto bytes: jax >= 0.5 emits protos with 64-bit instruction
+ids that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Data dimensions we pre-compile for: test/quickstart (32), GloVe (100),
+# SIFT (128), VLAD (512), GIST (960).
+DIMS = (32, 100, 128, 512, 960)
+BM = 256  # large block: assignment / bisection tiles
+BS = 64   # small block: within-cell KNN refinement (cell size xi ~= 50)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries_for_dim(d: int):
+    """(name, fn, example-arg specs, #outputs) for one data dimension."""
+    return [
+        ("block_l2", model.block_l2, (_spec((BM, d)), _spec((BM, d))), 1),
+        ("block_l2_small", model.block_l2, (_spec((BS, d)), _spec((BS, d))), 1),
+        ("assign_argmin", model.assign_argmin, (_spec((BM, d)), _spec((BM, d))), 2),
+        ("bisect_assign", model.bisect_assign, (_spec((BM, d)), _spec((2, d))), 2),
+        (
+            "centroid_update",
+            lambda x, l: model.centroid_update(x, l, BM),
+            (_spec((BM, d)), _spec((BM,), jnp.int32)),
+            2,
+        ),
+    ]
+
+
+def build(out_dir: str, dims=DIMS, verbose: bool = True) -> list[tuple]:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for d in dims:
+        for name, fn, specs, nout in entries_for_dim(d):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_d{d}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            bm = specs[0].shape[0]
+            bn = specs[1].shape[0] if len(specs[1].shape) == 2 else 0
+            digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+            rows.append((name, d, bm, bn, nout, fname, digest))
+            if verbose:
+                print(f"  {fname:36s} {len(text):>9d} chars  sha={digest}")
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# entry\tdim\tbm\tbn\toutputs\tfile\tsha256_12\n")
+        for r in rows:
+            f.write("\t".join(str(v) for v in r) + "\n")
+    if verbose:
+        print(f"wrote {len(rows)} artifacts + {manifest}")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--dims",
+        default=",".join(str(d) for d in DIMS),
+        help="comma-separated data dimensions to compile for",
+    )
+    args = ap.parse_args(argv)
+    dims = tuple(int(t) for t in args.dims.split(",") if t)
+    build(args.out_dir, dims)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: tiled pairwise squared-L2 distance block.
+
+This is the compute hot-spot of GK-means and of every baseline it is
+compared against: given a block of samples ``X`` (bm x d) and a block of
+"others" ``Y`` (bn x d) -- centroids for assignment, cell members for KNN
+refinement -- produce the full ``bm x bn`` matrix of squared Euclidean
+distances::
+
+    D[i, j] = ||x_i - y_j||^2 = ||x_i||^2 + ||y_j||^2 - 2 <x_i, y_j>
+
+The kernel is written for the MXU systolic array: the cross term is a single
+``dot_general`` over a (TM x d) x (d x TN) tile pair, and the two norm terms
+are rank-1 broadcasts fused around it.  Tile sizes are chosen so a tile pair
+plus the output tile fit comfortably in VMEM (see DESIGN.md section Perf):
+for TM = TN = 128 and d <= 960 the footprint is
+
+    (TM*d + TN*d + TM*TN) * 4 B  <=  (128*960*2 + 128*128) * 4 B ~= 1.0 MB,
+
+far under the ~16 MB VMEM budget, leaving room for double buffering.
+
+On this CPU-only environment the kernel MUST be lowered with
+``interpret=True`` (real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute).  Interpret mode lowers to plain HLO
+``dot``/``broadcast`` ops, which XLA-CPU fuses into an efficient GEMM -- so
+the same artifact is the CPU hot path here and an MXU kernel on real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pairwise_l2", "DEFAULT_TILE"]
+
+DEFAULT_TILE = 128
+
+
+def _pairwise_l2_kernel(x_ref, y_ref, o_ref):
+    """One (TM x d) x (TN x d) tile: squared-L2 distances into (TM x TN).
+
+    ``x_ref``/``y_ref`` hold full rows of the tile (the d axis is not
+    blocked: d <= 960 keeps a full row-tile in VMEM, and keeping the
+    contraction un-blocked means a single MXU pass with no accumulator
+    carry).
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    # Cross term on the MXU: (TM x d) . (d x TN). Accumulate in f32.
+    cross = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)  # (TM, 1)
+    ysq = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, TN)
+    # max(0, .) guards the tiny negative values produced by cancellation
+    # when x_i == y_j; downstream top-k / argmin code relies on d >= 0.
+    o_ref[...] = jnp.maximum(xsq + ysq - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
+def pairwise_l2(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    tile_m: int = DEFAULT_TILE,
+    tile_n: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Full (m x n) squared-L2 distance matrix via the Pallas tile kernel.
+
+    Both ``m`` and ``n`` must be multiples of the respective tile size (the
+    AOT entry points use fixed padded block shapes; padding/masking is the
+    caller's job -- in production, the Rust runtime's).
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: {d} vs {d2}")
+    if m % tile_m or n % tile_n:
+        raise ValueError(f"shape ({m},{n}) not divisible by tile ({tile_m},{tile_n})")
+
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        _pairwise_l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

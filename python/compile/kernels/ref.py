@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model entry points.
+
+Everything in here is deliberately naive: these functions define *what* the
+kernels must compute, with no tiling, no tricks.  pytest checks the Pallas /
+model outputs against these to tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(m x d), (n x d) -> (m x n) squared Euclidean distances."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign_argmin_ref(x: jnp.ndarray, c: jnp.ndarray):
+    """Closest-centroid assignment: returns (indices (m,), sq-dists (m,))."""
+    d = pairwise_l2_ref(x, c)
+    idx = jnp.argmin(d, axis=1)
+    return idx.astype(jnp.int32), jnp.min(d, axis=1)
+
+
+def bisect_assign_ref(x: jnp.ndarray, c2: jnp.ndarray):
+    """Two-means bisection step: labels in {0,1} and the signed margin.
+
+    margin = d(x, c0) - d(x, c1); label = margin > 0 (i.e. closer to c1...
+    label 1 means x is on c1's side).  The margin is what the equal-size
+    adjustment sorts on (Alg. 1 step 9).
+    """
+    d = pairwise_l2_ref(x, c2)
+    margin = d[:, 0] - d[:, 1]
+    return (margin > 0).astype(jnp.int32), margin
+
+
+def centroid_update_ref(x: jnp.ndarray, onehot: jnp.ndarray):
+    """Cluster composite vectors and counts from a one-hot assignment.
+
+    x: (m x d), onehot: (m x k) -> (sums (k x d), counts (k,)).
+    """
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts

@@ -1,0 +1,80 @@
+"""Layer-2 JAX compute graphs for the GK-means runtime.
+
+Each public function here is an AOT entry point: a pure JAX function over
+fixed block shapes, calling the Layer-1 Pallas kernel for the dense
+distance math, lowered once by ``aot.py`` to an HLO-text artifact that the
+Rust runtime loads via PJRT.  Python never runs at serving/clustering time.
+
+Entry points (shapes are *fixed* per artifact; the Rust side pads partial
+blocks and masks results):
+
+  block_l2         (bm x d, bn x d) -> bm x bn squared-L2 matrix
+  assign_argmin    (bm x d, bn x d) -> (argmin index (i32), min sq-dist)
+  bisect_assign    (bm x d, 2 x d)  -> (label {0,1}, margin d0 - d1)
+  centroid_update  (bm x d, bm i32 labels) -> (k x d sums, k counts)
+
+All of them route the distance computation through
+``kernels.pairwise_l2.pairwise_l2`` so the Pallas kernel is the single
+source of truth for the hot math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise_l2 import pairwise_l2
+
+__all__ = ["block_l2", "assign_argmin", "bisect_assign", "centroid_update"]
+
+
+def _tile_for(m: int) -> int:
+    """Largest power-of-two tile <= m, capped at 128."""
+    t = 1
+    while t * 2 <= m and t * 2 <= 128:
+        t *= 2
+    return t
+
+
+def block_l2(x: jax.Array, y: jax.Array) -> tuple[jax.Array]:
+    """Full squared-L2 distance block via the Pallas kernel."""
+    tm = _tile_for(x.shape[0])
+    tn = _tile_for(y.shape[0])
+    return (pairwise_l2(x, y, tile_m=tm, tile_n=tn),)
+
+
+def assign_argmin(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Closest-centroid assignment over one block of centroids.
+
+    The Rust caller tiles over all k centroids in bn-sized blocks and
+    reduces (index, dist) pairs across blocks; this entry handles one block.
+    """
+    (d,) = block_l2(x, c)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d, axis=1)
+
+
+def bisect_assign(x: jax.Array, c2: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Two-means bisection step for Alg. 1.
+
+    Returns the 0/1 label per row and the signed margin d(x,c0) - d(x,c1);
+    the equal-size adjustment sorts on the margin, so both come back.
+    c2 arrives padded to the block width; only rows 0 and 1 are real.
+    """
+    (d,) = block_l2(x, c2)
+    margin = d[:, 0] - d[:, 1]
+    return (margin > 0).astype(jnp.int32), margin
+
+
+def centroid_update(x: jax.Array, labels: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Composite vectors D_r = sum_{x_i in S_r} x_i and counts n_r.
+
+    One-hot + matmul keeps the reduction on the MXU path instead of a
+    scatter (scatters lower poorly on both TPU and XLA-CPU).
+    """
+    onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)  # (bm, k)
+    sums = jax.lax.dot_general(
+        onehot, x, dimension_numbers=(((0,), (0,)), ((), ()))
+    )  # (k, d)
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts

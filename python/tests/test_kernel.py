@@ -1,0 +1,123 @@
+"""Layer-1 correctness: the Pallas pairwise-L2 kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the hot math: everything the Rust
+runtime executes routes through this kernel.  Hypothesis sweeps shapes and
+value regimes; fixed tests pin the known-tricky cases (identical rows,
+zero vectors, large magnitudes, non-square tiles).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise_l2 import pairwise_l2
+from compile.kernels.ref import pairwise_l2_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, m, d, scale=1.0, dtype=np.float32):
+    return (rng.standard_normal((m, d)) * scale).astype(dtype)
+
+
+def assert_close(got, want, rtol=1e-4, atol=1e-3):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+class TestFixedCases:
+    def test_small_exact(self):
+        x = jnp.array([[0.0, 0.0], [3.0, 4.0]], dtype=jnp.float32)
+        x = jnp.tile(x, (2, 1))  # 4 rows -> tile 4
+        d = pairwise_l2(x, x, tile_m=4, tile_n=4)
+        assert d.shape == (4, 4)
+        assert_close(d[0, 1], 25.0)
+        assert_close(jnp.diag(d), jnp.zeros(4))
+
+    def test_identical_rows_nonnegative(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 64, 128, scale=100.0)
+        d = pairwise_l2(x, x, tile_m=64, tile_n=64)
+        assert np.all(np.asarray(d) >= 0.0), "cancellation produced negatives"
+        # norms are ~1e6 here; f32 cancellation leaves a few units on the diag
+        assert_close(np.diag(np.asarray(d)), np.zeros(64), atol=8.0)
+
+    def test_zero_vectors(self):
+        x = np.zeros((64, 32), np.float32)
+        y = np.ones((64, 32), np.float32)
+        d = pairwise_l2(x, y, tile_m=64, tile_n=64)
+        assert_close(d, np.full((64, 64), 32.0))
+
+    def test_rectangular_blocks(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 256, 100)
+        y = _rand(rng, 64, 100)
+        d = pairwise_l2(x, y, tile_m=128, tile_n=64)
+        assert d.shape == (256, 64)
+        assert_close(d, pairwise_l2_ref(jnp.asarray(x), jnp.asarray(y)))
+
+    def test_multi_tile_grid(self):
+        rng = np.random.default_rng(2)
+        x = _rand(rng, 256, 32)
+        y = _rand(rng, 256, 32)
+        d = pairwise_l2(x, y, tile_m=128, tile_n=128)
+        assert_close(d, pairwise_l2_ref(jnp.asarray(x), jnp.asarray(y)))
+
+    def test_sift_like_magnitudes(self):
+        # SIFT components live in [0, 255]; distances get to ~1e6 -- check
+        # the norm-expansion trick stays accurate there.
+        rng = np.random.default_rng(3)
+        x = (rng.random((128, 128)) * 255).astype(np.float32)
+        d = pairwise_l2(x, x, tile_m=128, tile_n=128)
+        # absolute distances reach ~2e6; f32 keeps ~7 significant digits
+        assert_close(d, pairwise_l2_ref(jnp.asarray(x), jnp.asarray(x)), rtol=1e-3, atol=16.0)
+
+    def test_dim_mismatch_raises(self):
+        with pytest.raises(ValueError, match="dim mismatch"):
+            pairwise_l2(np.zeros((4, 8), np.float32), np.zeros((4, 9), np.float32),
+                        tile_m=4, tile_n=4)
+
+    def test_indivisible_shape_raises(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            pairwise_l2(np.zeros((5, 8), np.float32), np.zeros((4, 8), np.float32),
+                        tile_m=4, tile_n=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mlog=st.integers(min_value=2, max_value=7),
+    nlog=st.integers(min_value=2, max_value=7),
+    d=st.sampled_from([1, 3, 17, 32, 100, 128]),
+    scale=st.sampled_from([1e-2, 1.0, 50.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_matches_ref(mlog, nlog, d, scale, seed):
+    m, n = 2**mlog, 2**nlog
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, d, scale)
+    y = _rand(rng, n, d, scale)
+    got = pairwise_l2(x, y, tile_m=min(m, 128), tile_n=min(n, 128))
+    want = pairwise_l2_ref(jnp.asarray(x), jnp.asarray(y))
+    tol = max(1e-3, 1e-5 * scale * scale * d)
+    assert_close(got, want, rtol=1e-4, atol=tol)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([8, 64, 960]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_symmetry(d, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 64, d)
+    got = np.asarray(pairwise_l2(x, x, tile_m=64, tile_n=64))
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-4)
+
+
+def test_float64_inputs_are_cast():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((32, 16))  # f64
+    d = pairwise_l2(x, x, tile_m=32, tile_n=32)
+    assert d.dtype == jnp.float32

@@ -1,0 +1,95 @@
+"""Layer-2 correctness: model entry points vs oracles, shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(seed, m, d, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal((m, d)) * scale).astype(np.float32)
+
+
+class TestAssignArgmin:
+    def test_matches_ref(self):
+        x, c = _rand(0, 256, 32), _rand(1, 256, 32)
+        idx, dist = model.assign_argmin(x, c)
+        ridx, rdist = ref.assign_argmin_ref(jnp.asarray(x), jnp.asarray(c))
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+        np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-4, atol=1e-3)
+        assert idx.dtype == jnp.int32
+
+    def test_centroid_is_own_nn(self):
+        c = _rand(2, 64, 16)
+        idx, dist = model.assign_argmin(c, c)
+        np.testing.assert_array_equal(np.asarray(idx), np.arange(64))
+        np.testing.assert_allclose(np.asarray(dist), np.zeros(64), atol=1e-3)
+
+
+class TestBisectAssign:
+    def test_matches_ref(self):
+        x = _rand(3, 256, 100)
+        c2 = _rand(4, 2, 100)
+        lab, margin = model.bisect_assign(x, c2)
+        rlab, rmargin = ref.bisect_assign_ref(jnp.asarray(x), jnp.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(lab), np.asarray(rlab))
+        np.testing.assert_allclose(np.asarray(margin), np.asarray(rmargin), rtol=1e-3, atol=1e-2)
+
+    def test_label_semantics(self):
+        # Points exactly at c0 get label 0; at c1 get label 1.
+        c2 = np.stack([np.zeros(8), np.ones(8) * 10]).astype(np.float32)
+        x = np.concatenate([np.zeros((128, 8)), np.ones((128, 8)) * 10]).astype(np.float32)
+        lab, margin = model.bisect_assign(x, c2)
+        lab = np.asarray(lab)
+        assert (lab[:128] == 0).all() and (lab[128:] == 1).all()
+        m = np.asarray(margin)
+        assert (m[:128] < 0).all() and (m[128:] > 0).all()
+
+
+class TestCentroidUpdate:
+    def test_matches_ref(self):
+        x = _rand(5, 256, 32)
+        labels = np.random.default_rng(6).integers(0, 256, 256).astype(np.int32)
+        sums, counts = model.centroid_update(x, labels, 256)
+        onehot = jnp.asarray(np.eye(256, dtype=np.float32)[labels])
+        rsums, rcounts = ref.centroid_update_ref(jnp.asarray(x), onehot)
+        np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums), rtol=1e-4, atol=1e-3)
+        np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
+
+    def test_mass_conservation(self):
+        x = _rand(7, 256, 16)
+        labels = np.random.default_rng(8).integers(0, 40, 256).astype(np.int32)
+        sums, counts = model.centroid_update(x, labels, 256)
+        np.testing.assert_allclose(
+            np.asarray(sums).sum(axis=0), x.sum(axis=0), rtol=1e-4, atol=1e-2
+        )
+        assert np.asarray(counts).sum() == 256
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([4, 32, 100]),
+    k=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_assign_consistent_with_update(d, k, seed):
+    """Assignment + update invariants: every sum row r equals the sum of the
+    x rows assigned to r (the Rust coordinator relies on this composite-
+    vector identity for Delta-I bookkeeping)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((256, d)).astype(np.float32)
+    c = rng.standard_normal((256, d)).astype(np.float32)
+    idx, _ = model.assign_argmin(x, c)
+    idx = np.asarray(idx)
+    sums, counts = model.centroid_update(x, idx.astype(np.int32), 256)
+    sums, counts = np.asarray(sums), np.asarray(counts)
+    for r in np.unique(idx)[:5]:
+        np.testing.assert_allclose(
+            sums[r], x[idx == r].sum(axis=0), rtol=1e-4, atol=1e-2
+        )
+        assert counts[r] == (idx == r).sum()

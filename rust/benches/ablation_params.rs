@@ -1,0 +1,82 @@
+//! §4.4 ablation — the paper's parameter discussion, as data:
+//!   κ (neighbors consulted): quality stabilizes for κ ≳ 40; too small
+//!     misses the true cluster, too large erodes the speed-up.
+//!   ξ (cell size for Alg. 3): larger ξ → better graph but more pairwise
+//!     comparisons; recommended range [40, 100].
+//!   τ (rounds): 10 suffices for clustering (Fig. 2 covers the sweep).
+//!
+//! DESIGN.md calls these out as the design choices to ablate.
+//! Regenerate: `cargo bench --bench ablation_params`.
+
+use gkmeans::bench_util;
+use gkmeans::data::synth;
+use gkmeans::eval::report::{f, Table};
+use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::gkm::gkmeans as gk;
+use gkmeans::gkm::gkmeans::GkMeansParams;
+use gkmeans::graph::{brute, recall};
+use gkmeans::kmeans::common::KmeansParams;
+use gkmeans::util::timer::Timer;
+
+fn main() {
+    bench_util::banner("§4.4", "parameter ablations: kappa and xi");
+    let backend = bench_util::backend();
+    let n = bench_util::scaled(8_000);
+    let k = (n / 100).max(4);
+    let data = synth::sift_like(n, 20170707);
+    let exact = brute::build(&data, 1, &backend);
+    let base = KmeansParams { max_iters: 15, ..Default::default() };
+
+    // --- κ sweep (graph κ fixed high; consult κ varies) ---
+    println!("\nkappa sweep (xi=50, tau=8):");
+    let g = construct::build(
+        &data,
+        &ConstructParams { kappa: 64, xi: 50, tau: 8, seed: 1 },
+        &backend,
+    );
+    let mut tk = Table::new(&["kappa", "iter_s", "distortion"]);
+    for kappa in [1usize, 5, 10, 20, 40, 64] {
+        let t = Timer::start();
+        let out = gk::run(
+            &data,
+            k,
+            &g.graph,
+            &GkMeansParams { kappa, base: base.clone() },
+            &backend,
+        );
+        let secs = t.elapsed_s() - out.init_seconds;
+        tk.row(&[kappa.to_string(), f(secs), f(out.distortion())]);
+        println!("  kappa={kappa:<3} iter={secs:.2}s E={:.2}", out.distortion());
+    }
+    println!("{}", tk.render());
+    println!("paper: quality stable for kappa >~ 40; cost grows with kappa");
+
+    // --- ξ sweep (graph quality + build cost trade-off) ---
+    println!("\nxi sweep (kappa=20, tau=8):");
+    let mut tx = Table::new(&["xi", "build_s", "recall@1", "distortion"]);
+    for xi in [20usize, 40, 50, 70, 100] {
+        let b = construct::build(
+            &data,
+            &ConstructParams { kappa: 20, xi, tau: 8, seed: 1 },
+            &backend,
+        );
+        let r = recall::recall_at_1(&b.graph, &exact);
+        let out = gk::run(
+            &data,
+            k,
+            &b.graph,
+            &GkMeansParams { kappa: 20, base: base.clone() },
+            &backend,
+        );
+        tx.row(&[xi.to_string(), f(b.total_seconds), f(r), f(out.distortion())]);
+        println!(
+            "  xi={xi:<4} build={:.2}s recall={r:.3} E={:.2}",
+            b.total_seconds,
+            out.distortion()
+        );
+    }
+    println!("{}", tx.render());
+    println!("paper: larger xi -> better graph, more comparisons; sweet spot [40,100]");
+    tk.write_csv(&gkmeans::eval::report::results_dir().join("ablation_kappa.csv")).ok();
+    tx.write_csv(&gkmeans::eval::report::results_dir().join("ablation_xi.csv")).ok();
+}

@@ -1,0 +1,104 @@
+//! §4.3's ANNS application — the Alg. 3 graph serving approximate
+//! nearest-neighbor queries, vs a NN-Descent graph of the same κ.
+//! Reports recall@1 against exact search vs per-query distance
+//! evaluations and latency, over an `ef` sweep.
+//!
+//! Paper's reading: the Alg. 3 graph's raw recall is below NN-Descent's,
+//! yet its search performance is competitive (the paper quotes <3 ms at
+//! recall >0.9 on 100M SIFT with τ up to 32).  Regenerate:
+//! `cargo bench --bench ann_search`.
+
+use gkmeans::bench_util;
+use gkmeans::data::synth;
+use gkmeans::eval::report::{f, Table};
+use gkmeans::gkm::ann::{self, SearchParams};
+use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::graph::nn_descent;
+use gkmeans::util::rng::Rng;
+use gkmeans::util::timer::Timer;
+
+fn main() {
+    bench_util::banner("ANNS", "graph-based search: Alg.3 graph vs NN-Descent graph");
+    let backend = bench_util::backend();
+    let n = bench_util::scaled(10_000);
+    let kappa = 20;
+    let data = synth::sift_like(n, 20170707);
+    let nq = 200.min(n / 10);
+
+    println!("building graphs (n={n}, kappa={kappa})...");
+    let (g_alg3, t_alg3) = gkmeans::util::timer::timed(|| {
+        construct::build(
+            &data,
+            &ConstructParams { kappa, xi: 50, tau: 16, seed: 1 },
+            &backend,
+        )
+        .graph
+    });
+    let (g_nnd, t_nnd) = gkmeans::util::timer::timed(|| {
+        nn_descent::build(&data, kappa, &nn_descent::NnDescentParams::default())
+    });
+    println!("alg3 graph: {t_alg3:.2}s, nn-descent graph: {t_nnd:.2}s");
+
+    // query set: perturbed data points with known exact answers
+    let mut rng = Rng::new(42);
+    let queries: Vec<(usize, Vec<f32>)> = (0..nq)
+        .map(|_| {
+            let qi = rng.below(n);
+            let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.5 * rng.normal()).collect();
+            (qi, q)
+        })
+        .collect();
+    // exact answers by brute force
+    let truth: Vec<u32> = queries
+        .iter()
+        .map(|(_, q)| {
+            let mut best = f32::INFINITY;
+            let mut idx = 0u32;
+            for j in 0..n {
+                let dd = gkmeans::core_ops::dist::d2(q, data.row(j));
+                if dd < best {
+                    best = dd;
+                    idx = j as u32;
+                }
+            }
+            idx
+        })
+        .collect();
+
+    let mut t = Table::new(&["graph", "build_s", "ef", "recall@1", "dist_evals", "us_per_query"]);
+    for (name, graph, build_s) in [("Alg.3", &g_alg3, t_alg3), ("NN-Descent", &g_nnd, t_nnd)] {
+        for &ef in &[8usize, 16, 32, 64, 128] {
+            let sp = SearchParams { ef, entries: 48, seed: 7 }; // sift_like has ~50 components; entries must cover them
+            let mut srng = Rng::new(7);
+            let mut hits = 0usize;
+            let mut evals = 0usize;
+            let timer = Timer::start();
+            for ((_, q), &want) in queries.iter().zip(&truth) {
+                let (res, stats) = ann::search(&data, graph, q, 1, &sp, &mut srng);
+                evals += stats.dist_evals;
+                if res.first().map(|r| r.1) == Some(want) {
+                    hits += 1;
+                }
+            }
+            let secs = timer.elapsed_s();
+            t.row(&[
+                name.into(),
+                f(build_s),
+                ef.to_string(),
+                f(hits as f64 / nq as f64),
+                (evals / nq).to_string(),
+                f(secs / nq as f64 * 1e6),
+            ]);
+            println!(
+                "{name:<11} ef={ef:<4} recall@1={:.3} evals/q={} {:.0}us/q",
+                hits as f64 / nq as f64,
+                evals / nq,
+                secs / nq as f64 * 1e6
+            );
+        }
+    }
+    println!("{}", t.render());
+    println!("paper shape checks: Alg.3 builds faster than NN-Descent; both reach");
+    println!("high recall with ef; Alg.3 competitive despite lower raw graph recall.");
+    t.write_csv(&gkmeans::eval::report::results_dir().join("ann_search.csv")).ok();
+}

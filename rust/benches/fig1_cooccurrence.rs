@@ -1,0 +1,61 @@
+//! Fig. 1 — co-occurrence rate of a sample and its κ-th nearest neighbor
+//! in one cluster, for traditional k-means and the 2M-tree, with cluster
+//! size fixed to 50 (paper: SIFT100K; here: sift_like at a scaled n).
+//!
+//! Paper's reading: rates ≫ random collision (50/n = 0.0005), decaying
+//! with rank but staying above ~0.1 at rank 100.  Regenerate:
+//! `cargo bench --bench fig1_cooccurrence`.
+
+use gkmeans::bench_util;
+use gkmeans::data::synth;
+use gkmeans::eval::cooccur;
+use gkmeans::eval::report::{f, Table};
+use gkmeans::kmeans::common::KmeansParams;
+use gkmeans::kmeans::two_means::{self, TwoMeansParams};
+
+fn main() {
+    bench_util::banner("Fig.1", "NN-rank vs same-cluster co-occurrence (cluster size 50)");
+    let backend = bench_util::backend();
+    let n = bench_util::scaled(10_000);
+    let kappa = 100usize;
+    let k = (n / 50).max(2); // cluster size fixed to 50
+    let data = synth::sift_like(n, 20170707);
+
+    println!("building exact {kappa}-NN ground truth (n={n}, d=128)...");
+    let exact = gkmeans::graph::brute::build(&data, kappa, &backend);
+
+    // traditional k-means labels
+    let km = gkmeans::kmeans::lloyd::run(&data, k, &KmeansParams::default(), &backend);
+    let km_series = cooccur::cooccurrence_by_rank(&exact, &km.clustering.labels, kappa);
+
+    // 2M-tree labels
+    let labels_2m = two_means::run(&data, k, &TwoMeansParams::default(), &backend);
+    let tm_series = cooccur::cooccurrence_by_rank(&exact, &labels_2m, kappa);
+
+    let random = cooccur::random_collision_rate(&km.clustering.labels, k);
+
+    let mut t = Table::new(&["rank", "k-means", "2M-tree"]);
+    for &rank in &[1usize, 2, 5, 10, 20, 40, 60, 80, 100] {
+        if rank <= kappa {
+            t.row(&[
+                rank.to_string(),
+                f(km_series[rank - 1]),
+                f(tm_series[rank - 1]),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "random-collision baseline: {:.5} (paper quotes 50/n = {:.5})",
+        random,
+        50.0 / n as f64
+    );
+    println!(
+        "paper shape check: rank-1 >> random? {} (km {:.3} vs {:.5})",
+        if km_series[0] > 10.0 * random { "YES" } else { "NO" },
+        km_series[0],
+        random
+    );
+    t.write_csv(&gkmeans::eval::report::results_dir().join("fig1_cooccurrence.csv"))
+        .ok();
+}

@@ -1,0 +1,48 @@
+//! Fig. 2 — the intertwined evolution of Alg. 3: KNN-graph recall@1 and
+//! cell-partition distortion as functions of the round τ.
+//!
+//! Paper's reading (SIFT100K): both start terrible (recall ≈ 0, random
+//! clustering); after ~5 rounds recall exceeds 0.6 and distortion has
+//! dropped considerably.  Regenerate: `cargo bench --bench fig2_evolution`.
+
+use gkmeans::bench_util;
+use gkmeans::data::synth;
+use gkmeans::eval::report::{f, Table};
+use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::graph::{brute, recall};
+
+fn main() {
+    bench_util::banner("Fig.2", "graph recall and clustering distortion vs tau (Alg. 3)");
+    let backend = bench_util::backend();
+    let n = bench_util::scaled(10_000);
+    let data = synth::sift_like(n, 20170707);
+    let kappa = 10;
+    let tau_max = 10;
+
+    println!("building exact top-1 ground truth (n={n})...");
+    let exact = brute::build(&data, 1, &backend);
+
+    // Run construction once per tau so each point is a fresh, complete run
+    // (matches how the paper sweeps the parameter).
+    let mut t = Table::new(&["tau", "recall@1", "cell_distortion", "seconds"]);
+    for tau in 1..=tau_max {
+        let out = construct::build(
+            &data,
+            &ConstructParams { kappa, xi: 50, tau, seed: 20170707 },
+            &backend,
+        );
+        let r = recall::recall_at_1(&out.graph, &exact);
+        let h = out.history.last().unwrap();
+        t.row(&[
+            tau.to_string(),
+            f(r),
+            f(h.distortion),
+            f(out.total_seconds),
+        ]);
+        println!("tau={tau:>2} recall@1={r:.3} distortion={:.2}", h.distortion);
+    }
+    println!("{}", t.render());
+    println!("paper shape check: recall(tau=5) > 0.6 and rising, distortion falling");
+    t.write_csv(&gkmeans::eval::report::results_dir().join("fig2_evolution.csv"))
+        .ok();
+}

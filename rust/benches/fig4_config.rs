@@ -1,0 +1,73 @@
+//! Fig. 4 — configuration test on Alg. 2: final clustering distortion as
+//! a function of the supplied KNN graph's recall, for three configs:
+//!   GK-means            (boost core, Alg. 3 graph)    — the standard run
+//!   GK-means*           (traditional core, Alg. 3 graph)
+//!   KGraph+GK-means     (boost core, NN-Descent graph)
+//!
+//! Paper's reading (SIFT1M, k=10⁴): higher graph recall → steadily lower
+//! distortion for all configs; the boost-core runs sit well below the
+//! traditional-core one at every recall level; the Alg. 3 graph edges out
+//! NN-Descent at equal recall.  Regenerate: `cargo bench --bench fig4_config`.
+
+use gkmeans::bench_util;
+use gkmeans::data::synth;
+use gkmeans::eval::report::{f, Table};
+use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::gkm::gkmeans::GkMeansParams;
+use gkmeans::gkm::gkmeans as gk;
+use gkmeans::gkm::variant;
+use gkmeans::graph::{brute, nn_descent, recall};
+use gkmeans::kmeans::common::KmeansParams;
+
+fn main() {
+    bench_util::banner("Fig.4", "distortion vs supplied-graph recall, three Alg.2 configs");
+    let backend = bench_util::backend();
+    let n = bench_util::scaled(10_000);
+    let k = (n / 100).max(4); // paper: k = n/100 (10^4 clusters on 1M)
+    let kappa = 10;
+    let data = synth::sift_like(n, 20170707);
+    let exact = brute::build(&data, 1, &backend);
+    let base = KmeansParams { max_iters: 15, ..Default::default() };
+    let params = GkMeansParams { kappa, base };
+
+    let mut t = Table::new(&["config", "graph_recall@1", "distortion"]);
+
+    // Alg. 3 graphs of increasing quality (tau sweep)
+    for tau in [1usize, 2, 4, 7, 10] {
+        let g = construct::build(
+            &data,
+            &ConstructParams { kappa, xi: 50, tau, seed: 1 },
+            &backend,
+        );
+        let r = recall::recall_at_1(&g.graph, &exact);
+        let gk = gk::run(&data, k, &g.graph, &params, &backend);
+        t.row(&["GK-means".into(), f(r), f(gk.distortion())]);
+        let tr = variant::run(&data, k, &g.graph, &params, &backend);
+        t.row(&["GK-means*".into(), f(r), f(tr.distortion())]);
+        println!(
+            "tau={tau}: recall={r:.3} gk={:.2} gk*={:.2}",
+            gk.distortion(),
+            tr.distortion()
+        );
+    }
+
+    // NN-Descent graphs of increasing quality (iteration sweep)
+    for iters in [1usize, 2, 4, 8] {
+        let g = nn_descent::build(
+            &data,
+            kappa,
+            &nn_descent::NnDescentParams { max_iters: iters, ..Default::default() },
+        );
+        let r = recall::recall_at_1(&g, &exact);
+        let gk = gk::run(&data, k, &g, &params, &backend);
+        t.row(&["KGraph+GK-means".into(), f(r), f(gk.distortion())]);
+        println!("nn-descent iters={iters}: recall={r:.3} distortion={:.2}", gk.distortion());
+    }
+
+    println!("{}", t.render());
+    println!("paper shape checks:");
+    println!("  (1) within each config, higher recall -> lower distortion");
+    println!("  (2) GK-means (boost core) below GK-means* at matched recall");
+    t.write_csv(&gkmeans::eval::report::results_dir().join("fig4_config.csv"))
+        .ok();
+}

@@ -1,0 +1,79 @@
+//! Fig. 5 — clustering quality on SIFT / GloVe / GIST stand-ins:
+//! distortion as a function of (a,c,e) iteration count and (b,d,f)
+//! wall-clock time, for k-means, boost k-means, Mini-Batch, closure
+//! k-means, GK-means and KGraph+GK-means.  k = n/100 (paper: 10⁴ on 1M).
+//!
+//! Paper's reading: BKM best quality; GK-means within a hair of BKM (and
+//! beating traditional k-means on SIFT/GIST) at a fraction of the time;
+//! Mini-Batch clearly worst; closure k-means in between.  Regenerate:
+//! `cargo bench --bench fig5_quality`.
+
+use gkmeans::bench_util;
+use gkmeans::coordinator::job::{ClusterJob, Method};
+use gkmeans::coordinator::pipeline;
+use gkmeans::data::DatasetSpec;
+use gkmeans::eval::report::{f, Table};
+
+fn main() {
+    bench_util::banner("Fig.5", "distortion vs iteration and vs time, three datasets");
+    let backend = bench_util::backend();
+    let methods = [
+        Method::Lloyd,
+        Method::Boost,
+        Method::MiniBatch,
+        Method::Closure,
+        Method::GkMeans,
+        Method::KGraphGkMeans,
+    ];
+
+    for (kind, n_default) in [("sift", 10_000usize), ("glove", 10_000), ("gist", 3_000)] {
+        let n = bench_util::scaled(n_default);
+        let k = (n / 100).max(4);
+        let data = DatasetSpec::Synth { kind: kind.into(), n, seed: 20170707 }
+            .load()
+            .unwrap();
+        println!("\n--- {kind} (n={n}, d={}, k={k}) ---", data.dim());
+
+        let mut curves = Table::new(&["method", "iter", "seconds", "distortion"]);
+        let mut summary = Table::new(&["method", "total_s", "final_distortion"]);
+        for &m in &methods {
+            let mut job = ClusterJob::new(
+                DatasetSpec::Synth { kind: kind.into(), n, seed: 20170707 },
+                m,
+                k,
+            );
+            job.kappa = 20;
+            job.tau = 8;
+            job.base.max_iters = 30;
+            let r = pipeline::run_job_on(&job, &data, &backend);
+            for h in &r.history {
+                curves.row(&[
+                    m.name().into(),
+                    h.iter.to_string(),
+                    f(h.seconds),
+                    f(h.distortion),
+                ]);
+            }
+            summary.row(&[m.name().into(), f(r.total_seconds), f(r.distortion)]);
+            println!(
+                "{:<18} total={:>8.2}s distortion={:.2}",
+                m.name(),
+                r.total_seconds,
+                r.distortion
+            );
+        }
+        println!("{}", summary.render());
+        curves
+            .write_csv(
+                &gkmeans::eval::report::results_dir().join(format!("fig5_{kind}_curves.csv")),
+            )
+            .ok();
+        summary
+            .write_csv(
+                &gkmeans::eval::report::results_dir().join(format!("fig5_{kind}_summary.csv")),
+            )
+            .ok();
+    }
+    println!("\npaper shape checks: BKM lowest distortion; GK-means close behind at far");
+    println!("lower time; Mini-Batch fastest-but-worst; see EXPERIMENTS.md.");
+}

@@ -1,0 +1,172 @@
+//! §Perf microbenches over the hot paths: native vs PJRT block distance,
+//! assignment tiles, scalar d2/dot, top-κ updates, and one GK-means epoch.
+//! These are the numbers the EXPERIMENTS.md §Perf before/after table is
+//! built from.  Regenerate: `cargo bench --bench hotpath_micro`.
+
+use gkmeans::bench_util;
+use gkmeans::core_ops::{blockdist, dist, topk};
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::eval::report::{f, Table};
+use gkmeans::runtime::Backend;
+use gkmeans::util::rng::Rng;
+use gkmeans::util::timer::Timer;
+
+/// Run `op` repeatedly for ~`budget_s`, return (iters/s, total iters).
+fn rate(budget_s: f64, mut op: impl FnMut()) -> (f64, usize) {
+    // warmup
+    op();
+    let timer = Timer::start();
+    let mut iters = 0usize;
+    while timer.elapsed_s() < budget_s {
+        op();
+        iters += 1;
+    }
+    (iters as f64 / timer.elapsed_s(), iters)
+}
+
+fn main() {
+    bench_util::banner("Perf", "hot-path microbenches (native vs PJRT)");
+    let budget = 0.5;
+    let mut rng = Rng::new(1);
+    let mut t = Table::new(&["op", "shape", "backend", "GFLOP/s", "ops_per_s"]);
+
+    // --- scalar d2 / dot ---
+    for d in [128usize, 512, 960] {
+        let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let (r, _) = rate(budget, || {
+            std::hint::black_box(dist::d2(std::hint::black_box(&a), std::hint::black_box(&b)));
+        });
+        let gflops = r * (3.0 * d as f64) / 1e9;
+        t.row(&["d2".into(), format!("d={d}"), "native".into(), f(gflops), f(r)]);
+        println!("d2 d={d}: {r:.0}/s ({gflops:.2} GFLOP/s)");
+    }
+
+    // --- block_l2: native vs pjrt ---
+    let pjrt = {
+        let dir = gkmeans::runtime::artifact::default_dir();
+        dir.join("manifest.tsv").exists().then(|| Backend::pjrt(&dir).unwrap())
+    };
+    for (m, n, d) in [(256usize, 256usize, 128usize), (256, 256, 512), (64, 64, 128)] {
+        let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let mut out = vec![0f32; m * n];
+        let flop = 3.0 * (m * n * d) as f64;
+        let (r_nat, _) = rate(budget, || {
+            blockdist::block_l2(&x, &y, d, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(&[
+            "block_l2".into(),
+            format!("{m}x{n}x{d}"),
+            "native".into(),
+            f(r_nat * flop / 1e9),
+            f(r_nat),
+        ]);
+        println!("block_l2 {m}x{n} d={d} native: {r_nat:.1}/s ({:.2} GFLOP/s)", r_nat * flop / 1e9);
+        if let Some(ref b) = pjrt {
+            let (r_pj, _) = rate(budget, || {
+                b.block_l2(&x, &y, d, &mut out);
+                std::hint::black_box(&out);
+            });
+            t.row(&[
+                "block_l2".into(),
+                format!("{m}x{n}x{d}"),
+                "pjrt".into(),
+                f(r_pj * flop / 1e9),
+                f(r_pj),
+            ]);
+            println!("block_l2 {m}x{n} d={d} pjrt:   {r_pj:.1}/s ({:.2} GFLOP/s)", r_pj * flop / 1e9);
+        }
+    }
+
+    // --- full assignment (m x k) ---
+    for (m, k, d) in [(2000usize, 256usize, 128usize), (2000, 256, 512)] {
+        let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let flop = 3.0 * (m * k * d) as f64;
+        let (r_nat, _) = rate(budget, || {
+            std::hint::black_box(Backend::Native.assign_blocks(&x, &c, d, k));
+        });
+        t.row(&[
+            "assign".into(),
+            format!("{m}x{k}x{d}"),
+            "native".into(),
+            f(r_nat * flop / 1e9),
+            f(r_nat),
+        ]);
+        println!("assign {m}x{k} d={d} native: {:.2} GFLOP/s", r_nat * flop / 1e9);
+        if let Some(ref b) = pjrt {
+            let (r_pj, _) = rate(budget, || {
+                std::hint::black_box(b.assign_blocks(&x, &c, d, k));
+            });
+            t.row(&[
+                "assign".into(),
+                format!("{m}x{k}x{d}"),
+                "pjrt".into(),
+                f(r_pj * flop / 1e9),
+                f(r_pj),
+            ]);
+            println!("assign {m}x{k} d={d} pjrt:   {:.2} GFLOP/s", r_pj * flop / 1e9);
+        }
+    }
+
+    // --- top-κ update throughput ---
+    {
+        let mut g = gkmeans::graph::knn::KnnGraph::empty(1000, 50);
+        let mut i = 0usize;
+        let (r, _) = rate(budget, || {
+            let j = ((i * 7919) % 999 + 1) as u32;
+            g.update(i % 1000, j, (i % 1000) as f32);
+            i += 1;
+        });
+        t.row(&["knn_update".into(), "kappa=50".into(), "native".into(), "-".into(), f(r)]);
+        println!("knn update: {r:.0}/s");
+        let mut tk = topk::TopK::new(50);
+        let (r2, _) = rate(budget, || {
+            tk.push(rng.f32(), 1);
+        });
+        t.row(&["topk_push".into(), "k=50".into(), "native".into(), "-".into(), f(r2)]);
+    }
+
+    // --- one GK-means epoch at realistic shape ---
+    {
+        let n = bench_util::scaled(5_000);
+        let data = blobs(&BlobSpec::quick(n, 128, 32), 3);
+        let graph = gkmeans::gkm::construct::build(
+            &data,
+            &gkmeans::gkm::construct::ConstructParams { kappa: 20, xi: 50, tau: 3, seed: 1 },
+            &Backend::native(),
+        )
+        .graph;
+        let params = gkmeans::gkm::gkmeans::GkMeansParams {
+            kappa: 20,
+            base: gkmeans::kmeans::common::KmeansParams { max_iters: 1, ..Default::default() },
+        };
+        let init = gkmeans::kmeans::two_means::cluster(
+            &data,
+            n / 50,
+            &gkmeans::kmeans::two_means::TwoMeansParams::default(),
+            &Backend::native(),
+        );
+        let timer = Timer::start();
+        let mut epochs = 0;
+        while timer.elapsed_s() < 2.0 {
+            let _ = gkmeans::gkm::gkmeans::run_from(&data, init.clone(), &graph, &params);
+            epochs += 1;
+        }
+        let per_epoch = timer.elapsed_s() / epochs as f64;
+        let samples_per_s = n as f64 / per_epoch;
+        t.row(&[
+            "gk_epoch".into(),
+            format!("n={n},kappa=20,d=128"),
+            "native".into(),
+            "-".into(),
+            f(samples_per_s),
+        ]);
+        println!("gk-means epoch: {per_epoch:.3}s ({samples_per_s:.0} samples/s)");
+    }
+
+    println!("{}", t.render());
+    t.write_csv(&gkmeans::eval::report::results_dir().join("hotpath_micro.csv")).ok();
+}

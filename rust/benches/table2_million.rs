@@ -1,0 +1,73 @@
+//! Tab. 2 — the extreme-k test: partition the VLAD stand-in into n/10
+//! clusters (paper: VLAD10M → 1M clusters), comparing the only two
+//! workable systems — closure k-means and GK-means — plus KGraph+GK-means.
+//! Columns match the paper: init time, iteration time, total, distortion,
+//! graph recall.
+//!
+//! Paper's reading: GK-means total ≈ ½ closure's and ~6× faster than
+//! KGraph+GK-means (NN-Descent dominates its init); GK-means distortion
+//! lowest despite its graph's *lower* raw recall — the Alg. 3 graph
+//! carries clustering structure.  Regenerate:
+//! `cargo bench --bench table2_million`.
+
+use gkmeans::bench_util;
+use gkmeans::coordinator::job::{ClusterJob, Method};
+use gkmeans::coordinator::pipeline;
+use gkmeans::data::DatasetSpec;
+use gkmeans::eval::report::Table;
+
+fn main() {
+    bench_util::banner("Tab.2", "extreme cluster count: k = n/10 on vlad_like");
+    let backend = bench_util::backend();
+    let n = bench_util::scaled(20_000);
+    let k = n / 10;
+    let data = DatasetSpec::Synth { kind: "vlad".into(), n, seed: 20170707 }
+        .load()
+        .unwrap();
+    println!("n={n} d={} k={k}", data.dim());
+
+    let mut t = Table::new(&["method", "init_s", "iter_s", "total_s", "distortion", "recall"]);
+    for &m in &[Method::KGraphGkMeans, Method::GkMeans, Method::Closure] {
+        let mut job = ClusterJob::new(
+            DatasetSpec::Synth { kind: "vlad".into(), n, seed: 20170707 },
+            m,
+            k,
+        );
+        job.kappa = 20;
+        job.tau = 6;
+        job.base.max_iters = 10;
+        job.measure_recall = m != Method::Closure;
+        let r = pipeline::run_job_on(&job, &data, &backend);
+        t.row(&[
+            m.name().into(),
+            format!("{:.2}", r.init_seconds),
+            format!("{:.2}", r.iter_seconds),
+            format!("{:.2}", r.total_seconds),
+            format!("{:.4}", r.distortion),
+            r.recall.map(|x| format!("{x:.2}")).unwrap_or_else(|| "N.A.".into()),
+        ]);
+        println!("{}", r.table_row());
+    }
+    println!("{}", t.render());
+
+    // the paper's "3 years for traditional k-means" projection, scaled:
+    // measure one Lloyd assignment pass and extrapolate 30 iterations.
+    let timer = gkmeans::util::timer::Timer::start();
+    let sample = 500.min(n);
+    let centroids = data.gather(&(0..k).collect::<Vec<_>>());
+    let _ = backend.assign_blocks(
+        data.rows_flat(0, sample),
+        centroids.flat(),
+        data.dim(),
+        k,
+    );
+    let per_sample = timer.elapsed_s() / sample as f64;
+    let projected = per_sample * n as f64 * 30.0;
+    println!(
+        "projected traditional k-means (30 iters, measured assignment rate): {}",
+        gkmeans::util::timer::fmt_secs(projected)
+    );
+    t.write_csv(&gkmeans::eval::report::results_dir().join("table2.csv")).ok();
+    println!("paper shape checks: GK-means fastest total; distortion: GK < KGraph+GK < closure;");
+    println!("GK recall < KGraph recall yet GK distortion lower (structure transfer).");
+}

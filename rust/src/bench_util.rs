@@ -1,0 +1,45 @@
+//! Shared plumbing for the bench harnesses (`rust/benches/*.rs`).
+//!
+//! Every harness regenerates one of the paper's tables/figures at a
+//! machine-appropriate default scale; `GKMEANS_BENCH_SCALE` multiplies the
+//! dataset sizes (e.g. `GKMEANS_BENCH_SCALE=10 cargo bench --bench
+//! fig6_scalability` for a long run), and `GKMEANS_BENCH_FAST=1` shrinks
+//! everything for smoke tests.
+
+/// User-controlled scale multiplier.
+pub fn scale() -> f64 {
+    if std::env::var("GKMEANS_BENCH_FAST").is_ok() {
+        return 0.2;
+    }
+    std::env::var("GKMEANS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Apply the scale to a default size (min 100).
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(100)
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("================================================================");
+    println!("{id}: {what}");
+    println!("scale={} backend={}", scale(), backend().name());
+    println!("================================================================");
+}
+
+/// The backend benches use (auto: PJRT when artifacts exist).
+pub fn backend() -> crate::runtime::Backend {
+    crate::runtime::Backend::auto()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scaled_has_floor() {
+        assert!(super::scaled(10) >= 100 || super::scale() >= 1.0);
+        assert_eq!(super::scaled(1000).max(100), super::scaled(1000));
+    }
+}

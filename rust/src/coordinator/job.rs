@@ -1,0 +1,174 @@
+//! Cluster-job specification: which method, on what data, with what
+//! parameters — the unit of work the pipeline executes and the benches
+//! sweep over.
+
+use crate::data::DatasetSpec;
+use crate::kmeans::common::{IterStat, KmeansParams};
+
+/// Clustering method selector (the 5 systems of Figs. 5–7 + the Fig. 4
+/// configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Traditional k-means (Lloyd).
+    Lloyd,
+    /// Boost k-means [16].
+    Boost,
+    /// Mini-Batch k-means [20].
+    MiniBatch,
+    /// Closure k-means [27].
+    Closure,
+    /// GK-means (Alg. 2 + Alg. 3 graph).
+    GkMeans,
+    /// GK-means with the NN-Descent graph ("KGraph+GK-means").
+    KGraphGkMeans,
+    /// GK-means on a traditional k-means core ("GK-means*", Fig. 4).
+    GkMeansTrad,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method, String> {
+        Ok(match s {
+            "lloyd" | "kmeans" => Method::Lloyd,
+            "boost" | "bkm" => Method::Boost,
+            "minibatch" | "mini-batch" => Method::MiniBatch,
+            "closure" => Method::Closure,
+            "gkmeans" | "gk" => Method::GkMeans,
+            "kgraph-gkmeans" | "kgraph" => Method::KGraphGkMeans,
+            "gkmeans-trad" | "gk-trad" => Method::GkMeansTrad,
+            other => return Err(format!("unknown method {other:?}")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Lloyd => "k-means",
+            Method::Boost => "boost k-means",
+            Method::MiniBatch => "mini-batch",
+            Method::Closure => "closure k-means",
+            Method::GkMeans => "GK-means",
+            Method::KGraphGkMeans => "KGraph+GK-means",
+            Method::GkMeansTrad => "GK-means*",
+        }
+    }
+
+    /// All methods in the paper's standard comparison order.
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Lloyd,
+            Method::Boost,
+            Method::MiniBatch,
+            Method::Closure,
+            Method::GkMeans,
+        ]
+    }
+}
+
+/// One clustering job.
+#[derive(Debug, Clone)]
+pub struct ClusterJob {
+    pub dataset: DatasetSpec,
+    pub method: Method,
+    pub k: usize,
+    /// κ for the graph-driven methods.
+    pub kappa: usize,
+    /// τ for Alg. 3.
+    pub tau: usize,
+    /// ξ for Alg. 3.
+    pub xi: usize,
+    pub base: KmeansParams,
+    /// Measure graph recall (costs an exact/sampled ground truth pass).
+    pub measure_recall: bool,
+}
+
+impl ClusterJob {
+    pub fn new(dataset: DatasetSpec, method: Method, k: usize) -> ClusterJob {
+        ClusterJob {
+            dataset,
+            method,
+            k,
+            kappa: 50,
+            tau: 10,
+            xi: 50,
+            base: KmeansParams::default(),
+            measure_recall: false,
+        }
+    }
+}
+
+/// Result of a job, with the columns Tab. 2 reports.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub method: Method,
+    pub n: usize,
+    pub dim: usize,
+    pub k: usize,
+    /// Initialization time (2M-tree / seeding / graph construction), s.
+    pub init_seconds: f64,
+    /// Iteration time, s.
+    pub iter_seconds: f64,
+    /// Total wall-clock, s.
+    pub total_seconds: f64,
+    /// Final average distortion ℰ.
+    pub distortion: f64,
+    /// Graph recall@1 (graph methods with `measure_recall`).
+    pub recall: Option<f64>,
+    /// Per-epoch history for the Fig. 5 curves.
+    pub history: Vec<IterStat>,
+}
+
+impl JobResult {
+    /// One formatted table row (Tab. 2 layout).
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<18} {:>9.2} {:>9.2} {:>9.2} {:>12.4} {}",
+            self.method.name(),
+            self.init_seconds,
+            self.iter_seconds,
+            self.total_seconds,
+            self.distortion,
+            self.recall.map(|r| format!("{r:.3}")).unwrap_or_else(|| "N.A.".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("lloyd", Method::Lloyd),
+            ("bkm", Method::Boost),
+            ("minibatch", Method::MiniBatch),
+            ("closure", Method::Closure),
+            ("gkmeans", Method::GkMeans),
+            ("kgraph", Method::KGraphGkMeans),
+            ("gk-trad", Method::GkMeansTrad),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+        assert!(Method::parse("wat").is_err());
+    }
+
+    #[test]
+    fn table_row_formats() {
+        let r = JobResult {
+            method: Method::GkMeans,
+            n: 10,
+            dim: 2,
+            k: 2,
+            init_seconds: 1.0,
+            iter_seconds: 2.0,
+            total_seconds: 3.0,
+            distortion: 0.5,
+            recall: Some(0.62),
+            history: vec![],
+        };
+        let row = r.table_row();
+        assert!(row.contains("GK-means"));
+        assert!(row.contains("0.620"));
+        let r2 = JobResult { recall: None, ..r };
+        assert!(r2.table_row().contains("N.A."));
+    }
+}

@@ -1,0 +1,100 @@
+//! Run metrics: distance-evaluation accounting and simple aggregates.
+//!
+//! The paper's complexity claims are in units of sample–centroid
+//! comparisons; [`OpCounts`] tracks them so benches can report measured
+//! operation counts next to wall-clock (robust against machine noise).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global-ish operation counters (cheap, relaxed atomics).
+#[derive(Debug, Default)]
+pub struct OpCounts {
+    /// Sample–centroid (or sample–composite) distance/dot evaluations.
+    pub dist_evals: AtomicU64,
+    /// Cluster-candidate sets examined.
+    pub candidate_sets: AtomicU64,
+    /// Moves applied.
+    pub moves: AtomicU64,
+}
+
+impl OpCounts {
+    pub fn new() -> OpCounts {
+        OpCounts::default()
+    }
+
+    #[inline]
+    pub fn add_dist(&self, n: u64) {
+        self.dist_evals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_moves(&self, n: u64) {
+        self.moves.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.dist_evals.load(Ordering::Relaxed),
+            self.candidate_sets.load(Ordering::Relaxed),
+            self.moves.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Online mean/min/max aggregate for repeated measurements.
+#[derive(Debug, Clone, Default)]
+pub struct Aggregate {
+    pub count: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Aggregate {
+    pub fn new() -> Aggregate {
+        Aggregate { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = OpCounts::new();
+        c.add_dist(5);
+        c.add_dist(7);
+        c.add_moves(1);
+        let (d, _, m) = c.snapshot();
+        assert_eq!(d, 12);
+        assert_eq!(m, 1);
+    }
+
+    #[test]
+    fn aggregate_stats() {
+        let mut a = Aggregate::new();
+        for v in [1.0, 2.0, 3.0] {
+            a.push(v);
+        }
+        assert_eq!(a.mean(), 2.0);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+        assert!(Aggregate::new().mean().is_nan());
+    }
+}

@@ -1,0 +1,7 @@
+//! The coordinator: job specifications, the end-to-end pipeline that the
+//! CLI and bench harnesses drive, and run metrics.
+
+pub mod job;
+pub mod metrics;
+pub mod pipeline;
+pub mod progress;

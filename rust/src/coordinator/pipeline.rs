@@ -1,0 +1,180 @@
+//! The end-to-end pipeline: dataset → (graph) → clustering → evaluation.
+//!
+//! Everything the CLI and the bench harnesses run goes through
+//! [`run_job`], so the paper's tables/figures and the user-facing launcher
+//! share one code path.
+
+use crate::coordinator::job::{ClusterJob, JobResult, Method};
+use crate::data::matrix::VecSet;
+use crate::gkm::{construct, gkmeans, variant};
+use crate::graph::{nn_descent, recall};
+use crate::kmeans::{boost, closure, lloyd, minibatch};
+use crate::runtime::Backend;
+use crate::util::timer::Timer;
+
+/// Execute a job end to end.
+pub fn run_job(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String> {
+    let data = job.dataset.load()?;
+    Ok(run_job_on(job, &data, backend))
+}
+
+/// Execute a job on an already-loaded dataset (benches reuse the data).
+pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResult {
+    let n = data.rows();
+    let k = job.k.min(n);
+    crate::log_info!(
+        "job: {} on n={n} d={} k={k} ({})",
+        job.method.name(),
+        data.dim(),
+        backend.name()
+    );
+
+    let (out, graph_seconds, recall_val) = match job.method {
+        Method::Lloyd => (lloyd::run(data, k, &job.base, backend), 0.0, None),
+        Method::Boost => (boost::run(data, k, &job.base, backend), 0.0, None),
+        Method::MiniBatch => (
+            minibatch::run(
+                data,
+                k,
+                &minibatch::MiniBatchParams { base: job.base.clone(), ..Default::default() },
+                backend,
+            ),
+            0.0,
+            None,
+        ),
+        Method::Closure => (
+            closure::run(
+                data,
+                k,
+                &closure::ClosureParams { base: job.base.clone(), ..Default::default() },
+                backend,
+            ),
+            0.0,
+            None,
+        ),
+        Method::GkMeans | Method::GkMeansTrad => {
+            let t = Timer::start();
+            let build = construct::build(
+                data,
+                &construct::ConstructParams {
+                    kappa: job.kappa,
+                    xi: job.xi,
+                    tau: job.tau,
+                    seed: job.base.seed,
+                },
+                backend,
+            );
+            let graph_seconds = t.elapsed_s();
+            let params = gkmeans::GkMeansParams { kappa: job.kappa, base: job.base.clone() };
+            let rec = job
+                .measure_recall
+                .then(|| measure_recall(data, &build.graph, job.base.seed));
+            let out = if job.method == Method::GkMeans {
+                gkmeans::run(data, k, &build.graph, &params, backend)
+            } else {
+                variant::run(data, k, &build.graph, &params, backend)
+            };
+            (out, graph_seconds, rec)
+        }
+        Method::KGraphGkMeans => {
+            let t = Timer::start();
+            let graph = nn_descent::build(
+                data,
+                job.kappa,
+                &nn_descent::NnDescentParams { seed: job.base.seed, ..Default::default() },
+            );
+            let graph_seconds = t.elapsed_s();
+            let rec = job
+                .measure_recall
+                .then(|| measure_recall(data, &graph, job.base.seed));
+            let params = gkmeans::GkMeansParams { kappa: job.kappa, base: job.base.clone() };
+            let out = gkmeans::run(data, k, &graph, &params, backend);
+            (out, graph_seconds, rec)
+        }
+    };
+
+    let mut history = out.history.clone();
+    for h in history.iter_mut() {
+        h.seconds += graph_seconds; // graph time precedes every epoch
+    }
+    JobResult {
+        method: job.method,
+        n,
+        dim: data.dim(),
+        k,
+        init_seconds: out.init_seconds + graph_seconds,
+        iter_seconds: out.total_seconds - out.init_seconds,
+        total_seconds: out.total_seconds + graph_seconds,
+        distortion: out.distortion(),
+        recall: recall_val,
+        history,
+    }
+}
+
+/// Top-1 recall (exact below 20K samples, 100-query sampled above —
+/// the paper's VLAD10M protocol).
+fn measure_recall(data: &VecSet, graph: &crate::graph::knn::KnnGraph, seed: u64) -> f64 {
+    if data.rows() <= 20_000 {
+        let exact = crate::graph::brute::build(data, 1, &Backend::native());
+        recall::recall_at_1(graph, &exact)
+    } else {
+        recall::sampled_recall_at_1(data, graph, 100, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetSpec;
+
+    fn quick_job(method: Method) -> ClusterJob {
+        let mut j = ClusterJob::new(
+            DatasetSpec::Synth { kind: "blobs".into(), n: 400, seed: 5 },
+            method,
+            8,
+        );
+        j.kappa = 8;
+        j.tau = 3;
+        j.xi = 25;
+        j.base.max_iters = 5;
+        j
+    }
+
+    #[test]
+    fn every_method_runs_end_to_end() {
+        let b = Backend::native();
+        for &m in &[
+            Method::Lloyd,
+            Method::Boost,
+            Method::MiniBatch,
+            Method::Closure,
+            Method::GkMeans,
+            Method::KGraphGkMeans,
+            Method::GkMeansTrad,
+        ] {
+            let r = run_job(&quick_job(m), &b).unwrap();
+            assert_eq!(r.n, 400);
+            assert!(r.distortion.is_finite(), "{m:?}");
+            assert!(r.total_seconds > 0.0);
+            assert!(!r.history.is_empty());
+        }
+    }
+
+    #[test]
+    fn recall_measured_when_asked() {
+        let b = Backend::native();
+        let mut j = quick_job(Method::GkMeans);
+        j.measure_recall = true;
+        let r = run_job(&j, &b).unwrap();
+        let rec = r.recall.expect("recall requested");
+        assert!((0.0..=1.0).contains(&rec));
+    }
+
+    #[test]
+    fn gkmeans_total_includes_graph_time() {
+        let b = Backend::native();
+        let r = run_job(&quick_job(Method::GkMeans), &b).unwrap();
+        assert!(r.init_seconds > 0.0);
+        assert!(r.total_seconds >= r.init_seconds);
+    }
+}

@@ -1,0 +1,90 @@
+//! Convergence detection and iteration-progress reporting.
+
+use crate::kmeans::common::IterStat;
+
+/// Sliding-window convergence detector: declares convergence when the
+/// relative distortion improvement over the last `window` epochs falls
+/// below `eps` (the "changes very little after 30 iterations" criterion
+/// the paper uses to fix iteration counts).
+#[derive(Debug, Clone)]
+pub struct Convergence {
+    pub window: usize,
+    pub eps: f64,
+}
+
+impl Default for Convergence {
+    fn default() -> Self {
+        Convergence { window: 3, eps: 1e-4 }
+    }
+}
+
+impl Convergence {
+    /// True if the history has converged under this criterion.
+    pub fn converged(&self, history: &[IterStat]) -> bool {
+        if history.len() <= self.window {
+            return false;
+        }
+        let cur = history[history.len() - 1].distortion;
+        let past = history[history.len() - 1 - self.window].distortion;
+        if past <= 0.0 {
+            return true;
+        }
+        (past - cur) / past < self.eps
+    }
+
+    /// Index of the first epoch at which the run was converged, if any.
+    pub fn first_converged(&self, history: &[IterStat]) -> Option<usize> {
+        (0..=history.len()).find(|&t| self.converged(&history[..t]))
+    }
+}
+
+/// Render a compact progress line for an epoch.
+pub fn progress_line(tag: &str, h: &IterStat) -> String {
+    format!(
+        "{tag} iter={:>3} t={:>8} E={:<12.5} moves={}",
+        h.iter,
+        crate::util::timer::fmt_secs(h.seconds),
+        h.distortion,
+        h.moves
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(ds: &[f64]) -> Vec<IterStat> {
+        ds.iter()
+            .enumerate()
+            .map(|(i, &d)| IterStat { iter: i, seconds: i as f64, distortion: d, moves: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn detects_plateau() {
+        let c = Convergence { window: 2, eps: 1e-3 };
+        assert!(!c.converged(&hist(&[10.0, 5.0, 2.0])));
+        assert!(c.converged(&hist(&[10.0, 5.0, 5.0, 4.9999, 4.9999])));
+    }
+
+    #[test]
+    fn short_history_not_converged() {
+        let c = Convergence::default();
+        assert!(!c.converged(&hist(&[1.0])));
+        assert!(!c.converged(&[]));
+    }
+
+    #[test]
+    fn first_converged_index() {
+        let c = Convergence { window: 1, eps: 1e-3 };
+        let h = hist(&[10.0, 5.0, 5.0, 5.0]);
+        assert_eq!(c.first_converged(&h), Some(3));
+        assert_eq!(c.first_converged(&hist(&[10.0, 1.0])), None);
+    }
+
+    #[test]
+    fn progress_line_contains_fields() {
+        let l = progress_line("bkm", &IterStat { iter: 7, seconds: 1.0, distortion: 0.5, moves: 3 });
+        assert!(l.contains("iter=  7") && l.contains("moves=3"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Tile-reducing argmin over distance blocks.
+//!
+//! The Lloyd/assignment path computes distances block-by-block (native or
+//! PJRT) and folds each `m × n` block into running per-row minima; this
+//! module owns that fold so both backends share it.
+
+/// Running (best distance, best index) per query row.
+#[derive(Debug, Clone)]
+pub struct ArgminAcc {
+    pub best: Vec<f32>,
+    pub idx: Vec<u32>,
+}
+
+impl ArgminAcc {
+    pub fn new(m: usize) -> ArgminAcc {
+        ArgminAcc { best: vec![f32::INFINITY; m], idx: vec![u32::MAX; m] }
+    }
+
+    /// Fold one `m × n` distance block whose columns correspond to global
+    /// candidate ids `[base, base + n)`.
+    pub fn fold_block(&mut self, block: &[f32], n: usize, base: u32) {
+        let m = self.best.len();
+        assert_eq!(block.len(), m * n);
+        for i in 0..m {
+            let row = &block[i * n..(i + 1) * n];
+            let (mut bd, mut bi) = (self.best[i], self.idx[i]);
+            for (j, &dv) in row.iter().enumerate() {
+                // strict < keeps the lowest id on ties (matches argmin in HLO)
+                if dv < bd {
+                    bd = dv;
+                    bi = base + j as u32;
+                }
+            }
+            self.best[i] = bd;
+            self.idx[i] = bi;
+        }
+    }
+
+    /// Fold per-block argmin results (from the PJRT `assign_argmin` entry):
+    /// `idx[i]` is local to the block, `dist[i]` its distance.
+    pub fn fold_argmin(&mut self, idx: &[i32], dist: &[f32], base: u32) {
+        let m = self.best.len();
+        assert_eq!(idx.len(), m);
+        assert_eq!(dist.len(), m);
+        for i in 0..m {
+            // strict <: blocks arrive in ascending id order, so ties keep
+            // the lowest global id, matching the per-block HLO argmin.
+            if dist[i] < self.best[i] {
+                self.best[i] = dist[i];
+                self.idx[i] = base + idx[i] as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_block_fold_matches_global() {
+        // 2 queries, 4 candidates split into 2 blocks of 2
+        let block_a = vec![5.0, 3.0, /* row0 */ 1.0, 9.0 /* row1 */];
+        let block_b = vec![2.0, 4.0, 0.5, 1.0];
+        let mut acc = ArgminAcc::new(2);
+        acc.fold_block(&block_a, 2, 0);
+        acc.fold_block(&block_b, 2, 2);
+        assert_eq!(acc.idx, vec![2, 2]); // row0: 2.0 at id 2; row1: 0.5 at id 2
+        assert_eq!(acc.best, vec![2.0, 0.5]);
+    }
+
+    #[test]
+    fn tie_keeps_lowest_id() {
+        let block = vec![1.0, 1.0];
+        let mut acc = ArgminAcc::new(1);
+        acc.fold_block(&block, 2, 0);
+        assert_eq!(acc.idx, vec![0]);
+    }
+
+    #[test]
+    fn fold_argmin_blocks() {
+        let mut acc = ArgminAcc::new(2);
+        acc.fold_argmin(&[1, 0], &[3.0, 2.0], 0);
+        acc.fold_argmin(&[0, 1], &[1.0, 5.0], 8);
+        assert_eq!(acc.idx, vec![8, 0]); // row1 keeps block-0's winner (id 0)
+        assert_eq!(acc.best, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Scalar vector math: squared-L2 distance, dot product, norms.
+//!
+//! The 4-way unrolled loops below are the single hottest code in the
+//! native backend — `d2` is called `O(n·κ)` times per GK-means epoch and
+//! `O(n·ξ)` times per graph-refinement round.  The unrolling gives LLVM
+//! independent accumulator chains it reliably vectorizes; see
+//! `benches/hotpath_micro.rs` for the measured effect.
+
+/// Squared Euclidean distance ‖a − b‖².
+#[inline]
+pub fn d2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    // Four independent accumulators -> vectorizable, no loop-carried dep.
+    for i in 0..chunks {
+        let j = i * 4;
+        let e0 = a[j] - b[j];
+        let e1 = a[j + 1] - b[j + 1];
+        let e2 = a[j + 2] - b[j + 2];
+        let e3 = a[j + 3] - b[j + 3];
+        s0 += e0 * e0;
+        s1 += e1 * e1;
+        s2 += e2 * e2;
+        s3 += e3 * e3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let e = a[j] - b[j];
+        s += e * e;
+    }
+    s
+}
+
+/// Dot product ⟨a, b⟩ with the same unrolling discipline as [`d2`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Squared norm ‖a‖².
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Early-exit squared distance: abandons once the partial sum exceeds
+/// `bound` (classic "partial distance" pruning; used by graph refinement
+/// where most candidates lose to the current κ-th neighbor).
+#[inline]
+pub fn d2_bounded(a: &[f32], b: &[f32], bound: f32) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut s = 0f32;
+    let mut j = 0;
+    // check the bound every 16 components: cheap enough, prunes early.
+    while j + 16 <= n {
+        let mut part = 0f32;
+        for t in 0..16 {
+            let e = a[j + t] - b[j + t];
+            part += e * e;
+        }
+        s += part;
+        if s > bound {
+            return s;
+        }
+        j += 16;
+    }
+    while j < n {
+        let e = a[j] - b[j];
+        s += e * e;
+        j += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_d2(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn d2_matches_naive_various_lengths() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for len in [0, 1, 3, 4, 7, 16, 100, 128, 513] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let got = d2(&a, &b);
+            let want = naive_d2(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want), "len={len}");
+        }
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(dot(&a, &b), 2.0 + 3.0 + 4.0 + 5.0);
+        assert_eq!(norm2(&a), 55.0);
+    }
+
+    #[test]
+    fn d2_zero_for_identical() {
+        let a: Vec<f32> = (0..128).map(|i| i as f32).collect();
+        assert_eq!(d2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn bounded_exact_when_under_bound() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let a: Vec<f32> = (0..100).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..100).map(|_| rng.normal()).collect();
+        let exact = d2(&a, &b);
+        let got = d2_bounded(&a, &b, f32::MAX);
+        assert!((got - exact).abs() <= 1e-4 * (1.0 + exact));
+    }
+
+    #[test]
+    fn bounded_early_exit_exceeds_bound() {
+        let a = vec![0f32; 128];
+        let b = vec![10f32; 128];
+        let got = d2_bounded(&a, &b, 50.0);
+        assert!(got > 50.0, "must report a value above the bound");
+        // and it may be less than the exact distance (early exit)
+        assert!(got <= d2(&a, &b));
+    }
+}

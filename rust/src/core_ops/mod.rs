@@ -1,0 +1,10 @@
+//! Native distance math and selection primitives.
+//!
+//! These mirror the Layer-1 Pallas kernel semantics exactly (squared L2,
+//! clamped non-negative) so the Native and PJRT backends are
+//! interchangeable and cross-checkable.
+
+pub mod argmin;
+pub mod blockdist;
+pub mod dist;
+pub mod topk;

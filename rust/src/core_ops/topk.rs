@@ -1,0 +1,166 @@
+//! Bounded top-κ (smallest distance) selection.
+//!
+//! `TopK` is the per-node neighbor-list builder used by graph refinement
+//! and brute-force ground truth: a bounded max-heap keyed on distance so
+//! the current worst of the κ best sits at the root and most candidates
+//! are rejected with one comparison.
+
+/// One (distance, id) candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub dist: f32,
+    pub id: u32,
+}
+
+/// Bounded max-heap of the κ smallest-distance neighbors seen so far.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    cap: usize,
+    // binary max-heap by dist (root = worst kept)
+    heap: Vec<Neighbor>,
+}
+
+impl TopK {
+    pub fn new(cap: usize) -> TopK {
+        assert!(cap > 0);
+        TopK { cap, heap: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current acceptance threshold: below this, `push` will keep the item.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.cap {
+            f32::INFINITY
+        } else {
+            self.heap[0].dist
+        }
+    }
+
+    /// Offer a candidate; returns true if it was kept.
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u32) -> bool {
+        if self.heap.len() < self.cap {
+            self.heap.push(Neighbor { dist, id });
+            self.sift_up(self.heap.len() - 1);
+            true
+        } else if dist < self.heap[0].dist {
+            self.heap[0] = Neighbor { dist, id };
+            self.sift_down(0);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.heap[i].dist > self.heap[p].dist {
+                self.heap.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut big = i;
+            if l < n && self.heap[l].dist > self.heap[big].dist {
+                big = l;
+            }
+            if r < n && self.heap[r].dist > self.heap[big].dist {
+                big = r;
+            }
+            if big == i {
+                return;
+            }
+            self.heap.swap(i, big);
+            i = big;
+        }
+    }
+
+    /// Drain into ascending-distance order.
+    pub fn into_sorted(mut self) -> Vec<Neighbor> {
+        self.heap
+            .sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.id.cmp(&b.id)));
+        self.heap
+    }
+
+    /// Peek contents unsorted (for tests / merging).
+    pub fn as_slice(&self) -> &[Neighbor] {
+        &self.heap
+    }
+}
+
+/// Select indices of the κ smallest values of `vals` (ascending), stable on
+/// ties by index.  Convenience for small dense rows.
+pub fn topk_indices(vals: &[f32], k: usize) -> Vec<usize> {
+    let mut t = TopK::new(k.min(vals.len()).max(1));
+    for (i, &v) in vals.iter().enumerate() {
+        t.push(v, i as u32);
+    }
+    t.into_sorted().into_iter().map(|n| n.id as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 0.5, 9.0, 2.0].iter().enumerate() {
+            t.push(*d, i as u32);
+        }
+        let got: Vec<u32> = t.into_sorted().iter().map(|n| n.id).collect();
+        assert_eq!(got, vec![3, 1, 5]); // dists 0.5, 1.0, 2.0
+    }
+
+    #[test]
+    fn threshold_semantics() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(3.0, 0);
+        t.push(1.0, 1);
+        assert_eq!(t.threshold(), 3.0);
+        assert!(!t.push(5.0, 2), "worse than threshold rejected");
+        assert!(t.push(2.0, 3));
+        assert_eq!(t.threshold(), 2.0);
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = 1 + rng.below(200);
+            let k = 1 + rng.below(20);
+            let vals: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let got = topk_indices(&vals, k);
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap().then(a.cmp(&b)));
+            want.truncate(k.min(n));
+            assert_eq!(got, want, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn fewer_than_k_items() {
+        let got = topk_indices(&[2.0, 1.0], 10);
+        assert_eq!(got, vec![1, 0]);
+    }
+}

@@ -1,0 +1,192 @@
+//! fvecs / bvecs / ivecs interchange I/O (TEXMEX / SIFT1M conventions).
+//!
+//! Format: each vector is `<d: i32 little-endian><d components>`, where a
+//! component is `f32` (fvecs), `u8` (bvecs) or `i32` (ivecs).  These are
+//! the formats the paper's datasets ship in, so real SIFT1M/GIST1M files
+//! drop straight into the benchmarks.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::matrix::VecSet;
+
+fn read_i32le(r: &mut impl Read) -> std::io::Result<Option<i32>> {
+    let mut buf = [0u8; 4];
+    match r.read_exact(&mut buf) {
+        Ok(()) => Ok(Some(i32::from_le_bytes(buf))),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+/// Read a `.fvecs` file into a `VecSet`.
+pub fn read_fvecs(path: &Path) -> Result<VecSet, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut dim = 0usize;
+    let mut data: Vec<f32> = Vec::new();
+    while let Some(d) = read_i32le(&mut r).map_err(|e| e.to_string())? {
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if d != dim {
+            return Err(format!("inconsistent dim: {d} vs {dim}"));
+        }
+        let mut buf = vec![0u8; d * 4];
+        r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+        for c in buf.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+    }
+    if dim == 0 {
+        return Err(format!("{}: empty fvecs file", path.display()));
+    }
+    Ok(VecSet::from_flat(dim, data))
+}
+
+/// Read a `.bvecs` file (u8 components, promoted to f32).
+pub fn read_bvecs(path: &Path) -> Result<VecSet, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut dim = 0usize;
+    let mut data: Vec<f32> = Vec::new();
+    while let Some(d) = read_i32le(&mut r).map_err(|e| e.to_string())? {
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if d != dim {
+            return Err(format!("inconsistent dim: {d} vs {dim}"));
+        }
+        let mut buf = vec![0u8; d];
+        r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+        data.extend(buf.iter().map(|&b| b as f32));
+    }
+    if dim == 0 {
+        return Err(format!("{}: empty bvecs file", path.display()));
+    }
+    Ok(VecSet::from_flat(dim, data))
+}
+
+/// Write a `VecSet` as `.fvecs`.
+pub fn write_fvecs(path: &Path, v: &VecSet) -> Result<(), String> {
+    let f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let d = v.dim() as i32;
+    for i in 0..v.rows() {
+        w.write_all(&d.to_le_bytes()).map_err(|e| e.to_string())?;
+        for &x in v.row(i) {
+            w.write_all(&x.to_le_bytes()).map_err(|e| e.to_string())?;
+        }
+    }
+    w.flush().map_err(|e| e.to_string())
+}
+
+/// Write integer lists (e.g. KNN ground truth) as `.ivecs`.
+pub fn write_ivecs(path: &Path, rows: &[Vec<i32>]) -> Result<(), String> {
+    let f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes()).map_err(|e| e.to_string())?;
+        for &x in row {
+            w.write_all(&x.to_le_bytes()).map_err(|e| e.to_string())?;
+        }
+    }
+    w.flush().map_err(|e| e.to_string())
+}
+
+/// Read `.ivecs` integer lists.
+pub fn read_ivecs(path: &Path) -> Result<Vec<Vec<i32>>, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut out = Vec::new();
+    while let Some(d) = read_i32le(&mut r).map_err(|e| e.to_string())? {
+        let mut row = Vec::with_capacity(d as usize);
+        for _ in 0..d {
+            match read_i32le(&mut r).map_err(|e| e.to_string())? {
+                Some(v) => row.push(v),
+                None => return Err("truncated ivecs row".into()),
+            }
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Dispatch on file extension.
+pub fn read_auto(path: &Path) -> Result<VecSet, String> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("fvecs") => read_fvecs(path),
+        Some("bvecs") => read_bvecs(path),
+        other => Err(format!("unsupported dataset extension {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gkmeans_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let v = VecSet::from_flat(3, vec![1.0, 2.0, 3.0, -4.0, 5.5, 6.25]);
+        let p = tmp("rt.fvecs");
+        write_fvecs(&p, &v).unwrap();
+        let back = read_fvecs(&p).unwrap();
+        assert_eq!(v, back);
+        let auto = read_auto(&p).unwrap();
+        assert_eq!(v, auto);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1, 2, 3], vec![9]];
+        let p = tmp("rt.ivecs");
+        write_ivecs(&p, &rows).unwrap();
+        assert_eq!(read_ivecs(&p).unwrap(), rows);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bvecs_read() {
+        // hand-build a 2-vector bvecs file with d=2
+        let p = tmp("x.bvecs");
+        let mut bytes = Vec::new();
+        for row in [[7u8, 200u8], [0u8, 255u8]] {
+            bytes.extend(2i32.to_le_bytes());
+            bytes.extend(row);
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let v = read_bvecs(&p).unwrap();
+        assert_eq!(v.rows(), 2);
+        assert_eq!(v.row(0), &[7.0, 200.0]);
+        assert_eq!(v.row(1), &[0.0, 255.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_and_inconsistent_errors() {
+        let p = tmp("empty.fvecs");
+        std::fs::write(&p, b"").unwrap();
+        assert!(read_fvecs(&p).is_err());
+        let mut bytes = Vec::new();
+        bytes.extend(1i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_fvecs(&p).unwrap_err().contains("inconsistent"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unsupported_extension() {
+        assert!(read_auto(Path::new("/tmp/foo.csv")).is_err());
+    }
+}

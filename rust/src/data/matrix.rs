@@ -1,0 +1,163 @@
+//! `VecSet`: the flat row-major `f32` matrix every algorithm operates on.
+
+/// An `n × d` matrix of `f32`, row-major, contiguous.
+///
+/// All clustering structures index into one shared `VecSet`; rows are
+/// sample vectors.  Invariant: `data.len() == rows * dim`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VecSet {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl VecSet {
+    /// Build from a flat buffer; `data.len()` must be a multiple of `dim`.
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> VecSet {
+        assert!(dim > 0, "dim must be positive");
+        assert!(
+            data.len() % dim == 0,
+            "flat length {} not a multiple of dim {}",
+            data.len(),
+            dim
+        );
+        VecSet { dim, data }
+    }
+
+    /// An all-zeros `n × d` matrix.
+    pub fn zeros(rows: usize, dim: usize) -> VecSet {
+        VecSet::from_flat(dim, vec![0.0; rows * dim])
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.dim;
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.dim;
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// The whole flat buffer.
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Copy out the rows at `idx` into a new `VecSet` (gather).
+    pub fn gather(&self, idx: &[usize]) -> VecSet {
+        let mut out = Vec::with_capacity(idx.len() * self.dim);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        VecSet::from_flat(self.dim, out)
+    }
+
+    /// Append a row.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Contiguous sub-range of rows `[lo, hi)` as a flat slice.
+    #[inline]
+    pub fn rows_flat(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.data[lo * self.dim..hi * self.dim]
+    }
+
+    /// ℓ2-normalize every row in place (zero rows left untouched).
+    pub fn l2_normalize(&mut self) {
+        let d = self.dim;
+        for r in self.data.chunks_mut(d) {
+            let norm = r.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for v in r.iter_mut() {
+                    *v /= norm;
+                }
+            }
+        }
+    }
+
+    /// Per-matrix mean vector (f64 accumulation).
+    pub fn mean(&self) -> Vec<f32> {
+        let n = self.rows();
+        let mut acc = vec![0f64; self.dim];
+        for r in self.data.chunks(self.dim) {
+            for (a, v) in acc.iter_mut().zip(r) {
+                *a += *v as f64;
+            }
+        }
+        acc.iter().map(|a| (*a / n.max(1) as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = VecSet::from_flat(2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.rows_flat(1, 3), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn bad_flat_length_panics() {
+        VecSet::from_flat(3, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = VecSet::from_flat(1, vec![10.0, 11.0, 12.0, 13.0]);
+        let g = m.gather(&[3, 0, 3]);
+        assert_eq!(g.flat(), &[13.0, 10.0, 13.0]);
+    }
+
+    #[test]
+    fn row_mut_and_push() {
+        let mut m = VecSet::zeros(1, 2);
+        m.row_mut(0)[1] = 5.0;
+        m.push_row(&[7.0, 8.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(0), &[0.0, 5.0]);
+        assert_eq!(m.row(1), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn l2_normalize_rows() {
+        let mut m = VecSet::from_flat(2, vec![3.0, 4.0, 0.0, 0.0]);
+        m.l2_normalize();
+        assert!((m.row(0)[0] - 0.6).abs() < 1e-6);
+        assert!((m.row(0)[1] - 0.8).abs() < 1e-6);
+        assert_eq!(m.row(1), &[0.0, 0.0], "zero row untouched");
+    }
+
+    #[test]
+    fn mean_vector() {
+        let m = VecSet::from_flat(2, vec![1.0, 0.0, 3.0, 2.0]);
+        assert_eq!(m.mean(), vec![2.0, 1.0]);
+    }
+}

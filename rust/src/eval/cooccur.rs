@@ -1,0 +1,99 @@
+//! Fig. 1's statistic: the co-occurrence rate of a sample and its i-th
+//! nearest neighbor in the same cluster.
+//!
+//! For each rank i ∈ [1, κ]: the fraction of samples whose exact i-th
+//! nearest neighbor carries the same cluster label.  The paper measures
+//! this on SIFT100K with cluster size fixed to 50 (k = n/50) for both
+//! traditional k-means and the 2M-tree, observing rates ≫ the random-
+//! collision probability 50/n.
+
+use crate::data::matrix::VecSet;
+use crate::graph::knn::KnnGraph;
+
+/// Co-occurrence rate per neighbor rank (index 0 = nearest neighbor).
+pub fn cooccurrence_by_rank(exact: &KnnGraph, labels: &[u32], kappa: usize) -> Vec<f64> {
+    let n = exact.n();
+    assert_eq!(labels.len(), n);
+    let kappa = kappa.min(exact.kappa());
+    let mut hits = vec![0usize; kappa];
+    let mut counts = vec![0usize; kappa];
+    for i in 0..n {
+        let nb = exact.neighbors(i);
+        for r in 0..kappa {
+            let j = nb[r];
+            if j == u32::MAX {
+                continue;
+            }
+            counts[r] += 1;
+            if labels[j as usize] == labels[i] {
+                hits[r] += 1;
+            }
+        }
+    }
+    hits.iter()
+        .zip(&counts)
+        .map(|(&h, &c)| if c == 0 { f64::NAN } else { h as f64 / c as f64 })
+        .collect()
+}
+
+/// The random-collision baseline the paper quotes: expected co-occurrence
+/// rate of two random samples = Σ_r (n_r/n)² ≈ cluster_size/n for equal
+/// sizes.
+pub fn random_collision_rate(labels: &[u32], k: usize) -> f64 {
+    let n = labels.len() as f64;
+    let mut counts = vec![0f64; k];
+    for &l in labels {
+        counts[l as usize] += 1.0;
+    }
+    counts.iter().map(|c| (c / n) * (c / n)).sum()
+}
+
+/// Convenience: full Fig. 1 data for one clustering of `data`.
+pub fn figure1_series(data: &VecSet, labels: &[u32], kappa: usize, backend: &crate::runtime::Backend) -> Vec<f64> {
+    let exact = crate::graph::brute::build(data, kappa, backend);
+    cooccurrence_by_rank(&exact, labels, kappa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::kmeans::common::KmeansParams;
+    use crate::runtime::Backend;
+
+    #[test]
+    fn clustered_data_cooccurs_far_above_random() {
+        let data = blobs(&BlobSpec { sigma: 0.5, ..BlobSpec::quick(500, 6, 10) }, 1);
+        let out = crate::kmeans::lloyd::run(&data, 10, &KmeansParams::default(), &Backend::native());
+        let series = figure1_series(&data, &out.clustering.labels, 5, &Backend::native());
+        let random = random_collision_rate(&out.clustering.labels, 10);
+        assert!(series[0] > 0.8, "NN co-occurrence {series:?}");
+        assert!(series[0] > random * 3.0);
+    }
+
+    #[test]
+    fn rate_decreases_with_rank_on_average() {
+        let data = blobs(&BlobSpec::quick(400, 4, 8), 2);
+        let out = crate::kmeans::lloyd::run(&data, 8, &KmeansParams::default(), &Backend::native());
+        let series = figure1_series(&data, &out.clustering.labels, 20, &Backend::native());
+        // paper Fig. 1: closer neighbors co-occur more; compare first vs last
+        assert!(series[0] >= series[19], "{series:?}");
+    }
+
+    #[test]
+    fn random_collision_for_balanced_clusters() {
+        let labels: Vec<u32> = (0..1000).map(|i| (i % 20) as u32).collect();
+        let r = random_collision_rate(&labels, 20);
+        assert!((r - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_labels_near_collision_rate() {
+        let data = blobs(&BlobSpec::quick(400, 4, 4), 3);
+        let mut rng = crate::util::rng::Rng::new(4);
+        let labels: Vec<u32> = (0..400).map(|_| rng.below(8) as u32).collect();
+        let series = figure1_series(&data, &labels, 3, &Backend::native());
+        let random = random_collision_rate(&labels, 8);
+        assert!((series[0] - random).abs() < 0.08, "{} vs {random}", series[0]);
+    }
+}

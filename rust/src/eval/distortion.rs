@@ -1,0 +1,68 @@
+//! Average distortion ℰ (Eqn. 4) — the paper's clustering-quality metric,
+//! identical to WCSSD/MSE in [27]/[30].
+
+use crate::core_ops::dist::d2;
+use crate::data::matrix::VecSet;
+use crate::kmeans::common::Clustering;
+
+/// ℰ = Σᵢ ‖C_{q(i)} − x_i‖² / n computed from scratch.
+pub fn average_distortion(data: &VecSet, c: &Clustering) -> f64 {
+    let centroids = c.centroids();
+    let mut s = 0f64;
+    for (i, &l) in c.labels.iter().enumerate() {
+        s += d2(data.row(i), centroids.row(l as usize)) as f64;
+    }
+    s / data.rows().max(1) as f64
+}
+
+/// Distortion of an arbitrary label assignment against given centroids
+/// (used to evaluate cross-method label transfers).
+pub fn distortion_of(data: &VecSet, labels: &[u32], centroids: &VecSet) -> f64 {
+    crate::kmeans::common::distortion_exact(data, labels, centroids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_incremental_identity() {
+        // Clustering::distortion uses the Σ‖x‖² − ℐ identity; this module
+        // computes the sum directly. They must agree to fp tolerance.
+        let data = blobs(&BlobSpec::quick(300, 8, 6), 1);
+        let mut rng = Rng::new(2);
+        let labels: Vec<u32> = (0..300).map(|_| rng.below(6) as u32).collect();
+        let c = Clustering::from_labels(&data, labels, 6);
+        let a = average_distortion(&data, &c);
+        let b = c.distortion(&data);
+        assert!((a - b).abs() < 1e-6 * (1.0 + a), "{a} vs {b}");
+    }
+
+    #[test]
+    fn zero_for_self_clusters() {
+        let data = blobs(&BlobSpec::quick(10, 3, 2), 3);
+        let labels: Vec<u32> = (0..10).map(|i| i as u32).collect();
+        let c = Clustering::from_labels(&data, labels, 10);
+        assert!(average_distortion(&data, &c) < 1e-9);
+    }
+
+    #[test]
+    fn worse_labels_higher_distortion() {
+        let data = blobs(&BlobSpec { sigma: 0.1, spread: 100.0, ..BlobSpec::quick(200, 4, 4) }, 4);
+        let good = crate::kmeans::lloyd::run(
+            &data,
+            4,
+            &crate::kmeans::common::KmeansParams::default(),
+            &crate::runtime::Backend::native(),
+        );
+        let mut rng = Rng::new(5);
+        let bad_labels: Vec<u32> = (0..200).map(|_| rng.below(4) as u32).collect();
+        let bad = Clustering::from_labels(&data, bad_labels, 4);
+        assert!(
+            average_distortion(&data, &good.clustering) * 5.0
+                < average_distortion(&data, &bad),
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation: distortion (Eqn. 4), the Fig. 1 co-occurrence statistic,
+//! and table/CSV reporting shared by the bench harnesses.
+
+pub mod cooccur;
+pub mod distortion;
+pub mod report;

@@ -1,0 +1,42 @@
+//! GK-means: the paper's contribution.
+//!
+//! * [`gkmeans`] — Alg. 2: boost k-means where each sample is only
+//!   compared against the clusters its κ graph-neighbors reside in.
+//! * [`variant`] — the Alg. 2 variant built on traditional k-means
+//!   ("GK-means\*" in Fig. 4): seek the closest *centroid* among the
+//!   candidate clusters instead of maximizing Δℐ.
+//! * [`construct`] — Alg. 3: intertwined KNN-graph construction by
+//!   repeatedly calling the fast k-means on fixed-size-ξ cells.
+//! * [`ann`] — graph-based greedy ANN search (§4.3's application).
+
+pub mod ann;
+pub mod construct;
+pub mod gkmeans;
+pub mod variant;
+
+use crate::data::matrix::VecSet;
+use crate::kmeans::common::KmeansOutput;
+use crate::runtime::Backend;
+
+/// End-to-end GK-means: build the KNN graph with Alg. 3, then cluster
+/// with Alg. 2 (the paper's "two major steps", §4.3 summary).
+pub fn cluster(
+    data: &VecSet,
+    k: usize,
+    params: &gkmeans::GkMeansParams,
+    backend: &Backend,
+) -> KmeansOutput {
+    let build = construct::build(data, &construct::ConstructParams {
+        kappa: params.kappa,
+        seed: params.base.seed,
+        ..Default::default()
+    }, backend);
+    let mut out = gkmeans::run(data, k, &build.graph, params, backend);
+    // account graph-construction time as initialization cost
+    out.init_seconds += build.total_seconds;
+    out.total_seconds += build.total_seconds;
+    for h in out.history.iter_mut() {
+        h.seconds += build.total_seconds;
+    }
+    out
+}

@@ -1,0 +1,98 @@
+//! Exact KNN graph by brute force — the recall ground truth.
+//!
+//! `O(d·n²)`: only run on the scales the paper does (SIFT100K-sized and
+//! below, or the sampled-recall path in [`crate::graph::recall`]).
+
+use crate::data::matrix::VecSet;
+use crate::graph::knn::KnnGraph;
+use crate::runtime::Backend;
+
+/// Build the exact κ-NN graph with blocked distance tiles.
+pub fn build(data: &VecSet, kappa: usize, backend: &Backend) -> KnnGraph {
+    let n = data.rows();
+    let d = data.dim();
+    let mut g = KnnGraph::empty(n, kappa);
+    const B: usize = 256;
+    let mut block = vec![0f32; B * B];
+    let mut i0 = 0;
+    while i0 < n {
+        let rows = (n - i0).min(B);
+        let xb = data.rows_flat(i0, i0 + rows);
+        let mut j0 = 0;
+        while j0 < n {
+            let cols = (n - j0).min(B);
+            let yb = data.rows_flat(j0, j0 + cols);
+            let blk = &mut block[..rows * cols];
+            backend.block_l2(xb, yb, d, blk);
+            for r in 0..rows {
+                let gi = i0 + r;
+                let row = &blk[r * cols..(r + 1) * cols];
+                for (c, &dd) in row.iter().enumerate() {
+                    let gj = j0 + c;
+                    if gi != gj {
+                        g.update(gi, gj as u32, dd);
+                    }
+                }
+            }
+            j0 += cols;
+        }
+        i0 += rows;
+    }
+    g
+}
+
+/// Exact κ nearest neighbors of one query row index (used by sampled
+/// recall on sets too large for the full graph).
+pub fn exact_neighbors_of(data: &VecSet, i: usize, kappa: usize) -> Vec<u32> {
+    use crate::core_ops::topk::TopK;
+    let mut t = TopK::new(kappa);
+    let q = data.row(i);
+    for j in 0..data.rows() {
+        if j != i {
+            t.push(crate::core_ops::dist::d2(q, data.row(j)), j as u32);
+        }
+    }
+    t.into_sorted().into_iter().map(|n| n.id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+
+    #[test]
+    fn brute_graph_matches_per_query_search() {
+        let data = blobs(&BlobSpec::quick(150, 6, 4), 1);
+        let g = build(&data, 5, &Backend::native());
+        g.check_invariants().unwrap();
+        for i in (0..150).step_by(17) {
+            let want = exact_neighbors_of(&data, i, 5);
+            assert_eq!(g.neighbors(i), &want[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn neighbors_are_sorted_and_distances_exact() {
+        let data = blobs(&BlobSpec::quick(80, 3, 3), 2);
+        let g = build(&data, 3, &Backend::native());
+        for i in 0..80 {
+            let ids = g.neighbors(i);
+            let ds = g.distances(i);
+            for t in 0..3 {
+                let want = crate::core_ops::dist::d2(data.row(i), data.row(ids[t] as usize));
+                assert!((ds[t] - want).abs() < 1e-3 * (1.0 + want));
+            }
+            assert!(ds.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn kappa_larger_than_n_minus_one() {
+        let data = blobs(&BlobSpec::quick(5, 2, 1), 3);
+        let g = build(&data, 10, &Backend::native());
+        for i in 0..5 {
+            let real: Vec<u32> = g.neighbors(i).iter().copied().filter(|&j| j != u32::MAX).collect();
+            assert_eq!(real.len(), 4, "only n-1 neighbors exist");
+        }
+    }
+}

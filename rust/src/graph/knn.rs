@@ -1,0 +1,260 @@
+//! The approximate KNN graph: for each of `n` samples, an ascending-
+//! distance list of κ (distance, id) neighbor entries.
+//!
+//! Updates keep the lists sorted and deduplicated; `update` is the inner
+//! operation of both Alg. 3 (in-cell refinement) and NN-Descent, so it is
+//! written to be branch-cheap: one threshold check rejects most
+//! candidates, and insertion shifts at most κ entries.
+
+use crate::util::rng::Rng;
+
+/// Fixed-κ neighbor lists over `n` samples.
+#[derive(Debug, Clone)]
+pub struct KnnGraph {
+    n: usize,
+    kappa: usize,
+    /// Flat `n × κ` neighbor ids (u32::MAX = empty slot).
+    ids: Vec<u32>,
+    /// Flat `n × κ` squared distances, ascending per row.
+    dists: Vec<f32>,
+}
+
+impl KnnGraph {
+    /// An empty graph (all slots vacant).
+    pub fn empty(n: usize, kappa: usize) -> KnnGraph {
+        assert!(kappa >= 1);
+        KnnGraph {
+            n,
+            kappa,
+            ids: vec![u32::MAX; n * kappa],
+            dists: vec![f32::INFINITY; n * kappa],
+        }
+    }
+
+    /// Random initialization (Alg. 3 line 4): κ distinct random neighbors
+    /// per node, distances set to +∞ so any real measurement replaces them.
+    ///
+    /// Distances are *not* computed here: the first GK-means round treats
+    /// the random lists as arbitrary candidates, exactly as the paper
+    /// intends ("the clustering results are nearly random" at τ=0).
+    pub fn random(n: usize, kappa: usize, rng: &mut Rng) -> KnnGraph {
+        let mut g = KnnGraph::empty(n, kappa);
+        for i in 0..n {
+            let row = &mut g.ids[i * kappa..(i + 1) * kappa];
+            for t in 0..row.len() {
+                // distinct from self AND from earlier slots in the row
+                // (kappa ≪ n, so rejection terminates fast; when n is tiny
+                // and slots can't all be filled, leave the rest vacant)
+                let mut attempts = 0;
+                loop {
+                    let cand = rng.below(n) as u32;
+                    attempts += 1;
+                    if cand as usize != i && !row[..t].contains(&cand) {
+                        row[t] = cand;
+                        break;
+                    }
+                    if attempts > 16 * n {
+                        break; // leave vacant (u32::MAX)
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    /// Neighbor ids of node `i` (may contain `u32::MAX` for vacant slots).
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.ids[i * self.kappa..(i + 1) * self.kappa]
+    }
+
+    /// Neighbor distances of node `i` (ascending).
+    #[inline]
+    pub fn distances(&self, i: usize) -> &[f32] {
+        &self.dists[i * self.kappa..(i + 1) * self.kappa]
+    }
+
+    /// Current worst kept distance of node `i` (∞ if any slot vacant).
+    #[inline]
+    pub fn threshold(&self, i: usize) -> f32 {
+        self.dists[i * self.kappa + self.kappa - 1]
+    }
+
+    /// Offer neighbor `j` at squared distance `d` to node `i`'s list.
+    /// Keeps the row sorted ascending and free of duplicates.  Returns
+    /// true if the list changed.
+    pub fn update(&mut self, i: usize, j: u32, d: f32) -> bool {
+        debug_assert_ne!(i as u32, j, "self-edge");
+        let base = i * self.kappa;
+        let k = self.kappa;
+        let dists = &mut self.dists[base..base + k];
+        let ids = &mut self.ids[base..base + k];
+        if d >= dists[k - 1] {
+            return false; // not better than the worst kept
+        }
+        // find insertion position (first index with dist > d)
+        let mut pos = match dists.partition_point(|&x| x < d) {
+            p => p,
+        };
+        // duplicate check: j could already be present (same or other dist).
+        // Rows are short (κ ≤ 100) — linear scan is fastest in practice.
+        if let Some(existing) = ids.iter().position(|&x| x == j) {
+            if dists[existing] <= d {
+                return false; // already present with a better distance
+            }
+            // re-position the existing entry with the improved distance
+            if existing < pos {
+                pos = existing;
+            }
+            // shift (existing..pos] right is wrong direction; remove then insert
+            // remove `existing`, shift left everything after it
+            for t in existing..k - 1 {
+                ids[t] = ids[t + 1];
+                dists[t] = dists[t + 1];
+            }
+            ids[k - 1] = u32::MAX;
+            dists[k - 1] = f32::INFINITY;
+        }
+        // shift right from pos, insert
+        for t in (pos..k - 1).rev() {
+            ids[t + 1] = ids[t];
+            dists[t + 1] = dists[t];
+        }
+        ids[pos] = j;
+        dists[pos] = d;
+        true
+    }
+
+    /// Symmetric update: offers the pair to both endpoints (Alg. 3 line 11
+    /// "Update G[i] and G[j] with d(x_i, x_j)").
+    pub fn update_pair(&mut self, i: usize, j: usize, d: f32) -> bool {
+        let a = self.update(i, j as u32, d);
+        let b = self.update(j, i as u32, d);
+        a || b
+    }
+
+    /// Row-invariant check (sorted, deduplicated, no self-edges).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for i in 0..self.n {
+            let ids = self.neighbors(i);
+            let dists = self.distances(i);
+            let mut seen = std::collections::HashSet::new();
+            for t in 0..self.kappa {
+                if ids[t] == u32::MAX {
+                    continue;
+                }
+                if ids[t] as usize == i {
+                    return Err(format!("self edge at node {i}"));
+                }
+                if !seen.insert(ids[t]) {
+                    return Err(format!("duplicate neighbor {} at node {i}", ids[t]));
+                }
+                if t > 0 && dists[t] < dists[t - 1] {
+                    return Err(format!("row {i} not sorted at slot {t}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean of the top-1 distances (a cheap graph-quality proxy).
+    pub fn mean_nn_dist(&self) -> f64 {
+        let mut s = 0f64;
+        let mut c = 0usize;
+        for i in 0..self.n {
+            let d = self.dists[i * self.kappa];
+            if d.is_finite() {
+                s += d as f64;
+                c += 1;
+            }
+        }
+        if c == 0 {
+            f64::INFINITY
+        } else {
+            s / c as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_keeps_sorted_topk() {
+        let mut g = KnnGraph::empty(2, 3);
+        assert!(g.update(0, 5, 2.0));
+        assert!(g.update(0, 6, 1.0));
+        assert!(g.update(0, 7, 3.0));
+        assert!(!g.update(0, 8, 9.0), "worse than worst");
+        assert!(g.update(0, 9, 0.5));
+        assert_eq!(g.neighbors(0), &[9, 6, 5]);
+        assert_eq!(g.distances(0), &[0.5, 1.0, 2.0]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_with_better_distance_repositions() {
+        let mut g = KnnGraph::empty(1, 3);
+        g.update(0, 5, 2.0);
+        g.update(0, 6, 3.0);
+        assert!(!g.update(0, 5, 2.5), "worse duplicate ignored");
+        assert!(g.update(0, 6, 0.1), "better duplicate repositions");
+        assert_eq!(g.neighbors(0), &[6, 5, u32::MAX]);
+        assert_eq!(g.distances(0)[..2], [0.1, 2.0]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn update_pair_touches_both() {
+        let mut g = KnnGraph::empty(4, 2);
+        g.update_pair(1, 3, 0.7);
+        assert_eq!(g.neighbors(1)[0], 3);
+        assert_eq!(g.neighbors(3)[0], 1);
+    }
+
+    #[test]
+    fn random_init_valid() {
+        let mut rng = Rng::new(1);
+        let g = KnnGraph::random(50, 5, &mut rng);
+        g.check_invariants().unwrap();
+        for i in 0..50 {
+            assert!(g.neighbors(i).iter().all(|&j| j != u32::MAX && j < 50));
+        }
+    }
+
+    #[test]
+    fn threshold_reflects_worst() {
+        let mut g = KnnGraph::empty(1, 2);
+        assert_eq!(g.threshold(0), f32::INFINITY);
+        g.update(0, 1, 5.0);
+        assert_eq!(g.threshold(0), f32::INFINITY, "still a vacant slot");
+        g.update(0, 2, 3.0);
+        assert_eq!(g.threshold(0), 5.0);
+    }
+
+    #[test]
+    fn randomized_update_stress_keeps_invariants() {
+        let mut rng = Rng::new(2);
+        let mut g = KnnGraph::empty(20, 4);
+        for _ in 0..2000 {
+            let i = rng.below(20);
+            let mut j = rng.below(20);
+            if j == i {
+                j = (j + 1) % 20;
+            }
+            g.update(i, j as u32, rng.f32());
+        }
+        g.check_invariants().unwrap();
+    }
+}

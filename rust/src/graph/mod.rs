@@ -1,0 +1,12 @@
+//! K-nearest-neighbor graphs: the data structure GK-means is driven by.
+//!
+//! * [`knn`] — the fixed-κ neighbor-list graph with heap-based updates.
+//! * [`brute`] — exact graph construction (ground truth for recall).
+//! * [`nn_descent`] — NN-Descent/KGraph [32], the comparator graph
+//!   supplier for the "KGraph+GK-means" runs.
+//! * [`recall`] — recall@1 / recall@κ measurement, sampled for large n.
+
+pub mod brute;
+pub mod knn;
+pub mod nn_descent;
+pub mod recall;

@@ -1,0 +1,104 @@
+//! Graph-quality measurement: recall of the approximate graph against
+//! exact neighbors.
+//!
+//! The paper reports *top-1 average recall*: the fraction of samples whose
+//! exact nearest neighbor appears in the approximate KNN list's first
+//! position — §5.1 measures "only the recall of top-1"; for VLAD10M it is
+//! estimated from 100 random samples.  Both modes live here.
+
+use crate::data::matrix::VecSet;
+use crate::graph::brute;
+use crate::graph::knn::KnnGraph;
+use crate::util::rng::Rng;
+
+/// recall@1 against a precomputed exact graph: fraction of nodes whose
+/// true top-1 equals the approximate top-1.
+pub fn recall_at_1(approx: &KnnGraph, exact: &KnnGraph) -> f64 {
+    assert_eq!(approx.n(), exact.n());
+    let n = approx.n();
+    let mut hit = 0usize;
+    for i in 0..n {
+        if approx.neighbors(i)[0] == exact.neighbors(i)[0] {
+            hit += 1;
+        }
+    }
+    hit as f64 / n.max(1) as f64
+}
+
+/// recall@κ: |approx row ∩ exact row| / κ averaged over nodes.
+pub fn recall_at_k(approx: &KnnGraph, exact: &KnnGraph, kappa: usize) -> f64 {
+    assert_eq!(approx.n(), exact.n());
+    let n = approx.n();
+    let mut total = 0f64;
+    for i in 0..n {
+        let truth: std::collections::HashSet<u32> =
+            exact.neighbors(i).iter().copied().take(kappa).collect();
+        let inter = approx
+            .neighbors(i)
+            .iter()
+            .take(kappa)
+            .filter(|j| truth.contains(j))
+            .count();
+        total += inter as f64 / kappa as f64;
+    }
+    total / n.max(1) as f64
+}
+
+/// Sampled top-1 recall for large `n` (the paper's VLAD10M protocol:
+/// estimate from `samples` random nodes with exact per-query search).
+pub fn sampled_recall_at_1(data: &VecSet, approx: &KnnGraph, samples: usize, seed: u64) -> f64 {
+    let n = data.rows();
+    let mut rng = Rng::new(seed);
+    let picks = rng.sample_indices(n, samples.min(n));
+    let mut hit = 0usize;
+    for &i in &picks {
+        let truth = brute::exact_neighbors_of(data, i, 1);
+        if !truth.is_empty() && approx.neighbors(i)[0] == truth[0] {
+            hit += 1;
+        }
+    }
+    hit as f64 / picks.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::runtime::Backend;
+
+    #[test]
+    fn exact_graph_has_recall_one() {
+        let data = blobs(&BlobSpec::quick(120, 4, 4), 1);
+        let g = brute::build(&data, 4, &Backend::native());
+        assert_eq!(recall_at_1(&g, &g), 1.0);
+        assert_eq!(recall_at_k(&g, &g, 4), 1.0);
+        assert!(sampled_recall_at_1(&data, &g, 30, 7) > 0.999);
+    }
+
+    #[test]
+    fn random_graph_has_low_recall() {
+        let data = blobs(&BlobSpec::quick(300, 4, 4), 2);
+        let exact = brute::build(&data, 3, &Backend::native());
+        let mut rng = Rng::new(3);
+        let random = KnnGraph::random(300, 3, &mut rng);
+        assert!(recall_at_1(&random, &exact) < 0.05);
+        assert!(recall_at_k(&random, &exact, 3) < 0.05);
+    }
+
+    #[test]
+    fn partial_overlap_recall_at_k() {
+        // construct graphs by hand: approx has 1 of 2 right per node
+        let mut exact = KnnGraph::empty(2, 2);
+        exact.update(0, 1, 1.0);
+        exact.update(0, 2, 2.0);
+        exact.update(1, 0, 1.0);
+        exact.update(1, 2, 2.0);
+        let mut approx = KnnGraph::empty(2, 2);
+        approx.update(0, 1, 1.0);
+        approx.update(0, 9, 1.5);
+        approx.update(1, 9, 0.5);
+        approx.update(1, 2, 2.0);
+        assert!((recall_at_k(&approx, &exact, 2) - 0.5).abs() < 1e-9);
+        assert!((recall_at_1(&approx, &exact) - 0.5).abs() < 1e-9);
+    }
+}

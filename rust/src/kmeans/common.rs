@@ -1,0 +1,365 @@
+//! Shared clustering state: assignments, composite vectors, the boost
+//! k-means objective ℐ (Eqn. 2) and its increment Δℐ (Eqn. 3), distortion
+//! (Eqn. 4).
+//!
+//! The central data structure is [`Clustering`]: the label array plus the
+//! per-cluster *composite vectors* `D_r = Σ_{x_i ∈ S_r} x_i` and counts
+//! `n_r`.  BKM-style moves are O(d) updates of two composite vectors, and
+//! the objective ℐ = Σ_r ⟨D_r, D_r⟩ / n_r is maintained incrementally.
+
+use crate::core_ops::dist::{dot, norm2};
+use crate::data::matrix::VecSet;
+
+/// Common iteration-control parameters shared by the k-means variants.
+#[derive(Debug, Clone)]
+pub struct KmeansParams {
+    /// Maximum number of epochs (full passes).
+    pub max_iters: usize,
+    /// Stop when the fraction of samples moved in an epoch drops below this.
+    pub min_move_rate: f64,
+    /// RNG seed (visit order, initialization).
+    pub seed: u64,
+}
+
+impl Default for KmeansParams {
+    fn default() -> Self {
+        KmeansParams { max_iters: 30, min_move_rate: 1e-3, seed: 20170707 }
+    }
+}
+
+/// Cluster state over a borrowed dataset.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster label per sample.
+    pub labels: Vec<u32>,
+    /// Flat `k × d` composite vectors `D_r`.
+    pub composite: Vec<f32>,
+    /// Cluster sizes `n_r`.
+    pub counts: Vec<u32>,
+    /// Number of clusters k.
+    pub k: usize,
+    /// Dimensionality d (cached from the dataset).
+    pub dim: usize,
+}
+
+impl Clustering {
+    /// Build state from a label array (recomputes composites/counts).
+    pub fn from_labels(data: &VecSet, labels: Vec<u32>, k: usize) -> Clustering {
+        assert_eq!(labels.len(), data.rows());
+        let dim = data.dim();
+        let mut c = Clustering {
+            labels,
+            composite: vec![0.0; k * dim],
+            counts: vec![0; k],
+            k,
+            dim,
+        };
+        c.rebuild(data);
+        c
+    }
+
+    /// Recompute composite vectors and counts from labels.
+    pub fn rebuild(&mut self, data: &VecSet) {
+        self.composite.iter_mut().for_each(|v| *v = 0.0);
+        self.counts.iter_mut().for_each(|v| *v = 0);
+        for (i, &l) in self.labels.iter().enumerate() {
+            let l = l as usize;
+            debug_assert!(l < self.k, "label {l} out of range k={}", self.k);
+            let dst = &mut self.composite[l * self.dim..(l + 1) * self.dim];
+            for (dv, xv) in dst.iter_mut().zip(data.row(i)) {
+                *dv += xv;
+            }
+            self.counts[l] += 1;
+        }
+    }
+
+    /// Composite vector of cluster `r`.
+    #[inline]
+    pub fn composite_of(&self, r: usize) -> &[f32] {
+        &self.composite[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Centroid of cluster `r` (allocates; `C_r = D_r / n_r`).
+    pub fn centroid_of(&self, r: usize) -> Vec<f32> {
+        let n = self.counts[r].max(1) as f32;
+        self.composite_of(r).iter().map(|v| v / n).collect()
+    }
+
+    /// All centroids as a `k × d` VecSet (empty clusters get zeros).
+    pub fn centroids(&self) -> VecSet {
+        let mut out = Vec::with_capacity(self.k * self.dim);
+        for r in 0..self.k {
+            let n = self.counts[r] as f32;
+            let comp = self.composite_of(r);
+            if n > 0.0 {
+                out.extend(comp.iter().map(|v| v / n));
+            } else {
+                out.extend(std::iter::repeat(0.0).take(self.dim));
+            }
+        }
+        VecSet::from_flat(self.dim, out)
+    }
+
+    /// The boost k-means objective ℐ = Σ_r ⟨D_r, D_r⟩ / n_r (Eqn. 2).
+    pub fn objective(&self) -> f64 {
+        let mut s = 0f64;
+        for r in 0..self.k {
+            if self.counts[r] > 0 {
+                s += norm2(self.composite_of(r)) as f64 / self.counts[r] as f64;
+            }
+        }
+        s
+    }
+
+    /// Average distortion ℰ (Eqn. 4) = (Σ‖x‖² − ℐ) / n.
+    ///
+    /// Identity: Σ_i ‖x_i − C_{q(i)}‖² = Σ_i ‖x_i‖² − Σ_r ‖D_r‖²/n_r,
+    /// so distortion falls exactly as ℐ rises — both views are used by the
+    /// eval code; this one is O(n·d) only in the Σ‖x‖² term.
+    pub fn distortion(&self, data: &VecSet) -> f64 {
+        let total: f64 = (0..data.rows()).map(|i| norm2(data.row(i)) as f64).sum();
+        (total - self.objective()) / data.rows().max(1) as f64
+    }
+
+    /// Δℐ for moving sample `x` from its current cluster `u` to `v`
+    /// (Eqn. 3).  Positive = improvement.  `u == v` returns 0.
+    ///
+    /// Expanded form used here (avoids materializing `D ± x`):
+    ///   gain_v = (‖D_v‖² + 2⟨D_v,x⟩ + ‖x‖²)/(n_v+1) − ‖D_v‖²/n_v
+    ///   loss_u = (‖D_u‖² − 2⟨D_u,x⟩ + ‖x‖²)/(n_u−1) − ‖D_u‖²/n_u
+    ///   Δℐ = gain_v + loss_u
+    /// Singleton guard: if `n_u == 1`, removing `x` empties `u`; the
+    /// `(n_u − 1)` term is defined as 0 (the paper keeps clusters nonempty
+    /// by never making such moves profitable unless v gains more).
+    pub fn delta_i(&self, x: &[f32], u: usize, v: usize) -> f64 {
+        if u == v {
+            return 0.0;
+        }
+        let nu = self.counts[u] as f64;
+        let nv = self.counts[v] as f64;
+        let xx = norm2(x) as f64;
+        let dv = self.composite_of(v);
+        let dvdv = norm2(dv) as f64;
+        let dvx = dot(dv, x) as f64;
+        let gain_v = (dvdv + 2.0 * dvx + xx) / (nv + 1.0) - dvdv / nv.max(1.0);
+        let du = self.composite_of(u);
+        let dudu = norm2(du) as f64;
+        let dux = dot(du, x) as f64;
+        let after_u = if nu <= 1.0 {
+            0.0
+        } else {
+            (dudu - 2.0 * dux + xx) / (nu - 1.0)
+        };
+        let loss_u = after_u - dudu / nu.max(1.0);
+        gain_v + loss_u
+    }
+
+    /// Apply the move of sample `i` (vector `x`) from cluster `u` to `v`.
+    pub fn apply_move(&mut self, i: usize, x: &[f32], u: usize, v: usize) {
+        debug_assert_eq!(self.labels[i] as usize, u);
+        debug_assert_ne!(u, v);
+        let d = self.dim;
+        {
+            let du = &mut self.composite[u * d..(u + 1) * d];
+            for (dv, xv) in du.iter_mut().zip(x) {
+                *dv -= xv;
+            }
+        }
+        {
+            let dvv = &mut self.composite[v * d..(v + 1) * d];
+            for (dv, xv) in dvv.iter_mut().zip(x) {
+                *dv += xv;
+            }
+        }
+        self.counts[u] -= 1;
+        self.counts[v] += 1;
+        self.labels[i] = v as u32;
+    }
+
+    /// Structural invariants; used by tests and the property framework.
+    pub fn check_invariants(&self, data: &VecSet) -> Result<(), String> {
+        if self.labels.len() != data.rows() {
+            return Err("label count != rows".into());
+        }
+        let mut counts = vec![0u32; self.k];
+        for &l in &self.labels {
+            if l as usize >= self.k {
+                return Err(format!("label {l} >= k {}", self.k));
+            }
+            counts[l as usize] += 1;
+        }
+        if counts != self.counts {
+            return Err("cached counts out of sync".into());
+        }
+        // composite check on a few clusters (full check is O(n·d))
+        let mut comp = vec![0f64; self.k.min(8) * self.dim];
+        for (i, &l) in self.labels.iter().enumerate() {
+            let l = l as usize;
+            if l < self.k.min(8) {
+                for (a, v) in comp[l * self.dim..(l + 1) * self.dim]
+                    .iter_mut()
+                    .zip(data.row(i))
+                {
+                    *a += *v as f64;
+                }
+            }
+        }
+        for r in 0..self.k.min(8) {
+            for (a, b) in comp[r * self.dim..(r + 1) * self.dim]
+                .iter()
+                .zip(self.composite_of(r))
+            {
+                if (*a - *b as f64).abs() > 1e-2 * (1.0 + a.abs()) {
+                    return Err(format!("composite drift in cluster {r}: {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-epoch progress record emitted by every k-means variant; the bench
+/// harnesses plot these (Fig. 5 distortion-vs-iteration / vs-time curves).
+#[derive(Debug, Clone)]
+pub struct IterStat {
+    /// Epoch index (0 = after initialization).
+    pub iter: usize,
+    /// Cumulative wall-clock seconds since the algorithm started
+    /// (including initialization).
+    pub seconds: f64,
+    /// Average distortion ℰ after this epoch.
+    pub distortion: f64,
+    /// Samples that changed cluster this epoch.
+    pub moves: usize,
+}
+
+/// Common output of every clustering variant.
+#[derive(Debug, Clone)]
+pub struct KmeansOutput {
+    pub clustering: Clustering,
+    /// Per-epoch progress (index 0 records the initialization state).
+    pub history: Vec<IterStat>,
+    /// Total wall-clock seconds.
+    pub total_seconds: f64,
+    /// Seconds spent in initialization (2M-tree / seeding).
+    pub init_seconds: f64,
+}
+
+impl KmeansOutput {
+    /// Final distortion (from the last history entry).
+    pub fn distortion(&self) -> f64 {
+        self.history.last().map(|h| h.distortion).unwrap_or(f64::NAN)
+    }
+}
+
+/// Exact distortion computed from scratch (O(n·d), reference for tests).
+pub fn distortion_exact(data: &VecSet, labels: &[u32], centroids: &VecSet) -> f64 {
+    let mut s = 0f64;
+    for (i, &l) in labels.iter().enumerate() {
+        s += crate::core_ops::dist::d2(data.row(i), centroids.row(l as usize)) as f64;
+    }
+    s / data.rows().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy() -> (VecSet, Clustering) {
+        // two well-separated 1-d clusters
+        let data = VecSet::from_flat(1, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let c = Clustering::from_labels(&data, labels, 2);
+        (data, c)
+    }
+
+    #[test]
+    fn composite_and_counts() {
+        let (_, c) = toy();
+        assert_eq!(c.counts, vec![3, 3]);
+        assert_eq!(c.composite_of(0), &[3.0]);
+        assert_eq!(c.composite_of(1), &[33.0]);
+        assert_eq!(c.centroid_of(0), vec![1.0]);
+        assert_eq!(c.centroid_of(1), vec![11.0]);
+    }
+
+    #[test]
+    fn distortion_matches_exact() {
+        let (data, c) = toy();
+        let exact = distortion_exact(&data, &c.labels, &c.centroids());
+        assert!((c.distortion(&data) - exact).abs() < 1e-9, "{} vs {exact}", c.distortion(&data));
+    }
+
+    #[test]
+    fn delta_i_matches_brute_force() {
+        // Move x=2.0 (index 2) from cluster 0 to 1 and compare ΔI against
+        // recomputed objectives.
+        let (data, mut c) = toy();
+        let before = c.objective();
+        let predicted = c.delta_i(data.row(2), 0, 1);
+        c.apply_move(2, data.row(2), 0, 1);
+        let after = c.objective();
+        assert!(
+            (after - before - predicted).abs() < 1e-9,
+            "predicted {predicted}, actual {}",
+            after - before
+        );
+        // moving an interior point to the far cluster should hurt
+        assert!(predicted < 0.0);
+    }
+
+    #[test]
+    fn delta_i_self_move_is_zero() {
+        let (data, c) = toy();
+        assert_eq!(c.delta_i(data.row(0), 0, 0), 0.0);
+    }
+
+    #[test]
+    fn randomized_delta_consistency() {
+        let mut rng = Rng::new(11);
+        let n = 60;
+        let d = 5;
+        let flat: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let data = VecSet::from_flat(d, flat);
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(4) as u32).collect();
+        let mut c = Clustering::from_labels(&data, labels, 4);
+        for _ in 0..50 {
+            let i = rng.below(n);
+            let u = c.labels[i] as usize;
+            let v = rng.below(4);
+            if u == v || c.counts[u] <= 1 {
+                continue;
+            }
+            let before = c.objective();
+            let pred = c.delta_i(data.row(i), u, v);
+            c.apply_move(i, data.row(i), u, v);
+            let actual = c.objective() - before;
+            assert!(
+                (pred - actual).abs() < 1e-6 * (1.0 + actual.abs()),
+                "pred={pred} actual={actual}"
+            );
+            c.check_invariants(&data).unwrap();
+        }
+    }
+
+    #[test]
+    fn objective_distortion_duality() {
+        // maximizing I == minimizing distortion: check the identity holds
+        let mut rng = Rng::new(12);
+        let n = 40;
+        let flat: Vec<f32> = (0..n * 3).map(|_| rng.normal()).collect();
+        let data = VecSet::from_flat(3, flat);
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(5) as u32).collect();
+        let c = Clustering::from_labels(&data, labels, 5);
+        let exact = distortion_exact(&data, &c.labels, &c.centroids());
+        assert!((c.distortion(&data) - exact).abs() < 1e-6);
+    }
+
+    #[test]
+    fn invariants_catch_corruption() {
+        let (data, mut c) = toy();
+        c.counts[0] = 99;
+        assert!(c.check_invariants(&data).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Centroid seeding: uniform random and k-means++ [14].
+
+use crate::core_ops::dist::d2;
+use crate::data::matrix::VecSet;
+use crate::util::rng::Rng;
+
+/// k distinct data points chosen uniformly at random.
+pub fn random_init(data: &VecSet, k: usize, rng: &mut Rng) -> VecSet {
+    assert!(k <= data.rows(), "k={k} > n={}", data.rows());
+    let idx = rng.sample_indices(data.rows(), k);
+    data.gather(&idx)
+}
+
+/// k-means++ seeding: each next seed drawn ∝ D²(x) to the nearest chosen
+/// seed.  O(n·k·d); used by the Lloyd / Mini-Batch baselines.
+pub fn kmeanspp_init(data: &VecSet, k: usize, rng: &mut Rng) -> VecSet {
+    let n = data.rows();
+    assert!(k <= n, "k={k} > n={n}");
+    let mut centers = VecSet::zeros(0, data.dim());
+    let first = rng.below(n);
+    centers.push_row(data.row(first));
+
+    let mut best_d2: Vec<f64> = (0..n)
+        .map(|i| d2(data.row(i), data.row(first)) as f64)
+        .collect();
+
+    for _ in 1..k {
+        let total: f64 = best_d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n) // all points identical to chosen seeds
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in best_d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centers.push_row(data.row(pick));
+        let c = centers.row(centers.rows() - 1).to_vec();
+        for i in 0..n {
+            let dd = d2(data.row(i), &c) as f64;
+            if dd < best_d2[i] {
+                best_d2[i] = dd;
+            }
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_data() -> VecSet {
+        // 4 tight groups at corners of a square
+        let mut flat = Vec::new();
+        for (cx, cy) in [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0), (10.0, 10.0)] {
+            for i in 0..10 {
+                flat.push(cx + 0.01 * i as f32);
+                flat.push(cy);
+            }
+        }
+        VecSet::from_flat(2, flat)
+    }
+
+    #[test]
+    fn random_init_rows_are_data_points() {
+        let data = grid_data();
+        let mut rng = Rng::new(1);
+        let c = random_init(&data, 4, &mut rng);
+        assert_eq!(c.rows(), 4);
+        for i in 0..4 {
+            assert!(
+                (0..data.rows()).any(|j| data.row(j) == c.row(i)),
+                "seed {i} not a data point"
+            );
+        }
+    }
+
+    #[test]
+    fn kmeanspp_spreads_across_groups() {
+        let data = grid_data();
+        // over several seeds, ++ should nearly always hit all 4 corners
+        let mut hits = 0;
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let c = kmeanspp_init(&data, 4, &mut rng);
+            let mut corners = std::collections::HashSet::new();
+            for i in 0..4 {
+                let r = c.row(i);
+                corners.insert(((r[0] / 5.0) as i32, (r[1] / 5.0) as i32));
+            }
+            if corners.len() == 4 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 8, "k-means++ hit all corners only {hits}/10 times");
+    }
+
+    #[test]
+    fn kmeanspp_handles_duplicates() {
+        let data = VecSet::from_flat(1, vec![1.0; 20]);
+        let mut rng = Rng::new(2);
+        let c = kmeanspp_init(&data, 3, &mut rng);
+        assert_eq!(c.rows(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "k=5 > n=2")]
+    fn k_larger_than_n_panics() {
+        let data = VecSet::from_flat(1, vec![0.0, 1.0]);
+        random_init(&data, 5, &mut Rng::new(3));
+    }
+}

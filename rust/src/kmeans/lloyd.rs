@@ -1,0 +1,137 @@
+//! Traditional k-means (Lloyd's algorithm) — the paper's primary baseline.
+//!
+//! Assignment is the `O(n·d·k)` bottleneck the paper attacks; here it runs
+//! through [`Backend::assign_blocks`], i.e. blocked distance tiles on
+//! either the native mini-GEMM or the AOT-compiled Pallas kernel via PJRT.
+
+use crate::core_ops::argmin::ArgminAcc;
+use crate::data::matrix::VecSet;
+use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
+use crate::kmeans::init::kmeanspp_init;
+use crate::runtime::Backend;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Run Lloyd k-means with k-means++ seeding.
+pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backend) -> KmeansOutput {
+    let timer = Timer::start();
+    let n = data.rows();
+    let mut rng = Rng::new(params.seed);
+
+    let mut centroids = kmeanspp_init(data, k, &mut rng);
+    let init_seconds = timer.elapsed_s();
+
+    let mut labels = vec![u32::MAX; n];
+    let mut history = Vec::new();
+    for iter in 0..params.max_iters {
+        // --- assignment (the bottleneck) ---
+        let acc = assign(data, &centroids, backend);
+        let mut moves = 0usize;
+        for i in 0..n {
+            if labels[i] != acc.idx[i] {
+                moves += 1;
+                labels[i] = acc.idx[i];
+            }
+        }
+        let distortion = acc.best.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+
+        // --- update ---
+        centroids = update_centroids(data, &labels, k, &centroids);
+
+        history.push(IterStat { iter, seconds: timer.elapsed_s(), distortion, moves });
+        if (moves as f64) < params.min_move_rate * n as f64 {
+            break;
+        }
+    }
+
+    let clustering = Clustering::from_labels(data, labels, k);
+    KmeansOutput { clustering, history, total_seconds: timer.elapsed_s(), init_seconds }
+}
+
+/// Full closest-centroid assignment via blocked distance tiles.
+pub fn assign(data: &VecSet, centroids: &VecSet, backend: &Backend) -> ArgminAcc {
+    backend.assign_blocks(data.flat(), centroids.flat(), data.dim(), centroids.rows())
+}
+
+/// Mean update; empty clusters keep their previous centroid (standard
+/// empty-cluster guard, keeps k constant like the paper's implementations).
+pub fn update_centroids(data: &VecSet, labels: &[u32], k: usize, prev: &VecSet) -> VecSet {
+    let d = data.dim();
+    let mut sums = vec![0f64; k * d];
+    let mut counts = vec![0u64; k];
+    for (i, &l) in labels.iter().enumerate() {
+        let l = l as usize;
+        counts[l] += 1;
+        let dst = &mut sums[l * d..(l + 1) * d];
+        for (a, v) in dst.iter_mut().zip(data.row(i)) {
+            *a += *v as f64;
+        }
+    }
+    let mut out = Vec::with_capacity(k * d);
+    for r in 0..k {
+        if counts[r] == 0 {
+            out.extend_from_slice(prev.row(r));
+        } else {
+            let c = counts[r] as f64;
+            out.extend(sums[r * d..(r + 1) * d].iter().map(|s| (*s / c) as f32));
+        }
+    }
+    VecSet::from_flat(d, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let data = blobs(&BlobSpec { sigma: 0.2, spread: 50.0, ..BlobSpec::quick(300, 4, 3) }, 1);
+        let out = run(&data, 3, &KmeansParams::default(), &Backend::native());
+        // well-separated: distortion should be tiny relative to spread
+        assert!(out.distortion() < 1.0, "distortion={}", out.distortion());
+        out.clustering.check_invariants(&data).unwrap();
+    }
+
+    #[test]
+    fn distortion_non_increasing() {
+        let data = blobs(&BlobSpec::quick(500, 8, 10), 2);
+        let out = run(&data, 10, &KmeansParams::default(), &Backend::native());
+        for w in out.history.windows(2) {
+            assert!(
+                w[1].distortion <= w[0].distortion + 1e-6,
+                "distortion rose: {} -> {}",
+                w[0].distortion,
+                w[1].distortion
+            );
+        }
+    }
+
+    #[test]
+    fn history_and_convergence() {
+        let data = blobs(&BlobSpec::quick(200, 4, 4), 3);
+        let out = run(&data, 4, &KmeansParams { max_iters: 50, ..Default::default() }, &Backend::native());
+        assert!(!out.history.is_empty());
+        assert!(out.history.len() <= 50);
+        // converged well before 50 iterations on blobs
+        assert!(out.history.last().unwrap().moves <= data.rows() / 100 + 1);
+    }
+
+    #[test]
+    fn update_keeps_empty_cluster_centroid() {
+        let data = VecSet::from_flat(1, vec![0.0, 1.0]);
+        let prev = VecSet::from_flat(1, vec![5.0, 6.0, 7.0]);
+        let labels = vec![0, 0];
+        let c = update_centroids(&data, &labels, 3, &prev);
+        assert_eq!(c.row(0), &[0.5]);
+        assert_eq!(c.row(1), &[6.0]);
+        assert_eq!(c.row(2), &[7.0]);
+    }
+
+    #[test]
+    fn k_equals_n_zero_distortion() {
+        let data = blobs(&BlobSpec::quick(20, 3, 2), 4);
+        let out = run(&data, 20, &KmeansParams::default(), &Backend::native());
+        assert!(out.distortion() < 1e-6);
+    }
+}

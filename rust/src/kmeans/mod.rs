@@ -1,0 +1,20 @@
+//! k-means variants: the baselines the paper compares against, plus the
+//! shared clustering state they all operate on.
+//!
+//! * [`lloyd`] — traditional k-means [5], [6].
+//! * [`boost`] — boost k-means (BKM) [16]: incremental Δℐ optimization;
+//!   the quality reference and the base GK-means builds on.
+//! * [`minibatch`] — Mini-Batch k-means [20] (web-scale baseline).
+//! * [`closure`] — closure k-means [27] (the strongest fast baseline).
+//! * [`two_means`] — Alg. 1: 2M-tree equal-size recursive bisection, used
+//!   to initialize GK-means and the graph construction.
+//! * [`init`] — random and k-means++ seeding for the centroid-based
+//!   variants.
+
+pub mod boost;
+pub mod closure;
+pub mod common;
+pub mod init;
+pub mod lloyd;
+pub mod minibatch;
+pub mod two_means;

@@ -1,0 +1,332 @@
+//! Alg. 1 — Two-means (2M) tree [31]: recursive equal-size bisection.
+//!
+//! Bisecting k-means with one extra step: after each bisection the two
+//! children are adjusted to equal size (split at the median of the margin
+//! d(x,c₀) − d(x,c₁)).  Following the paper (§3.2), the bisection itself
+//! is refined with a few boost-k-means sweeps (k = 2).  Complexity
+//! `O(d·n·log k)` — cheaper than one full k-means iteration; GK-means uses
+//! it to produce its initial partition.
+
+use crate::core_ops::dist::d2;
+use crate::data::matrix::VecSet;
+use crate::kmeans::common::Clustering;
+use crate::runtime::Backend;
+use crate::util::rng::Rng;
+
+/// Parameters for a 2M-tree build.
+#[derive(Debug, Clone)]
+pub struct TwoMeansParams {
+    /// Lloyd-style refinement sweeps per bisection.
+    pub bisect_iters: usize,
+    /// BKM refinement sweeps per bisection (paper integrates BKM at step 8).
+    pub boost_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for TwoMeansParams {
+    fn default() -> Self {
+        TwoMeansParams { bisect_iters: 4, boost_iters: 2, seed: 20170707 }
+    }
+}
+
+/// Run Alg. 1: partition `data` into exactly `k` clusters of near-equal
+/// size.  Returns per-sample labels in `[0, k)`.
+pub fn run(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) -> Vec<u32> {
+    let n = data.rows();
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let mut rng = Rng::new(params.seed);
+
+    // Cluster store: Vec of member-index lists; a simple binary max-heap of
+    // (size, cluster-id) drives "pop largest".
+    let mut members: Vec<Vec<u32>> = Vec::with_capacity(k);
+    members.push((0..n as u32).collect());
+    let mut heap: std::collections::BinaryHeap<(usize, usize)> =
+        std::collections::BinaryHeap::new();
+    heap.push((n, 0));
+
+    while members.len() < k {
+        let (_, id) = heap.pop().expect("heap nonempty while members < k");
+        let subset = std::mem::take(&mut members[id]);
+        if subset.len() < 2 {
+            // Unsplittable singleton: put it back and pick another.  (With
+            // k <= n there is always a splittable cluster remaining.)
+            members[id] = subset;
+            continue;
+        }
+        let (left, right) = bisect_equal(data, &subset, params, &mut rng, backend);
+        let new_id = members.len();
+        heap.push((left.len(), id));
+        heap.push((right.len(), new_id));
+        members[id] = left;
+        members.push(right);
+    }
+
+    let mut labels = vec![0u32; n];
+    for (cid, mem) in members.iter().enumerate() {
+        for &i in mem {
+            labels[i as usize] = cid as u32;
+        }
+    }
+    labels
+}
+
+/// Convenience: run Alg. 1 and wrap into a [`Clustering`].
+pub fn cluster(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) -> Clustering {
+    Clustering::from_labels(data, run(data, k, params, backend), k)
+}
+
+/// Bisect one subset into two equal halves (Alg. 1 steps 8–9).
+fn bisect_equal(
+    data: &VecSet,
+    subset: &[u32],
+    params: &TwoMeansParams,
+    rng: &mut Rng,
+    backend: &Backend,
+) -> (Vec<u32>, Vec<u32>) {
+    let m = subset.len();
+    let d = data.dim();
+
+    // --- 2-means on the subset ---
+    let mut c0 = data.row(subset[rng.below(m)] as usize).to_vec();
+    let mut c1 = data.row(subset[rng.below(m)] as usize).to_vec();
+    if c0 == c1 {
+        // nudge to break ties on duplicate draws
+        for v in c1.iter_mut() {
+            *v += 1e-4;
+        }
+    }
+    let mut margins = vec![0f32; m];
+
+    for _ in 0..params.bisect_iters.max(1) {
+        // assignment by margin sign; margins via the backend for big subsets
+        compute_margins(data, subset, &c0, &c1, backend, &mut margins);
+        let (mut s0, mut s1) = (vec![0f64; d], vec![0f64; d]);
+        let (mut n0, mut n1) = (0u32, 0u32);
+        for (t, &i) in subset.iter().enumerate() {
+            let row = data.row(i as usize);
+            if margins[t] <= 0.0 {
+                for (a, v) in s0.iter_mut().zip(row) {
+                    *a += *v as f64;
+                }
+                n0 += 1;
+            } else {
+                for (a, v) in s1.iter_mut().zip(row) {
+                    *a += *v as f64;
+                }
+                n1 += 1;
+            }
+        }
+        if n0 == 0 || n1 == 0 {
+            // degenerate split: re-seed the empty side and retry next sweep
+            let pick = subset[rng.below(m)] as usize;
+            if n0 == 0 {
+                c0 = data.row(pick).to_vec();
+            } else {
+                c1 = data.row(pick).to_vec();
+            }
+            continue;
+        }
+        for (t, a) in c0.iter_mut().enumerate() {
+            *a = (s0[t] / n0 as f64) as f32;
+        }
+        for (t, a) in c1.iter_mut().enumerate() {
+            *a = (s1[t] / n1 as f64) as f32;
+        }
+    }
+
+    // --- BKM polish with k=2 on the subset (paper step 8) ---
+    if params.boost_iters > 0 {
+        boost_polish(data, subset, &mut c0, &mut c1, params.boost_iters, rng, &mut margins);
+    }
+
+    // --- equal-size adjustment (step 9): median split on the margin ---
+    compute_margins(data, subset, &c0, &c1, backend, &mut margins);
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| margins[a].partial_cmp(&margins[b]).unwrap());
+    let half = m / 2;
+    let mut left = Vec::with_capacity(half.max(1));
+    let mut right = Vec::with_capacity(m - half);
+    for (rank, &t) in order.iter().enumerate() {
+        if rank < half {
+            left.push(subset[t]); // most-negative margins: closest to c0
+        } else {
+            right.push(subset[t]);
+        }
+    }
+    if left.is_empty() {
+        left.push(right.pop().unwrap());
+    }
+    (left, right)
+}
+
+/// margin[t] = d(x_t, c0) − d(x_t, c1); routed through the backend's
+/// bisect entry when the subset is large enough to amortize.
+fn compute_margins(
+    data: &VecSet,
+    subset: &[u32],
+    c0: &[f32],
+    c1: &[f32],
+    backend: &Backend,
+    out: &mut [f32],
+) {
+    if backend.prefers_blocked(subset.len()) {
+        backend.bisect_margins(data, subset, c0, c1, out);
+    } else {
+        for (t, &i) in subset.iter().enumerate() {
+            let row = data.row(i as usize);
+            out[t] = d2(row, c0) - d2(row, c1);
+        }
+    }
+}
+
+/// A few BKM sweeps on the 2-cluster subproblem (incremental, Eqn. 3).
+fn boost_polish(
+    data: &VecSet,
+    subset: &[u32],
+    c0: &mut Vec<f32>,
+    c1: &mut Vec<f32>,
+    iters: usize,
+    rng: &mut Rng,
+    margins: &mut [f32],
+) {
+    use crate::core_ops::dist::norm2;
+    let d = data.dim();
+    let m = subset.len();
+    // composite vectors from the current margin assignment
+    for (t, &i) in subset.iter().enumerate() {
+        let row = data.row(i as usize);
+        margins[t] = d2(row, c0) - d2(row, c1);
+    }
+    let mut comp = vec![0f64; 2 * d];
+    let mut cnt = [0f64; 2];
+    let mut side: Vec<u8> = vec![0; m];
+    for (t, &i) in subset.iter().enumerate() {
+        let s = (margins[t] > 0.0) as usize;
+        side[t] = s as u8;
+        cnt[s] += 1.0;
+        for (a, v) in comp[s * d..(s + 1) * d].iter_mut().zip(data.row(i as usize)) {
+            *a += *v as f64;
+        }
+    }
+    // §Perf: cached ‖D‖² + allocation-free f64 dots (the first version
+    // materialized two Vec<f32> copies of the composites per visit, which
+    // dominated the 2M-tree profile).
+    #[inline]
+    fn dot64(a: &[f64], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * *y as f64).sum()
+    }
+    let mut norm2_64 = [0f64; 2];
+    for s in 0..2 {
+        norm2_64[s] = comp[s * d..(s + 1) * d].iter().map(|a| a * a).sum();
+    }
+    let mut order: Vec<usize> = (0..m).collect();
+    for _ in 0..iters {
+        rng.shuffle(&mut order);
+        let mut moves = 0;
+        for &t in &order {
+            let x = data.row(subset[t] as usize);
+            let u = side[t] as usize;
+            let v = 1 - u;
+            if cnt[u] <= 1.0 {
+                continue;
+            }
+            let xx = norm2(x) as f64;
+            let dux = dot64(&comp[u * d..(u + 1) * d], x);
+            let dvx = dot64(&comp[v * d..(v + 1) * d], x);
+            let duu = norm2_64[u];
+            let dvv = norm2_64[v];
+            let delta = (dvv + 2.0 * dvx + xx) / (cnt[v] + 1.0) - dvv / cnt[v]
+                + (duu - 2.0 * dux + xx) / (cnt[u] - 1.0)
+                - duu / cnt[u];
+            if delta > 0.0 {
+                // keep cached norms in sync: ‖D∓x‖² = ‖D‖² ∓ 2⟨D,x⟩ + ‖x‖²
+                norm2_64[u] += -2.0 * dux + xx;
+                norm2_64[v] += 2.0 * dvx + xx;
+                for (a, xv) in comp[u * d..(u + 1) * d].iter_mut().zip(x) {
+                    *a -= *xv as f64;
+                }
+                for (a, xv) in comp[v * d..(v + 1) * d].iter_mut().zip(x) {
+                    *a += *xv as f64;
+                }
+                cnt[u] -= 1.0;
+                cnt[v] += 1.0;
+                side[t] = v as u8;
+                moves += 1;
+            }
+        }
+        if moves == 0 {
+            break;
+        }
+    }
+    for t in 0..d {
+        c0[t] = (comp[t] / cnt[0].max(1.0)) as f32;
+        c1[t] = (comp[d + t] / cnt[1].max(1.0)) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+
+    #[test]
+    fn produces_k_equalish_clusters() {
+        let data = blobs(&BlobSpec::quick(1000, 8, 16), 1);
+        for k in [2, 7, 16, 20] {
+            let labels = run(&data, k, &TwoMeansParams::default(), &Backend::native());
+            let mut counts = vec![0usize; k];
+            for &l in &labels {
+                counts[l as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c > 0), "k={k}: empty cluster");
+            let (mx, mn) = (*counts.iter().max().unwrap(), *counts.iter().min().unwrap());
+            // equal-size bisection keeps sizes within ~2x of each other
+            assert!(mx <= mn * 2 + 2, "k={k}: sizes {mn}..{mx} too skewed");
+        }
+    }
+
+    #[test]
+    fn all_samples_labeled_once() {
+        let data = blobs(&BlobSpec::quick(333, 4, 4), 2);
+        let labels = run(&data, 10, &TwoMeansParams::default(), &Backend::native());
+        assert_eq!(labels.len(), 333);
+        assert!(labels.iter().all(|&l| (l as usize) < 10));
+    }
+
+    #[test]
+    fn k_one_and_k_n() {
+        let data = blobs(&BlobSpec::quick(16, 3, 2), 3);
+        assert!(run(&data, 1, &TwoMeansParams::default(), &Backend::native())
+            .iter()
+            .all(|&l| l == 0));
+        let labels = run(&data, 16, &TwoMeansParams::default(), &Backend::native());
+        let set: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(set.len(), 16, "k=n must give singletons");
+    }
+
+    #[test]
+    fn better_than_random_partition() {
+        let data = blobs(&BlobSpec::quick(600, 6, 8), 4);
+        let c = cluster(&data, 8, &TwoMeansParams::default(), &Backend::native());
+        let random_labels: Vec<u32> = (0..600).map(|i| (i % 8) as u32).collect();
+        let r = Clustering::from_labels(&data, random_labels, 8);
+        assert!(
+            c.distortion(&data) < r.distortion(&data) * 0.9,
+            "2M {} vs random {}",
+            c.distortion(&data),
+            r.distortion(&data)
+        );
+    }
+
+    #[test]
+    fn duplicate_points_dont_crash() {
+        let data = VecSet::from_flat(2, vec![1.0; 40]); // 20 identical points
+        let labels = run(&data, 4, &TwoMeansParams::default(), &Backend::native());
+        let mut counts = vec![0; 4];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 20);
+        assert!(counts.iter().all(|&c| c > 0));
+    }
+}

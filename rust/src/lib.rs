@@ -1,0 +1,58 @@
+//! # GK-means — fast k-means driven by an approximate KNN graph
+//!
+//! Production-quality reproduction of Deng & Zhao, *"Fast k-means based on
+//! KNN Graph"* (2017), as a three-layer Rust + JAX/Pallas + PJRT system.
+//!
+//! The headline idea: the per-iteration bottleneck of k-means is the
+//! `O(n·d·k)` closest-centroid search.  A sample and its κ nearest
+//! neighbors live in the same cluster with high probability, so — given an
+//! approximate KNN graph — each sample only needs to be compared against
+//! the clusters its κ neighbors currently reside in.  Cost per iteration
+//! drops to `O(n·d·κ)`, independent of `k`.  The graph itself is built by
+//! iteratively calling the fast k-means (cluster into fixed-size cells,
+//! refine neighbor lists within each cell, repeat): clustering structure
+//! and graph quality co-evolve.
+//!
+//! ## Layout
+//!
+//! * [`util`] — RNG, CLI/config parsing, timers, logging (no external deps).
+//! * [`data`] — dataset container, synthetic generators for the paper's
+//!   four datasets, fvecs/bvecs I/O.
+//! * [`core_ops`] — scalar & blocked distance math, top-κ selection.
+//! * [`kmeans`] — Lloyd, boost k-means (BKM), Mini-Batch, closure k-means,
+//!   and the 2M-tree initializer (Alg. 1).
+//! * [`graph`] — KNN-graph structure, brute-force ground truth, NN-Descent.
+//! * [`gkm`] — the paper's contribution: graph-driven k-means (Alg. 2) and
+//!   the intertwined graph construction (Alg. 3), plus graph-based ANN
+//!   search.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts;
+//!   the [`runtime::Backend`] enum lets every bulk op run Native or PJRT.
+//! * [`coordinator`] — job specs, the end-to-end pipeline, metrics.
+//! * [`eval`] — distortion (Eqn. 4), recall, co-occurrence statistics.
+//! * [`testing`] — in-tree property-based testing mini-framework.
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod core_ops;
+pub mod data;
+pub mod eval;
+pub mod gkm;
+pub mod graph;
+pub mod kmeans;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::coordinator::job::{ClusterJob, JobResult, Method};
+    pub use crate::data::matrix::VecSet;
+    pub use crate::data::synth::BlobSpec;
+    pub use crate::data::DatasetSpec;
+    pub use crate::gkm::construct::{ConstructParams, GraphBuildOutput};
+    pub use crate::gkm::gkmeans::GkMeansParams;
+    pub use crate::graph::knn::KnnGraph;
+    pub use crate::kmeans::common::{Clustering, KmeansParams};
+    pub use crate::runtime::Backend;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,321 @@
+//! `gkmeans` — the launcher.
+//!
+//! ```text
+//! gkmeans cluster   --data sift:100000 --k 1000 --method gkmeans [--kappa 50 --tau 10 --xi 50]
+//! gkmeans graph     --data sift:100000 --kappa 50 --tau 10 [--out graph.ivecs] [--recall]
+//! gkmeans search    --data sift:100000 --queries 100 --topk 10 [--ef 64]
+//! gkmeans compare   --data sift:20000 --k 200        # all methods, Tab.2-style table
+//! gkmeans info                                        # backend + artifact status
+//! ```
+//!
+//! Every subcommand accepts `--backend native|pjrt|auto` (default auto),
+//! `--seed N`, `--iters N`, `--config file.conf` (CLI overrides config).
+
+use gkmeans::coordinator::job::{ClusterJob, JobResult, Method};
+use gkmeans::coordinator::pipeline;
+use gkmeans::data::DatasetSpec;
+use gkmeans::eval::report::Table;
+use gkmeans::gkm::{ann, construct};
+use gkmeans::runtime::Backend;
+use gkmeans::util::cli::{parse_env, Args};
+use gkmeans::util::configfile::Config;
+use gkmeans::util::rng::Rng;
+use gkmeans::util::timer::{fmt_secs, Timer};
+
+const VALUED: &[&str] = &[
+    "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
+    "topk", "ef", "config", "recall-samples",
+];
+
+fn main() {
+    let args = parse_env(VALUED);
+    let code = match args.subcommand.as_deref() {
+        Some("cluster") => cmd_cluster(&args),
+        Some("graph") => cmd_graph(&args),
+        Some("search") => cmd_search(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprint!("{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+gkmeans — fast k-means driven by a KNN graph (Deng & Zhao 2017)
+
+USAGE:
+  gkmeans cluster --data <spec> --k <k> [--method gkmeans] [options]
+  gkmeans graph   --data <spec> [--kappa 50 --tau 10 --xi 50] [--recall]
+  gkmeans search  --data <spec> [--queries 100 --topk 10 --ef 64]
+  gkmeans compare --data <spec> --k <k> [--iters 30]
+  gkmeans info
+
+DATASET SPECS:
+  sift:N | vlad:N | glove:N | gist:N | blobs:N [:seed=S]   synthetic
+  path/to/file.fvecs | .bvecs                              on-disk
+
+COMMON OPTIONS:
+  --backend native|pjrt|auto   compute backend (default auto)
+  --seed N                     RNG seed (default 20170707)
+  --iters N                    max epochs (default 30)
+  --config FILE                key=value config file (CLI overrides)
+  --verbose / --quiet          log level
+";
+
+/// Merge config-file values (if `--config`) under CLI options.
+fn effective(args: &Args) -> Args {
+    let mut merged = args.clone();
+    if let Some(path) = args.get("config") {
+        match Config::load(std::path::Path::new(path)) {
+            Ok(cfg) => {
+                for key in cfg.keys().map(|s| s.to_string()).collect::<Vec<_>>() {
+                    let short = key.rsplit('.').next().unwrap_or(&key).to_string();
+                    if !merged.options.contains_key(&short) {
+                        if let Some(v) = cfg.get(&key) {
+                            merged.options.insert(short, v.to_string());
+                        }
+                    }
+                }
+            }
+            Err(e) => eprintln!("warning: {e}"),
+        }
+    }
+    if merged.flag("verbose") {
+        gkmeans::util::logging::set_level(gkmeans::util::logging::Level::Debug);
+    } else if merged.flag("quiet") {
+        gkmeans::util::logging::set_level(gkmeans::util::logging::Level::Warn);
+    }
+    merged
+}
+
+fn backend_of(args: &Args) -> Backend {
+    match args.get_or("backend", "auto") {
+        "native" => Backend::native(),
+        "pjrt" => match Backend::pjrt(&gkmeans::runtime::artifact::default_dir()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: PJRT backend unavailable: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        _ => Backend::auto(),
+    }
+}
+
+fn dataset_of(args: &Args) -> DatasetSpec {
+    let spec = args.get("data").unwrap_or("blobs:10000");
+    match DatasetSpec::parse(spec) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn job_of(args: &Args) -> ClusterJob {
+    let method = match Method::parse(args.get_or("method", "gkmeans")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut job = ClusterJob::new(dataset_of(args), method, args.usize_or("k", 100));
+    job.kappa = args.usize_or("kappa", 50);
+    job.tau = args.usize_or("tau", 10);
+    job.xi = args.usize_or("xi", 50);
+    job.base.max_iters = args.usize_or("iters", 30);
+    job.base.seed = args.u64_or("seed", 20170707);
+    job.measure_recall = args.flag("recall");
+    job
+}
+
+fn print_result(r: &JobResult) {
+    println!(
+        "method={} n={} d={} k={}",
+        r.method.name(),
+        r.n,
+        r.dim,
+        r.k
+    );
+    println!(
+        "init={} iter={} total={}",
+        fmt_secs(r.init_seconds),
+        fmt_secs(r.iter_seconds),
+        fmt_secs(r.total_seconds)
+    );
+    println!("distortion={:.6}", r.distortion);
+    if let Some(rec) = r.recall {
+        println!("graph_recall@1={rec:.3}");
+    }
+}
+
+fn cmd_cluster(args: &Args) -> i32 {
+    let args = effective(args);
+    let job = job_of(&args);
+    let backend = backend_of(&args);
+    match pipeline::run_job(&job, &backend) {
+        Ok(r) => {
+            print_result(&r);
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_graph(args: &Args) -> i32 {
+    let args = effective(args);
+    let backend = backend_of(&args);
+    let data = match dataset_of(&args).load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let params = construct::ConstructParams {
+        kappa: args.usize_or("kappa", 50),
+        tau: args.usize_or("tau", 10),
+        xi: args.usize_or("xi", 50),
+        seed: args.u64_or("seed", 20170707),
+    };
+    let out = construct::build(&data, &params, &backend);
+    println!(
+        "graph built: n={} kappa={} tau={} in {}",
+        out.graph.n(),
+        out.graph.kappa(),
+        params.tau,
+        fmt_secs(out.total_seconds)
+    );
+    for h in &out.history {
+        println!(
+            "  round {:>2}: t={:>8} cell-distortion={:.5} updates={}",
+            h.round,
+            fmt_secs(h.seconds),
+            h.distortion,
+            h.updates
+        );
+    }
+    if args.flag("recall") {
+        let rec = if data.rows() <= 20_000 {
+            let exact = gkmeans::graph::brute::build(&data, 1, &Backend::native());
+            gkmeans::graph::recall::recall_at_1(&out.graph, &exact)
+        } else {
+            gkmeans::graph::recall::sampled_recall_at_1(
+                &data,
+                &out.graph,
+                args.usize_or("recall-samples", 100),
+                params.seed,
+            )
+        };
+        println!("recall@1={rec:.3}");
+    }
+    if let Some(path) = args.get("out") {
+        let rows: Vec<Vec<i32>> = (0..out.graph.n())
+            .map(|i| out.graph.neighbors(i).iter().map(|&j| j as i32).collect())
+            .collect();
+        if let Err(e) = gkmeans::data::io::write_ivecs(std::path::Path::new(path), &rows) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_search(args: &Args) -> i32 {
+    let args = effective(args);
+    let backend = backend_of(&args);
+    let data = match dataset_of(&args).load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let seed = args.u64_or("seed", 20170707);
+    let params = construct::ConstructParams {
+        kappa: args.usize_or("kappa", 20),
+        tau: args.usize_or("tau", 10),
+        xi: args.usize_or("xi", 50),
+        seed,
+    };
+    let build = construct::build(&data, &params, &backend);
+    println!("graph: {}", fmt_secs(build.total_seconds));
+    let nq = args.usize_or("queries", 100);
+    let topk = args.usize_or("topk", 10);
+    let sp = ann::SearchParams { ef: args.usize_or("ef", 64), ..Default::default() };
+    let mut rng = Rng::new(seed ^ 0x5EA5C);
+    let timer = Timer::start();
+    let mut evals = 0usize;
+    for _ in 0..nq {
+        let qi = rng.below(data.rows());
+        let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.001).collect();
+        let (_, stats) = ann::search(&data, &build.graph, &q, topk, &sp, &mut rng);
+        evals += stats.dist_evals;
+    }
+    let total = timer.elapsed_s();
+    println!(
+        "{nq} queries: avg latency={} avg dist-evals={}",
+        fmt_secs(total / nq as f64),
+        evals / nq.max(1)
+    );
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let args = effective(args);
+    let backend = backend_of(&args);
+    let data = match dataset_of(&args).load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut table = Table::new(&["method", "init_s", "iter_s", "total_s", "distortion"]);
+    for &m in Method::all() {
+        let mut job = job_of(&args);
+        job.method = m;
+        let r = pipeline::run_job_on(&job, &data, &backend);
+        table.row(&[
+            m.name().into(),
+            format!("{:.2}", r.init_seconds),
+            format!("{:.2}", r.iter_seconds),
+            format!("{:.2}", r.total_seconds),
+            format!("{:.5}", r.distortion),
+        ]);
+    }
+    println!("{}", table.render());
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("gkmeans {}", env!("CARGO_PKG_VERSION"));
+    let dir = gkmeans::runtime::artifact::default_dir();
+    match gkmeans::runtime::artifact::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} entries)", dir.display(), m.by_key.len());
+            for ((entry, dim), a) in {
+                let mut v: Vec<_> = m.by_key.iter().collect();
+                v.sort_by_key(|(k, _)| (k.0.clone(), k.1));
+                v
+            } {
+                println!("  {entry}_d{dim}: bm={} bn={} outputs={}", a.bm, a.bn, a.outputs);
+            }
+            match Backend::pjrt(&dir) {
+                Ok(_) => println!("pjrt: OK"),
+                Err(e) => println!("pjrt: FAILED ({e:#})"),
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — native backend only"),
+    }
+    0
+}

@@ -1,0 +1,150 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `manifest.tsv` columns: `entry  dim  bm  bn  outputs  file  sha256_12`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point at a fixed shape.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Entry name: `block_l2`, `block_l2_small`, `assign_argmin`,
+    /// `bisect_assign`, `centroid_update`.
+    pub entry: String,
+    /// Data dimensionality the artifact was lowered for.
+    pub dim: usize,
+    /// Row-block size of the first operand.
+    pub bm: usize,
+    /// Row-block size of the second operand (0 = non-matrix operand).
+    pub bn: usize,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+}
+
+/// All artifacts in a directory, keyed by `(entry, dim)`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub by_key: HashMap<(String, usize), Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`.  Errors if the file is missing/garbled;
+    /// callers that want graceful degradation use [`Manifest::try_load`].
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.tsv");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut by_key = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 6 {
+                return Err(format!("manifest line {}: expected 6+ cols", lineno + 1));
+            }
+            let parse = |s: &str, what: &str| -> Result<usize, String> {
+                s.parse().map_err(|e| format!("manifest line {}: bad {what}: {e}", lineno + 1))
+            };
+            let art = Artifact {
+                entry: cols[0].to_string(),
+                dim: parse(cols[1], "dim")?,
+                bm: parse(cols[2], "bm")?,
+                bn: parse(cols[3], "bn")?,
+                outputs: parse(cols[4], "outputs")?,
+                path: dir.join(cols[5]),
+            };
+            if !art.path.exists() {
+                return Err(format!("manifest references missing file {}", art.path.display()));
+            }
+            by_key.insert((art.entry.clone(), art.dim), art);
+        }
+        Ok(Manifest { by_key, dir: dir.to_path_buf() })
+    }
+
+    /// `None` (with a log line) instead of an error when unavailable.
+    pub fn try_load(dir: &Path) -> Option<Manifest> {
+        match Self::load(dir) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                crate::log_warn!("artifacts unavailable ({e}); falling back to native backend");
+                None
+            }
+        }
+    }
+
+    pub fn get(&self, entry: &str, dim: usize) -> Option<&Artifact> {
+        self.by_key.get(&(entry.to_string(), dim))
+    }
+
+    /// Dims available for a given entry.
+    pub fn dims_for(&self, entry: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_key
+            .keys()
+            .filter(|(e, _)| e == entry)
+            .map(|(_, d)| *d)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Default artifacts directory: `$GKMEANS_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("GKMEANS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_dir(rows: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "gkmeans_manifest_{}_{:x}",
+            std::process::id(),
+            rows.len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("dummy.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(dir.join("manifest.tsv"), rows).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_rows() {
+        let dir = write_dir("# header\nblock_l2\t128\t256\t256\t1\tdummy.hlo.txt\tabc\n");
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("block_l2", 128).unwrap();
+        assert_eq!(a.bm, 256);
+        assert_eq!(a.outputs, 1);
+        assert_eq!(m.dims_for("block_l2"), vec![128]);
+        assert!(m.get("block_l2", 64).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = write_dir("block_l2\t128\t256\t256\t1\tnope.hlo.txt\tabc\n");
+        assert!(Manifest::load(&dir).unwrap_err().contains("missing file"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn try_load_absent_dir() {
+        assert!(Manifest::try_load(Path::new("/definitely/not/here")).is_none());
+    }
+
+    #[test]
+    fn bad_numeric_is_error() {
+        let dir = write_dir("block_l2\tXX\t256\t256\t1\tdummy.hlo.txt\tabc\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

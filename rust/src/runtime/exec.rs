@@ -1,0 +1,66 @@
+//! Literal marshalling and block-padding helpers for PJRT execution.
+//!
+//! The AOT artifacts have fixed block shapes (`bm × d`, `bn × d`); real
+//! workloads rarely align, so callers pad the tail block.  Padding rows of
+//! the *candidate* operand are filled with [`PAD_SENTINEL`] so their
+//! distances come out astronomically large and never win an argmin/top-κ;
+//! padding rows of the *query* operand are zeros and the caller discards
+//! those output rows.
+
+use anyhow::Result;
+use xla::Literal;
+
+/// Fill value for padded candidate rows.  Distance to any real point is
+/// ≥ (1e9)² per component — far beyond any real squared distance while
+/// staying comfortably inside f32 range even at d = 960 (~9.6e20 ≪ 3.4e38).
+pub const PAD_SENTINEL: f32 = 1e9;
+
+/// Copy `rows` rows of width `d` from `src` starting at row `row0` into a
+/// `block_rows × d` buffer, padding the remainder with `fill`.
+pub fn pad_block(src: &[f32], d: usize, row0: usize, rows: usize, block_rows: usize, fill: f32) -> Vec<f32> {
+    debug_assert!(rows <= block_rows);
+    let mut buf = vec![fill; block_rows * d];
+    buf[..rows * d].copy_from_slice(&src[row0 * d..(row0 + rows) * d]);
+    buf
+}
+
+/// Build an `rows × d` f32 literal from a flat slice.
+pub fn literal_f32_2d(flat: &[f32], rows: usize, d: usize) -> Result<Literal> {
+    debug_assert_eq!(flat.len(), rows * d);
+    Ok(Literal::vec1(flat).reshape(&[rows as i64, d as i64])?)
+}
+
+/// Build a rank-1 i32 literal.
+pub fn literal_i32_1d(vals: &[i32]) -> Result<Literal> {
+    Ok(Literal::vec1(vals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_block_copies_and_fills() {
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 rows, d=2
+        let b = pad_block(&src, 2, 1, 2, 4, PAD_SENTINEL);
+        assert_eq!(&b[..4], &[3.0, 4.0, 5.0, 6.0]);
+        assert!(b[4..].iter().all(|&v| v == PAD_SENTINEL));
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn pad_block_exact_fit() {
+        let src = vec![1.0, 2.0];
+        let b = pad_block(&src, 2, 0, 1, 1, 0.0);
+        assert_eq!(b, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn sentinel_dominates_any_real_distance() {
+        // distance from origin to a sentinel row in d dims
+        let d = 960f32;
+        let dist = d * PAD_SENTINEL * PAD_SENTINEL;
+        assert!(dist.is_finite());
+        assert!(dist > 1e18);
+    }
+}

@@ -1,0 +1,20 @@
+//! Runtime: executes the AOT-compiled JAX/Pallas artifacts via PJRT, with
+//! a native mirror for every operation.
+//!
+//! * [`artifact`] — `artifacts/manifest.tsv` discovery and parsing.
+//! * [`pjrt`] — the PJRT CPU client and lazily-compiled executable cache.
+//! * [`exec`] — literal marshalling and block padding helpers.
+//! * [`backend`] — the [`Backend`] facade all algorithms call.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! xla_extension 0.5.1 backing the `xla` crate rejects jax ≥ 0.5 protos
+//! with 64-bit instruction ids, while the text parser reassigns ids.
+//! Python runs only at build time (`make artifacts`); this module is the
+//! request path.
+
+pub mod artifact;
+pub mod backend;
+pub mod exec;
+pub mod pjrt;
+
+pub use backend::Backend;

@@ -1,0 +1,119 @@
+//! PJRT CPU client + lazily-compiled executable cache.
+//!
+//! One [`PjrtEngine`] per process is plenty: executables are compiled on
+//! first use of each `(entry, dim)` pair (XLA compilation is tens of ms —
+//! far too slow for the hot loop, so the cache is the point), then reused
+//! for every block of every clustering run.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::artifact::Manifest;
+
+/// Counters for the §Perf accounting (shared, lock-free).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    /// PJRT executions performed.
+    pub pjrt_calls: AtomicU64,
+    /// Executable compilations (cache misses).
+    pub compiles: AtomicU64,
+    /// Native fallback block operations.
+    pub native_calls: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.pjrt_calls.load(Ordering::Relaxed),
+            self.compiles.load(Ordering::Relaxed),
+            self.native_calls.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// PJRT CPU client with a compile-once executable cache.
+pub struct PjrtEngine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize), std::sync::Arc<PjRtLoadedExecutable>>>,
+    pub stats: RuntimeStats,
+}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtEngine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.dir)
+            .finish()
+    }
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(artifact_dir).map_err(|e| anyhow!(e))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_info!(
+            "PJRT engine up: platform={} artifacts={} entries={}",
+            client.platform_name(),
+            artifact_dir.display(),
+            manifest.by_key.len()
+        );
+        Ok(PjrtEngine { client, manifest, cache: Mutex::new(HashMap::new()), stats: RuntimeStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True if an artifact exists for this entry/dim.
+    pub fn supports(&self, entry: &str, dim: usize) -> bool {
+        self.manifest.get(entry, dim).is_some()
+    }
+
+    /// Block shape `(bm, bn)` of an entry, if present.
+    pub fn block_shape(&self, entry: &str, dim: usize) -> Option<(usize, usize)> {
+        self.manifest.get(entry, dim).map(|a| (a.bm, a.bn))
+    }
+
+    /// Get (compiling on first use) the executable for `(entry, dim)`.
+    pub fn executable(&self, entry: &str, dim: usize) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        let key = (entry.to_string(), dim);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok(exe.clone());
+            }
+        }
+        let art = self
+            .manifest
+            .get(entry, dim)
+            .ok_or_else(|| anyhow!("no artifact for entry={entry} dim={dim}"))?;
+        let proto = HloModuleProto::from_text_file(&art.path)
+            .with_context(|| format!("parsing HLO text {}", art.path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", art.path.display()))?;
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        crate::log_debug!("compiled artifact {entry}_d{dim}");
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with the given literals; returns the result tuple
+    /// as a vector of literals (artifacts lower with `return_tuple=True`).
+    pub fn run(&self, entry: &str, dim: usize, args: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(entry, dim)?;
+        self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        let result = exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}

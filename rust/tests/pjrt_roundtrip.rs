@@ -1,0 +1,160 @@
+//! PJRT ⇄ native cross-checks: the AOT-compiled Pallas artifacts must
+//! compute the same numbers as the native mirror.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a note) when `artifacts/manifest.tsv` is absent so `cargo test`
+//! works on a fresh checkout.
+
+use gkmeans::data::matrix::VecSet;
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::runtime::{artifact, Backend};
+use gkmeans::util::rng::Rng;
+
+fn pjrt_backend() -> Option<Backend> {
+    let dir = artifact::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Backend::pjrt(&dir).expect("pjrt backend"))
+}
+
+fn rand_flat(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[test]
+fn block_l2_matches_native_all_dims() {
+    let Some(pjrt) = pjrt_backend() else { return };
+    let native = Backend::native();
+    let mut rng = Rng::new(1);
+    for &d in &[32usize, 100, 128, 512, 960] {
+        // sizes chosen to exercise exact-fit, tail-padding and multi-block
+        for &(m, n) in &[(256usize, 256usize), (300, 70), (64, 512), (13, 5)] {
+            let x = rand_flat(&mut rng, m * d, 1.0);
+            let y = rand_flat(&mut rng, n * d, 1.0);
+            let mut a = vec![0f32; m * n];
+            let mut b = vec![0f32; m * n];
+            native.block_l2(&x, &y, d, &mut a);
+            pjrt.block_l2(&x, &y, d, &mut b);
+            for i in 0..m * n {
+                assert!(
+                    (a[i] - b[i]).abs() <= 1e-2 + 1e-4 * a[i].abs(),
+                    "d={d} m={m} n={n} idx={i}: native={} pjrt={}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn assign_matches_native() {
+    let Some(pjrt) = pjrt_backend() else { return };
+    let native = Backend::native();
+    let mut rng = Rng::new(2);
+    for &d in &[32usize, 128] {
+        let (m, k) = (500, 300); // forces row + column padding
+        let x = rand_flat(&mut rng, m * d, 1.0);
+        let c = rand_flat(&mut rng, k * d, 1.0);
+        let a = native.assign_blocks(&x, &c, d, k);
+        let b = pjrt.assign_blocks(&x, &c, d, k);
+        let mut disagreements = 0;
+        for i in 0..m {
+            assert!(
+                (a.best[i] - b.best[i]).abs() <= 1e-2 + 1e-4 * a.best[i].abs(),
+                "d={d} row={i}: {} vs {}",
+                a.best[i],
+                b.best[i]
+            );
+            if a.idx[i] != b.idx[i] {
+                disagreements += 1; // only legitimate on fp near-ties
+                let da = a.best[i];
+                let db = b.best[i];
+                assert!((da - db).abs() <= 1e-2, "non-tie index disagreement at {i}");
+            }
+        }
+        assert!(disagreements <= m / 50, "too many index disagreements: {disagreements}");
+    }
+}
+
+#[test]
+fn bisect_margins_match_native() {
+    let Some(pjrt) = pjrt_backend() else { return };
+    let native = Backend::native();
+    let data = blobs(&BlobSpec::quick(700, 32, 4), 3);
+    let subset: Vec<u32> = (0..700).step_by(2).map(|i| i as u32).collect();
+    let mut rng = Rng::new(4);
+    let c0 = rand_flat(&mut rng, 32, 1.0);
+    let c1 = rand_flat(&mut rng, 32, 1.0);
+    let mut a = vec![0f32; subset.len()];
+    let mut b = vec![0f32; subset.len()];
+    native.bisect_margins(&data, &subset, &c0, &c1, &mut a);
+    pjrt.bisect_margins(&data, &subset, &c0, &c1, &mut b);
+    for i in 0..subset.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= 2e-2 + 1e-3 * a[i].abs(),
+            "t={i}: native={} pjrt={}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[test]
+fn pairwise_among_matches_native() {
+    let Some(pjrt) = pjrt_backend() else { return };
+    let native = Backend::native();
+    let data = blobs(&BlobSpec::quick(200, 32, 4), 5);
+    let rows: Vec<u32> = (0..50u32).collect(); // typical ξ-sized cell
+    let mut a = vec![0f32; 50 * 50];
+    let mut b = vec![0f32; 50 * 50];
+    native.pairwise_among(&data, &rows, &mut a);
+    pjrt.pairwise_among_pjrt(&data, &rows, &mut b);
+    for i in 0..a.len() {
+        assert!((a[i] - b[i]).abs() <= 1e-2 + 1e-4 * a[i].abs(), "idx={i}");
+    }
+}
+
+#[test]
+fn unsupported_dim_falls_back_to_native() {
+    let Some(pjrt) = pjrt_backend() else { return };
+    // d=7 has no artifact; the call must still return correct numbers
+    let mut rng = Rng::new(6);
+    let x = rand_flat(&mut rng, 10 * 7, 1.0);
+    let y = rand_flat(&mut rng, 4 * 7, 1.0);
+    let mut got = vec![0f32; 40];
+    pjrt.block_l2(&x, &y, 7, &mut got);
+    let mut want = vec![0f32; 40];
+    Backend::native().block_l2(&x, &y, 7, &mut want);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn full_clustering_agrees_across_backends() {
+    let Some(pjrt) = pjrt_backend() else { return };
+    // same job, both backends: distortion must agree closely (identical
+    // algorithm, fp-level differences only).
+    let data = blobs(&BlobSpec::quick(1500, 32, 12), 7);
+    let params = gkmeans::kmeans::common::KmeansParams { max_iters: 8, ..Default::default() };
+    let a = gkmeans::kmeans::lloyd::run(&data, 12, &params, &Backend::native());
+    let b = gkmeans::kmeans::lloyd::run(&data, 12, &params, &pjrt);
+    let (da, db) = (a.distortion(), b.distortion());
+    assert!(
+        (da - db).abs() <= 0.05 * da.max(db),
+        "native={da} pjrt={db}"
+    );
+}
+
+#[test]
+fn vecset_dims_cover_paper_datasets() {
+    // guard: the artifact set must cover every synthetic dataset's dim
+    let Some(_) = pjrt_backend() else { return };
+    let m = artifact::Manifest::load(&artifact::default_dir()).unwrap();
+    for d in [100, 128, 512, 960] {
+        assert!(m.get("block_l2", d).is_some(), "missing block_l2 d={d}");
+        assert!(m.get("assign_argmin", d).is_some(), "missing assign d={d}");
+    }
+    let _ = VecSet::zeros(1, 1); // silence unused import lint paranoia
+}

@@ -1,0 +1,162 @@
+//! Property-based tests over coordinator/clustering/graph invariants,
+//! using the in-tree `testing::prop` framework (routing, batching and
+//! state invariants the whole system relies on).
+
+use gkmeans::gkm::construct;
+use gkmeans::gkm::gkmeans as gk;
+use gkmeans::graph::knn::KnnGraph;
+use gkmeans::kmeans::common::{Clustering, KmeansParams};
+use gkmeans::kmeans::two_means::{self, TwoMeansParams};
+use gkmeans::runtime::Backend;
+use gkmeans::testing::prop;
+
+#[test]
+fn prop_two_means_partition_is_balanced_and_total() {
+    prop::check("2M-tree partition", 12, |g| {
+        let n = g.usize_in(20, 400);
+        let d = g.usize_in(2, 24);
+        let k = g.usize_in(2, n.min(32));
+        let data = g.matrix(n, d, 5.0);
+        let labels = two_means::run(&data, k, &TwoMeansParams::default(), &Backend::native());
+        if labels.len() != n {
+            return Err("label count".into());
+        }
+        let mut counts = vec![0usize; k];
+        for &l in &labels {
+            if l as usize >= k {
+                return Err(format!("label {l} >= k {k}"));
+            }
+            counts[l as usize] += 1;
+        }
+        if counts.iter().any(|&c| c == 0) {
+            return Err(format!("empty cluster: {counts:?}"));
+        }
+        let (mx, mn) = (*counts.iter().max().unwrap(), *counts.iter().min().unwrap());
+        if mx > 2 * mn + 2 {
+            return Err(format!("unbalanced: {counts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_moves_never_increase_distortion() {
+    prop::check("BKM/GK moves monotone", 10, |g| {
+        let n = g.usize_in(50, 300);
+        let d = g.usize_in(2, 16);
+        let k = g.usize_in(2, 12);
+        let data = g.matrix(n, d, 3.0);
+        let kappa = g.usize_in(1, 8);
+        let graph = gkmeans::graph::brute::build(&data, kappa, &Backend::native());
+        let params = gk::GkMeansParams {
+            kappa,
+            base: KmeansParams { max_iters: 6, seed: g.rng.next_u64(), ..Default::default() },
+        };
+        let out = gk::run(&data, k, &graph, &params, &Backend::native());
+        for w in out.history.windows(2) {
+            if w[1].distortion > w[0].distortion + 1e-6 * (1.0 + w[0].distortion) {
+                return Err(format!("distortion rose {} -> {}", w[0].distortion, w[1].distortion));
+            }
+        }
+        out.clustering.check_invariants(&data).map_err(|e| e)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_updates_preserve_invariants() {
+    prop::check("graph update stress", 20, |g| {
+        let n = g.usize_in(4, 100);
+        let kappa = g.usize_in(1, 12);
+        let mut graph = KnnGraph::empty(n, kappa);
+        for _ in 0..g.usize_in(10, 800) {
+            let i = g.usize_in(0, n - 1);
+            let mut j = g.usize_in(0, n - 1);
+            if j == i {
+                j = (j + 1) % n;
+            }
+            graph.update(i, j as u32, g.f32_in(0.0, 100.0));
+        }
+        graph.check_invariants()
+    });
+}
+
+#[test]
+fn prop_construct_graph_entries_are_true_distances() {
+    prop::check("alg3 distances exact", 6, |g| {
+        let n = g.usize_in(60, 250);
+        let d = g.usize_in(2, 12);
+        let data = g.matrix(n, d, 4.0);
+        let params = construct::ConstructParams {
+            kappa: g.usize_in(2, 6),
+            xi: g.usize_in(10, 40),
+            tau: g.usize_in(1, 4),
+            seed: g.rng.next_u64(),
+        };
+        let out = construct::build(&data, &params, &Backend::native());
+        out.graph.check_invariants()?;
+        for i in (0..n).step_by(7) {
+            for (t, &j) in out.graph.neighbors(i).iter().enumerate() {
+                if j == u32::MAX {
+                    continue;
+                }
+                let want = gkmeans::core_ops::dist::d2(data.row(i), data.row(j as usize));
+                let got = out.graph.distances(i)[t];
+                if (got - want).abs() > 1e-2 * (1.0 + want) {
+                    return Err(format!("({i},{j}): {got} vs {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_composite_vectors_track_labels() {
+    prop::check("composite bookkeeping", 15, |g| {
+        let n = g.usize_in(10, 150);
+        let d = g.usize_in(1, 10);
+        let k = g.usize_in(1, 8);
+        let data = g.matrix(n, d, 2.0);
+        let labels: Vec<u32> = (0..n).map(|_| g.usize_in(0, k - 1) as u32).collect();
+        let mut c = Clustering::from_labels(&data, labels, k);
+        // random legal moves
+        for _ in 0..g.usize_in(0, 60) {
+            let i = g.usize_in(0, n - 1);
+            let u = c.labels[i] as usize;
+            let v = g.usize_in(0, k - 1);
+            if u != v && c.counts[u] > 1 {
+                c.apply_move(i, data.row(i), u, v);
+            }
+        }
+        c.check_invariants(&data)
+    });
+}
+
+#[test]
+fn prop_assign_blocks_matches_scalar() {
+    prop::check("assign routing", 10, |g| {
+        let d = g.usize_in(1, 40);
+        let m = g.usize_in(1, 300);
+        let k = g.usize_in(1, 300);
+        let x = g.normal_vec(m * d);
+        let c = g.normal_vec(k * d);
+        let acc = Backend::native().assign_blocks(&x, &c, d, k);
+        for i in (0..m).step_by(11.max(m / 7)) {
+            let xi = &x[i * d..(i + 1) * d];
+            let mut best = f32::INFINITY;
+            let mut bidx = 0u32;
+            for j in 0..k {
+                let dd = gkmeans::core_ops::dist::d2(xi, &c[j * d..(j + 1) * d]);
+                if dd < best {
+                    best = dd;
+                    bidx = j as u32;
+                }
+            }
+            if acc.idx[i] != bidx && (acc.best[i] - best).abs() > 1e-3 * (1.0 + best) {
+                return Err(format!("row {i}: idx {} vs {bidx}", acc.idx[i]));
+            }
+        }
+        Ok(())
+    });
+}
