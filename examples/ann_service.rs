@@ -31,7 +31,7 @@ fn main() {
     let data = synth::sift_like(n, 20170707);
     let build = construct::build(
         &data,
-        &ConstructParams { kappa, xi: 50, tau, seed: 1 },
+        &ConstructParams { kappa, xi: 50, tau, seed: 1, threads: 1 },
         &backend,
     );
     println!("graph built in {:.2}s", build.total_seconds);

@@ -45,7 +45,17 @@ fn main() {
     // --- block_l2: native vs pjrt ---
     let pjrt = {
         let dir = gkmeans::runtime::artifact::default_dir();
-        dir.join("manifest.tsv").exists().then(|| Backend::pjrt(&dir).unwrap())
+        if dir.join("manifest.tsv").exists() {
+            match Backend::pjrt(&dir) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    eprintln!("pjrt unavailable ({e}); skipping pjrt rows");
+                    None
+                }
+            }
+        } else {
+            None
+        }
     };
     for (m, n, d) in [(256usize, 256usize, 128usize), (256, 256, 512), (64, 64, 128)] {
         let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
@@ -129,42 +139,80 @@ fn main() {
         t.row(&["topk_push".into(), "k=50".into(), "native".into(), "-".into(), f(r2)]);
     }
 
-    // --- one GK-means epoch at realistic shape ---
+    // --- GK-means epoch throughput: serial vs the parallel layer ---
+    // The threads sweep is the perf trajectory future PRs compare against;
+    // records land in BENCH_gkm.json (acceptance: threads >= 4 shows >= 2x
+    // epoch throughput over serial on a >= 4-core box).
     {
         let n = bench_util::scaled(5_000);
+        let k = n / 50;
+        let kappa = 20;
         let data = blobs(&BlobSpec::quick(n, 128, 32), 3);
         let graph = gkmeans::gkm::construct::build(
             &data,
-            &gkmeans::gkm::construct::ConstructParams { kappa: 20, xi: 50, tau: 3, seed: 1 },
+            &gkmeans::gkm::construct::ConstructParams { kappa: 20, xi: 50, tau: 3, seed: 1, threads: 1 },
             &Backend::native(),
         )
         .graph;
-        let params = gkmeans::gkm::gkmeans::GkMeansParams {
-            kappa: 20,
-            base: gkmeans::kmeans::common::KmeansParams { max_iters: 1, ..Default::default() },
-        };
         let init = gkmeans::kmeans::two_means::cluster(
             &data,
-            n / 50,
+            k,
             &gkmeans::kmeans::two_means::TwoMeansParams::default(),
             &Backend::native(),
         );
-        let timer = Timer::start();
-        let mut epochs = 0;
-        while timer.elapsed_s() < 2.0 {
-            let _ = gkmeans::gkm::gkmeans::run_from(&data, init.clone(), &graph, &params);
-            epochs += 1;
+        let avail = gkmeans::util::pool::resolve_threads(0);
+        let mut records = Vec::new();
+        let mut serial_rate = 0f64;
+        for &threads in &[1usize, 2, 4, 8] {
+            if threads > 1 && threads > avail {
+                println!("gk_epoch threads={threads}: skipped ({avail} cores available)");
+                continue;
+            }
+            let params = gkmeans::gkm::gkmeans::GkMeansParams {
+                kappa,
+                base: gkmeans::kmeans::common::KmeansParams {
+                    max_iters: 1,
+                    threads,
+                    ..Default::default()
+                },
+            };
+            let timer = Timer::start();
+            let mut epochs = 0;
+            while timer.elapsed_s() < 2.0 {
+                let _ = gkmeans::gkm::gkmeans::run_from(&data, init.clone(), &graph, &params);
+                epochs += 1;
+            }
+            let per_epoch = timer.elapsed_s() / epochs as f64;
+            let samples_per_s = n as f64 / per_epoch;
+            if threads == 1 {
+                serial_rate = samples_per_s;
+            }
+            let speedup = if serial_rate > 0.0 { samples_per_s / serial_rate } else { 1.0 };
+            records.push(gkmeans::bench_util::GkBenchRecord {
+                name: "gk_epoch".into(),
+                n,
+                d: 128,
+                k,
+                kappa,
+                threads,
+                epochs,
+                samples_per_s,
+            });
+            t.row(&[
+                "gk_epoch".into(),
+                format!("n={n},kappa=20,d=128,t={threads}"),
+                "native".into(),
+                "-".into(),
+                f(samples_per_s),
+            ]);
+            println!(
+                "gk-means epoch (threads={threads}): {per_epoch:.3}s ({samples_per_s:.0} samples/s, {speedup:.2}x vs serial)"
+            );
         }
-        let per_epoch = timer.elapsed_s() / epochs as f64;
-        let samples_per_s = n as f64 / per_epoch;
-        t.row(&[
-            "gk_epoch".into(),
-            format!("n={n},kappa=20,d=128"),
-            "native".into(),
-            "-".into(),
-            f(samples_per_s),
-        ]);
-        println!("gk-means epoch: {per_epoch:.3}s ({samples_per_s:.0} samples/s)");
+        match gkmeans::bench_util::write_gk_bench_json(&records) {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => eprintln!("could not write BENCH_gkm.json: {e}"),
+        }
     }
 
     println!("{}", t.render());

@@ -5,6 +5,10 @@
 //! dataset sizes (e.g. `GKMEANS_BENCH_SCALE=10 cargo bench --bench
 //! fig6_scalability` for a long run), and `GKMEANS_BENCH_FAST=1` shrinks
 //! everything for smoke tests.
+//!
+//! [`GkBenchRecord`]/[`write_gk_bench_json`] give the perf-tracking
+//! harnesses a machine-readable trajectory file (`BENCH_gkm.json`) so
+//! future PRs can compare epoch throughput against this one.
 
 /// User-controlled scale multiplier.
 pub fn scale() -> f64 {
@@ -35,11 +39,116 @@ pub fn backend() -> crate::runtime::Backend {
     crate::runtime::Backend::auto()
 }
 
+/// One epoch-throughput measurement destined for `BENCH_gkm.json`.
+#[derive(Debug, Clone)]
+pub struct GkBenchRecord {
+    /// Measurement name (e.g. `gk_epoch`).
+    pub name: String,
+    /// Dataset rows.
+    pub n: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Cluster count.
+    pub k: usize,
+    /// Graph neighbors consulted (κ).
+    pub kappa: usize,
+    /// Worker threads the measurement ran with.
+    pub threads: usize,
+    /// Epochs executed inside the timing window.
+    pub epochs: usize,
+    /// Throughput: samples scanned per second of epoch time.
+    pub samples_per_s: f64,
+}
+
+impl GkBenchRecord {
+    /// Hand-rolled JSON object (no serde in the offline build).  All
+    /// fields are numeric except `name`, which the harnesses keep to
+    /// `[a-z0-9_]`, so no escaping is required.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"n\":{},\"d\":{},\"k\":{},\"kappa\":{},\"threads\":{},\"epochs\":{},\"samples_per_s\":{:.1}}}",
+            self.name, self.n, self.d, self.k, self.kappa, self.threads, self.epochs, self.samples_per_s
+        )
+    }
+}
+
+/// Write the perf-trajectory records as a JSON array.  Destination:
+/// `$GKMEANS_BENCH_JSON` if set, else `BENCH_gkm.json` in the working
+/// directory.  Returns the path written.
+pub fn write_gk_bench_json(records: &[GkBenchRecord]) -> std::io::Result<std::path::PathBuf> {
+    let path = std::env::var("GKMEANS_BENCH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_gkm.json"));
+    write_gk_bench_json_to(&path, records)?;
+    Ok(path)
+}
+
+/// [`write_gk_bench_json`] with an explicit destination (also what tests
+/// use — mutating the process environment from a multithreaded test
+/// harness is a getenv/setenv race).
+pub fn write_gk_bench_json_to(
+    path: &std::path::Path,
+    records: &[GkBenchRecord],
+) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str("  ");
+        s.push_str(&r.to_json());
+        if i + 1 < records.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
     fn scaled_has_floor() {
         assert!(super::scaled(10) >= 100 || super::scale() >= 1.0);
         assert_eq!(super::scaled(1000).max(100), super::scaled(1000));
+    }
+
+    #[test]
+    fn bench_record_json_shape() {
+        let r = super::GkBenchRecord {
+            name: "gk_epoch".into(),
+            n: 5000,
+            d: 128,
+            k: 100,
+            kappa: 20,
+            threads: 4,
+            epochs: 7,
+            samples_per_s: 123456.78,
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"name\":\"gk_epoch\"", "\"threads\":4", "\"samples_per_s\":123456.8"] {
+            assert!(j.contains(key), "{j} missing {key}");
+        }
+    }
+
+    #[test]
+    fn bench_json_roundtrips_to_disk() {
+        let dir = std::env::temp_dir().join(format!("gkm_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_gkm.json");
+        let recs = vec![super::GkBenchRecord {
+            name: "x".into(),
+            n: 1,
+            d: 2,
+            k: 3,
+            kappa: 4,
+            threads: 1,
+            epochs: 1,
+            samples_per_s: 10.0,
+        }];
+        super::write_gk_bench_json_to(&path, &recs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('['));
+        assert!(text.contains("\"name\":\"x\""));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -61,6 +61,7 @@ pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResu
                     xi: job.xi,
                     tau: job.tau,
                     seed: job.base.seed,
+                    threads: job.base.threads,
                 },
                 backend,
             );
@@ -68,7 +69,7 @@ pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResu
             let params = gkmeans::GkMeansParams { kappa: job.kappa, base: job.base.clone() };
             let rec = job
                 .measure_recall
-                .then(|| measure_recall(data, &build.graph, job.base.seed));
+                .then(|| measure_recall(data, &build.graph, job.base.seed, job.base.threads));
             let out = if job.method == Method::GkMeans {
                 gkmeans::run(data, k, &build.graph, &params, backend)
             } else {
@@ -81,12 +82,16 @@ pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResu
             let graph = nn_descent::build(
                 data,
                 job.kappa,
-                &nn_descent::NnDescentParams { seed: job.base.seed, ..Default::default() },
+                &nn_descent::NnDescentParams {
+                    seed: job.base.seed,
+                    threads: job.base.threads,
+                    ..Default::default()
+                },
             );
             let graph_seconds = t.elapsed_s();
             let rec = job
                 .measure_recall
-                .then(|| measure_recall(data, &graph, job.base.seed));
+                .then(|| measure_recall(data, &graph, job.base.seed, job.base.threads));
             let params = gkmeans::GkMeansParams { kappa: job.kappa, base: job.base.clone() };
             let out = gkmeans::run(data, k, &graph, &params, backend);
             (out, graph_seconds, rec)
@@ -112,10 +117,11 @@ pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResu
 }
 
 /// Top-1 recall (exact below 20K samples, 100-query sampled above —
-/// the paper's VLAD10M protocol).
-fn measure_recall(data: &VecSet, graph: &crate::graph::knn::KnnGraph, seed: u64) -> f64 {
+/// the paper's VLAD10M protocol).  The exact ground-truth build is the
+/// dominant cost and honors the job's `threads` knob.
+fn measure_recall(data: &VecSet, graph: &crate::graph::knn::KnnGraph, seed: u64, threads: usize) -> f64 {
     if data.rows() <= 20_000 {
-        let exact = crate::graph::brute::build(data, 1, &Backend::native());
+        let exact = crate::graph::brute::build_threaded(data, 1, &Backend::native(), threads);
         recall::recall_at_1(graph, &exact)
     } else {
         recall::sampled_recall_at_1(data, graph, 100, seed)

@@ -6,7 +6,7 @@
 //! native backend is not hopeless next to XLA; the PJRT backend replaces
 //! exactly this function.
 
-use crate::core_ops::dist::norm2;
+use crate::core_ops::dist::{d2_via_dot, norm2};
 
 /// Compute the full `m × n` squared-distance matrix into `out` (row-major,
 /// `out.len() == m * n`).  `x` is `m × d` flat, `y` is `n × d` flat.
@@ -43,10 +43,10 @@ pub fn block_l2(x: &[f32], y: &[f32], d: usize, out: &mut [f32]) {
                 a2 += xv * y2[t];
                 a3 += xv * y3[t];
             }
-            orow[j] = (xs[i] + ys[j] - 2.0 * a0).max(0.0);
-            orow[j + 1] = (xs[i] + ys[j + 1] - 2.0 * a1).max(0.0);
-            orow[j + 2] = (xs[i] + ys[j + 2] - 2.0 * a2).max(0.0);
-            orow[j + 3] = (xs[i] + ys[j + 3] - 2.0 * a3).max(0.0);
+            orow[j] = d2_via_dot(xs[i], ys[j], a0);
+            orow[j + 1] = d2_via_dot(xs[i], ys[j + 1], a1);
+            orow[j + 2] = d2_via_dot(xs[i], ys[j + 2], a2);
+            orow[j + 3] = d2_via_dot(xs[i], ys[j + 3], a3);
             j += 4;
         }
         while j < n {
@@ -55,10 +55,38 @@ pub fn block_l2(x: &[f32], y: &[f32], d: usize, out: &mut [f32]) {
             for t in 0..d {
                 a += xi[t] * yj[t];
             }
-            orow[j] = (xs[i] + ys[j] - 2.0 * a).max(0.0);
+            orow[j] = d2_via_dot(xs[i], ys[j], a);
             j += 1;
         }
     }
+}
+
+/// Row-parallel [`block_l2`]: shards the rows of `x` (and the matching
+/// rows of `out`) across up to `threads` workers, each running the serial
+/// register-tiled kernel on its stripe.  Stripes are disjoint, so the
+/// result is **bit-identical** to the serial kernel; `threads <= 1` calls
+/// straight through.  Always native — PJRT dispatch is single-threaded by
+/// design (see `runtime::backend`).
+pub fn block_l2_parallel(x: &[f32], y: &[f32], d: usize, out: &mut [f32], threads: usize) {
+    assert!(d > 0);
+    let m = x.len() / d;
+    let n = y.len() / d;
+    assert_eq!(x.len(), m * d);
+    assert_eq!(y.len(), n * d);
+    assert_eq!(out.len(), m * n);
+    let threads = crate::util::pool::resolve_threads(threads).min(m.max(1));
+    if threads <= 1 || n == 0 {
+        return block_l2(x, y, d, out);
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (t, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let lo = t * rows_per;
+            let rows = ochunk.len() / n;
+            let xs = &x[lo * d..(lo + rows) * d];
+            s.spawn(move || block_l2(xs, y, d, ochunk));
+        }
+    });
 }
 
 /// Allocating convenience wrapper around [`block_l2`].
@@ -111,5 +139,21 @@ mod tests {
     #[should_panic]
     fn wrong_out_len_panics() {
         block_l2(&[0.0; 4], &[0.0; 4], 2, &mut [0.0; 3]);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(3);
+        for (m, n, d) in [(1usize, 1usize, 3usize), (7, 5, 4), (65, 33, 16), (256, 100, 32)] {
+            let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+            let y: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            let mut serial = vec![0f32; m * n];
+            block_l2(&x, &y, d, &mut serial);
+            for threads in [1usize, 2, 3, 8] {
+                let mut par = vec![0f32; m * n];
+                block_l2_parallel(&x, &y, d, &mut par, threads);
+                assert_eq!(serial, par, "m={m} n={n} d={d} threads={threads}");
+            }
+        }
     }
 }

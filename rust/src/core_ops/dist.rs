@@ -60,6 +60,18 @@ pub fn norm2(a: &[f32]) -> f32 {
     dot(a, a)
 }
 
+/// Squared distance from precomputed norms and the cross dot:
+/// `‖x − y‖² = ‖x‖² + ‖y‖² − 2⟨x, y⟩`, clamped non-negative.
+///
+/// This is the identity the tiled mini-GEMM (`blockdist`) and the PJRT
+/// Pallas kernel are built on; exposing it lets candidate-evaluation
+/// loops (GK-means\*, future batched Δℐ paths) reuse precomputed norms so
+/// each candidate costs a single dot — the GEMM-compatible form.
+#[inline]
+pub fn d2_via_dot(xx: f32, yy: f32, xy: f32) -> f32 {
+    (xx + yy - 2.0 * xy).max(0.0)
+}
+
 /// Early-exit squared distance: abandons once the partial sum exceeds
 /// `bound` (classic "partial distance" pruning; used by graph refinement
 /// where most candidates lose to the current κ-th neighbor).
@@ -116,6 +128,21 @@ mod tests {
         let b = [2.0, 0.0, 1.0, 1.0, 1.0];
         assert_eq!(dot(&a, &b), 2.0 + 3.0 + 4.0 + 5.0);
         assert_eq!(norm2(&a), 55.0);
+    }
+
+    #[test]
+    fn d2_via_dot_matches_direct() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for len in [1usize, 4, 33, 128] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let want = d2(&a, &b);
+            let got = d2_via_dot(norm2(&a), norm2(&b), dot(&a, &b));
+            assert!((got - want).abs() <= 1e-3 * (1.0 + want), "len={len}");
+        }
+        // cancellation must clamp at zero, never go negative
+        let x = vec![100.0f32; 64];
+        assert_eq!(d2_via_dot(norm2(&x), norm2(&x), dot(&x, &x)), 0.0);
     }
 
     #[test]

@@ -26,11 +26,15 @@ pub struct ConstructParams {
     /// Rounds τ (10 for clustering; up to 32 for ANNS).
     pub tau: usize,
     pub seed: u64,
+    /// Worker threads, threaded through to the in-round GK-means epochs,
+    /// the 2M-tree init and the in-cell refinement scan (`1` = serial,
+    /// bit-identical to the historical build; `0` = auto).
+    pub threads: usize,
 }
 
 impl Default for ConstructParams {
     fn default() -> Self {
-        ConstructParams { kappa: 50, xi: 50, tau: 10, seed: 20170707 }
+        ConstructParams { kappa: 50, xi: 50, tau: 10, seed: 20170707, threads: 1 }
     }
 }
 
@@ -78,13 +82,14 @@ pub fn build(data: &VecSet, params: &ConstructParams, backend: &Backend) -> Grap
                 max_iters: 1,
                 min_move_rate: 0.0,
                 seed: params.seed ^ (t as u64).wrapping_mul(0x9E37_79B9),
+                threads: params.threads,
             },
         };
         let out = gkmeans::run(data, k0, &graph, &gk_params, backend);
         let members = gkmeans::members_of(&out.clustering);
 
         // --- step 2: exhaustive in-cell refinement (lines 8–14) ---
-        let updates = refine_cells(data, &members, &mut graph, backend);
+        let updates = refine_cells_threaded(data, &members, &mut graph, backend, params.threads);
 
         history.push(RoundStat {
             round: t,
@@ -155,6 +160,81 @@ pub fn refine_cells(
     updates
 }
 
+/// Multi-threaded [`refine_cells`]: cells partition the samples, so the
+/// graph rows touched by different cells are disjoint — but `KnnGraph` is
+/// deliberately lock-free, so workers gather candidate pairs against a
+/// threshold *snapshot* and a serial fold applies them in cell order.
+/// Thresholds only tighten, so the gathered set is a superset of what the
+/// fresh-threshold serial scan keeps, and `update_pair` re-checks every
+/// candidate against the live lists: the resulting graph (and update
+/// count) is identical to the serial scan's.  (That holds on both
+/// backends: the serial dense path, `Backend::pairwise_among`, is
+/// unconditionally native — see its §Perf note — exactly the kernel the
+/// workers run.)
+pub fn refine_cells_threaded(
+    data: &VecSet,
+    members: &[Vec<u32>],
+    graph: &mut KnnGraph,
+    backend: &Backend,
+    threads: usize,
+) -> usize {
+    let threads = crate::util::pool::resolve_threads(threads).min(members.len().max(1));
+    if threads <= 1 {
+        return refine_cells(data, members, graph, backend);
+    }
+    let d = data.dim();
+    let parts = crate::util::pool::par_map_chunks(threads, members.len(), |_, range| {
+        let mut out: Vec<(u32, u32, f32)> = Vec::new();
+        let mut buf = Vec::new();
+        let mut gathered = Vec::new();
+        for cell in &members[range] {
+            let m = cell.len();
+            if m < 2 {
+                continue;
+            }
+            if m <= 64 {
+                // dense m×m block via the native kernel (workers never
+                // share a PJRT engine; see runtime::backend docs)
+                gathered.clear();
+                for &i in cell.iter() {
+                    gathered.extend_from_slice(data.row(i as usize));
+                }
+                buf.resize(m * m, 0.0);
+                crate::core_ops::blockdist::block_l2(&gathered, &gathered, d, &mut buf);
+                for a in 0..m {
+                    for b in (a + 1)..m {
+                        out.push((cell[a], cell[b], buf[a * m + b]));
+                    }
+                }
+            } else {
+                // bounded scalar pairs against the threshold snapshot
+                for a in 0..m {
+                    let ia = cell[a] as usize;
+                    let xa = data.row(ia);
+                    for b in (a + 1)..m {
+                        let ib = cell[b] as usize;
+                        let bound = graph.threshold(ia).max(graph.threshold(ib));
+                        let dd = crate::core_ops::dist::d2_bounded(xa, data.row(ib), bound);
+                        if dd < bound {
+                            out.push((cell[a], cell[b], dd));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut updates = 0usize;
+    for part in parts {
+        for (a, b, dd) in part {
+            if graph.update_pair(a as usize, b as usize, dd) {
+                updates += 1;
+            }
+        }
+    }
+    updates
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +280,48 @@ mod tests {
         let updates = refine_cells(&data, &members, &mut graph, &Backend::native());
         assert!(updates > 0);
         graph.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn threaded_refine_matches_serial_exactly() {
+        // gather-then-merge must reproduce the serial scan bit-for-bit:
+        // supersets of stale-threshold candidates are filtered by
+        // update_pair, and the merge preserves cell order.
+        let data = blobs(&BlobSpec::quick(400, 6, 8), 9);
+        let labels = crate::kmeans::two_means::run(
+            &data,
+            10,
+            &crate::kmeans::two_means::TwoMeansParams::default(),
+            &Backend::native(),
+        );
+        let members = gkmeans::members_of(&Clustering::from_labels(&data, labels, 10));
+        let mut rng = Rng::new(4);
+        let base = KnnGraph::random(400, 6, &mut rng);
+        let mut serial = base.clone();
+        let su = refine_cells(&data, &members, &mut serial, &Backend::native());
+        for threads in [2usize, 4] {
+            let mut par = base.clone();
+            let pu = refine_cells_threaded(&data, &members, &mut par, &Backend::native(), threads);
+            assert_eq!(su, pu, "update counts diverged at threads={threads}");
+            for i in 0..400 {
+                assert_eq!(serial.neighbors(i), par.neighbors(i), "row {i}");
+                assert_eq!(serial.distances(i), par.distances(i), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_construct_build_is_valid() {
+        let data = blobs(&BlobSpec::quick(500, 6, 8), 11);
+        let out = build(
+            &data,
+            &ConstructParams { kappa: 8, xi: 25, tau: 4, threads: 4, ..Default::default() },
+            &Backend::native(),
+        );
+        out.graph.check_invariants().unwrap();
+        let exact = brute::build(&data, 1, &Backend::native());
+        let r = recall::recall_at_1(&out.graph, &exact);
+        assert!(r > 0.4, "parallel alg3 recall@1 = {r}");
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub fn cluster(
     let build = construct::build(data, &construct::ConstructParams {
         kappa: params.kappa,
         seed: params.base.seed,
+        threads: params.base.threads,
         ..Default::default()
     }, backend);
     let mut out = gkmeans::run(data, k, &build.graph, params, backend);

@@ -8,7 +8,7 @@
 //! higher distortion than the Δℐ-driven version — our Fig. 4 bench
 //! reproduces exactly that gap.
 
-use crate::core_ops::dist::d2;
+use crate::core_ops::dist::{d2_via_dot, dot, norm2};
 use crate::data::matrix::VecSet;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput};
@@ -33,15 +33,17 @@ pub fn run(
     let labels = two_means::run(
         data,
         k,
-        &TwoMeansParams { seed: params.base.seed, ..Default::default() },
+        &TwoMeansParams {
+            seed: params.base.seed,
+            threads: params.base.threads,
+            ..Default::default()
+        },
         backend,
     );
     let mut clustering = Clustering::from_labels(data, labels, k);
     let init_seconds = timer.elapsed_s();
     let mut centroids = clustering.centroids();
-    let total_norm: f64 = (0..n)
-        .map(|i| crate::core_ops::dist::norm2(data.row(i)) as f64)
-        .sum();
+    let total_norm: f64 = (0..n).map(|i| norm2(data.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x7452_6164);
     let mut order: Vec<usize> = (0..n).collect();
     let mut q: Vec<u32> = Vec::with_capacity(kappa + 1);
@@ -57,8 +59,19 @@ pub fn run(
         rng.shuffle(&mut order);
         let mut new_labels = clustering.labels.clone();
         let mut moves = 0usize;
+        // Precomputed-norm candidate evaluation (the d2_via_dot path): the
+        // centroid norms are fixed for the whole epoch, so each candidate
+        // costs one ⟨x, C_v⟩ dot — the same inner product a tiled
+        // mini-GEMM produces, keeping this loop GEMM-compatible.  Note the
+        // norm+dot identity rounds differently than a direct (x−y)² sum
+        // for near-zero distances (same tolerance class as the blocked
+        // kernels Lloyd assignment already uses), so GK-means* results
+        // shift at f32 precision relative to the pre-GEMM-form code; the
+        // Δℐ-driven GK-means proper (gkmeans.rs) is untouched.
+        let cnorms: Vec<f32> = (0..k).map(|r| norm2(centroids.row(r))).collect();
         for &i in &order {
             let x = data.row(i);
+            let xx = norm2(x);
             let u = clustering.labels[i] as usize;
             q.clear();
             q.push(u as u32);
@@ -73,7 +86,8 @@ pub fn run(
             let mut best = f32::INFINITY;
             let mut best_c = u as u32;
             for &cand in &q {
-                let dd = d2(x, centroids.row(cand as usize));
+                let c = cand as usize;
+                let dd = d2_via_dot(xx, cnorms[c], dot(x, centroids.row(c)));
                 if dd < best {
                     best = dd;
                     best_c = cand;

@@ -2,12 +2,20 @@
 //!
 //! `O(d·n²)`: only run on the scales the paper does (SIFT100K-sized and
 //! below, or the sampled-recall path in [`crate::graph::recall`]).
+//!
+//! [`build_threaded`] row-shards the n×n scan across workers: each worker
+//! owns a contiguous stripe of query rows, tiles the full candidate range
+//! against it with the native blocked kernel, and folds into a private
+//! partial graph; stripes are disjoint, so the assembled result is
+//! bit-identical to the serial build.
 
+use crate::core_ops::blockdist;
 use crate::data::matrix::VecSet;
 use crate::graph::knn::KnnGraph;
 use crate::runtime::Backend;
+use crate::util::pool;
 
-/// Build the exact κ-NN graph with blocked distance tiles.
+/// Build the exact κ-NN graph with blocked distance tiles (serial).
 pub fn build(data: &VecSet, kappa: usize, backend: &Backend) -> KnnGraph {
     let n = data.rows();
     let d = data.dim();
@@ -37,6 +45,56 @@ pub fn build(data: &VecSet, kappa: usize, backend: &Backend) -> KnnGraph {
             j0 += cols;
         }
         i0 += rows;
+    }
+    g
+}
+
+/// Build the exact κ-NN graph with the row-sharded parallel scan.
+/// `threads <= 1` (after resolution) falls back to the serial [`build`].
+/// Workers always use the native kernel (PJRT dispatch is single-threaded
+/// by design); against a native-backend serial build the result is
+/// bit-identical, while a PJRT serial build differs only at f32 kernel
+/// tolerance.
+pub fn build_threaded(data: &VecSet, kappa: usize, backend: &Backend, threads: usize) -> KnnGraph {
+    let n = data.rows();
+    let threads = pool::resolve_threads(threads).min(n.max(1));
+    if threads <= 1 {
+        return build(data, kappa, backend);
+    }
+    let d = data.dim();
+    const B: usize = 256;
+    let parts = pool::par_map_chunks(threads, n, |_, range| {
+        let mut part = KnnGraph::empty(range.len(), kappa);
+        let mut block = vec![0f32; B * B];
+        let mut i0 = range.start;
+        while i0 < range.end {
+            let rows = (range.end - i0).min(B);
+            let xb = data.rows_flat(i0, i0 + rows);
+            let mut j0 = 0;
+            while j0 < n {
+                let cols = (n - j0).min(B);
+                let yb = data.rows_flat(j0, j0 + cols);
+                let blk = &mut block[..rows * cols];
+                blockdist::block_l2(xb, yb, d, blk);
+                for r in 0..rows {
+                    let gi = i0 + r;
+                    let row = &blk[r * cols..(r + 1) * cols];
+                    for (c, &dd) in row.iter().enumerate() {
+                        let gj = j0 + c;
+                        if gi != gj {
+                            part.update(gi - range.start, gj as u32, dd);
+                        }
+                    }
+                }
+                j0 += cols;
+            }
+            i0 += rows;
+        }
+        (range.start, part)
+    });
+    let mut g = KnnGraph::empty(n, kappa);
+    for (lo, part) in &parts {
+        g.adopt_rows(*lo, part);
     }
     g
 }
@@ -93,6 +151,29 @@ mod tests {
         for i in 0..5 {
             let real: Vec<u32> = g.neighbors(i).iter().copied().filter(|&j| j != u32::MAX).collect();
             assert_eq!(real.len(), 4, "only n-1 neighbors exist");
+        }
+    }
+
+    #[test]
+    fn threaded_build_is_bit_identical() {
+        let data = blobs(&BlobSpec::quick(300, 6, 5), 4);
+        let serial = build(&data, 6, &Backend::native());
+        for threads in [2usize, 3, 8] {
+            let par = build_threaded(&data, 6, &Backend::native(), threads);
+            for i in 0..300 {
+                assert_eq!(serial.neighbors(i), par.neighbors(i), "row {i} threads={threads}");
+                assert_eq!(serial.distances(i), par.distances(i), "row {i} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_build_handles_more_threads_than_rows() {
+        let data = blobs(&BlobSpec::quick(7, 3, 2), 5);
+        let par = build_threaded(&data, 3, &Backend::native(), 16);
+        let serial = build(&data, 3, &Backend::native());
+        for i in 0..7 {
+            assert_eq!(serial.neighbors(i), par.neighbors(i));
         }
     }
 }

@@ -143,6 +143,18 @@ impl KnnGraph {
         a || b
     }
 
+    /// Move the rows of `part` into `self` starting at global row `lo`.
+    /// `part`'s neighbor ids must already be global.  Row-sharded parallel
+    /// builds (e.g. `graph::brute::build_threaded`) assemble their result
+    /// with this.
+    pub fn adopt_rows(&mut self, lo: usize, part: &KnnGraph) {
+        assert_eq!(self.kappa, part.kappa, "kappa mismatch");
+        assert!(lo + part.n <= self.n, "row range out of bounds");
+        let k = self.kappa;
+        self.ids[lo * k..(lo + part.n) * k].copy_from_slice(&part.ids);
+        self.dists[lo * k..(lo + part.n) * k].copy_from_slice(&part.dists);
+    }
+
     /// Row-invariant check (sorted, deduplicated, no self-edges).
     pub fn check_invariants(&self) -> Result<(), String> {
         for i in 0..self.n {
@@ -241,6 +253,20 @@ mod tests {
         assert_eq!(g.threshold(0), f32::INFINITY, "still a vacant slot");
         g.update(0, 2, 3.0);
         assert_eq!(g.threshold(0), 5.0);
+    }
+
+    #[test]
+    fn adopt_rows_moves_partial_graphs() {
+        let mut whole = KnnGraph::empty(4, 2);
+        let mut part = KnnGraph::empty(2, 2);
+        part.update(0, 3, 1.5); // global row 2's neighbor
+        part.update(1, 0, 0.5); // global row 3's neighbor
+        whole.adopt_rows(2, &part);
+        assert_eq!(whole.neighbors(2)[0], 3);
+        assert_eq!(whole.distances(2)[0], 1.5);
+        assert_eq!(whole.neighbors(3)[0], 0);
+        assert_eq!(whole.neighbors(0), &[u32::MAX, u32::MAX]);
+        whole.check_invariants().unwrap();
     }
 
     #[test]

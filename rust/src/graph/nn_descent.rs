@@ -8,10 +8,25 @@
 //! This implementation follows the published algorithm: new/old flags per
 //! entry, sampled local joins (ρ), reverse lists, termination when the
 //! per-iteration update count drops below `delta · n · κ`.
+//!
+//! ## Parallel local joins (`threads > 1`)
+//!
+//! The distance evaluations of the local join dominate each round, and
+//! per-node joins are independent *reads*; only the top-κ list updates
+//! write.  The parallel path therefore gathers-then-merges: node ranges
+//! are sharded across workers, each worker evaluates its joins against a
+//! frozen snapshot of the per-node thresholds and collects the passing
+//! `(u, v, d)` candidates, and a serial fold applies them through
+//! `KnnGraph::update_pair` (which re-checks against the live lists, so
+//! stale-threshold candidates are simply rejected).  Because thresholds
+//! only tighten, the collected set is a superset of what the serial scan
+//! would accept — no neighbor the serial pass would have found is ever
+//! missed.  `threads = 1` keeps the historical serial loop bit-for-bit.
 
 use crate::core_ops::dist::d2;
 use crate::data::matrix::VecSet;
 use crate::graph::knn::KnnGraph;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// NN-Descent parameters (defaults follow the paper [32]).
@@ -24,17 +39,59 @@ pub struct NnDescentParams {
     /// Hard iteration cap.
     pub max_iters: usize,
     pub seed: u64,
+    /// Worker threads for the local-join phase (`1` = serial,
+    /// bit-identical to the historical implementation; `0` = auto).
+    pub threads: usize,
 }
 
 impl Default for NnDescentParams {
     fn default() -> Self {
-        NnDescentParams { rho: 1.0, delta: 0.001, max_iters: 12, seed: 20170707 }
+        NnDescentParams { rho: 1.0, delta: 0.001, max_iters: 12, seed: 20170707, threads: 1 }
     }
+}
+
+/// Evaluate the local joins for one shard of nodes against a frozen
+/// threshold snapshot, returning the candidate updates that pass.
+fn join_shard(
+    data: &VecSet,
+    g: &KnnGraph,
+    new_cand: &mut [Vec<u32>],
+    old_cand: &mut [Vec<u32>],
+) -> Vec<(u32, u32, f32)> {
+    let mut out = Vec::new();
+    for (news, olds) in new_cand.iter_mut().zip(old_cand.iter_mut()) {
+        news.sort_unstable();
+        news.dedup();
+        olds.sort_unstable();
+        olds.dedup();
+        for a in 0..news.len() {
+            for b in (a + 1)..news.len() {
+                let (u, v) = (news[a] as usize, news[b] as usize);
+                let dd = d2(data.row(u), data.row(v));
+                if dd < g.threshold(u) || dd < g.threshold(v) {
+                    out.push((news[a], news[b], dd));
+                }
+            }
+            let u = news[a] as usize;
+            for &vv in olds.iter() {
+                let v = vv as usize;
+                if u == v {
+                    continue;
+                }
+                let dd = d2(data.row(u), data.row(v));
+                if dd < g.threshold(u) || dd < g.threshold(v) {
+                    out.push((news[a], vv, dd));
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Build an approximate κ-NN graph with NN-Descent.
 pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph {
     let n = data.rows();
+    let threads = pool::resolve_threads(params.threads).min(n.max(1));
     let mut rng = Rng::new(params.seed);
     let g = KnnGraph::random(n, kappa, &mut rng);
     // materialize distances for the random lists so thresholds are real
@@ -53,7 +110,9 @@ pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph 
 
     for _iter in 0..params.max_iters {
         // Build per-node join candidate sets: sampled new/old forward
-        // neighbors + sampled reverse neighbors.
+        // neighbors + sampled reverse neighbors.  (Serial: the reverse
+        // pushes write to arbitrary nodes, and the ρ sampling must consume
+        // one shared RNG stream.)
         let mut new_cand: Vec<Vec<u32>> = vec![Vec::new(); n];
         let mut old_cand: Vec<Vec<u32>> = vec![Vec::new(); n];
         for i in 0..n {
@@ -78,41 +137,77 @@ pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph 
         }
 
         let mut updates = 0usize;
-        for i in 0..n {
-            let news = &mut new_cand[i];
-            news.sort_unstable();
-            news.dedup();
-            let olds = &mut old_cand[i];
-            olds.sort_unstable();
-            olds.dedup();
-            // join new × new
-            for a in 0..news.len() {
-                for b in (a + 1)..news.len() {
-                    let (u, v) = (news[a] as usize, news[b] as usize);
-                    if u == v {
-                        continue;
+        if threads <= 1 {
+            // --- serial join: updates applied in place, fresh thresholds ---
+            for i in 0..n {
+                let news = &mut new_cand[i];
+                news.sort_unstable();
+                news.dedup();
+                let olds = &mut old_cand[i];
+                olds.sort_unstable();
+                olds.dedup();
+                // join new × new
+                for a in 0..news.len() {
+                    for b in (a + 1)..news.len() {
+                        let (u, v) = (news[a] as usize, news[b] as usize);
+                        if u == v {
+                            continue;
+                        }
+                        let dd = d2(data.row(u), data.row(v));
+                        if dd < g.threshold(u) || dd < g.threshold(v) {
+                            if g.update_pair(u, v, dd) {
+                                updates += 1;
+                            }
+                        }
                     }
-                    let dd = d2(data.row(u), data.row(v));
-                    if dd < g.threshold(u) || dd < g.threshold(v) {
-                        if g.update_pair(u, v, dd) {
+                    // join new × old
+                    let u = news[a] as usize;
+                    for &vv in olds.iter() {
+                        let v = vv as usize;
+                        if u == v {
+                            continue;
+                        }
+                        let dd = d2(data.row(u), data.row(v));
+                        if dd < g.threshold(u) || dd < g.threshold(v) {
+                            if g.update_pair(u, v, dd) {
+                                updates += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            // --- parallel join: gather per shard, merge serially ---
+            // Blocked so the gathered (u, v, d) buffers stay bounded even
+            // in the first rounds (loose random-graph thresholds pass most
+            // pairs); merging between blocks also refreshes the threshold
+            // snapshot, so later blocks prune nearly as well as serial.
+            let block = threads * 512;
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + block).min(n);
+                let span = hi - lo;
+                let chunk = (span + threads - 1) / threads;
+                let collected: Vec<Vec<(u32, u32, f32)>> = std::thread::scope(|s| {
+                    let g_ref = &g;
+                    let handles: Vec<_> = new_cand[lo..hi]
+                        .chunks_mut(chunk)
+                        .zip(old_cand[lo..hi].chunks_mut(chunk))
+                        .map(|(nc, oc)| s.spawn(move || join_shard(data, g_ref, nc, oc)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("nn-descent worker panicked"))
+                        .collect()
+                });
+                for list in collected {
+                    for (u, v, dd) in list {
+                        if g.update_pair(u as usize, v as usize, dd) {
                             updates += 1;
                         }
                     }
                 }
-                // join new × old
-                let u = news[a] as usize;
-                for &vv in olds.iter() {
-                    let v = vv as usize;
-                    if u == v {
-                        continue;
-                    }
-                    let dd = d2(data.row(u), data.row(v));
-                    if dd < g.threshold(u) || dd < g.threshold(v) {
-                        if g.update_pair(u, v, dd) {
-                            updates += 1;
-                        }
-                    }
-                }
+                lo = hi;
             }
         }
 
@@ -180,6 +275,30 @@ mod tests {
         let b = build(&data, 4, &NnDescentParams::default());
         for i in 0..150 {
             assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+    }
+
+    #[test]
+    fn parallel_join_reaches_serial_recall() {
+        let data = blobs(&BlobSpec::quick(600, 8, 8), 1);
+        let serial = build(&data, 8, &NnDescentParams::default());
+        let par = build(&data, 8, &NnDescentParams { threads: 4, ..Default::default() });
+        par.check_invariants().unwrap();
+        let exact = brute::build(&data, 8, &Backend::native());
+        let rs = recall::recall_at_1(&serial, &exact);
+        let rp = recall::recall_at_1(&par, &exact);
+        assert!(rp > 0.80, "parallel nn-descent recall@1 = {rp}");
+        assert!(rp >= rs - 0.1, "parallel recall {rp} far below serial {rs}");
+    }
+
+    #[test]
+    fn parallel_join_deterministic_per_thread_count() {
+        let data = blobs(&BlobSpec::quick(200, 4, 4), 6);
+        let p = NnDescentParams { threads: 3, ..Default::default() };
+        let a = build(&data, 4, &p);
+        let b = build(&data, 4, &p);
+        for i in 0..200 {
+            assert_eq!(a.neighbors(i), b.neighbors(i), "row {i}");
         }
     }
 }

@@ -55,14 +55,36 @@ impl DeltaCache {
         after - dudu / nu.max(1.0)
     }
 
-    /// Update cached norms after moving `x`: D_u -= x, D_v += x.
-    /// Must be called BEFORE `Clustering::apply_move` (uses old D's).
+    /// Update cached norms for moving `x`: ‖D∓x‖² = ‖D‖² ∓ 2⟨D,x⟩ + ‖x‖².
+    ///
+    /// Private on purpose: it reads the *pre-move* composites, so it is
+    /// only correct when called before `Clustering::apply_move`.  The
+    /// ordering used to be the caller's responsibility (and was fragile);
+    /// [`DeltaCache::commit_move`] is now the single entry point that
+    /// performs both updates in the right order.
     #[inline]
-    pub fn on_move(&mut self, c: &Clustering, x: &[f32], xx: f64, u: usize, v: usize) {
+    fn on_move(&mut self, c: &Clustering, x: &[f32], xx: f64, u: usize, v: usize) {
         let du = c.composite_of(u);
         let dv = c.composite_of(v);
         self.comp_norm2[u] += -2.0 * dot(du, x) as f64 + xx;
         self.comp_norm2[v] += 2.0 * dot(dv, x) as f64 + xx;
+    }
+
+    /// Move sample `i` (vector `x`, ‖x‖² = `xx`) from cluster `u` to `v`,
+    /// updating the cached composite norms and the clustering state as one
+    /// operation.  This is the only way to apply a move while a
+    /// `DeltaCache` is live — it guarantees the cache update sees the
+    /// pre-move composites and can never be reordered against
+    /// `Clustering::apply_move`.
+    #[inline]
+    pub fn commit_move(&mut self, c: &mut Clustering, i: usize, x: &[f32], xx: f64, u: usize, v: usize) {
+        debug_assert_eq!(
+            c.labels[i] as usize, u,
+            "commit_move: sample {i} is not currently in cluster {u}"
+        );
+        debug_assert_ne!(u, v, "commit_move: source == destination");
+        self.on_move(c, x, xx, u, v);
+        c.apply_move(i, x, u, v);
     }
 }
 
@@ -114,8 +136,7 @@ pub fn run_from(data: &VecSet, mut c: Clustering, params: &KmeansParams) -> Kmea
                 }
             }
             if best_v != u && best_delta > 0.0 {
-                cache.on_move(&c, x, xx, u, best_v);
-                c.apply_move(i, x, u, best_v);
+                cache.commit_move(&mut c, i, x, xx, u, best_v);
                 moves += 1;
             }
         }
@@ -182,6 +203,40 @@ mod tests {
             );
         }
         c.check_invariants(&data).unwrap();
+    }
+
+    #[test]
+    fn commit_move_keeps_cache_and_clustering_in_sync() {
+        // Regression for the on_move/apply_move ordering hazard: drive a
+        // random sequence of commits through the single entry point and
+        // verify the cached ‖D_r‖² always matches a fresh recomputation.
+        let mut rng = Rng::new(9);
+        let data = blobs(&BlobSpec::quick(150, 5, 4), 7);
+        let labels: Vec<u32> = (0..150).map(|_| rng.below(4) as u32).collect();
+        let mut c = Clustering::from_labels(&data, labels, 4);
+        let mut cache = DeltaCache::new(&c);
+        for step in 0..200 {
+            let i = rng.below(150);
+            let u = c.labels[i] as usize;
+            let v = rng.below(4);
+            if u == v || c.counts[u] <= 1 {
+                continue;
+            }
+            let x = data.row(i);
+            let xx = norm2(x) as f64;
+            cache.commit_move(&mut c, i, x, xx, u, v);
+            if step % 40 == 0 {
+                for r in 0..c.k {
+                    let direct = norm2(c.composite_of(r)) as f64;
+                    assert!(
+                        (cache.comp_norm2[r] - direct).abs() < 1e-3 * (1.0 + direct),
+                        "step {step} cluster {r}: cached {} vs direct {direct}",
+                        cache.comp_norm2[r]
+                    );
+                }
+                c.check_invariants(&data).unwrap();
+            }
+        }
     }
 
     #[test]

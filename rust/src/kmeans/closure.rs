@@ -77,7 +77,11 @@ pub fn run(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backend) -
     let labels = two_means::run(
         data,
         k,
-        &TwoMeansParams { seed: params.base.seed, ..Default::default() },
+        &TwoMeansParams {
+            seed: params.base.seed,
+            threads: params.base.threads,
+            ..Default::default()
+        },
         backend,
     );
     let mut clustering = Clustering::from_labels(data, labels, k);

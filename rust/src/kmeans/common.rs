@@ -19,11 +19,15 @@ pub struct KmeansParams {
     pub min_move_rate: f64,
     /// RNG seed (visit order, initialization).
     pub seed: u64,
+    /// Worker threads for the parallel execution layer (`util::pool`).
+    /// `1` = serial, bit-identical to the pre-parallel implementation;
+    /// `0` = auto (env `GKMEANS_THREADS`, else available parallelism).
+    pub threads: usize,
 }
 
 impl Default for KmeansParams {
     fn default() -> Self {
-        KmeansParams { max_iters: 30, min_move_rate: 1e-3, seed: 20170707 }
+        KmeansParams { max_iters: 30, min_move_rate: 1e-3, seed: 20170707, threads: 1 }
     }
 }
 

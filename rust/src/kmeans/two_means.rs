@@ -21,17 +21,27 @@ pub struct TwoMeansParams {
     /// BKM refinement sweeps per bisection (paper integrates BKM at step 8).
     pub boost_iters: usize,
     pub seed: u64,
+    /// Worker threads (`1` = the historical serial build, bit-identical;
+    /// `0` = auto).  With `threads > 1` independent subtree splits run
+    /// concurrently: each split draws from its own deterministically
+    /// derived RNG stream, so results are reproducible per `(seed,
+    /// threads)` but differ from the serial split order.
+    pub threads: usize,
 }
 
 impl Default for TwoMeansParams {
     fn default() -> Self {
-        TwoMeansParams { bisect_iters: 4, boost_iters: 2, seed: 20170707 }
+        TwoMeansParams { bisect_iters: 4, boost_iters: 2, seed: 20170707, threads: 1 }
     }
 }
 
 /// Run Alg. 1: partition `data` into exactly `k` clusters of near-equal
 /// size.  Returns per-sample labels in `[0, k)`.
 pub fn run(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) -> Vec<u32> {
+    let threads = crate::util::pool::resolve_threads(params.threads);
+    if threads > 1 {
+        return run_parallel(data, k, params, threads);
+    }
     let n = data.rows();
     assert!(k >= 1 && k <= n, "k={k} n={n}");
     let mut rng = Rng::new(params.seed);
@@ -73,6 +83,85 @@ pub fn run(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) 
 /// Convenience: run Alg. 1 and wrap into a [`Clustering`].
 pub fn cluster(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) -> Clustering {
     Clustering::from_labels(data, run(data, k, params, backend), k)
+}
+
+/// Parallel 2M-tree build: each round pops the `min(threads, k - built)`
+/// largest clusters off the size heap and bisects them concurrently —
+/// subtree splits are fully independent.  Every split gets its own RNG
+/// stream derived from `(seed, round, cluster id)`, so the build is
+/// deterministic for a fixed `(seed, threads)`.  Workers use the native
+/// margin path (`prefers_blocked` would only route subsets ≥ 200K through
+/// PJRT, and PJRT dispatch is not shared across threads).
+fn run_parallel(data: &VecSet, k: usize, params: &TwoMeansParams, threads: usize) -> Vec<u32> {
+    let n = data.rows();
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let mut members: Vec<Vec<u32>> = Vec::with_capacity(k);
+    members.push((0..n as u32).collect());
+    let mut heap: std::collections::BinaryHeap<(usize, usize)> =
+        std::collections::BinaryHeap::new();
+    heap.push((n, 0));
+    let mut round: u64 = 0;
+
+    while members.len() < k {
+        let need = k - members.len();
+        // pop up to `threads` splittable clusters, largest first
+        let mut tasks: Vec<(usize, Vec<u32>)> = Vec::new();
+        let mut stash: Vec<(usize, usize)> = Vec::new();
+        while tasks.len() < threads.min(need) {
+            match heap.pop() {
+                Some((sz, id)) if sz < 2 => stash.push((sz, id)),
+                Some((_, id)) => tasks.push((id, std::mem::take(&mut members[id]))),
+                None => break,
+            }
+        }
+        for e in stash {
+            heap.push(e);
+        }
+        assert!(
+            !tasks.is_empty(),
+            "no splittable cluster left with {} < k={k} (n={n})",
+            members.len()
+        );
+        round += 1;
+
+        let results: Vec<(Vec<u32>, Vec<u32>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = tasks
+                .iter()
+                .map(|(id, subset)| {
+                    let task_seed = params
+                        .seed
+                        .wrapping_add(round.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                        ^ (*id as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+                    let subset: &[u32] = subset;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(task_seed);
+                        let backend = Backend::native();
+                        bisect_equal(data, subset, params, &mut rng, &backend)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("2M-tree worker panicked"))
+                .collect()
+        });
+
+        for ((id, _), (left, right)) in tasks.iter().zip(results) {
+            let new_id = members.len();
+            heap.push((left.len(), *id));
+            heap.push((right.len(), new_id));
+            members[*id] = left;
+            members.push(right);
+        }
+    }
+
+    let mut labels = vec![0u32; n];
+    for (cid, mem) in members.iter().enumerate() {
+        for &i in mem {
+            labels[i as usize] = cid as u32;
+        }
+    }
+    labels
 }
 
 /// Bisect one subset into two equal halves (Alg. 1 steps 8–9).
@@ -316,6 +405,35 @@ mod tests {
             c.distortion(&data),
             r.distortion(&data)
         );
+    }
+
+    #[test]
+    fn parallel_build_valid_and_balanced() {
+        let data = blobs(&BlobSpec::quick(1000, 8, 16), 1);
+        for k in [2usize, 7, 16, 20] {
+            let params = TwoMeansParams { threads: 4, ..Default::default() };
+            let labels = run(&data, k, &params, &Backend::native());
+            assert_eq!(labels.len(), 1000);
+            let mut counts = vec![0usize; k];
+            for &l in &labels {
+                assert!((l as usize) < k);
+                counts[l as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c > 0), "k={k}: empty cluster");
+            let (mx, mn) = (*counts.iter().max().unwrap(), *counts.iter().min().unwrap());
+            // batched largest-first splitting keeps near-equal sizes, but
+            // the split tree differs from serial; allow a looser bound
+            assert!(mx <= mn * 3 + 3, "k={k}: sizes {mn}..{mx} too skewed");
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_deterministic_per_thread_count() {
+        let data = blobs(&BlobSpec::quick(400, 6, 8), 2);
+        let params = TwoMeansParams { threads: 3, ..Default::default() };
+        let a = run(&data, 9, &params, &Backend::native());
+        let b = run(&data, 9, &params, &Backend::native());
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!
 //! ## Layout
 //!
-//! * [`util`] — RNG, CLI/config parsing, timers, logging (no external deps).
+//! * [`util`] — RNG, CLI/config parsing, timers, logging, and the
+//!   scoped-thread parallel execution layer ([`util::pool`]) — all with no
+//!   external deps.
 //! * [`data`] — dataset container, synthetic generators for the paper's
 //!   four datasets, fvecs/bvecs I/O.
 //! * [`core_ops`] — scalar & blocked distance math, top-κ selection.

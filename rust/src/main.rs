@@ -24,7 +24,7 @@ use gkmeans::util::timer::{fmt_secs, Timer};
 
 const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
-    "topk", "ef", "config", "recall-samples",
+    "topk", "ef", "config", "recall-samples", "threads",
 ];
 
 fn main() {
@@ -61,6 +61,9 @@ COMMON OPTIONS:
   --backend native|pjrt|auto   compute backend (default auto)
   --seed N                     RNG seed (default 20170707)
   --iters N                    max epochs (default 30)
+  --threads N                  worker threads (default 1 = serial,
+                               0 = auto-detect; parallelizes GK-means
+                               epochs, NN-Descent, graph builds, 2M-tree)
   --config FILE                key=value config file (CLI overrides)
   --verbose / --quiet          log level
 ";
@@ -130,6 +133,7 @@ fn job_of(args: &Args) -> ClusterJob {
     job.xi = args.usize_or("xi", 50);
     job.base.max_iters = args.usize_or("iters", 30);
     job.base.seed = args.u64_or("seed", 20170707);
+    job.base.threads = args.usize_or("threads", 1);
     job.measure_recall = args.flag("recall");
     job
 }
@@ -185,6 +189,7 @@ fn cmd_graph(args: &Args) -> i32 {
         tau: args.usize_or("tau", 10),
         xi: args.usize_or("xi", 50),
         seed: args.u64_or("seed", 20170707),
+        threads: args.usize_or("threads", 1),
     };
     let out = construct::build(&data, &params, &backend);
     println!(
@@ -205,7 +210,12 @@ fn cmd_graph(args: &Args) -> i32 {
     }
     if args.flag("recall") {
         let rec = if data.rows() <= 20_000 {
-            let exact = gkmeans::graph::brute::build(&data, 1, &Backend::native());
+            let exact = gkmeans::graph::brute::build_threaded(
+                &data,
+                1,
+                &Backend::native(),
+                params.threads,
+            );
             gkmeans::graph::recall::recall_at_1(&out.graph, &exact)
         } else {
             gkmeans::graph::recall::sampled_recall_at_1(
@@ -246,6 +256,7 @@ fn cmd_search(args: &Args) -> i32 {
         tau: args.usize_or("tau", 10),
         xi: args.usize_or("xi", 50),
         seed,
+        threads: args.usize_or("threads", 1),
     };
     let build = construct::build(&data, &params, &backend);
     println!("graph: {}", fmt_secs(build.total_seconds));

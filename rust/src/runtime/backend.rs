@@ -5,13 +5,24 @@
 //! The two paths compute the same math to f32 tolerance — integration
 //! tests cross-check them — so algorithms are backend-agnostic and the
 //! perf pass can compare them honestly.
+//!
+//! The PJRT variant only exists under the `pjrt` cargo feature; the
+//! default offline build is dependency-free and [`Backend::pjrt`] returns
+//! an error.  Multi-threaded callers (the `util::pool` execution layer)
+//! always run the native kernels: PJRT dispatch has not been audited for
+//! concurrent use, and the parallel paths construct `Backend::Native`
+//! per worker rather than sharing an engine.
 
 use std::path::Path;
 
 use crate::core_ops::argmin::ArgminAcc;
 use crate::core_ops::blockdist;
 use crate::data::matrix::VecSet;
+use crate::runtime::{RtError, RtResult};
+
+#[cfg(feature = "pjrt")]
 use crate::runtime::exec::{literal_f32_2d, pad_block, PAD_SENTINEL};
+#[cfg(feature = "pjrt")]
 use crate::runtime::pjrt::PjrtEngine;
 
 /// Compute backend for bulk distance math.
@@ -21,6 +32,7 @@ pub enum Backend {
     Native,
     /// PJRT path over AOT artifacts, with native fallback for shapes that
     /// have no artifact.
+    #[cfg(feature = "pjrt")]
     Pjrt(PjrtEngine),
 }
 
@@ -31,11 +43,22 @@ impl Backend {
     }
 
     /// PJRT backend over an artifact directory.
-    pub fn pjrt(artifact_dir: &Path) -> anyhow::Result<Backend> {
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifact_dir: &Path) -> RtResult<Backend> {
         Ok(Backend::Pjrt(PjrtEngine::new(artifact_dir)?))
     }
 
-    /// PJRT if artifacts are present, native otherwise.
+    /// PJRT backend stub: this build was compiled without the `pjrt`
+    /// feature, so the request always fails gracefully.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt(_artifact_dir: &Path) -> RtResult<Backend> {
+        Err(RtError::from(
+            "PJRT support not compiled in (rebuild with `--features pjrt` and the xla crate available)",
+        ))
+    }
+
+    /// PJRT if artifacts are present (and the feature is compiled in),
+    /// native otherwise.
     pub fn auto() -> Backend {
         let dir = crate::runtime::artifact::default_dir();
         if dir.join("manifest.tsv").exists() {
@@ -50,6 +73,7 @@ impl Backend {
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Native => "native",
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
         }
     }
@@ -62,7 +86,15 @@ impl Backend {
     /// Large thin batches therefore stay native; the PJRT win lives in
     /// the dense `block_l2`/`assign` tiles (2.4–3.2× native there).
     pub fn prefers_blocked(&self, m: usize) -> bool {
-        matches!(self, Backend::Pjrt(_)) && m >= 200_000
+        #[cfg(feature = "pjrt")]
+        {
+            matches!(self, Backend::Pjrt(_)) && m >= 200_000
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = m;
+            false
+        }
     }
 
     /// Full `m × n` squared-L2 distance block: `x` is `m × d`, `y` is
@@ -70,6 +102,7 @@ impl Backend {
     pub fn block_l2(&self, x: &[f32], y: &[f32], d: usize, out: &mut [f32]) {
         match self {
             Backend::Native => blockdist::block_l2(x, y, d, out),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(engine) => {
                 if let Err(e) = pjrt_block_l2(engine, x, y, d, out) {
                     crate::log_debug!("pjrt block_l2 fell back to native: {e:#}");
@@ -80,6 +113,18 @@ impl Backend {
                     blockdist::block_l2(x, y, d, out);
                 }
             }
+        }
+    }
+
+    /// Multi-threaded `m × n` distance block.  Always runs the native
+    /// row-sharded kernel (PJRT dispatch is single-threaded by design, see
+    /// the module docs); `threads <= 1` falls through to [`Backend::block_l2`]
+    /// so the serial numbers are bit-identical to the historical path.
+    pub fn block_l2_threaded(&self, x: &[f32], y: &[f32], d: usize, out: &mut [f32], threads: usize) {
+        if threads <= 1 {
+            self.block_l2(x, y, d, out);
+        } else {
+            blockdist::block_l2_parallel(x, y, d, out, threads);
         }
     }
 
@@ -117,6 +162,7 @@ impl Backend {
                     row0 += rows;
                 }
             }
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(engine) => {
                 if let Err(e) = pjrt_assign(engine, x, c, d, k, &mut acc) {
                     crate::log_debug!("pjrt assign fell back to native: {e:#}");
@@ -142,6 +188,7 @@ impl Backend {
                     out[t] = crate::core_ops::dist::d2(row, c0) - crate::core_ops::dist::d2(row, c1);
                 }
             }
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(engine) => {
                 if let Err(e) = pjrt_bisect(engine, data, subset, c0, c1, out) {
                     crate::log_debug!("pjrt bisect fell back to native: {e:#}");
@@ -184,6 +231,7 @@ impl Backend {
             .collect();
         match self {
             Backend::Native => blockdist::block_l2(&gathered, &gathered, d, out),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(engine) => {
                 if let Err(e) = pjrt_pairwise_small(engine, &gathered, rows.len(), d, out) {
                     crate::log_debug!("pjrt pairwise fell back to native: {e:#}");
@@ -200,13 +248,16 @@ impl Backend {
 
 // --- PJRT implementations ---------------------------------------------
 
-fn pjrt_block_l2(engine: &PjrtEngine, x: &[f32], y: &[f32], d: usize, out: &mut [f32]) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn pjrt_block_l2(engine: &PjrtEngine, x: &[f32], y: &[f32], d: usize, out: &mut [f32]) -> RtResult<()> {
     let (bm, bn) = engine
         .block_shape("block_l2", d)
-        .ok_or_else(|| anyhow::anyhow!("no block_l2 artifact for d={d}"))?;
+        .ok_or_else(|| RtError(format!("no block_l2 artifact for d={d}")))?;
     let m = x.len() / d;
     let n = y.len() / d;
-    anyhow::ensure!(out.len() == m * n, "out size mismatch");
+    if out.len() != m * n {
+        return Err(RtError::from("out size mismatch"));
+    }
     let mut row0 = 0;
     while row0 < m {
         let rows = (m - row0).min(bm);
@@ -230,10 +281,11 @@ fn pjrt_block_l2(engine: &PjrtEngine, x: &[f32], y: &[f32], d: usize, out: &mut 
     Ok(())
 }
 
-fn pjrt_assign(engine: &PjrtEngine, x: &[f32], c: &[f32], d: usize, k: usize, acc: &mut ArgminAcc) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn pjrt_assign(engine: &PjrtEngine, x: &[f32], c: &[f32], d: usize, k: usize, acc: &mut ArgminAcc) -> RtResult<()> {
     let (bm, bn) = engine
         .block_shape("assign_argmin", d)
-        .ok_or_else(|| anyhow::anyhow!("no assign_argmin artifact for d={d}"))?;
+        .ok_or_else(|| RtError(format!("no assign_argmin artifact for d={d}")))?;
     let m = x.len() / d;
     let mut row0 = 0;
     while row0 < m {
@@ -262,11 +314,12 @@ fn pjrt_assign(engine: &PjrtEngine, x: &[f32], c: &[f32], d: usize, k: usize, ac
     Ok(())
 }
 
-fn pjrt_bisect(engine: &PjrtEngine, data: &VecSet, subset: &[u32], c0: &[f32], c1: &[f32], out: &mut [f32]) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn pjrt_bisect(engine: &PjrtEngine, data: &VecSet, subset: &[u32], c0: &[f32], c1: &[f32], out: &mut [f32]) -> RtResult<()> {
     let d = data.dim();
     let (bm, _) = engine
         .block_shape("bisect_assign", d)
-        .ok_or_else(|| anyhow::anyhow!("no bisect_assign artifact for d={d}"))?;
+        .ok_or_else(|| RtError(format!("no bisect_assign artifact for d={d}")))?;
     let mut c2 = Vec::with_capacity(2 * d);
     c2.extend_from_slice(c0);
     c2.extend_from_slice(c1);
@@ -288,11 +341,14 @@ fn pjrt_bisect(engine: &PjrtEngine, data: &VecSet, subset: &[u32], c0: &[f32], c
     Ok(())
 }
 
-fn pjrt_pairwise_small(engine: &PjrtEngine, gathered: &[f32], m: usize, d: usize, out: &mut [f32]) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn pjrt_pairwise_small(engine: &PjrtEngine, gathered: &[f32], m: usize, d: usize, out: &mut [f32]) -> RtResult<()> {
     let (bs, _) = engine
         .block_shape("block_l2_small", d)
-        .ok_or_else(|| anyhow::anyhow!("no block_l2_small artifact for d={d}"))?;
-    anyhow::ensure!(m <= bs, "cell of {m} exceeds small block {bs}");
+        .ok_or_else(|| RtError(format!("no block_l2_small artifact for d={d}")))?;
+    if m > bs {
+        return Err(RtError(format!("cell of {m} exceeds small block {bs}")));
+    }
     let xb = pad_block(gathered, d, 0, m, bs, 0.0);
     let yb = pad_block(gathered, d, 0, m, bs, PAD_SENTINEL);
     let xl = literal_f32_2d(&xb, bs, d)?;
@@ -359,5 +415,27 @@ mod tests {
         let mut out = vec![0f32; 4];
         b.block_l2(&x, &y, 4, &mut out);
         assert!(out.iter().all(|&v| (v - 4.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn pjrt_unavailable_is_graceful_without_feature() {
+        if cfg!(feature = "pjrt") {
+            return; // behaviour depends on artifacts being present
+        }
+        let err = Backend::pjrt(std::path::Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn block_l2_threaded_matches_serial() {
+        let mut rng = Rng::new(3);
+        let (m, n, d) = (37, 23, 19);
+        let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        Backend::Native.block_l2(&x, &y, d, &mut a);
+        Backend::Native.block_l2_threaded(&x, &y, d, &mut b, 3);
+        assert_eq!(a, b, "threaded kernel must be bit-identical");
     }
 }

@@ -6,9 +6,10 @@
 //! distances come out astronomically large and never win an argmin/top-κ;
 //! padding rows of the *query* operand are zeros and the caller discards
 //! those output rows.
-
-use anyhow::Result;
-use xla::Literal;
+//!
+//! The padding helpers are pure and always compiled; the `Literal`
+//! constructors need the `xla` crate and exist only under the `pjrt`
+//! feature.
 
 /// Fill value for padded candidate rows.  Distance to any real point is
 /// ≥ (1e9)² per component — far beyond any real squared distance while
@@ -25,14 +26,16 @@ pub fn pad_block(src: &[f32], d: usize, row0: usize, rows: usize, block_rows: us
 }
 
 /// Build an `rows × d` f32 literal from a flat slice.
-pub fn literal_f32_2d(flat: &[f32], rows: usize, d: usize) -> Result<Literal> {
+#[cfg(feature = "pjrt")]
+pub fn literal_f32_2d(flat: &[f32], rows: usize, d: usize) -> crate::runtime::RtResult<xla::Literal> {
     debug_assert_eq!(flat.len(), rows * d);
-    Ok(Literal::vec1(flat).reshape(&[rows as i64, d as i64])?)
+    Ok(xla::Literal::vec1(flat).reshape(&[rows as i64, d as i64])?)
 }
 
 /// Build a rank-1 i32 literal.
-pub fn literal_i32_1d(vals: &[i32]) -> Result<Literal> {
-    Ok(Literal::vec1(vals))
+#[cfg(feature = "pjrt")]
+pub fn literal_i32_1d(vals: &[i32]) -> crate::runtime::RtResult<xla::Literal> {
+    Ok(xla::Literal::vec1(vals))
 }
 
 #[cfg(test)]

@@ -2,7 +2,9 @@
 //! a native mirror for every operation.
 //!
 //! * [`artifact`] — `artifacts/manifest.tsv` discovery and parsing.
-//! * [`pjrt`] — the PJRT CPU client and lazily-compiled executable cache.
+//! * [`pjrt`] — the PJRT CPU client and lazily-compiled executable cache
+//!   (compiled only under the `pjrt` cargo feature; the default offline
+//!   build is dependency-free and `Backend::pjrt` returns [`RtError`]).
 //! * [`exec`] — literal marshalling and block padding helpers.
 //! * [`backend`] — the [`Backend`] facade all algorithms call.
 //!
@@ -15,6 +17,63 @@
 pub mod artifact;
 pub mod backend;
 pub mod exec;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use backend::Backend;
+
+/// Minimal runtime error (the in-tree substitute for `anyhow`, which is
+/// unavailable in the offline dependency-free build).  Carries a single
+/// human-readable message; context is prepended by callers.
+#[derive(Debug, Clone)]
+pub struct RtError(pub String);
+
+impl RtError {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl std::fmt::Display) -> RtError {
+        RtError(m.to_string())
+    }
+
+    /// Prepend context, anyhow-style: `e.context("compiling artifact")`.
+    pub fn context(self, ctx: impl std::fmt::Display) -> RtError {
+        RtError(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+impl From<String> for RtError {
+    fn from(s: String) -> Self {
+        RtError(s)
+    }
+}
+
+impl From<&str> for RtError {
+    fn from(s: &str) -> Self {
+        RtError(s.to_string())
+    }
+}
+
+/// Result alias used throughout the runtime layer.
+pub type RtResult<T> = Result<T, RtError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rterror_display_and_context() {
+        let e = RtError::msg("boom").context("loading artifact");
+        assert_eq!(format!("{e}"), "loading artifact: boom");
+        // alternate formatting (used by the CLI's `{e:#}`) must not panic
+        assert_eq!(format!("{e:#}"), "loading artifact: boom");
+        let from_string: RtError = String::from("x").into();
+        assert_eq!(from_string.0, "x");
+    }
+}

@@ -1,19 +1,32 @@
-//! PJRT CPU client + lazily-compiled executable cache.
+//! PJRT CPU client + lazily-compiled executable cache (requires the
+//! `pjrt` cargo feature, which brings the `xla` crate into the build).
 //!
 //! One [`PjrtEngine`] per process is plenty: executables are compiled on
 //! first use of each `(entry, dim)` pair (XLA compilation is tens of ms —
 //! far too slow for the hot loop, so the cache is the point), then reused
 //! for every block of every clustering run.
+//!
+//! Thread-safety note for the parallel execution layer: the executable
+//! cache is mutex-guarded, but the underlying PJRT client has not been
+//! audited for concurrent dispatch, so the multi-threaded code paths
+//! (`util::pool` consumers) always use the native kernels and never share
+//! a [`PjrtEngine`] across workers.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::runtime::artifact::Manifest;
+use crate::runtime::{RtError, RtResult};
+
+impl From<xla::Error> for RtError {
+    fn from(e: xla::Error) -> Self {
+        RtError(format!("{e}"))
+    }
+}
 
 /// Counters for the §Perf accounting (shared, lock-free).
 #[derive(Debug, Default)]
@@ -55,9 +68,10 @@ impl std::fmt::Debug for PjrtEngine {
 
 impl PjrtEngine {
     /// Create a CPU engine over an artifact directory.
-    pub fn new(artifact_dir: &Path) -> Result<PjrtEngine> {
-        let manifest = Manifest::load(artifact_dir).map_err(|e| anyhow!(e))?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+    pub fn new(artifact_dir: &Path) -> RtResult<PjrtEngine> {
+        let manifest = Manifest::load(artifact_dir).map_err(RtError::from)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| RtError::from(e).context("creating PJRT CPU client"))?;
         crate::log_info!(
             "PJRT engine up: platform={} artifacts={} entries={}",
             client.platform_name(),
@@ -82,7 +96,7 @@ impl PjrtEngine {
     }
 
     /// Get (compiling on first use) the executable for `(entry, dim)`.
-    pub fn executable(&self, entry: &str, dim: usize) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+    pub fn executable(&self, entry: &str, dim: usize) -> RtResult<std::sync::Arc<PjRtLoadedExecutable>> {
         let key = (entry.to_string(), dim);
         {
             let cache = self.cache.lock().unwrap();
@@ -93,14 +107,14 @@ impl PjrtEngine {
         let art = self
             .manifest
             .get(entry, dim)
-            .ok_or_else(|| anyhow!("no artifact for entry={entry} dim={dim}"))?;
+            .ok_or_else(|| RtError(format!("no artifact for entry={entry} dim={dim}")))?;
         let proto = HloModuleProto::from_text_file(&art.path)
-            .with_context(|| format!("parsing HLO text {}", art.path.display()))?;
+            .map_err(|e| RtError::from(e).context(format!("parsing HLO text {}", art.path.display())))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {}", art.path.display()))?;
+            .map_err(|e| RtError::from(e).context(format!("compiling {}", art.path.display())))?;
         self.stats.compiles.fetch_add(1, Ordering::Relaxed);
         crate::log_debug!("compiled artifact {entry}_d{dim}");
         let exe = std::sync::Arc::new(exe);
@@ -110,7 +124,7 @@ impl PjrtEngine {
 
     /// Execute an entry with the given literals; returns the result tuple
     /// as a vector of literals (artifacts lower with `return_tuple=True`).
-    pub fn run(&self, entry: &str, dim: usize, args: &[Literal]) -> Result<Vec<Literal>> {
+    pub fn run(&self, entry: &str, dim: usize, args: &[Literal]) -> RtResult<Vec<Literal>> {
         let exe = self.executable(entry, dim)?;
         self.stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
         let result = exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;

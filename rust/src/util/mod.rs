@@ -1,11 +1,14 @@
-//! Dependency-free utilities: RNG, CLI parsing, config files, timing, logging.
+//! Dependency-free utilities: RNG, CLI parsing, config files, timing,
+//! logging, and the scoped-thread parallel execution layer.
 //!
-//! The offline crate cache in this environment carries only the `xla`
-//! dependency tree, so the usual suspects (`rand`, `clap`, `serde`,
-//! `env_logger`) are replaced by these small, well-tested in-tree versions.
+//! This environment has no crates.io access in the default build, so the
+//! usual suspects (`rand`, `clap`, `serde`, `env_logger`, `rayon`) are
+//! replaced by these small, well-tested in-tree versions ([`rng`],
+//! [`cli`], [`configfile`], [`logging`], [`pool`]).
 
 pub mod cli;
 pub mod configfile;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 pub mod timer;

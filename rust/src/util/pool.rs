@@ -1,0 +1,151 @@
+//! The parallel execution layer: scoped-thread helpers with zero external
+//! dependencies (`rayon` is unavailable offline).
+//!
+//! Workers are `std::thread::scope` spawns over contiguous index ranges.
+//! Spawn cost is a few tens of microseconds per worker — negligible at the
+//! granularity this layer operates (whole GK-means epochs, NN-Descent
+//! rounds, n×n distance blocks, 2M-tree subtree splits) — and scoped
+//! lifetimes let workers borrow the dataset/graph/clustering directly,
+//! without `Arc` plumbing.
+//!
+//! ## Determinism contract
+//!
+//! Every consumer in this crate shards work into contiguous ranges and
+//! folds worker results back **in range order**, so a run with a fixed
+//! `(seed, threads)` pair is fully reproducible.  `threads = 1` bypasses
+//! spawning entirely; the callers additionally keep their historical
+//! serial code on that path, so single-threaded results are bit-identical
+//! to the pre-parallel implementation.
+//!
+//! ## Why gather-then-merge everywhere
+//!
+//! The hot structures (`KnnGraph`, `Clustering`, `DeltaCache`) are
+//! deliberately plain — no locks, no atomics — because the single-thread
+//! inner loops are the product.  Parallel phases therefore *read* a frozen
+//! snapshot, collect their proposed writes into per-worker buffers, and a
+//! serial fold applies them (re-validating where semantics demand it, e.g.
+//! Δℐ > 0 re-checks in the GK-means commit).  That keeps every invariant
+//! single-writer without poisoning the serial path with synchronization.
+
+use std::ops::Range;
+
+/// Resolve a requested worker count.
+///
+/// * `0` — auto: `GKMEANS_THREADS` env var if set, else the machine's
+///   available parallelism.
+/// * anything else passes through unchanged (`1` = serial).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("GKMEANS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `[0, n)` into at most `parts` near-equal contiguous ranges.
+/// Empty ranges are never produced; `n = 0` yields no ranges.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let chunk = (n + parts - 1) / parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+/// Run `f(part_index, range)` over the ranges of `[0, n)` on up to
+/// `threads` workers and collect the results **in range order**.
+///
+/// With one range (or `threads <= 1`) the closure runs on the caller's
+/// thread — no spawn, no overhead, same code path as a plain loop.
+pub fn par_map_chunks<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    let ranges = split_ranges(n, threads.max(1));
+    if ranges.len() <= 1 {
+        return ranges.into_iter().enumerate().map(|(t, r)| f(t, r)).collect();
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(t, r)| s.spawn(move || f(t, r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for (n, parts) in [(10usize, 3usize), (1, 8), (0, 4), (100, 1), (7, 7), (5, 100)] {
+            let ranges = split_ranges(n, parts);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for r in &ranges {
+                assert_eq!(r.start, prev_end, "ranges must be contiguous");
+                assert!(r.end > r.start, "no empty ranges");
+                covered += r.end - r.start;
+                prev_end = r.end;
+            }
+            assert_eq!(covered, n, "n={n} parts={parts}");
+            assert!(ranges.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn par_map_chunks_matches_serial_fold() {
+        let data: Vec<u64> = (0..1000).collect();
+        let serial: u64 = data.iter().sum();
+        for threads in [1usize, 2, 3, 8] {
+            let partial = par_map_chunks(threads, data.len(), |_, r| {
+                data[r].iter().sum::<u64>()
+            });
+            assert_eq!(partial.iter().sum::<u64>(), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_chunks_preserves_range_order() {
+        let parts = par_map_chunks(4, 100, |t, r| (t, r.start));
+        for w in parts.windows(2) {
+            assert!(w[0].1 < w[1].1, "results must come back in range order");
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn resolve_threads_passthrough_and_auto() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+        assert!(resolve_threads(0) >= 1, "auto resolves to at least one");
+    }
+
+    #[test]
+    fn zero_items_runs_nothing() {
+        let parts: Vec<usize> = par_map_chunks(4, 0, |_, r| r.len());
+        assert!(parts.is_empty());
+    }
+}

@@ -1,0 +1,193 @@
+//! Cross-module tests for the parallel execution layer (`util::pool` and
+//! its consumers): equivalence with the serial paths, determinism per
+//! `(seed, threads)`, and the monotone-distortion invariant under the
+//! batch-synchronous GK-means commit protocol.
+
+use gkmeans::gkm::gkmeans as gk;
+use gkmeans::graph::{brute, nn_descent, recall};
+use gkmeans::kmeans::common::KmeansParams;
+use gkmeans::kmeans::two_means::{self, TwoMeansParams};
+use gkmeans::runtime::Backend;
+use gkmeans::testing::prop;
+use gkmeans::util::pool;
+
+#[test]
+fn prop_parallel_gkmeans_valid_monotone_and_near_serial() {
+    // The satellite acceptance property: threads = N produces a valid
+    // clustering with distortion within tolerance of threads = 1, and the
+    // distortion history stays monotone non-increasing.
+    prop::check("parallel GK-means ≈ serial", 8, |g| {
+        let n = g.usize_in(200, 700);
+        let d = g.usize_in(4, 16);
+        let k = g.usize_in(4, 16);
+        let kappa = g.usize_in(2, 10);
+        let threads = g.usize_in(2, 4);
+        let data = g.matrix(n, d, 4.0);
+        let graph = brute::build(&data, kappa, &Backend::native());
+        let seed = g.rng.next_u64();
+        let base = KmeansParams { max_iters: 10, seed, ..Default::default() };
+        let serial = gk::run(
+            &data,
+            k,
+            &graph,
+            &gk::GkMeansParams { kappa, base: base.clone() },
+            &Backend::native(),
+        );
+        let par = gk::run(
+            &data,
+            k,
+            &graph,
+            &gk::GkMeansParams { kappa, base: KmeansParams { threads, ..base } },
+            &Backend::native(),
+        );
+        par.clustering.check_invariants(&data)?;
+        for w in par.history.windows(2) {
+            if w[1].distortion > w[0].distortion + 1e-6 * (1.0 + w[0].distortion) {
+                return Err(format!(
+                    "distortion rose under threads={threads}: {} -> {}",
+                    w[0].distortion, w[1].distortion
+                ));
+            }
+        }
+        // different 2M-tree split trees → different local optima; the
+        // band only guards against gross quality regressions
+        let (ds, dp) = (serial.distortion(), par.distortion());
+        if (dp - ds).abs() > 0.25 * ds.max(1e-9) + 1e-9 {
+            return Err(format!("threads={threads}: distortion {dp} vs serial {ds}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threads_one_reproduces_serial_exactly() {
+    // Bit-identical guarantee: the threads = 1 path is the historical
+    // serial implementation (same RNG stream, same visit order, same
+    // arithmetic) — labels and the entire history must match across runs
+    // and across explicitly- vs default-constructed params.
+    let data = gkmeans::data::synth::sift_like(1200, 17);
+    let graph = brute::build(&data, 8, &Backend::native());
+    let explicit = gk::GkMeansParams {
+        kappa: 8,
+        base: KmeansParams { max_iters: 6, threads: 1, ..Default::default() },
+    };
+    let defaulted = gk::GkMeansParams {
+        kappa: 8,
+        base: KmeansParams { max_iters: 6, ..Default::default() },
+    };
+    let a = gk::run(&data, 24, &graph, &explicit, &Backend::native());
+    let b = gk::run(&data, 24, &graph, &defaulted, &Backend::native());
+    assert_eq!(a.clustering.labels, b.clustering.labels);
+    assert_eq!(a.history.len(), b.history.len());
+    for (ha, hb) in a.history.iter().zip(&b.history) {
+        assert_eq!(ha.moves, hb.moves, "iter {}", ha.iter);
+        assert_eq!(
+            ha.distortion.to_bits(),
+            hb.distortion.to_bits(),
+            "iter {} distortion not bit-identical",
+            ha.iter
+        );
+    }
+}
+
+#[test]
+fn parallel_runs_deterministic_per_thread_count() {
+    let data = gkmeans::data::synth::sift_like(800, 23);
+    let graph = brute::build(&data, 6, &Backend::native());
+    let p = gk::GkMeansParams {
+        kappa: 6,
+        base: KmeansParams { max_iters: 5, threads: 3, ..Default::default() },
+    };
+    let a = gk::run(&data, 16, &graph, &p, &Backend::native());
+    let b = gk::run(&data, 16, &graph, &p, &Backend::native());
+    assert_eq!(a.clustering.labels, b.clustering.labels);
+}
+
+#[test]
+fn parallel_brute_graph_is_bit_identical_at_scale() {
+    let data = gkmeans::data::synth::sift_like(1500, 31);
+    let serial = brute::build(&data, 10, &Backend::native());
+    let par = brute::build_threaded(&data, 10, &Backend::native(), 4);
+    for i in 0..data.rows() {
+        assert_eq!(serial.neighbors(i), par.neighbors(i), "row {i}");
+        assert_eq!(serial.distances(i), par.distances(i), "row {i}");
+    }
+}
+
+#[test]
+fn parallel_nn_descent_graph_quality_holds() {
+    let data = gkmeans::data::synth::sift_like(900, 41);
+    let exact = brute::build(&data, 1, &Backend::native());
+    let serial = nn_descent::build(&data, 10, &nn_descent::NnDescentParams::default());
+    let par = nn_descent::build(
+        &data,
+        10,
+        &nn_descent::NnDescentParams { threads: 4, ..Default::default() },
+    );
+    par.check_invariants().unwrap();
+    let rs = recall::recall_at_1(&serial, &exact);
+    let rp = recall::recall_at_1(&par, &exact);
+    assert!(rp >= rs - 0.1, "parallel recall {rp} far below serial {rs}");
+}
+
+#[test]
+fn parallel_two_means_partitions_everything() {
+    prop::check("parallel 2M-tree partition", 8, |g| {
+        let n = g.usize_in(50, 500);
+        let d = g.usize_in(2, 12);
+        let k = g.usize_in(2, n.min(24));
+        let threads = g.usize_in(2, 4);
+        let data = g.matrix(n, d, 5.0);
+        let params = TwoMeansParams { threads, ..Default::default() };
+        let labels = two_means::run(&data, k, &params, &Backend::native());
+        if labels.len() != n {
+            return Err("label count".into());
+        }
+        let mut counts = vec![0usize; k];
+        for &l in &labels {
+            if l as usize >= k {
+                return Err(format!("label {l} >= k {k}"));
+            }
+            counts[l as usize] += 1;
+        }
+        if counts.iter().any(|&c| c == 0) {
+            return Err(format!("empty cluster: {counts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn end_to_end_pipeline_with_threads() {
+    // The whole job path (Alg. 3 graph + Alg. 2 clustering) with the
+    // threads knob set, as the CLI would run it.
+    use gkmeans::coordinator::job::{ClusterJob, Method};
+    use gkmeans::coordinator::pipeline;
+    use gkmeans::data::DatasetSpec;
+    let mut job = ClusterJob::new(
+        DatasetSpec::Synth { kind: "sift".into(), n: 1000, seed: 3 },
+        Method::GkMeans,
+        20,
+    );
+    job.kappa = 8;
+    job.tau = 3;
+    job.xi = 30;
+    job.base.max_iters = 5;
+    job.base.threads = 4;
+    let r = pipeline::run_job(&job, &Backend::native()).unwrap();
+    assert!(r.distortion.is_finite() && r.distortion > 0.0);
+    for w in r.history.windows(2) {
+        assert!(
+            w[1].distortion <= w[0].distortion + 1e-6 * (1.0 + w[0].distortion),
+            "pipeline distortion rose: {} -> {}",
+            w[0].distortion,
+            w[1].distortion
+        );
+    }
+}
+
+#[test]
+fn pool_auto_resolution_is_sane() {
+    assert_eq!(pool::resolve_threads(3), 3);
+    assert!(pool::resolve_threads(0) >= 1);
+}

@@ -11,6 +11,10 @@ use gkmeans::runtime::{artifact, Backend};
 use gkmeans::util::rng::Rng;
 
 fn pjrt_backend() -> Option<Backend> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature (offline default)");
+        return None;
+    }
     let dir = artifact::default_dir();
     if !dir.join("manifest.tsv").exists() {
         eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());

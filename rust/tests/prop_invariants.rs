@@ -92,6 +92,7 @@ fn prop_construct_graph_entries_are_true_distances() {
             xi: g.usize_in(10, 40),
             tau: g.usize_in(1, 4),
             seed: g.rng.next_u64(),
+            threads: 1,
         };
         let out = construct::build(&data, &params, &Backend::native());
         out.graph.check_invariants()?;
