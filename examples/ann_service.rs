@@ -1,5 +1,8 @@
-//! ANN search service: build the Alg. 3 graph once, then serve nearest-
-//! neighbor queries from it (§4.3's application of the KNN graph).
+//! ANN search service over a *saved model artifact* (§4.3's application,
+//! production shape): the first run fits GK-means (Alg. 3 graph + Alg. 2
+//! clustering, vectors embedded) and saves the `FittedModel`; every later
+//! run loads the artifact and serves immediately — no re-indexing on
+//! startup, which is the whole point of the fit → model → query surface.
 //!
 //! Reports per-query latency and recall against exact search — the
 //! serving-side numbers behind the paper's "<3 ms per query at recall
@@ -8,46 +11,75 @@
 //!
 //! ```bash
 //! cargo run --release --example ann_service -- [--n 20000] [--queries 500] [--ef 64]
+//! # second invocation loads the saved index:
+//! cargo run --release --example ann_service
+//! # force a refit:
+//! cargo run --release --example ann_service -- --refit
 //! ```
 
+use std::path::PathBuf;
+
 use gkmeans::data::synth;
-use gkmeans::gkm::ann::{self, SearchParams};
-use gkmeans::gkm::construct::{self, ConstructParams};
+use gkmeans::gkm::ann::SearchParams;
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, RunContext};
 use gkmeans::runtime::Backend;
 use gkmeans::util::cli;
 use gkmeans::util::rng::Rng;
 use gkmeans::util::timer::Timer;
 
 fn main() {
-    let args = cli::parse_env(&["n", "queries", "ef", "kappa", "tau"]);
+    let args = cli::parse_env(&["n", "queries", "ef", "kappa", "tau", "index"]);
     let n = args.usize_or("n", 20_000);
     let nq = args.usize_or("queries", 500);
     let ef = args.usize_or("ef", 64);
     let kappa = args.usize_or("kappa", 20);
     let tau = args.usize_or("tau", 16);
+    let index: PathBuf = args.get("index").map(PathBuf::from).unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("ann_service_n{n}_kappa{kappa}_tau{tau}.gkm"))
+    });
     let backend = Backend::auto();
 
-    println!("indexing: n={n} SIFT-like descriptors, kappa={kappa}, tau={tau}");
-    let data = synth::sift_like(n, 20170707);
-    let build = construct::build(
-        &data,
-        &ConstructParams { kappa, xi: 50, tau, seed: 1, threads: 1 },
-        &backend,
-    );
-    println!("graph built in {:.2}s", build.total_seconds);
+    // --- load the artifact, or fit + save it on the first run ---
+    let model = if index.exists() && !args.flag("refit") {
+        let t = Timer::start();
+        let m = FittedModel::load(&index).expect("loading saved index");
+        println!(
+            "loaded index {} in {:.3}s (n={}, kappa={}, fitted by {})",
+            index.display(),
+            t.elapsed_s(),
+            m.n_train,
+            m.graph.as_ref().map(|g| g.kappa()).unwrap_or(0),
+            m.method.name()
+        );
+        m
+    } else {
+        println!("indexing: n={n} SIFT-like descriptors, kappa={kappa}, tau={tau}");
+        let data = synth::sift_like(n, 20170707);
+        let ctx = RunContext::new(&backend).seed(1).keep_data(true).max_iters(5);
+        let m = GkMeans::new((n / 50).max(2)).kappa(kappa).tau(tau).fit(&data, &ctx);
+        println!(
+            "fitted in {:.2}s (graph {:.2}s); saving {}",
+            m.total_seconds,
+            m.graph_seconds,
+            index.display()
+        );
+        m.save(&index).expect("saving index");
+        m
+    };
+    let data = model.data.as_ref().expect("index embeds its vectors");
 
-    // serve queries
+    // --- serve queries from the artifact ---
     let mut rng = Rng::new(99);
     let sp = SearchParams { ef, entries: 48, seed: 5 };
     let mut latencies = Vec::with_capacity(nq);
     let mut hits = 0usize;
     for _ in 0..nq {
-        let qi = rng.below(n);
+        let qi = rng.below(data.rows());
         let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.5 * rng.normal()).collect();
         // exact answer for recall accounting
         let mut best = f32::INFINITY;
         let mut want = 0u32;
-        for j in 0..n {
+        for j in 0..data.rows() {
             let dd = gkmeans::core_ops::dist::d2(&q, data.row(j));
             if dd < best {
                 best = dd;
@@ -55,7 +87,7 @@ fn main() {
             }
         }
         let t = Timer::start();
-        let (res, _) = ann::search(&data, &build.graph, &q, 10, &sp, &mut rng);
+        let res = model.search(&q, 10, &sp).expect("graph + vectors present");
         latencies.push(t.elapsed_s());
         if res.first().map(|r| r.1) == Some(want) {
             hits += 1;

@@ -1,12 +1,10 @@
-//! Quickstart: cluster a synthetic dataset with GK-means in ~20 lines.
+//! Quickstart: fit GK-means, keep the model, query it — in ~20 lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use gkmeans::data::synth::{blobs, BlobSpec};
-use gkmeans::gkm::{self, gkmeans::GkMeansParams};
-use gkmeans::runtime::Backend;
+use gkmeans::prelude::*;
 
 fn main() {
     // 10K 32-d points with blob structure.
@@ -16,24 +14,34 @@ fn main() {
     // native mirror otherwise.
     let backend = Backend::auto();
 
-    // GK-means end to end: Alg. 3 builds the KNN graph, Alg. 2 clusters
-    // with it. κ = 20 neighbors consulted per sample.
-    let params = GkMeansParams { kappa: 20, ..Default::default() };
-    let out = gkm::cluster(&data, 100, &params, &backend);
+    // GK-means end to end through the fit -> model API: Alg. 3 builds the
+    // KNN graph, Alg. 2 clusters with it. κ = 20 neighbors per sample.
+    let ctx = RunContext::new(&backend);
+    let model = GkMeans::new(100).kappa(20).fit(&data, &ctx);
 
-    println!("clustered n={} into k=100 on backend={}", data.rows(), backend.name());
-    println!("distortion      = {:.4}", out.distortion());
-    println!("total time      = {:.2}s (init {:.2}s)", out.total_seconds, out.init_seconds);
-    println!("epochs run      = {}", out.history.len() - 1);
-    let sizes: Vec<u32> = out.clustering.counts.clone();
+    println!("clustered n={} into k={} on backend={}", data.rows(), model.k, backend.name());
+    println!("distortion      = {:.4}", model.distortion());
+    println!(
+        "total time      = {:.2}s (graph {:.2}s, init {:.2}s)",
+        model.total_seconds, model.graph_seconds, model.init_seconds
+    );
+    println!("epochs run      = {}", model.history.len() - 1);
+
+    let mut sizes = vec![0u32; model.k];
+    for &l in &model.labels {
+        sizes[l as usize] += 1;
+    }
+    let mut sorted = sizes.clone();
+    sorted.sort_unstable();
     println!(
         "cluster sizes   = min {} / median {} / max {}",
-        sizes.iter().min().unwrap(),
-        {
-            let mut s = sizes.clone();
-            s.sort_unstable();
-            s[s.len() / 2]
-        },
-        sizes.iter().max().unwrap()
+        sorted[0],
+        sorted[sorted.len() / 2],
+        sorted[sorted.len() - 1]
     );
+
+    // The model is an artifact: assign vectors it has never seen.
+    let unseen = blobs(&BlobSpec::quick(500, 32, 64), 43);
+    let labels = model.predict(&unseen);
+    println!("predicted       = {} out-of-sample assignments", labels.len());
 }

@@ -78,22 +78,17 @@ fn main() {
     println!("\n{}", table.render());
 
     // --- quantization demo: assign 1000 unseen descriptors to words ---
-    // re-run GK-means through the library API to get the actual vocabulary
-    let vocab = gkmeans::gkm::cluster(
-        &data,
-        k,
-        &gkmeans::gkm::gkmeans::GkMeansParams {
-            kappa: 30,
-            base: gkmeans::kmeans::common::KmeansParams { max_iters: iters, ..Default::default() },
-        },
-        &backend,
-    );
-    let centroids = vocab.clustering.centroids();
+    // fit the actual vocabulary as a model artifact, then predict
+    // out-of-sample — the model owns the centroids and the assignment path
+    use gkmeans::model::{Clusterer, GkMeans, RunContext};
+    let ctx = RunContext::new(&backend).max_iters(iters);
+    let vocab = GkMeans::new(k).kappa(30).fit(&data, &ctx);
     let unseen = gkmeans::data::synth::sift_like(1_000, 777);
     let timer = gkmeans::util::timer::Timer::start();
-    let acc = backend.assign_blocks(unseen.flat(), centroids.flat(), data.dim(), k);
+    // predict_on keeps the quantization on the selected backend
+    let words = vocab.predict_on(&unseen, &backend);
     let q_secs = timer.elapsed_s();
-    let used: std::collections::HashSet<u32> = acc.idx.iter().copied().collect();
+    let used: std::collections::HashSet<u32> = words.iter().copied().collect();
     println!(
         "quantized 1000 unseen descriptors in {:.1} ms ({} distinct words used)",
         q_secs * 1e3,

@@ -37,7 +37,7 @@ fn main() {
     let mut tk = Table::new(&["kappa", "iter_s", "distortion"]);
     for kappa in [1usize, 5, 10, 20, 40, 64] {
         let t = Timer::start();
-        let out = gk::run(
+        let out = gk::run_core(
             &data,
             k,
             &g.graph,
@@ -61,7 +61,7 @@ fn main() {
             &backend,
         );
         let r = recall::recall_at_1(&b.graph, &exact);
-        let out = gk::run(
+        let out = gk::run_core(
             &data,
             k,
             &b.graph,

@@ -14,6 +14,7 @@ use gkmeans::eval::report::{f, Table};
 use gkmeans::gkm::ann::{self, SearchParams};
 use gkmeans::gkm::construct::{self, ConstructParams};
 use gkmeans::graph::nn_descent;
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, RunContext};
 use gkmeans::util::rng::Rng;
 use gkmeans::util::timer::Timer;
 
@@ -101,4 +102,32 @@ fn main() {
     println!("paper shape checks: Alg.3 builds faster than NN-Descent; both reach");
     println!("high recall with ef; Alg.3 competitive despite lower raw graph recall.");
     t.write_csv(&gkmeans::eval::report::results_dir().join("ann_search.csv")).ok();
+
+    // --- the serving-artifact path: fit -> save -> load -> search ---
+    // (what examples/ann_service.rs deploys; recall should track the raw
+    // Alg.3 rows above since the model embeds the same graph + vectors)
+    let k = (n / 100).max(4);
+    let ctx = RunContext::new(&backend).keep_data(true).max_iters(5);
+    let model = GkMeans::new(k).kappa(kappa).tau(16).fit(&data, &ctx);
+    let path = std::env::temp_dir().join(format!("ann_search_bench_{}.gkm", std::process::id()));
+    model.save(&path).expect("save model");
+    let served = FittedModel::load(&path).expect("load model");
+    std::fs::remove_file(&path).ok();
+    let sp = SearchParams { ef: 64, entries: 48, seed: 7 };
+    let timer = Timer::start();
+    let mut hits = 0usize;
+    for ((_, q), &want) in queries.iter().zip(&truth) {
+        let res = served.search(q, 1, &sp).expect("served search");
+        if res.first().map(|r| r.1) == Some(want) {
+            hits += 1;
+        }
+    }
+    let secs = timer.elapsed_s();
+    println!(
+        "served artifact (fit->save->load->search): recall@1={:.3} {:.0}us/q \
+         (graph built in {:.2}s inside fit)",
+        hits as f64 / nq as f64,
+        secs / nq as f64 * 1e6,
+        model.graph_seconds
+    );
 }

@@ -10,8 +10,8 @@ use gkmeans::bench_util;
 use gkmeans::data::synth;
 use gkmeans::eval::cooccur;
 use gkmeans::eval::report::{f, Table};
-use gkmeans::kmeans::common::KmeansParams;
 use gkmeans::kmeans::two_means::{self, TwoMeansParams};
+use gkmeans::model::{Clusterer, Lloyd, RunContext};
 
 fn main() {
     bench_util::banner("Fig.1", "NN-rank vs same-cluster co-occurrence (cluster size 50)");
@@ -24,15 +24,15 @@ fn main() {
     println!("building exact {kappa}-NN ground truth (n={n}, d=128)...");
     let exact = gkmeans::graph::brute::build(&data, kappa, &backend);
 
-    // traditional k-means labels
-    let km = gkmeans::kmeans::lloyd::run(&data, k, &KmeansParams::default(), &backend);
-    let km_series = cooccur::cooccurrence_by_rank(&exact, &km.clustering.labels, kappa);
+    // traditional k-means labels, via the fit -> model surface
+    let km = Lloyd::new(k).fit(&data, &RunContext::new(&backend));
+    let km_series = cooccur::cooccurrence_by_rank(&exact, &km.labels, kappa);
 
     // 2M-tree labels
     let labels_2m = two_means::run(&data, k, &TwoMeansParams::default(), &backend);
     let tm_series = cooccur::cooccurrence_by_rank(&exact, &labels_2m, kappa);
 
-    let random = cooccur::random_collision_rate(&km.clustering.labels, k);
+    let random = cooccur::random_collision_rate(&km.labels, k);
 
     let mut t = Table::new(&["rank", "k-means", "2M-tree"]);
     for &rank in &[1usize, 2, 5, 10, 20, 40, 60, 80, 100] {

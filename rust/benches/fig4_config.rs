@@ -40,9 +40,9 @@ fn main() {
             &backend,
         );
         let r = recall::recall_at_1(&g.graph, &exact);
-        let gk = gk::run(&data, k, &g.graph, &params, &backend);
+        let gk = gk::run_core(&data, k, &g.graph, &params, &backend);
         t.row(&["GK-means".into(), f(r), f(gk.distortion())]);
-        let tr = variant::run(&data, k, &g.graph, &params, &backend);
+        let tr = variant::run_core(&data, k, &g.graph, &params, &backend);
         t.row(&["GK-means*".into(), f(r), f(tr.distortion())]);
         println!(
             "tau={tau}: recall={r:.3} gk={:.2} gk*={:.2}",
@@ -59,7 +59,7 @@ fn main() {
             &nn_descent::NnDescentParams { max_iters: iters, ..Default::default() },
         );
         let r = recall::recall_at_1(&g, &exact);
-        let gk = gk::run(&data, k, &g, &params, &backend);
+        let gk = gk::run_core(&data, k, &g, &params, &backend);
         t.row(&["KGraph+GK-means".into(), f(r), f(gk.distortion())]);
         println!("nn-descent iters={iters}: recall={r:.3} distortion={:.2}", gk.distortion());
     }

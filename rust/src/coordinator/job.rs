@@ -51,6 +51,34 @@ impl Method {
         }
     }
 
+    /// Stable on-disk tag (model serialization).  Append-only: tags are
+    /// never reused or renumbered.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Method::Lloyd => 0,
+            Method::Boost => 1,
+            Method::MiniBatch => 2,
+            Method::Closure => 3,
+            Method::GkMeans => 4,
+            Method::KGraphGkMeans => 5,
+            Method::GkMeansTrad => 6,
+        }
+    }
+
+    /// Inverse of [`Method::tag`].
+    pub fn from_tag(tag: u8) -> Result<Method, String> {
+        Ok(match tag {
+            0 => Method::Lloyd,
+            1 => Method::Boost,
+            2 => Method::MiniBatch,
+            3 => Method::Closure,
+            4 => Method::GkMeans,
+            5 => Method::KGraphGkMeans,
+            6 => Method::GkMeansTrad,
+            other => return Err(format!("unknown method tag {other}")),
+        })
+    }
+
     /// All methods in the paper's standard comparison order.
     pub fn all() -> &'static [Method] {
         &[
@@ -78,6 +106,9 @@ pub struct ClusterJob {
     pub base: KmeansParams,
     /// Measure graph recall (costs an exact/sampled ground truth pass).
     pub measure_recall: bool,
+    /// Retain the training vectors in the fitted model (ANN serving /
+    /// `cluster --save` + `search --model`).
+    pub keep_data: bool,
 }
 
 impl ClusterJob {
@@ -91,7 +122,42 @@ impl ClusterJob {
             xi: 50,
             base: KmeansParams::default(),
             measure_recall: false,
+            keep_data: false,
         }
+    }
+
+    /// The typed [`Clusterer`](crate::model::Clusterer) config this job
+    /// describes — the bridge from the CLI/bench job world into the
+    /// fit → model API everything now routes through.
+    pub fn clusterer(&self) -> Box<dyn crate::model::Clusterer> {
+        use crate::model as m;
+        match self.method {
+            Method::Lloyd => Box::new(m::Lloyd::new(self.k)),
+            Method::Boost => Box::new(m::Boost::new(self.k)),
+            Method::MiniBatch => Box::new(m::MiniBatch::new(self.k)),
+            Method::Closure => Box::new(m::ClosureKmeans::new(self.k)),
+            Method::GkMeans => {
+                Box::new(m::GkMeans::new(self.k).kappa(self.kappa).xi(self.xi).tau(self.tau))
+            }
+            Method::GkMeansTrad => {
+                Box::new(m::GkMeansStar::new(self.k).kappa(self.kappa).xi(self.xi).tau(self.tau))
+            }
+            Method::KGraphGkMeans => Box::new(m::KGraphGkMeans::new(self.k).kappa(self.kappa)),
+        }
+    }
+
+    /// The [`RunContext`](crate::model::RunContext) for this job's
+    /// iteration-control fields on the given backend.
+    pub fn context<'a>(
+        &self,
+        backend: &'a crate::runtime::Backend,
+    ) -> crate::model::RunContext<'a> {
+        crate::model::RunContext::new(backend)
+            .threads(self.base.threads)
+            .seed(self.base.seed)
+            .max_iters(self.base.max_iters)
+            .min_move_rate(self.base.min_move_rate)
+            .keep_data(self.keep_data)
     }
 }
 
@@ -149,6 +215,37 @@ mod tests {
             assert_eq!(Method::parse(s).unwrap(), m);
         }
         assert!(Method::parse("wat").is_err());
+    }
+
+    #[test]
+    fn tag_roundtrip_is_stable() {
+        for (i, &m) in [
+            Method::Lloyd,
+            Method::Boost,
+            Method::MiniBatch,
+            Method::Closure,
+            Method::GkMeans,
+            Method::KGraphGkMeans,
+            Method::GkMeansTrad,
+        ]
+        .iter()
+        .enumerate()
+        {
+            assert_eq!(m.tag() as usize, i, "tags are append-only; never renumber");
+            assert_eq!(Method::from_tag(m.tag()).unwrap(), m);
+        }
+        assert!(Method::from_tag(200).is_err());
+    }
+
+    #[test]
+    fn job_clusterer_matches_method() {
+        use crate::model::Clusterer;
+        let j = ClusterJob::new(
+            crate::data::DatasetSpec::Synth { kind: "blobs".into(), n: 10, seed: 1 },
+            Method::GkMeansTrad,
+            4,
+        );
+        assert_eq!(j.clusterer().method(), Method::GkMeansTrad);
     }
 
     #[test]

@@ -1,16 +1,21 @@
-//! The end-to-end pipeline: dataset → (graph) → clustering → evaluation.
+//! The end-to-end pipeline: dataset → fit → [`FittedModel`] → evaluation.
 //!
 //! Everything the CLI and the bench harnesses run goes through
-//! [`run_job`], so the paper's tables/figures and the user-facing launcher
-//! share one code path.
+//! [`run_job`]/[`fit_job`], which route every method through the
+//! [`Clusterer`] trait — the paper's tables/figures, the user-facing
+//! launcher, and the model-artifact path share one code path.
+//!
+//! Time accounting: the [`FittedModel`] owns the single shared clock
+//! (graph build + init + epochs, folded exactly once — see
+//! [`FittedModel::check_time_accounting`]); [`JobResult`] is a plain
+//! projection of it, so `total_seconds`, `init_seconds + iter_seconds`,
+//! and the per-epoch history can never disagree.
 
-use crate::coordinator::job::{ClusterJob, JobResult, Method};
+use crate::coordinator::job::{ClusterJob, JobResult};
 use crate::data::matrix::VecSet;
-use crate::gkm::{construct, gkmeans, variant};
-use crate::graph::{nn_descent, recall};
-use crate::kmeans::{boost, closure, lloyd, minibatch};
+use crate::graph::recall;
+use crate::model::{Clusterer, FittedModel};
 use crate::runtime::Backend;
-use crate::util::timer::Timer;
 
 /// Execute a job end to end.
 pub fn run_job(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String> {
@@ -20,106 +25,60 @@ pub fn run_job(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String>
 
 /// Execute a job on an already-loaded dataset (benches reuse the data).
 pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResult {
-    let n = data.rows();
-    let k = job.k.min(n);
+    let (model, rec) = fit_job(job, data, backend);
+    result_from_model(&model, rec)
+}
+
+/// Fit the job's [`Clusterer`](crate::model::Clusterer) and measure graph
+/// recall when the job asks for it.  The CLI calls this directly when it
+/// needs the artifact itself (`cluster --save`).
+pub fn fit_job(job: &ClusterJob, data: &VecSet, backend: &Backend) -> (FittedModel, Option<f64>) {
     crate::log_info!(
-        "job: {} on n={n} d={} k={k} ({})",
+        "job: {} on n={} d={} k={} ({})",
         job.method.name(),
+        data.rows(),
         data.dim(),
+        job.k.min(data.rows()),
         backend.name()
     );
-
-    let (out, graph_seconds, recall_val) = match job.method {
-        Method::Lloyd => (lloyd::run(data, k, &job.base, backend), 0.0, None),
-        Method::Boost => (boost::run(data, k, &job.base, backend), 0.0, None),
-        Method::MiniBatch => (
-            minibatch::run(
-                data,
-                k,
-                &minibatch::MiniBatchParams { base: job.base.clone(), ..Default::default() },
-                backend,
-            ),
-            0.0,
-            None,
-        ),
-        Method::Closure => (
-            closure::run(
-                data,
-                k,
-                &closure::ClosureParams { base: job.base.clone(), ..Default::default() },
-                backend,
-            ),
-            0.0,
-            None,
-        ),
-        Method::GkMeans | Method::GkMeansTrad => {
-            let t = Timer::start();
-            let build = construct::build(
-                data,
-                &construct::ConstructParams {
-                    kappa: job.kappa,
-                    xi: job.xi,
-                    tau: job.tau,
-                    seed: job.base.seed,
-                    threads: job.base.threads,
-                },
-                backend,
-            );
-            let graph_seconds = t.elapsed_s();
-            let params = gkmeans::GkMeansParams { kappa: job.kappa, base: job.base.clone() };
-            let rec = job
-                .measure_recall
-                .then(|| measure_recall(data, &build.graph, job.base.seed, job.base.threads));
-            let out = if job.method == Method::GkMeans {
-                gkmeans::run(data, k, &build.graph, &params, backend)
-            } else {
-                variant::run(data, k, &build.graph, &params, backend)
-            };
-            (out, graph_seconds, rec)
-        }
-        Method::KGraphGkMeans => {
-            let t = Timer::start();
-            let graph = nn_descent::build(
-                data,
-                job.kappa,
-                &nn_descent::NnDescentParams {
-                    seed: job.base.seed,
-                    threads: job.base.threads,
-                    ..Default::default()
-                },
-            );
-            let graph_seconds = t.elapsed_s();
-            let rec = job
-                .measure_recall
-                .then(|| measure_recall(data, &graph, job.base.seed, job.base.threads));
-            let params = gkmeans::GkMeansParams { kappa: job.kappa, base: job.base.clone() };
-            let out = gkmeans::run(data, k, &graph, &params, backend);
-            (out, graph_seconds, rec)
-        }
+    let model = job.clusterer().fit(data, &job.context(backend));
+    debug_assert_eq!(model.check_time_accounting(), Ok(()));
+    let rec = if job.measure_recall {
+        model
+            .graph
+            .as_ref()
+            .map(|g| measure_recall(data, g, job.base.seed, job.base.threads))
+    } else {
+        None
     };
+    (model, rec)
+}
 
-    let mut history = out.history.clone();
-    for h in history.iter_mut() {
-        h.seconds += graph_seconds; // graph time precedes every epoch
-    }
+/// Project a fitted model onto the Tab. 2-style [`JobResult`] columns.
+pub fn result_from_model(model: &FittedModel, recall: Option<f64>) -> JobResult {
     JobResult {
-        method: job.method,
-        n,
-        dim: data.dim(),
-        k,
-        init_seconds: out.init_seconds + graph_seconds,
-        iter_seconds: out.total_seconds - out.init_seconds,
-        total_seconds: out.total_seconds + graph_seconds,
-        distortion: out.distortion(),
-        recall: recall_val,
-        history,
+        method: model.method,
+        n: model.n_train,
+        dim: model.dim,
+        k: model.k,
+        init_seconds: model.init_seconds,
+        iter_seconds: model.iter_seconds(),
+        total_seconds: model.total_seconds,
+        distortion: model.distortion(),
+        recall,
+        history: model.history.clone(),
     }
 }
 
 /// Top-1 recall (exact below 20K samples, 100-query sampled above —
 /// the paper's VLAD10M protocol).  The exact ground-truth build is the
 /// dominant cost and honors the job's `threads` knob.
-fn measure_recall(data: &VecSet, graph: &crate::graph::knn::KnnGraph, seed: u64, threads: usize) -> f64 {
+fn measure_recall(
+    data: &VecSet,
+    graph: &crate::graph::knn::KnnGraph,
+    seed: u64,
+    threads: usize,
+) -> f64 {
     if data.rows() <= 20_000 {
         let exact = crate::graph::brute::build_threaded(data, 1, &Backend::native(), threads);
         recall::recall_at_1(graph, &exact)
@@ -131,6 +90,7 @@ fn measure_recall(data: &VecSet, graph: &crate::graph::knn::KnnGraph, seed: u64,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::job::Method;
     use crate::data::DatasetSpec;
 
     fn quick_job(method: Method) -> ClusterJob {
@@ -160,6 +120,7 @@ mod tests {
         ] {
             let r = run_job(&quick_job(m), &b).unwrap();
             assert_eq!(r.n, 400);
+            assert_eq!(r.method, m);
             assert!(r.distortion.is_finite(), "{m:?}");
             assert!(r.total_seconds > 0.0);
             assert!(!r.history.is_empty());
@@ -174,13 +135,60 @@ mod tests {
         let r = run_job(&j, &b).unwrap();
         let rec = r.recall.expect("recall requested");
         assert!((0.0..=1.0).contains(&rec));
+        // non-graph methods have no graph to measure: no recall, no panic
+        let mut j = quick_job(Method::Lloyd);
+        j.measure_recall = true;
+        assert!(run_job(&j, &b).unwrap().recall.is_none());
     }
 
     #[test]
     fn gkmeans_total_includes_graph_time() {
         let b = Backend::native();
-        let r = run_job(&quick_job(Method::GkMeans), &b).unwrap();
-        assert!(r.init_seconds > 0.0);
+        let job = quick_job(Method::GkMeans);
+        let data = job.dataset.load().unwrap();
+        let (model, _) = fit_job(&job, &data, &b);
+        // the model-level contract: one shared clock, graph time folded
+        // exactly once
+        model.check_time_accounting().unwrap();
+        assert!(model.graph_seconds > 0.0);
+        let r = result_from_model(&model, None);
+        // projection-level identities: totals and per-epoch history agree
+        assert!(r.init_seconds >= model.graph_seconds);
         assert!(r.total_seconds >= r.init_seconds);
+        assert!(
+            (r.init_seconds + r.iter_seconds - r.total_seconds).abs() <= 1e-9,
+            "init {} + iter {} != total {}",
+            r.init_seconds,
+            r.iter_seconds,
+            r.total_seconds
+        );
+        let first = r.history.first().unwrap();
+        let last = r.history.last().unwrap();
+        assert!(
+            first.seconds >= model.graph_seconds,
+            "history clock must start after the graph build"
+        );
+        assert!(
+            last.seconds <= r.total_seconds + 1e-9,
+            "history {}s overran total {}s: graph time counted twice",
+            last.seconds,
+            r.total_seconds
+        );
+        for w in r.history.windows(2) {
+            assert!(w[1].seconds + 1e-9 >= w[0].seconds, "history clock not monotone");
+        }
+    }
+
+    #[test]
+    fn job_result_is_pure_projection_of_model() {
+        let b = Backend::native();
+        let job = quick_job(Method::KGraphGkMeans);
+        let data = job.dataset.load().unwrap();
+        let (model, _) = fit_job(&job, &data, &b);
+        let r = result_from_model(&model, None);
+        assert_eq!(r.k, model.k);
+        assert_eq!(r.history.len(), model.history.len());
+        assert_eq!(r.distortion, model.distortion());
+        assert_eq!(r.total_seconds, model.total_seconds);
     }
 }

@@ -64,7 +64,7 @@ mod tests {
     #[test]
     fn clustered_data_cooccurs_far_above_random() {
         let data = blobs(&BlobSpec { sigma: 0.5, ..BlobSpec::quick(500, 6, 10) }, 1);
-        let out = crate::kmeans::lloyd::run(&data, 10, &KmeansParams::default(), &Backend::native());
+        let out = crate::kmeans::lloyd::run_core(&data, 10, &KmeansParams::default(), &Backend::native());
         let series = figure1_series(&data, &out.clustering.labels, 5, &Backend::native());
         let random = random_collision_rate(&out.clustering.labels, 10);
         assert!(series[0] > 0.8, "NN co-occurrence {series:?}");
@@ -74,7 +74,7 @@ mod tests {
     #[test]
     fn rate_decreases_with_rank_on_average() {
         let data = blobs(&BlobSpec::quick(400, 4, 8), 2);
-        let out = crate::kmeans::lloyd::run(&data, 8, &KmeansParams::default(), &Backend::native());
+        let out = crate::kmeans::lloyd::run_core(&data, 8, &KmeansParams::default(), &Backend::native());
         let series = figure1_series(&data, &out.clustering.labels, 20, &Backend::native());
         // paper Fig. 1: closer neighbors co-occur more; compare first vs last
         assert!(series[0] >= series[19], "{series:?}");

@@ -51,7 +51,7 @@ mod tests {
     #[test]
     fn worse_labels_higher_distortion() {
         let data = blobs(&BlobSpec { sigma: 0.1, spread: 100.0, ..BlobSpec::quick(200, 4, 4) }, 4);
-        let good = crate::kmeans::lloyd::run(
+        let good = crate::kmeans::lloyd::run_core(
             &data,
             4,
             &crate::kmeans::common::KmeansParams::default(),

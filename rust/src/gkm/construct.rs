@@ -85,7 +85,7 @@ pub fn build(data: &VecSet, params: &ConstructParams, backend: &Backend) -> Grap
                 threads: params.threads,
             },
         };
-        let out = gkmeans::run(data, k0, &graph, &gk_params, backend);
+        let out = gkmeans::run_core(data, k0, &graph, &gk_params, backend);
         let members = gkmeans::members_of(&out.clustering);
 
         // --- step 2: exhaustive in-cell refinement (lines 8–14) ---

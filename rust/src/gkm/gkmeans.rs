@@ -43,6 +43,7 @@
 
 use crate::core_ops::dist::norm2;
 use crate::data::matrix::VecSet;
+use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::boost::DeltaCache;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
@@ -66,8 +67,22 @@ impl Default for GkMeansParams {
     }
 }
 
-/// Run Alg. 2 with a 2M-tree initialization.
+/// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
+#[deprecated(note = "use `model::GkMeans::new(k).kappa(..).fit(data, &RunContext::new(&backend))`")]
 pub fn run(
+    data: &VecSet,
+    k: usize,
+    graph: &KnnGraph,
+    params: &GkMeansParams,
+    backend: &Backend,
+) -> KmeansOutput {
+    run_core(data, k, graph, params, backend)
+}
+
+/// The Alg. 2 engine with a 2M-tree initialization
+/// ([`crate::model::GkMeans`] / [`crate::model::KGraphGkMeans`] execute
+/// this on their respective graphs).
+pub fn run_core(
     data: &VecSet,
     k: usize,
     graph: &KnnGraph,
@@ -106,37 +121,17 @@ struct Proposal {
     xx: f64,
 }
 
-/// Per-worker scratch reused across batches and epochs: the epoch-stamped
-/// mark array makes candidate dedup O(κ) per sample with no allocation
-/// (vs. the old O(κ²) `q.contains` scan).
+/// Per-worker scratch reused across batches and epochs: the shared
+/// [`CandidateSet`] (epoch-stamped mark array, O(κ) dedup — see
+/// [`crate::gkm`]) plus this core's proposal buffer.
 struct EpochScratch {
-    /// `mark[cluster] == stamp` ⇔ cluster already in `q` for this sample.
-    mark: Vec<u32>,
-    stamp: u32,
-    q: Vec<u32>,
+    cand: CandidateSet,
     proposals: Vec<Proposal>,
 }
 
 impl EpochScratch {
     fn new(k: usize, kappa: usize) -> EpochScratch {
-        EpochScratch {
-            mark: vec![0; k],
-            stamp: 0,
-            q: Vec::with_capacity(kappa + 1),
-            proposals: Vec::new(),
-        }
-    }
-
-    /// Advance the stamp; resets the mark array on the (astronomically
-    /// rare) u32 wraparound so stale stamps can never collide.
-    #[inline]
-    fn next_stamp(&mut self) -> u32 {
-        self.stamp = self.stamp.wrapping_add(1);
-        if self.stamp == 0 {
-            self.mark.iter_mut().for_each(|m| *m = 0);
-            self.stamp = 1;
-        }
-        self.stamp
+        EpochScratch { cand: CandidateSet::new(k, kappa), proposals: Vec::new() }
     }
 }
 
@@ -154,19 +149,8 @@ fn scan_shard(
 ) {
     for &i in samples {
         let u = c.labels[i] as usize;
-        let stamp = scratch.next_stamp();
-        scratch.q.clear();
-        for &b in graph.neighbors(i).iter().take(kappa) {
-            if b != u32::MAX {
-                let lbl = c.labels[b as usize];
-                let l = lbl as usize;
-                if l != u && scratch.mark[l] != stamp {
-                    scratch.mark[l] = stamp;
-                    scratch.q.push(lbl);
-                }
-            }
-        }
-        if scratch.q.is_empty() {
+        scratch.cand.collect(&c.labels, graph.neighbors(i), kappa, None, Some(u as u32));
+        if scratch.cand.q.is_empty() {
             continue;
         }
         let x = data.row(i);
@@ -174,7 +158,7 @@ fn scan_shard(
         let leave = cache.leave(c, x, xx, u);
         let mut best_v = u;
         let mut best_delta = 0f64;
-        for &v in &scratch.q {
+        for &v in &scratch.cand.q {
             let v = v as usize;
             let delta = cache.gain(c, x, xx, v) + leave;
             if delta > best_delta {
@@ -221,20 +205,9 @@ pub fn run_from(
             for &i in &order {
                 let x = data.row(i);
                 let u = c.labels[i] as usize;
-                // --- collect Q (lines 6–11), O(κ) dedup via mark array ---
-                let stamp = scratch.next_stamp();
-                scratch.q.clear();
-                for &b in graph.neighbors(i).iter().take(kappa) {
-                    if b != u32::MAX {
-                        let lbl = c.labels[b as usize];
-                        let l = lbl as usize;
-                        if l != u && scratch.mark[l] != stamp {
-                            scratch.mark[l] = stamp;
-                            scratch.q.push(lbl);
-                        }
-                    }
-                }
-                if scratch.q.is_empty() {
+                // --- collect Q (lines 6–11), O(κ) dedup via CandidateSet ---
+                scratch.cand.collect(&c.labels, graph.neighbors(i), kappa, None, Some(u as u32));
+                if scratch.cand.q.is_empty() {
                     continue;
                 }
                 // --- seek v maximizing Δℐ (line 12) ---
@@ -242,7 +215,7 @@ pub fn run_from(
                 let leave = cache.leave(&c, x, xx, u);
                 let mut best_v = u;
                 let mut best_delta = 0f64;
-                for &v in &scratch.q {
+                for &v in &scratch.cand.q {
                     let v = v as usize;
                     let delta = cache.gain(&c, x, xx, v) + leave;
                     if delta > best_delta {
@@ -355,7 +328,7 @@ mod tests {
     #[test]
     fn distortion_monotone_and_valid() {
         let (data, graph) = setup(500, 10);
-        let out = run(&data, 10, &graph, &GkMeansParams { kappa: 10, ..Default::default() }, &Backend::native());
+        let out = run_core(&data, 10, &graph, &GkMeansParams { kappa: 10, ..Default::default() }, &Backend::native());
         out.clustering.check_invariants(&data).unwrap();
         for w in out.history.windows(2) {
             assert!(w[1].distortion <= w[0].distortion + 1e-9);
@@ -368,8 +341,8 @@ mod tests {
         // candidate pruning should barely hurt.
         let (data, graph) = setup(600, 12);
         let p = KmeansParams::default();
-        let gk = run(&data, 12, &graph, &GkMeansParams { kappa: 10, base: p.clone() }, &Backend::native());
-        let bkm = crate::kmeans::boost::run(&data, 12, &p, &Backend::native());
+        let gk = run_core(&data, 12, &graph, &GkMeansParams { kappa: 10, base: p.clone() }, &Backend::native());
+        let bkm = crate::kmeans::boost::run_core(&data, 12, &p, &Backend::native());
         assert!(
             gk.distortion() <= bkm.distortion() * 1.15 + 1e-9,
             "gk={} bkm={}",
@@ -383,14 +356,14 @@ mod tests {
         // indirect check: with kappa=1 the candidate set per sample is ≤1,
         // so the run must still terminate and produce a valid clustering.
         let (data, graph) = setup(300, 8);
-        let out = run(&data, 8, &graph, &GkMeansParams { kappa: 1, ..Default::default() }, &Backend::native());
+        let out = run_core(&data, 8, &graph, &GkMeansParams { kappa: 1, ..Default::default() }, &Backend::native());
         out.clustering.check_invariants(&data).unwrap();
     }
 
     #[test]
     fn members_of_roundtrip() {
         let (data, graph) = setup(200, 5);
-        let out = run(&data, 5, &graph, &GkMeansParams { kappa: 5, ..Default::default() }, &Backend::native());
+        let out = run_core(&data, 5, &graph, &GkMeansParams { kappa: 5, ..Default::default() }, &Backend::native());
         let members = members_of(&out.clustering);
         assert_eq!(members.iter().map(|m| m.len()).sum::<usize>(), 200);
         for (cid, m) in members.iter().enumerate() {
@@ -405,14 +378,14 @@ mod tests {
         let data = blobs(&BlobSpec::quick(100, 4, 4), 2);
         let graph = KnnGraph::empty(100, 5);
         // all slots vacant -> no candidates -> no moves; init partition kept
-        let out = run(&data, 4, &graph, &GkMeansParams::default(), &Backend::native());
+        let out = run_core(&data, 4, &graph, &GkMeansParams::default(), &Backend::native());
         assert_eq!(out.history.last().unwrap().moves, 0);
     }
 
     #[test]
     fn parallel_epoch_monotone_and_close_to_serial() {
         let (data, graph) = setup(800, 12);
-        let serial = run(
+        let serial = run_core(
             &data,
             12,
             &graph,
@@ -423,7 +396,7 @@ mod tests {
             kappa: 10,
             base: KmeansParams { threads: 4, ..Default::default() },
         };
-        let par = run(&data, 12, &graph, &par_params, &Backend::native());
+        let par = run_core(&data, 12, &graph, &par_params, &Backend::native());
         par.clustering.check_invariants(&data).unwrap();
         for w in par.history.windows(2) {
             assert!(
@@ -446,8 +419,8 @@ mod tests {
     fn threads_one_is_deterministic() {
         let (data, graph) = setup(400, 8);
         let p = GkMeansParams { kappa: 8, ..Default::default() };
-        let a = run(&data, 8, &graph, &p, &Backend::native());
-        let b = run(&data, 8, &graph, &p, &Backend::native());
+        let a = run_core(&data, 8, &graph, &p, &Backend::native());
+        let b = run_core(&data, 8, &graph, &p, &Backend::native());
         assert_eq!(a.clustering.labels, b.clustering.labels);
         assert_eq!(a.history.len(), b.history.len());
         for (ha, hb) in a.history.iter().zip(&b.history) {

@@ -18,21 +18,93 @@ use crate::data::matrix::VecSet;
 use crate::kmeans::common::KmeansOutput;
 use crate::runtime::Backend;
 
-/// End-to-end GK-means: build the KNN graph with Alg. 3, then cluster
-/// with Alg. 2 (the paper's "two major steps", §4.3 summary).
+/// Epoch-stamped candidate-cluster dedup shared by both Alg. 2 cores
+/// (the Δℐ core in [`gkmeans`] and the traditional core in [`variant`]).
+///
+/// Collecting `Q = { cLabel[b] : b ∈ G[i] }` must deduplicate labels;
+/// `mark[cluster] == stamp` makes that O(κ) per sample with no
+/// allocation (vs. the old O(κ²) `q.contains` scan), and candidates come
+/// out in first-occurrence order — identical to the scan it replaced.
+pub(crate) struct CandidateSet {
+    /// `mark[cluster] == stamp` ⇔ cluster already collected this sample.
+    mark: Vec<u32>,
+    stamp: u32,
+    /// The collected candidate labels (valid until the next `collect`).
+    pub q: Vec<u32>,
+}
+
+impl CandidateSet {
+    pub fn new(k: usize, kappa: usize) -> CandidateSet {
+        CandidateSet { mark: vec![0; k], stamp: 0, q: Vec::with_capacity(kappa + 1) }
+    }
+
+    /// Advance the stamp; resets the mark array on the (astronomically
+    /// rare) u32 wraparound so stale stamps can never collide.
+    #[inline]
+    fn next_stamp(&mut self) -> u32 {
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            self.mark.iter_mut().for_each(|m| *m = 0);
+            self.stamp = 1;
+        }
+        self.stamp
+    }
+
+    /// Rebuild `q` with the deduplicated labels of the first `kappa`
+    /// non-vacant `neighbors`.  `include` seeds `q` with a label before
+    /// the scan (GK-means\* keeps the current cluster as a candidate);
+    /// `exclude` drops a label from collection (the Δℐ core never
+    /// proposes a self-move).  First-occurrence order is preserved.
+    #[inline]
+    pub fn collect(
+        &mut self,
+        labels: &[u32],
+        neighbors: &[u32],
+        kappa: usize,
+        include: Option<u32>,
+        exclude: Option<u32>,
+    ) {
+        let stamp = self.next_stamp();
+        self.q.clear();
+        if let Some(l) = include {
+            self.mark[l as usize] = stamp;
+            self.q.push(l);
+        }
+        let ex = exclude.map(|l| l as usize).unwrap_or(usize::MAX);
+        for &b in neighbors.iter().take(kappa) {
+            if b == u32::MAX {
+                continue;
+            }
+            let lbl = labels[b as usize];
+            let l = lbl as usize;
+            if l != ex && self.mark[l] != stamp {
+                self.mark[l] = stamp;
+                self.q.push(lbl);
+            }
+        }
+    }
+}
+
+/// Deprecated shim — the pre-`Clusterer` end-to-end entry point
+/// (Alg. 3 graph build, then Alg. 2).
+#[deprecated(note = "use `model::GkMeans::new(k).kappa(..).fit(data, &RunContext::new(&backend))`")]
 pub fn cluster(
     data: &VecSet,
     k: usize,
     params: &gkmeans::GkMeansParams,
     backend: &Backend,
 ) -> KmeansOutput {
-    let build = construct::build(data, &construct::ConstructParams {
-        kappa: params.kappa,
-        seed: params.base.seed,
-        threads: params.base.threads,
-        ..Default::default()
-    }, backend);
-    let mut out = gkmeans::run(data, k, &build.graph, params, backend);
+    let build = construct::build(
+        data,
+        &construct::ConstructParams {
+            kappa: params.kappa,
+            seed: params.base.seed,
+            threads: params.base.threads,
+            ..Default::default()
+        },
+        backend,
+    );
+    let mut out = gkmeans::run_core(data, k, &build.graph, params, backend);
     // account graph-construction time as initialization cost
     out.init_seconds += build.total_seconds;
     out.total_seconds += build.total_seconds;
@@ -40,4 +112,39 @@ pub fn cluster(
         h.seconds += build.total_seconds;
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_set_dedups_in_first_occurrence_order() {
+        let labels = vec![3u32, 1, 3, 2, 1, 0];
+        let mut cs = CandidateSet::new(4, 6);
+        // neighbors 0..6 -> labels 3,1,3,2,1,0; exclude label 1
+        cs.collect(&labels, &[0, 1, 2, 3, 4, 5], 6, None, Some(1));
+        assert_eq!(cs.q, vec![3, 2, 0]);
+        // include the current cluster first; vacant slots skipped
+        cs.collect(&labels, &[0, u32::MAX, 3], 3, Some(2), None);
+        assert_eq!(cs.q, vec![2, 3]);
+        // kappa truncation
+        cs.collect(&labels, &[0, 1, 2, 3, 4, 5], 2, None, None);
+        assert_eq!(cs.q, vec![3, 1]);
+    }
+
+    #[test]
+    fn candidate_set_reuse_across_many_samples() {
+        let labels: Vec<u32> = (0..100u32).map(|i| i % 7).collect();
+        let mut cs = CandidateSet::new(7, 10);
+        for i in 0..100u32 {
+            let nbrs: Vec<u32> = (0..10).map(|t| (i + t) % 100).collect();
+            cs.collect(&labels, &nbrs, 10, None, Some(labels[i as usize]));
+            let mut sorted = cs.q.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), cs.q.len(), "duplicates at sample {i}");
+            assert!(!cs.q.contains(&labels[i as usize]), "excluded label leaked");
+        }
+    }
 }

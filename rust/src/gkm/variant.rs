@@ -10,6 +10,7 @@
 
 use crate::core_ops::dist::{d2_via_dot, dot, norm2};
 use crate::data::matrix::VecSet;
+use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput};
 use crate::kmeans::two_means::{self, TwoMeansParams};
@@ -19,8 +20,21 @@ use crate::util::timer::Timer;
 
 pub use crate::gkm::gkmeans::GkMeansParams;
 
-/// Run the traditional-core variant.
+/// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
+#[deprecated(note = "use `model::GkMeansStar::new(k).kappa(..).fit(data, &RunContext::new(&backend))`")]
 pub fn run(
+    data: &VecSet,
+    k: usize,
+    graph: &KnnGraph,
+    params: &GkMeansParams,
+    backend: &Backend,
+) -> KmeansOutput {
+    run_core(data, k, graph, params, backend)
+}
+
+/// The traditional-core engine ([`crate::model::GkMeansStar`] executes
+/// this).
+pub fn run_core(
     data: &VecSet,
     k: usize,
     graph: &KnnGraph,
@@ -46,7 +60,9 @@ pub fn run(
     let total_norm: f64 = (0..n).map(|i| norm2(data.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x7452_6164);
     let mut order: Vec<usize> = (0..n).collect();
-    let mut q: Vec<u32> = Vec::with_capacity(kappa + 1);
+    // shared O(κ) epoch-stamped dedup (the Δℐ core uses the same helper;
+    // this loop previously re-scanned `q` per neighbor — O(κ²))
+    let mut cand = CandidateSet::new(k, kappa);
 
     let mut history = vec![IterStat {
         iter: 0,
@@ -73,24 +89,15 @@ pub fn run(
             let x = data.row(i);
             let xx = norm2(x);
             let u = clustering.labels[i] as usize;
-            q.clear();
-            q.push(u as u32);
-            for &b in graph.neighbors(i).iter().take(kappa) {
-                if b != u32::MAX {
-                    let lbl = clustering.labels[b as usize];
-                    if !q.contains(&lbl) {
-                        q.push(lbl);
-                    }
-                }
-            }
+            cand.collect(&clustering.labels, graph.neighbors(i), kappa, Some(u as u32), None);
             let mut best = f32::INFINITY;
             let mut best_c = u as u32;
-            for &cand in &q {
-                let c = cand as usize;
+            for &v in &cand.q {
+                let c = v as usize;
                 let dd = d2_via_dot(xx, cnorms[c], dot(x, centroids.row(c)));
                 if dd < best {
                     best = dd;
-                    best_c = cand;
+                    best_c = v;
                 }
             }
             if best_c as usize != u {
@@ -125,7 +132,7 @@ mod tests {
     fn runs_and_improves() {
         let data = blobs(&BlobSpec::quick(400, 6, 8), 1);
         let graph = brute::build(&data, 8, &Backend::native());
-        let out = run(&data, 8, &graph, &GkMeansParams { kappa: 8, ..Default::default() }, &Backend::native());
+        let out = run_core(&data, 8, &graph, &GkMeansParams { kappa: 8, ..Default::default() }, &Backend::native());
         out.clustering.check_invariants(&data).unwrap();
         assert!(out.history.last().unwrap().distortion <= out.history[0].distortion + 1e-9);
     }
@@ -136,8 +143,8 @@ mod tests {
         let data = blobs(&BlobSpec { sigma: 2.5, ..BlobSpec::quick(800, 8, 16) }, 2);
         let graph = brute::build(&data, 10, &Backend::native());
         let p = GkMeansParams { kappa: 10, ..Default::default() };
-        let trad = run(&data, 16, &graph, &p, &Backend::native());
-        let boost = crate::gkm::gkmeans::run(&data, 16, &graph, &p, &Backend::native());
+        let trad = run_core(&data, 16, &graph, &p, &Backend::native());
+        let boost = crate::gkm::gkmeans::run_core(&data, 16, &graph, &p, &Backend::native());
         assert!(
             boost.distortion() <= trad.distortion() * 1.02,
             "boost={} trad={}",

@@ -62,6 +62,46 @@ impl KnnGraph {
         g
     }
 
+    /// Reassemble a graph from its flat parts (the [`KnnGraph::ids_flat`] /
+    /// [`KnnGraph::dists_flat`] buffers a serialized model carries).
+    /// Validates buffer shapes and the per-row invariants, so a corrupted
+    /// artifact is an error, never a structurally-broken graph.
+    pub fn from_parts(
+        n: usize,
+        kappa: usize,
+        ids: Vec<u32>,
+        dists: Vec<f32>,
+    ) -> Result<KnnGraph, String> {
+        if kappa == 0 {
+            return Err("graph kappa must be >= 1".into());
+        }
+        let cells = n
+            .checked_mul(kappa)
+            .ok_or_else(|| "graph size overflows".to_string())?;
+        if ids.len() != cells || dists.len() != cells {
+            return Err(format!(
+                "graph buffers have {} ids / {} dists, expected {cells}",
+                ids.len(),
+                dists.len()
+            ));
+        }
+        let g = KnnGraph { n, kappa, ids, dists };
+        g.check_invariants()?;
+        Ok(g)
+    }
+
+    /// The flat `n × κ` neighbor-id buffer (u32::MAX = vacant slot).
+    #[inline]
+    pub fn ids_flat(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// The flat `n × κ` squared-distance buffer (ascending per row).
+    #[inline]
+    pub fn dists_flat(&self) -> &[f32] {
+        &self.dists
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n
@@ -155,7 +195,10 @@ impl KnnGraph {
         self.dists[lo * k..(lo + part.n) * k].copy_from_slice(&part.dists);
     }
 
-    /// Row-invariant check (sorted, deduplicated, no self-edges).
+    /// Row-invariant check (sorted, deduplicated, no self-edges, ids in
+    /// bounds).  Note: row-sharded *partial* graphs (see
+    /// [`KnnGraph::adopt_rows`]) hold global ids and must only be checked
+    /// after assembly into the full graph.
     pub fn check_invariants(&self) -> Result<(), String> {
         for i in 0..self.n {
             let ids = self.neighbors(i);
@@ -164,6 +207,12 @@ impl KnnGraph {
             for t in 0..self.kappa {
                 if ids[t] == u32::MAX {
                     continue;
+                }
+                if ids[t] as usize >= self.n {
+                    return Err(format!(
+                        "neighbor id {} out of bounds (n={}) at node {i}",
+                        ids[t], self.n
+                    ));
                 }
                 if ids[t] as usize == i {
                     return Err(format!("self edge at node {i}"));
@@ -267,6 +316,20 @@ mod tests {
         assert_eq!(whole.neighbors(3)[0], 0);
         assert_eq!(whole.neighbors(0), &[u32::MAX, u32::MAX]);
         whole.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_parts_roundtrip_and_validation() {
+        let mut rng = Rng::new(3);
+        let g = KnnGraph::random(30, 4, &mut rng);
+        let back =
+            KnnGraph::from_parts(30, 4, g.ids_flat().to_vec(), g.dists_flat().to_vec()).unwrap();
+        assert_eq!(back.neighbors(7), g.neighbors(7));
+        assert_eq!(back.distances(7), g.distances(7));
+        // wrong shape
+        assert!(KnnGraph::from_parts(30, 4, vec![0; 10], vec![0.0; 10]).is_err());
+        // self-edge rejected by the invariant check
+        assert!(KnnGraph::from_parts(1, 1, vec![0], vec![0.5]).is_err());
     }
 
     #[test]

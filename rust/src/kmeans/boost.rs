@@ -88,8 +88,15 @@ impl DeltaCache {
     }
 }
 
-/// Run BKM from a random-assignment start (or see [`run_from`]).
-pub fn run(data: &VecSet, k: usize, params: &KmeansParams, _backend: &crate::runtime::Backend) -> KmeansOutput {
+/// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
+#[deprecated(note = "use `model::Boost::new(k).fit(data, &RunContext::new(&backend))`")]
+pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &crate::runtime::Backend) -> KmeansOutput {
+    run_core(data, k, params, backend)
+}
+
+/// The BKM engine ([`crate::model::Boost`] executes this): random
+/// balanced start, then [`run_from`].
+pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, _backend: &crate::runtime::Backend) -> KmeansOutput {
     let mut rng = Rng::new(params.seed);
     let labels: Vec<u32> = (0..data.rows()).map(|i| (i % k) as u32).collect();
     let mut shuffled = labels;
@@ -163,7 +170,7 @@ mod tests {
     #[test]
     fn objective_monotone_nondecreasing() {
         let data = blobs(&BlobSpec::quick(300, 6, 5), 3);
-        let out = run(&data, 5, &KmeansParams::default(), &Backend::native());
+        let out = run_core(&data, 5, &KmeansParams::default(), &Backend::native());
         for w in out.history.windows(2) {
             assert!(
                 w[1].distortion <= w[0].distortion + 1e-9,
@@ -177,8 +184,8 @@ mod tests {
         let data = blobs(&BlobSpec::quick(600, 8, 12), 4);
         let p = KmeansParams::default();
         let b = Backend::native();
-        let bkm = run(&data, 12, &p, &b);
-        let lloyd = crate::kmeans::lloyd::run(&data, 12, &p, &b);
+        let bkm = run_core(&data, 12, &p, &b);
+        let lloyd = crate::kmeans::lloyd::run_core(&data, 12, &p, &b);
         // paper: BKM converges to considerably better local optima; allow
         // small slack for randomness.
         assert!(
@@ -192,7 +199,7 @@ mod tests {
     #[test]
     fn cached_norms_stay_consistent() {
         let data = blobs(&BlobSpec::quick(120, 4, 4), 5);
-        let out = run(&data, 4, &KmeansParams { max_iters: 5, ..Default::default() }, &Backend::native());
+        let out = run_core(&data, 4, &KmeansParams { max_iters: 5, ..Default::default() }, &Backend::native());
         let c = &out.clustering;
         let cache = DeltaCache::new(c);
         for r in 0..c.k {
@@ -243,7 +250,7 @@ mod tests {
     fn clusters_stay_nonempty_enough() {
         // BKM must not collapse everything into one cluster on blob data.
         let data = blobs(&BlobSpec::quick(200, 4, 8), 6);
-        let out = run(&data, 8, &KmeansParams::default(), &Backend::native());
+        let out = run_core(&data, 8, &KmeansParams::default(), &Backend::native());
         let nonempty = out.clustering.counts.iter().filter(|&&c| c > 0).count();
         assert!(nonempty >= 6, "only {nonempty}/8 clusters nonempty");
     }

@@ -66,9 +66,16 @@ fn rp_tree_leaves(data: &VecSet, leaf_max: usize, rng: &mut Rng) -> (Vec<u32>, V
     (perm, leaves)
 }
 
-/// Run closure k-means.  Initialization follows the paper's fast variants:
-/// a 2M-tree partition (cheap, balanced) provides the starting clusters.
+/// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
+#[deprecated(note = "use `model::ClosureKmeans::new(k).fit(data, &RunContext::new(&backend))`")]
 pub fn run(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backend) -> KmeansOutput {
+    run_core(data, k, params, backend)
+}
+
+/// The closure k-means engine ([`crate::model::ClosureKmeans`] executes
+/// this).  Initialization follows the paper's fast variants: a 2M-tree
+/// partition (cheap, balanced) provides the starting clusters.
+pub fn run_core(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backend) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
     let mut rng = Rng::new(params.base.seed ^ 0xC105_0513);
@@ -200,7 +207,7 @@ mod tests {
     #[test]
     fn improves_over_init_and_valid() {
         let data = blobs(&BlobSpec::quick(800, 8, 10), 3);
-        let out = run(&data, 10, &ClosureParams::default(), &Backend::native());
+        let out = run_core(&data, 10, &ClosureParams::default(), &Backend::native());
         out.clustering.check_invariants(&data).unwrap();
         let first = out.history.first().unwrap().distortion;
         let last = out.history.last().unwrap().distortion;
@@ -213,8 +220,8 @@ mod tests {
         // candidate count doesn't scale with k.
         let data = blobs(&BlobSpec::quick(1000, 8, 16), 4);
         let p = ClosureParams { base: KmeansParams { max_iters: 3, ..Default::default() }, ..Default::default() };
-        let t_small = crate::util::timer::timed(|| run(&data, 8, &p, &Backend::native())).1;
-        let t_big = crate::util::timer::timed(|| run(&data, 64, &p, &Backend::native())).1;
+        let t_small = crate::util::timer::timed(|| run_core(&data, 8, &p, &Backend::native())).1;
+        let t_big = crate::util::timer::timed(|| run_core(&data, 64, &p, &Backend::native())).1;
         // 8x more clusters should cost far less than 8x the time; allow 3x
         // for init + noise on a loaded box.
         assert!(t_big < t_small * 4.0, "t_small={t_small} t_big={t_big}");

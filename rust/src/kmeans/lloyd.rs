@@ -12,8 +12,14 @@ use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
-/// Run Lloyd k-means with k-means++ seeding.
+/// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
+#[deprecated(note = "use `model::Lloyd::new(k).fit(data, &RunContext::new(&backend))`")]
 pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backend) -> KmeansOutput {
+    run_core(data, k, params, backend)
+}
+
+/// The Lloyd engine ([`crate::model::Lloyd`] executes this).
+pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backend) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
     let mut rng = Rng::new(params.seed);
@@ -87,7 +93,7 @@ mod tests {
     #[test]
     fn recovers_separated_blobs() {
         let data = blobs(&BlobSpec { sigma: 0.2, spread: 50.0, ..BlobSpec::quick(300, 4, 3) }, 1);
-        let out = run(&data, 3, &KmeansParams::default(), &Backend::native());
+        let out = run_core(&data, 3, &KmeansParams::default(), &Backend::native());
         // well-separated: distortion should be tiny relative to spread
         assert!(out.distortion() < 1.0, "distortion={}", out.distortion());
         out.clustering.check_invariants(&data).unwrap();
@@ -96,7 +102,7 @@ mod tests {
     #[test]
     fn distortion_non_increasing() {
         let data = blobs(&BlobSpec::quick(500, 8, 10), 2);
-        let out = run(&data, 10, &KmeansParams::default(), &Backend::native());
+        let out = run_core(&data, 10, &KmeansParams::default(), &Backend::native());
         for w in out.history.windows(2) {
             assert!(
                 w[1].distortion <= w[0].distortion + 1e-6,
@@ -110,7 +116,7 @@ mod tests {
     #[test]
     fn history_and_convergence() {
         let data = blobs(&BlobSpec::quick(200, 4, 4), 3);
-        let out = run(&data, 4, &KmeansParams { max_iters: 50, ..Default::default() }, &Backend::native());
+        let out = run_core(&data, 4, &KmeansParams { max_iters: 50, ..Default::default() }, &Backend::native());
         assert!(!out.history.is_empty());
         assert!(out.history.len() <= 50);
         // converged well before 50 iterations on blobs
@@ -131,7 +137,7 @@ mod tests {
     #[test]
     fn k_equals_n_zero_distortion() {
         let data = blobs(&BlobSpec::quick(20, 3, 2), 4);
-        let out = run(&data, 20, &KmeansParams::default(), &Backend::native());
+        let out = run_core(&data, 20, &KmeansParams::default(), &Backend::native());
         assert!(out.distortion() < 1e-6);
     }
 }

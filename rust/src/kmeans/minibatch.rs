@@ -28,11 +28,17 @@ impl Default for MiniBatchParams {
     }
 }
 
-/// Run Mini-Batch k-means.  One "iteration" in the history = one batch
-/// step; `base.max_iters` counts batch steps (matching how the paper plots
-/// it against wall-clock, where Mini-Batch may terminate before one full
-/// data pass).
+/// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
+#[deprecated(note = "use `model::MiniBatch::new(k).batch(b).fit(data, &RunContext::new(&backend))`")]
 pub fn run(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Backend) -> KmeansOutput {
+    run_core(data, k, params, backend)
+}
+
+/// The Mini-Batch engine ([`crate::model::MiniBatch`] executes this).
+/// One "iteration" in the history = one batch step; `base.max_iters`
+/// counts batch steps (matching how the paper plots it against
+/// wall-clock, where Mini-Batch may terminate before one full data pass).
+pub fn run_core(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Backend) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
     let b = params.batch.min(n);
@@ -91,7 +97,7 @@ mod tests {
             batch: 256,
             base: KmeansParams { max_iters: 40, ..Default::default() },
         };
-        let out = run(&data, 16, &params, &Backend::native());
+        let out = run_core(&data, 16, &params, &Backend::native());
         assert_eq!(out.history.len(), 40);
         out.clustering.check_invariants(&data).unwrap();
         // mini-batch should still find blob structure on easy data
@@ -106,13 +112,13 @@ mod tests {
         // distortion. Verify the ordering on overlapping blobs.
         let data = blobs(&BlobSpec { sigma: 2.0, ..BlobSpec::quick(1500, 8, 24) }, 2);
         let k = 24;
-        let mb = run(
+        let mb = run_core(
             &data,
             k,
             &MiniBatchParams { batch: 128, base: KmeansParams { max_iters: 15, ..Default::default() } },
             &Backend::native(),
         );
-        let lloyd = crate::kmeans::lloyd::run(&data, k, &KmeansParams::default(), &Backend::native());
+        let lloyd = crate::kmeans::lloyd::run_core(&data, k, &KmeansParams::default(), &Backend::native());
         assert!(
             mb.clustering.distortion(&data) >= lloyd.clustering.distortion(&data) * 0.98,
             "mini-batch unexpectedly beat lloyd: {} vs {}",
@@ -124,7 +130,7 @@ mod tests {
     #[test]
     fn batch_larger_than_n_is_clamped() {
         let data = blobs(&BlobSpec::quick(100, 4, 4), 3);
-        let out = run(
+        let out = run_core(
             &data,
             4,
             &MiniBatchParams { batch: 10_000, base: KmeansParams { max_iters: 3, ..Default::default() } },

@@ -13,16 +13,50 @@
 //! refine neighbor lists within each cell, repeat): clustering structure
 //! and graph quality co-evolve.
 //!
+//! ## The public surface: fit → model → query
+//!
+//! The library is organized around the [`model::Clusterer`] trait.  A
+//! typed config ([`model::GkMeans`], [`model::Lloyd`], …) is fitted over
+//! a dataset under a shared [`model::RunContext`] (backend + threads +
+//! seed + progress), producing a [`model::FittedModel`] — a first-class
+//! artifact holding centroids, labels, convergence history, and (for the
+//! graph methods) the KNN graph.  The model answers
+//! [`predict`](model::FittedModel::predict) for out-of-sample vectors,
+//! serves graph ANN via [`search`](model::FittedModel::search), and
+//! round-trips through versioned binary
+//! [`save`](model::FittedModel::save)/[`load`](model::FittedModel::load):
+//!
+//! ```no_run
+//! use gkmeans::prelude::*;
+//!
+//! let data = blobs(&BlobSpec::quick(10_000, 32, 64), 42);
+//! let backend = Backend::auto();
+//! let ctx = RunContext::new(&backend).threads(0).keep_data(true);
+//! let model = GkMeans::new(100).kappa(20).fit(&data, &ctx);
+//! model.save(std::path::Path::new("vocab.gkm")).unwrap();
+//!
+//! let served = FittedModel::load(std::path::Path::new("vocab.gkm")).unwrap();
+//! let labels = served.predict(&data);                     // out-of-sample assignment
+//! let near = served.search(data.row(7), 10, &Default::default()).unwrap(); // graph ANN
+//! # let _ = (labels, near);
+//! ```
+//!
+//! The pre-model `run(data, k, &params, backend)` free functions still
+//! compile as deprecated shims over the same engines.
+//!
 //! ## Layout
 //!
+//! * [`model`] — **the public API**: [`model::Clusterer`],
+//!   [`model::RunContext`], [`model::FittedModel`], binary model
+//!   serialization.
 //! * [`util`] — RNG, CLI/config parsing, timers, logging, and the
 //!   scoped-thread parallel execution layer ([`util::pool`]) — all with no
 //!   external deps.
 //! * [`data`] — dataset container, synthetic generators for the paper's
 //!   four datasets, fvecs/bvecs I/O.
 //! * [`core_ops`] — scalar & blocked distance math, top-κ selection.
-//! * [`kmeans`] — Lloyd, boost k-means (BKM), Mini-Batch, closure k-means,
-//!   and the 2M-tree initializer (Alg. 1).
+//! * [`kmeans`] — the engines for Lloyd, boost k-means (BKM), Mini-Batch,
+//!   closure k-means, and the 2M-tree initializer (Alg. 1).
 //! * [`graph`] — KNN-graph structure, brute-force ground truth, NN-Descent.
 //! * [`gkm`] — the paper's contribution: graph-driven k-means (Alg. 2) and
 //!   the intertwined graph construction (Alg. 3), plus graph-based ANN
@@ -41,20 +75,26 @@ pub mod eval;
 pub mod gkm;
 pub mod graph;
 pub mod kmeans;
+pub mod model;
 pub mod runtime;
 pub mod testing;
 pub mod util;
 
-/// Convenience re-exports for downstream users.
+/// Convenience re-exports for downstream users: everything the
+/// fit → model → query flow needs, plus the structural types the model
+/// exposes.
 pub mod prelude {
     pub use crate::coordinator::job::{ClusterJob, JobResult, Method};
     pub use crate::data::matrix::VecSet;
-    pub use crate::data::synth::BlobSpec;
+    pub use crate::data::synth::{blobs, BlobSpec};
     pub use crate::data::DatasetSpec;
-    pub use crate::gkm::construct::{ConstructParams, GraphBuildOutput};
-    pub use crate::gkm::gkmeans::GkMeansParams;
+    pub use crate::gkm::ann::SearchParams;
     pub use crate::graph::knn::KnnGraph;
-    pub use crate::kmeans::common::{Clustering, KmeansParams};
+    pub use crate::kmeans::common::{Clustering, IterStat};
+    pub use crate::model::{
+        Boost, ClosureKmeans, Clusterer, FittedModel, GkMeans, GkMeansStar, KGraphGkMeans,
+        Lloyd, MiniBatch, RunContext,
+    };
     pub use crate::runtime::Backend;
     pub use crate::util::rng::Rng;
 }

@@ -2,20 +2,29 @@
 //!
 //! ```text
 //! gkmeans cluster   --data sift:100000 --k 1000 --method gkmeans [--kappa 50 --tau 10 --xi 50]
+//!                   [--save model.gkm --keep-data]
+//! gkmeans predict   --model model.gkm --data sift:10000 [--out labels.ivecs]
 //! gkmeans graph     --data sift:100000 --kappa 50 --tau 10 [--out graph.ivecs] [--recall]
 //! gkmeans search    --data sift:100000 --queries 100 --topk 10 [--ef 64]
+//! gkmeans search    --model model.gkm --queries 100 --topk 10   # serve a saved artifact
 //! gkmeans compare   --data sift:20000 --k 200        # all methods, Tab.2-style table
 //! gkmeans info                                        # backend + artifact status
 //! ```
 //!
 //! Every subcommand accepts `--backend native|pjrt|auto` (default auto),
 //! `--seed N`, `--iters N`, `--config file.conf` (CLI overrides config).
+//! All clustering routes through the `model::Clusterer` fit → model API;
+//! `cluster --save` persists the `FittedModel`, `predict`/`search --model`
+//! serve it back.
+
+use std::path::Path;
 
 use gkmeans::coordinator::job::{ClusterJob, JobResult, Method};
 use gkmeans::coordinator::pipeline;
 use gkmeans::data::DatasetSpec;
 use gkmeans::eval::report::Table;
 use gkmeans::gkm::{ann, construct};
+use gkmeans::model::FittedModel;
 use gkmeans::runtime::Backend;
 use gkmeans::util::cli::{parse_env, Args};
 use gkmeans::util::configfile::Config;
@@ -24,13 +33,14 @@ use gkmeans::util::timer::{fmt_secs, Timer};
 
 const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
-    "topk", "ef", "config", "recall-samples", "threads",
+    "topk", "ef", "config", "recall-samples", "threads", "save", "model",
 ];
 
 fn main() {
     let args = parse_env(VALUED);
     let code = match args.subcommand.as_deref() {
         Some("cluster") => cmd_cluster(&args),
+        Some("predict") => cmd_predict(&args),
         Some("graph") => cmd_graph(&args),
         Some("search") => cmd_search(&args),
         Some("compare") => cmd_compare(&args),
@@ -47,9 +57,10 @@ const USAGE: &str = "\
 gkmeans — fast k-means driven by a KNN graph (Deng & Zhao 2017)
 
 USAGE:
-  gkmeans cluster --data <spec> --k <k> [--method gkmeans] [options]
+  gkmeans cluster --data <spec> --k <k> [--method gkmeans] [--save FILE [--keep-data]] [options]
+  gkmeans predict --model FILE --data <spec> [--out labels.ivecs]
   gkmeans graph   --data <spec> [--kappa 50 --tau 10 --xi 50] [--recall]
-  gkmeans search  --data <spec> [--queries 100 --topk 10 --ef 64]
+  gkmeans search  --data <spec> | --model FILE  [--queries 100 --topk 10 --ef 64]
   gkmeans compare --data <spec> --k <k> [--iters 30]
   gkmeans info
 
@@ -63,7 +74,11 @@ COMMON OPTIONS:
   --iters N                    max epochs (default 30)
   --threads N                  worker threads (default 1 = serial,
                                0 = auto-detect; parallelizes GK-means
-                               epochs, NN-Descent, graph builds, 2M-tree)
+                               epochs, NN-Descent, graph builds, 2M-tree,
+                               and model predict)
+  --save FILE                  persist the fitted model artifact
+  --keep-data                  embed the training vectors in the artifact
+                               (required for `search --model`)
   --config FILE                key=value config file (CLI overrides)
   --verbose / --quiet          log level
 ";
@@ -135,6 +150,7 @@ fn job_of(args: &Args) -> ClusterJob {
     job.base.seed = args.u64_or("seed", 20170707);
     job.base.threads = args.usize_or("threads", 1);
     job.measure_recall = args.flag("recall");
+    job.keep_data = args.flag("keep-data");
     job
 }
 
@@ -162,16 +178,90 @@ fn cmd_cluster(args: &Args) -> i32 {
     let args = effective(args);
     let job = job_of(&args);
     let backend = backend_of(&args);
-    match pipeline::run_job(&job, &backend) {
-        Ok(r) => {
-            print_result(&r);
-            0
-        }
+    let data = match job.dataset.load() {
+        Ok(d) => d,
         Err(e) => {
             eprintln!("error: {e}");
-            1
+            return 1;
+        }
+    };
+    let (model, rec) = pipeline::fit_job(&job, &data, &backend);
+    print_result(&pipeline::result_from_model(&model, rec));
+    if let Some(path) = args.get("save") {
+        if let Err(e) = model.save(Path::new(path)) {
+            eprintln!("error: {e}");
+            return 1;
+        }
+        let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        println!("saved model to {path} ({bytes} bytes)");
+        if model.graph.is_some() && model.data.is_none() {
+            println!(
+                "note: vectors not embedded (pass --keep-data to serve `search --model`)"
+            );
         }
     }
+    0
+}
+
+fn cmd_predict(args: &Args) -> i32 {
+    let args = effective(args);
+    let model_path = match args.get("model") {
+        Some(p) => p,
+        None => {
+            eprintln!("error: predict needs --model FILE (from `cluster --save`)");
+            return 2;
+        }
+    };
+    let mut model = match FittedModel::load(Path::new(model_path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    model.threads = args.usize_or("threads", model.threads);
+    let data = match dataset_of(&args).load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if data.dim() != model.dim {
+        eprintln!(
+            "error: dataset dim {} != model dim {} (model was fitted on {}, n={})",
+            data.dim(),
+            model.dim,
+            model.method.name(),
+            model.n_train
+        );
+        return 1;
+    }
+    let timer = Timer::start();
+    let labels = model.predict(&data);
+    let secs = timer.elapsed_s();
+    let mut counts = vec![0u64; model.k];
+    for &l in &labels {
+        counts[l as usize] += 1;
+    }
+    let nonempty = counts.iter().filter(|&&c| c > 0).count();
+    println!(
+        "predicted {} samples into {} of k={} clusters in {} ({:.0} samples/s)",
+        labels.len(),
+        nonempty,
+        model.k,
+        fmt_secs(secs),
+        labels.len() as f64 / secs.max(1e-12)
+    );
+    if let Some(path) = args.get("out") {
+        let rows: Vec<Vec<i32>> = labels.iter().map(|&l| vec![l as i32]).collect();
+        if let Err(e) = gkmeans::data::io::write_ivecs(std::path::Path::new(path), &rows) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
 }
 
 fn cmd_graph(args: &Args) -> i32 {
@@ -240,8 +330,72 @@ fn cmd_graph(args: &Args) -> i32 {
     0
 }
 
+/// Serve ANN queries from a saved model artifact (`--model`).
+fn search_model(args: &Args) -> i32 {
+    let model_path = args.get("model").expect("checked by caller");
+    let model = match FittedModel::load(Path::new(model_path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let vecs = match model.data.as_ref() {
+        Some(v) => v,
+        None => {
+            eprintln!(
+                "error: {model_path} has no embedded vectors; refit with \
+                 `cluster --save {model_path} --keep-data`"
+            );
+            return 1;
+        }
+    };
+    println!(
+        "serving {} ({} vectors, d={}, graph {})",
+        model_path,
+        vecs.rows(),
+        model.dim,
+        model
+            .graph
+            .as_ref()
+            .map(|g| format!("kappa={}", g.kappa()))
+            .unwrap_or_else(|| "absent".into())
+    );
+    let nq = args.usize_or("queries", 100);
+    let topk = args.usize_or("topk", 10);
+    let sp = ann::SearchParams {
+        ef: args.usize_or("ef", 64),
+        seed: args.u64_or("seed", 20170707),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(sp.seed ^ 0x5EA5C);
+    let timer = Timer::start();
+    let mut evals = 0usize;
+    for _ in 0..nq {
+        let qi = rng.below(vecs.rows());
+        let q: Vec<f32> = vecs.row(qi).iter().map(|v| v + 0.001).collect();
+        match model.search_with_stats(&q, topk, &sp) {
+            Ok((_, stats)) => evals += stats.dist_evals,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    let total = timer.elapsed_s();
+    println!(
+        "{nq} queries: avg latency={} avg dist-evals={}",
+        fmt_secs(total / nq.max(1) as f64),
+        evals / nq.max(1)
+    );
+    0
+}
+
 fn cmd_search(args: &Args) -> i32 {
     let args = effective(args);
+    if args.get("model").is_some() {
+        return search_model(&args);
+    }
     let backend = backend_of(&args);
     let data = match dataset_of(&args).load() {
         Ok(d) => d,

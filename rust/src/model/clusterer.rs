@@ -1,0 +1,403 @@
+//! The [`Clusterer`] trait and the seven typed method configs.
+//!
+//! Each config owns the knobs that are *about the method* (k, κ, ξ, τ,
+//! batch size, tree count…) and exposes builder-style setters; everything
+//! about *how to run* (backend, threads, seed, iteration control,
+//! progress) comes from the shared [`RunContext`] at fit time.  That
+//! split replaces the old duplicated `{seed, threads, max_iters, …}`
+//! fields every params struct used to carry.
+
+use crate::coordinator::job::Method;
+use crate::data::matrix::VecSet;
+use crate::gkm::{construct, gkmeans, variant};
+use crate::graph::nn_descent;
+use crate::kmeans::{boost, closure, lloyd, minibatch};
+use crate::model::{FittedModel, RunContext};
+use crate::util::timer::Timer;
+
+/// A clustering method that can be fitted to a dataset.
+///
+/// Implementations are plain config values; `fit` consumes nothing and
+/// may be called repeatedly (e.g. over seeds via
+/// [`RunContext::seed`]).
+pub trait Clusterer {
+    /// The [`Method`] this config trains.
+    fn method(&self) -> Method;
+
+    /// Human-readable method name (the paper's label).
+    fn name(&self) -> &'static str {
+        self.method().name()
+    }
+
+    /// Train on `data` under `ctx`, producing a [`FittedModel`].
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel;
+}
+
+/// Clamp k to the dataset size (a 5-point dataset cannot hold 8 clusters).
+fn clamp_k(k: usize, data: &VecSet) -> usize {
+    k.min(data.rows()).max(1)
+}
+
+/// Alg. 3 construction params shared by both graph-building configs
+/// ([`GkMeans`], [`GkMeansStar`]): method knobs from the config, run
+/// knobs from the context.
+fn alg3_params(
+    kappa: usize,
+    xi: usize,
+    tau: usize,
+    ctx: &RunContext,
+) -> construct::ConstructParams {
+    construct::ConstructParams { kappa, xi, tau, seed: ctx.seed, threads: ctx.threads }
+}
+
+/// Traditional k-means (Lloyd) with k-means++ seeding.
+#[derive(Debug, Clone)]
+pub struct Lloyd {
+    k: usize,
+}
+
+impl Lloyd {
+    pub fn new(k: usize) -> Lloyd {
+        Lloyd { k }
+    }
+}
+
+impl Clusterer for Lloyd {
+    fn method(&self) -> Method {
+        Method::Lloyd
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let out = lloyd::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
+        FittedModel::from_output(Method::Lloyd, data, ctx, out, None, 0.0)
+    }
+}
+
+/// Boost k-means (BKM) — incremental Δℐ optimization, the quality
+/// reference.
+#[derive(Debug, Clone)]
+pub struct Boost {
+    k: usize,
+}
+
+impl Boost {
+    pub fn new(k: usize) -> Boost {
+        Boost { k }
+    }
+}
+
+impl Clusterer for Boost {
+    fn method(&self) -> Method {
+        Method::Boost
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let out = boost::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
+        FittedModel::from_output(Method::Boost, data, ctx, out, None, 0.0)
+    }
+}
+
+/// Mini-Batch k-means (Sculley) — the web-scale baseline.
+#[derive(Debug, Clone)]
+pub struct MiniBatch {
+    k: usize,
+    batch: usize,
+}
+
+impl MiniBatch {
+    pub fn new(k: usize) -> MiniBatch {
+        MiniBatch { k, batch: minibatch::MiniBatchParams::default().batch }
+    }
+
+    /// Samples per batch step.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+}
+
+impl Clusterer for MiniBatch {
+    fn method(&self) -> Method {
+        Method::MiniBatch
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let params =
+            minibatch::MiniBatchParams { batch: self.batch, base: ctx.kmeans_params() };
+        let out = minibatch::run_core(data, clamp_k(self.k, data), &params, ctx.backend);
+        FittedModel::from_output(Method::MiniBatch, data, ctx, out, None, 0.0)
+    }
+}
+
+/// Closure k-means (Wang et al.) — the strongest fast baseline.
+#[derive(Debug, Clone)]
+pub struct ClosureKmeans {
+    k: usize,
+    trees: usize,
+    leaf_max: usize,
+}
+
+impl ClosureKmeans {
+    pub fn new(k: usize) -> ClosureKmeans {
+        let d = closure::ClosureParams::default();
+        ClosureKmeans { k, trees: d.trees, leaf_max: d.leaf_max }
+    }
+
+    /// Number of independent random-partition trees.
+    pub fn trees(mut self, trees: usize) -> Self {
+        self.trees = trees;
+        self
+    }
+
+    /// Maximum leaf size of each tree.
+    pub fn leaf_max(mut self, leaf_max: usize) -> Self {
+        self.leaf_max = leaf_max;
+        self
+    }
+}
+
+impl Clusterer for ClosureKmeans {
+    fn method(&self) -> Method {
+        Method::Closure
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let params = closure::ClosureParams {
+            trees: self.trees,
+            leaf_max: self.leaf_max,
+            base: ctx.kmeans_params(),
+        };
+        let out = closure::run_core(data, clamp_k(self.k, data), &params, ctx.backend);
+        FittedModel::from_output(Method::Closure, data, ctx, out, None, 0.0)
+    }
+}
+
+/// GK-means (the paper): Alg. 3 builds the KNN graph, Alg. 2 clusters
+/// with it on the Δℐ (boost) core.  The fitted model keeps the graph.
+#[derive(Debug, Clone)]
+pub struct GkMeans {
+    k: usize,
+    kappa: usize,
+    xi: usize,
+    tau: usize,
+}
+
+impl GkMeans {
+    pub fn new(k: usize) -> GkMeans {
+        let d = construct::ConstructParams::default();
+        GkMeans { k, kappa: d.kappa, xi: d.xi, tau: d.tau }
+    }
+
+    /// Graph scale κ (neighbors kept and consulted per sample).
+    pub fn kappa(mut self, kappa: usize) -> Self {
+        self.kappa = kappa;
+        self
+    }
+
+    /// Cell size ξ for the intertwined graph construction.
+    pub fn xi(mut self, xi: usize) -> Self {
+        self.xi = xi;
+        self
+    }
+
+    /// Construction rounds τ (10 for clustering, up to 32 for ANNS).
+    pub fn tau(mut self, tau: usize) -> Self {
+        self.tau = tau;
+        self
+    }
+}
+
+impl Clusterer for GkMeans {
+    fn method(&self) -> Method {
+        Method::GkMeans
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let timer = Timer::start();
+        let build =
+            construct::build(data, &alg3_params(self.kappa, self.xi, self.tau, ctx), ctx.backend);
+        let graph_seconds = timer.elapsed_s();
+        let params = gkmeans::GkMeansParams { kappa: self.kappa, base: ctx.kmeans_params() };
+        let out =
+            gkmeans::run_core(data, clamp_k(self.k, data), &build.graph, &params, ctx.backend);
+        FittedModel::from_output(Method::GkMeans, data, ctx, out, Some(build.graph), graph_seconds)
+    }
+}
+
+/// GK-means\* — Alg. 2 on a *traditional* k-means core (Fig. 4's second
+/// configuration): faster convergence per epoch, visibly higher final
+/// distortion.
+#[derive(Debug, Clone)]
+pub struct GkMeansStar {
+    k: usize,
+    kappa: usize,
+    xi: usize,
+    tau: usize,
+}
+
+impl GkMeansStar {
+    pub fn new(k: usize) -> GkMeansStar {
+        let d = construct::ConstructParams::default();
+        GkMeansStar { k, kappa: d.kappa, xi: d.xi, tau: d.tau }
+    }
+
+    /// Graph scale κ.
+    pub fn kappa(mut self, kappa: usize) -> Self {
+        self.kappa = kappa;
+        self
+    }
+
+    /// Cell size ξ.
+    pub fn xi(mut self, xi: usize) -> Self {
+        self.xi = xi;
+        self
+    }
+
+    /// Construction rounds τ.
+    pub fn tau(mut self, tau: usize) -> Self {
+        self.tau = tau;
+        self
+    }
+}
+
+impl Clusterer for GkMeansStar {
+    fn method(&self) -> Method {
+        Method::GkMeansTrad
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let timer = Timer::start();
+        let build =
+            construct::build(data, &alg3_params(self.kappa, self.xi, self.tau, ctx), ctx.backend);
+        let graph_seconds = timer.elapsed_s();
+        let params = gkmeans::GkMeansParams { kappa: self.kappa, base: ctx.kmeans_params() };
+        let out =
+            variant::run_core(data, clamp_k(self.k, data), &build.graph, &params, ctx.backend);
+        FittedModel::from_output(
+            Method::GkMeansTrad,
+            data,
+            ctx,
+            out,
+            Some(build.graph),
+            graph_seconds,
+        )
+    }
+}
+
+/// GK-means driven by an NN-Descent graph ("KGraph+GK-means"): same
+/// optimization core, different graph builder.
+#[derive(Debug, Clone)]
+pub struct KGraphGkMeans {
+    k: usize,
+    kappa: usize,
+}
+
+impl KGraphGkMeans {
+    pub fn new(k: usize) -> KGraphGkMeans {
+        KGraphGkMeans { k, kappa: construct::ConstructParams::default().kappa }
+    }
+
+    /// Graph scale κ.
+    pub fn kappa(mut self, kappa: usize) -> Self {
+        self.kappa = kappa;
+        self
+    }
+}
+
+impl Clusterer for KGraphGkMeans {
+    fn method(&self) -> Method {
+        Method::KGraphGkMeans
+    }
+
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        let timer = Timer::start();
+        let graph = nn_descent::build(
+            data,
+            self.kappa,
+            &nn_descent::NnDescentParams {
+                seed: ctx.seed,
+                threads: ctx.threads,
+                ..Default::default()
+            },
+        );
+        let graph_seconds = timer.elapsed_s();
+        let params = gkmeans::GkMeansParams { kappa: self.kappa, base: ctx.kmeans_params() };
+        let out = gkmeans::run_core(data, clamp_k(self.k, data), &graph, &params, ctx.backend);
+        FittedModel::from_output(Method::KGraphGkMeans, data, ctx, out, Some(graph), graph_seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::runtime::Backend;
+
+    #[test]
+    fn all_seven_configs_fit() {
+        let data = blobs(&BlobSpec::quick(400, 6, 8), 1);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(5);
+        let configs: Vec<Box<dyn Clusterer>> = vec![
+            Box::new(Lloyd::new(8)),
+            Box::new(Boost::new(8)),
+            Box::new(MiniBatch::new(8).batch(128)),
+            Box::new(ClosureKmeans::new(8).trees(2)),
+            Box::new(GkMeans::new(8).kappa(8).tau(3).xi(25)),
+            Box::new(GkMeansStar::new(8).kappa(8).tau(3).xi(25)),
+            Box::new(KGraphGkMeans::new(8).kappa(8)),
+        ];
+        for c in &configs {
+            let m = c.fit(&data, &ctx);
+            assert_eq!(m.method, c.method(), "{}", c.name());
+            assert_eq!(m.labels.len(), 400, "{}", c.name());
+            assert_eq!(m.k, 8, "{}", c.name());
+            assert_eq!(m.centroids.rows(), 8, "{}", c.name());
+            assert!(m.distortion().is_finite(), "{}", c.name());
+            m.check_time_accounting().unwrap();
+            let graphy = matches!(
+                c.method(),
+                Method::GkMeans | Method::GkMeansTrad | Method::KGraphGkMeans
+            );
+            assert_eq!(m.graph.is_some(), graphy, "{}", c.name());
+            assert_eq!(m.graph_seconds > 0.0, graphy, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn k_is_clamped_to_n() {
+        let data = blobs(&BlobSpec::quick(20, 3, 2), 2);
+        let b = Backend::native();
+        let m = Lloyd::new(500).fit(&data, &RunContext::new(&b).max_iters(3));
+        assert_eq!(m.k, 20);
+    }
+
+    #[test]
+    fn progress_callback_sees_every_epoch() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let data = blobs(&BlobSpec::quick(200, 4, 4), 3);
+        let b = Backend::native();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let ctx = RunContext::new(&b).max_iters(4).on_progress(move |name, _| {
+            assert_eq!(name, "boost k-means");
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        let m = Boost::new(4).fit(&data, &ctx);
+        assert_eq!(count.load(Ordering::Relaxed), m.history.len());
+    }
+
+    #[test]
+    fn fit_is_deterministic_for_fixed_seed() {
+        let data = blobs(&BlobSpec::quick(300, 5, 6), 4);
+        let b = Backend::native();
+        let cfg = GkMeans::new(6).kappa(6).tau(2).xi(25);
+        let a = cfg.fit(&data, &RunContext::new(&b).seed(5));
+        let c = cfg.fit(&data, &RunContext::new(&b).seed(5));
+        assert_eq!(a.labels, c.labels);
+        for (x, y) in a.centroids.flat().iter().zip(c.centroids.flat()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

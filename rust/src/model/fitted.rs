@@ -1,0 +1,324 @@
+//! [`FittedModel`] — the first-class training artifact: centroids, labels,
+//! convergence history, and (for the graph methods) the KNN graph.
+//!
+//! A fitted model answers three questions long after the fit:
+//! * [`FittedModel::predict`] — which cluster does an *unseen* vector
+//!   belong to?  (blocked nearest-centroid kernels, threads-aware)
+//! * [`FittedModel::search`] — which indexed vectors are closest to a
+//!   query?  (greedy graph ANN over the retained training vectors)
+//! * [`FittedModel::save`] / [`FittedModel::load`] — versioned binary
+//!   round-trip, no external deps (see [`crate::model::serde`]).
+
+use std::path::Path;
+
+use crate::coordinator::job::Method;
+use crate::data::matrix::VecSet;
+use crate::gkm::ann;
+use crate::graph::knn::KnnGraph;
+use crate::kmeans::common::{IterStat, KmeansOutput};
+use crate::model::RunContext;
+use crate::runtime::Backend;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// The artifact a [`crate::model::Clusterer`] fit produces.
+///
+/// Time accounting contract (asserted by
+/// [`FittedModel::check_time_accounting`]): all clocks share one origin —
+/// the start of `fit`, *including* graph construction.  So
+/// `graph_seconds ≤ init_seconds ≤ total_seconds`, `history` is monotone
+/// in `seconds`, and the last history entry does not exceed
+/// `total_seconds`.  Graph-build time is folded in exactly once.
+#[derive(Debug, Clone)]
+pub struct FittedModel {
+    /// Which algorithm produced this model.
+    pub method: Method,
+    /// Cluster count.
+    pub k: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Training-set size.
+    pub n_train: usize,
+    /// Worker-thread preference carried over from the fit context
+    /// (`predict` honors it; `1` = serial, `0` = auto).
+    pub threads: usize,
+    /// `k × dim` centroids (empty clusters hold zeros).
+    pub centroids: VecSet,
+    /// Training-set labels in `[0, k)`.
+    pub labels: Vec<u32>,
+    /// Per-epoch progress (index 0 records the initialization state).
+    pub history: Vec<IterStat>,
+    /// Total fit wall-clock, including graph build and initialization.
+    pub total_seconds: f64,
+    /// Initialization wall-clock (graph build + 2M-tree / seeding).
+    pub init_seconds: f64,
+    /// Graph-construction share of `init_seconds` (0 for non-graph methods).
+    pub graph_seconds: f64,
+    /// The KNN graph the fit was driven by (graph methods only).
+    pub graph: Option<KnnGraph>,
+    /// Retained training vectors ([`RunContext::keep_data`]) — required
+    /// for [`FittedModel::search`] to serve after `save`/`load`.
+    pub data: Option<VecSet>,
+}
+
+impl FittedModel {
+    /// Assemble a model from a legacy [`KmeansOutput`], folding
+    /// graph-construction time into the shared clock exactly once and
+    /// emitting the history through the context's progress callback.
+    pub(crate) fn from_output(
+        method: Method,
+        data: &VecSet,
+        ctx: &RunContext,
+        out: KmeansOutput,
+        graph: Option<KnnGraph>,
+        graph_seconds: f64,
+    ) -> FittedModel {
+        let KmeansOutput { clustering, mut history, total_seconds, init_seconds } = out;
+        for h in history.iter_mut() {
+            h.seconds += graph_seconds;
+        }
+        for h in &history {
+            ctx.emit(method.name(), h);
+        }
+        let centroids = clustering.centroids();
+        FittedModel {
+            method,
+            k: clustering.k,
+            dim: data.dim(),
+            n_train: data.rows(),
+            threads: ctx.threads,
+            centroids,
+            labels: clustering.labels,
+            history,
+            total_seconds: total_seconds + graph_seconds,
+            init_seconds: init_seconds + graph_seconds,
+            graph_seconds,
+            graph,
+            data: if ctx.keep_data { Some(data.clone()) } else { None },
+        }
+    }
+
+    /// Final distortion ℰ (from the last history entry).
+    pub fn distortion(&self) -> f64 {
+        self.history.last().map(|h| h.distortion).unwrap_or(f64::NAN)
+    }
+
+    /// Iteration wall-clock (everything after initialization).
+    pub fn iter_seconds(&self) -> f64 {
+        self.total_seconds - self.init_seconds
+    }
+
+    /// Out-of-sample assignment: the nearest centroid for every row of
+    /// `queries`, via the blocked distance kernels, honoring the model's
+    /// thread preference.  Panics if the dimensionality disagrees.
+    pub fn predict(&self, queries: &VecSet) -> Vec<u32> {
+        self.predict_on(queries, &Backend::Native)
+    }
+
+    /// [`FittedModel::predict`] on an explicit backend.  With more than
+    /// one worker the rows are sharded and each worker runs the native
+    /// kernel (PJRT dispatch is single-threaded by design); `threads = 1`
+    /// routes the whole block through `backend` unchanged.
+    pub fn predict_on(&self, queries: &VecSet, backend: &Backend) -> Vec<u32> {
+        assert_eq!(
+            queries.dim(),
+            self.dim,
+            "query dim {} != model dim {}",
+            queries.dim(),
+            self.dim
+        );
+        let n = queries.rows();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = pool::resolve_threads(self.threads).min(n);
+        if threads <= 1 {
+            return backend
+                .assign_blocks(queries.flat(), self.centroids.flat(), self.dim, self.k)
+                .idx;
+        }
+        let parts = pool::par_map_chunks(threads, n, |_, r| {
+            Backend::Native
+                .assign_blocks(
+                    queries.rows_flat(r.start, r.end),
+                    self.centroids.flat(),
+                    self.dim,
+                    self.k,
+                )
+                .idx
+        });
+        parts.concat()
+    }
+
+    /// Approximate top-`topk` nearest indexed vectors of `query`, served
+    /// from the model's KNN graph.  Requires a graph method *and*
+    /// [`RunContext::keep_data`] at fit time (the vectors travel with the
+    /// artifact through `save`/`load`).
+    pub fn search(
+        &self,
+        query: &[f32],
+        topk: usize,
+        params: &ann::SearchParams,
+    ) -> Result<Vec<(f32, u32)>, String> {
+        self.search_with_stats(query, topk, params).map(|(res, _)| res)
+    }
+
+    /// [`FittedModel::search`] returning the per-query [`ann::SearchStats`]
+    /// (distance evaluations = the latency proxy).
+    pub fn search_with_stats(
+        &self,
+        query: &[f32],
+        topk: usize,
+        params: &ann::SearchParams,
+    ) -> Result<(Vec<(f32, u32)>, ann::SearchStats), String> {
+        let graph = self.graph.as_ref().ok_or_else(|| {
+            format!(
+                "{} model carries no KNN graph; ANN search needs a graph method \
+                 (gkmeans / gkmeans-trad / kgraph)",
+                self.method.name()
+            )
+        })?;
+        let data = self.data.as_ref().ok_or_else(|| {
+            "model does not embed the indexed vectors; fit with \
+             RunContext::keep_data(true) to serve ANN queries"
+                .to_string()
+        })?;
+        if query.len() != self.dim {
+            return Err(format!("query dim {} != model dim {}", query.len(), self.dim));
+        }
+        // deterministic per-model entry points: same query, same answer
+        let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+        Ok(ann::search(data, graph, query, topk, params, &mut rng))
+    }
+
+    /// Save as a versioned binary artifact (see [`crate::model::serde`]).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        crate::model::serde::save(self, path)
+    }
+
+    /// Load a model saved by [`FittedModel::save`].
+    pub fn load(path: &Path) -> Result<FittedModel, String> {
+        crate::model::serde::load(path)
+    }
+
+    /// Verify the time-accounting contract (see the type docs).  Tests
+    /// and the pipeline assert this after every fit.
+    pub fn check_time_accounting(&self) -> Result<(), String> {
+        let eps = 1e-9;
+        if self.graph_seconds > self.init_seconds + eps {
+            return Err(format!(
+                "graph_seconds {} exceeds init_seconds {}",
+                self.graph_seconds, self.init_seconds
+            ));
+        }
+        if self.init_seconds > self.total_seconds + eps {
+            return Err(format!(
+                "init_seconds {} exceeds total_seconds {}",
+                self.init_seconds, self.total_seconds
+            ));
+        }
+        let mut prev = 0.0f64;
+        for h in &self.history {
+            if h.seconds + eps < prev {
+                return Err(format!(
+                    "history clock went backwards: {} after {}",
+                    h.seconds, prev
+                ));
+            }
+            prev = h.seconds;
+        }
+        if let Some(first) = self.history.first() {
+            if first.seconds + eps < self.graph_seconds {
+                return Err(format!(
+                    "history[0] at {}s predates the graph build ({}s): graph time \
+                     not folded into the shared clock",
+                    first.seconds, self.graph_seconds
+                ));
+            }
+        }
+        if let Some(last) = self.history.last() {
+            if last.seconds > self.total_seconds + eps {
+                return Err(format!(
+                    "last history entry {}s exceeds total_seconds {}: graph time \
+                     counted twice",
+                    last.seconds, self.total_seconds
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::model::{Clusterer, GkMeans, Lloyd};
+
+    #[test]
+    fn predict_is_nearest_centroid() {
+        let data = blobs(&BlobSpec { sigma: 0.2, spread: 40.0, ..BlobSpec::quick(300, 6, 4) }, 1);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b);
+        let model = Lloyd::new(4).fit(&data, &ctx);
+        let preds = model.predict(&data);
+        assert_eq!(preds.len(), 300);
+        for (i, &p) in preds.iter().enumerate() {
+            let mine = crate::core_ops::dist::d2(data.row(i), model.centroids.row(p as usize));
+            for r in 0..model.k {
+                let other = crate::core_ops::dist::d2(data.row(i), model.centroids.row(r));
+                assert!(
+                    mine <= other + 1e-4 * (1.0 + other),
+                    "row {i}: predicted {p} at {mine} but {r} at {other}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_threaded_matches_serial() {
+        let data = blobs(&BlobSpec::quick(500, 8, 6), 2);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b);
+        let mut model = Lloyd::new(6).fit(&data, &ctx);
+        let serial = model.predict(&data);
+        model.threads = 4;
+        let par = model.predict(&data);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn predict_empty_queries() {
+        let data = blobs(&BlobSpec::quick(100, 4, 3), 3);
+        let b = Backend::native();
+        let model = Lloyd::new(3).fit(&data, &RunContext::new(&b));
+        assert!(model.predict(&VecSet::zeros(0, 4)).is_empty());
+    }
+
+    #[test]
+    fn search_requires_graph_and_data() {
+        let data = blobs(&BlobSpec::quick(200, 4, 3), 4);
+        let b = Backend::native();
+        let no_graph = Lloyd::new(3).fit(&data, &RunContext::new(&b));
+        assert!(no_graph
+            .search(data.row(0), 1, &Default::default())
+            .unwrap_err()
+            .contains("no KNN graph"));
+        let no_data = GkMeans::new(3).kappa(5).tau(2).fit(&data, &RunContext::new(&b));
+        assert!(no_data
+            .search(data.row(0), 1, &Default::default())
+            .unwrap_err()
+            .contains("keep_data"));
+    }
+
+    #[test]
+    fn accounting_contract_holds_for_graph_fit() {
+        let data = blobs(&BlobSpec::quick(300, 4, 4), 5);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(4);
+        let model = GkMeans::new(4).kappa(5).tau(2).xi(25).fit(&data, &ctx);
+        model.check_time_accounting().unwrap();
+        assert!(model.graph_seconds > 0.0);
+        assert!(model.graph.is_some());
+    }
+}

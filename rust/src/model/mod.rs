@@ -1,0 +1,203 @@
+//! The fit → model → query surface: train a clusterer once, keep the
+//! result as a first-class artifact, query it forever.
+//!
+//! The paper's end state is a *serving* artifact — a million centroids
+//! over ten million vectors that downstream systems query — so the
+//! library's public shape mirrors that:
+//!
+//! 1. a typed config ([`Lloyd`], [`Boost`], [`MiniBatch`],
+//!    [`ClosureKmeans`], [`GkMeans`], [`GkMeansStar`], [`KGraphGkMeans`])
+//!    implementing [`Clusterer`];
+//! 2. [`Clusterer::fit`] over a dataset and a shared [`RunContext`]
+//!    (backend + threads + seed + iteration control + progress callback);
+//! 3. the returned [`FittedModel`] holds centroids, labels, history and —
+//!    for the graph methods — the KNN graph, and answers
+//!    [`FittedModel::predict`] (out-of-sample assignment),
+//!    [`FittedModel::search`] (graph ANN), and round-trips through
+//!    versioned binary [`FittedModel::save`]/[`FittedModel::load`].
+//!
+//! ```no_run
+//! use gkmeans::model::{Clusterer, GkMeans, RunContext};
+//! use gkmeans::data::synth::{blobs, BlobSpec};
+//! use gkmeans::runtime::Backend;
+//!
+//! let data = blobs(&BlobSpec::quick(10_000, 32, 64), 42);
+//! let backend = Backend::auto();
+//! let ctx = RunContext::new(&backend).threads(4).keep_data(true);
+//! let model = GkMeans::new(100).kappa(20).fit(&data, &ctx);
+//! model.save(std::path::Path::new("vocab.gkm")).unwrap();
+//! let labels = model.predict(&data);
+//! let hits = model.search(data.row(0), 10, &Default::default()).unwrap();
+//! # let _ = (labels, hits);
+//! ```
+
+pub mod clusterer;
+pub mod fitted;
+pub mod serde;
+
+pub use clusterer::{
+    Boost, ClosureKmeans, Clusterer, GkMeans, GkMeansStar, KGraphGkMeans, Lloyd, MiniBatch,
+};
+pub use fitted::FittedModel;
+
+use crate::kmeans::common::{IterStat, KmeansParams};
+use crate::runtime::Backend;
+
+/// Per-epoch progress callback: `(method name, epoch stat)`.
+pub type ProgressFn = Box<dyn Fn(&str, &IterStat) + Sync>;
+
+/// Everything about *how* to run a fit, shared by every [`Clusterer`]:
+/// compute backend, worker threads, RNG seed, iteration control, and an
+/// optional progress callback.  Built fluently:
+///
+/// ```no_run
+/// # use gkmeans::model::RunContext;
+/// # use gkmeans::runtime::Backend;
+/// let backend = Backend::auto();
+/// let ctx = RunContext::new(&backend).threads(0).seed(7).max_iters(50);
+/// ```
+pub struct RunContext<'a> {
+    /// Compute backend for the bulk distance math.
+    pub backend: &'a Backend,
+    /// Worker threads (`1` = serial/bit-identical, `0` = auto).
+    pub threads: usize,
+    /// RNG seed (initialization, visit order).
+    pub seed: u64,
+    /// Maximum epochs (full passes).
+    pub max_iters: usize,
+    /// Stop when the fraction of samples moved in an epoch drops below.
+    pub min_move_rate: f64,
+    /// Retain a copy of the training vectors inside the [`FittedModel`]
+    /// so it can serve [`FittedModel::search`] after `save`/`load`.
+    pub keep_data: bool,
+    /// Invoked once per recorded epoch stat.  **Batch semantics**: the
+    /// engines do not stream — the callback fires for every history
+    /// entry *after* the optimization loop (graph build included) has
+    /// finished, in epoch order.  Use it for structured reporting of the
+    /// convergence trace, not as a live progress bar; streaming per-epoch
+    /// callbacks through the engines is a recorded open item.
+    pub progress: Option<ProgressFn>,
+}
+
+impl<'a> RunContext<'a> {
+    /// A context on `backend` with the library defaults (serial, seed
+    /// 20170707, 30 epochs — the same defaults [`KmeansParams`] has).
+    pub fn new(backend: &'a Backend) -> RunContext<'a> {
+        let base = KmeansParams::default();
+        RunContext {
+            backend,
+            threads: base.threads,
+            seed: base.seed,
+            max_iters: base.max_iters,
+            min_move_rate: base.min_move_rate,
+            keep_data: false,
+            progress: None,
+        }
+    }
+
+    /// Set the worker-thread count (`1` = serial, `0` = auto).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Set the RNG seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the epoch cap.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Set the move-rate stopping threshold.
+    pub fn min_move_rate(mut self, rate: f64) -> Self {
+        self.min_move_rate = rate;
+        self
+    }
+
+    /// Retain the training vectors in the fitted model (ANN serving).
+    pub fn keep_data(mut self, keep: bool) -> Self {
+        self.keep_data = keep;
+        self
+    }
+
+    /// Install a per-epoch progress callback.
+    pub fn on_progress(mut self, f: impl Fn(&str, &IterStat) + Sync + 'static) -> Self {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    /// The iteration-control slice of this context as the legacy
+    /// [`KmeansParams`] the algorithm cores consume.
+    pub fn kmeans_params(&self) -> KmeansParams {
+        KmeansParams {
+            max_iters: self.max_iters,
+            min_move_rate: self.min_move_rate,
+            seed: self.seed,
+            threads: self.threads,
+        }
+    }
+
+    /// Emit one epoch stat through the progress callback, if any.
+    pub fn emit(&self, method: &str, stat: &IterStat) {
+        if let Some(f) = &self.progress {
+            f(method, stat);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_fields() {
+        let b = Backend::native();
+        let ctx = RunContext::new(&b)
+            .threads(4)
+            .seed(9)
+            .max_iters(12)
+            .min_move_rate(0.5)
+            .keep_data(true);
+        assert_eq!(ctx.threads, 4);
+        assert_eq!(ctx.seed, 9);
+        assert_eq!(ctx.max_iters, 12);
+        assert_eq!(ctx.min_move_rate, 0.5);
+        assert!(ctx.keep_data);
+        let p = ctx.kmeans_params();
+        assert_eq!(p.max_iters, 12);
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.threads, 4);
+    }
+
+    #[test]
+    fn defaults_match_kmeans_params() {
+        let b = Backend::native();
+        let ctx = RunContext::new(&b);
+        let d = KmeansParams::default();
+        assert_eq!(ctx.max_iters, d.max_iters);
+        assert_eq!(ctx.seed, d.seed);
+        assert_eq!(ctx.threads, d.threads);
+        assert!(!ctx.keep_data);
+    }
+
+    #[test]
+    fn progress_callback_fires() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).on_progress(move |_, _| {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        let stat = IterStat { iter: 0, seconds: 0.0, distortion: 1.0, moves: 0 };
+        ctx.emit("test", &stat);
+        ctx.emit("test", &stat);
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+}

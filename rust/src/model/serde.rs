@@ -1,0 +1,357 @@
+//! Versioned binary save/load for [`FittedModel`] — no external deps.
+//!
+//! Layout (all integers/floats little-endian):
+//!
+//! ```text
+//! magic   8 × u8   "GKMODEL\0"
+//! version u32      1
+//! method  u8       Method tag (see Method::tag)
+//! flags   u8       bit0 = graph present, bit1 = data present
+//! threads u32      predict thread preference
+//! k/dim/n 3 × u64
+//! timings 3 × f64  total_seconds, init_seconds, graph_seconds
+//! history u64 len, then per entry: u64 iter, f64 seconds,
+//!                  f64 distortion, u64 moves
+//! labels  u64 len, len × u32
+//! centroids        u64 rows, rows·dim × f32
+//! [graph]          u64 n, u64 kappa, n·kappa × u32 ids,
+//!                  n·kappa × f32 dists
+//! [data]           u64 rows, rows·dim × f32
+//! ```
+//!
+//! The encoding is exact (`to_le_bytes`/`from_le_bytes`), so a
+//! save → load round trip is bit-identical — including the `+∞` distance
+//! sentinels in partially-filled graph rows — which the round-trip tests
+//! assert.  Unknown magic/version and trailing or missing bytes are
+//! errors, never misreads.
+
+use std::path::Path;
+
+use crate::coordinator::job::Method;
+use crate::data::matrix::VecSet;
+use crate::graph::knn::KnnGraph;
+use crate::kmeans::common::IterStat;
+use crate::model::FittedModel;
+
+const MAGIC: &[u8; 8] = b"GKMODEL\0";
+const VERSION: u32 = 1;
+
+const FLAG_GRAPH: u8 = 1 << 0;
+const FLAG_DATA: u8 = 1 << 1;
+
+/// Serialize a model to bytes.
+pub fn encode(m: &FittedModel) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(
+        64 + m.labels.len() * 4
+            + m.centroids.flat().len() * 4
+            + m.graph.as_ref().map_or(0, |g| g.ids_flat().len() * 8)
+            + m.data.as_ref().map_or(0, |d| d.flat().len() * 4),
+    );
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    buf.push(m.method.tag());
+    let mut flags = 0u8;
+    if m.graph.is_some() {
+        flags |= FLAG_GRAPH;
+    }
+    if m.data.is_some() {
+        flags |= FLAG_DATA;
+    }
+    buf.push(flags);
+    put_u32(&mut buf, m.threads as u32);
+    put_u64(&mut buf, m.k as u64);
+    put_u64(&mut buf, m.dim as u64);
+    put_u64(&mut buf, m.n_train as u64);
+    put_f64(&mut buf, m.total_seconds);
+    put_f64(&mut buf, m.init_seconds);
+    put_f64(&mut buf, m.graph_seconds);
+    put_u64(&mut buf, m.history.len() as u64);
+    for h in &m.history {
+        put_u64(&mut buf, h.iter as u64);
+        put_f64(&mut buf, h.seconds);
+        put_f64(&mut buf, h.distortion);
+        put_u64(&mut buf, h.moves as u64);
+    }
+    put_u64(&mut buf, m.labels.len() as u64);
+    for &l in &m.labels {
+        put_u32(&mut buf, l);
+    }
+    put_u64(&mut buf, m.centroids.rows() as u64);
+    for &v in m.centroids.flat() {
+        put_f32(&mut buf, v);
+    }
+    if let Some(g) = &m.graph {
+        put_u64(&mut buf, g.n() as u64);
+        put_u64(&mut buf, g.kappa() as u64);
+        for &id in g.ids_flat() {
+            put_u32(&mut buf, id);
+        }
+        for &d in g.dists_flat() {
+            put_f32(&mut buf, d);
+        }
+    }
+    if let Some(d) = &m.data {
+        put_u64(&mut buf, d.rows() as u64);
+        for &v in d.flat() {
+            put_f32(&mut buf, v);
+        }
+    }
+    buf
+}
+
+/// Deserialize a model from bytes.
+pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    if r.take(8)? != MAGIC {
+        return Err("not a gkmeans model file (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported model version {version} (this build reads {VERSION})"));
+    }
+    let method = Method::from_tag(r.u8()?)?;
+    let flags = r.u8()?;
+    let threads = r.u32()? as usize;
+    let k = r.len_u64("k")?;
+    let dim = r.len_u64("dim")?;
+    if dim == 0 {
+        return Err("model dim is zero".into());
+    }
+    let n_train = r.len_u64("n_train")?;
+    let total_seconds = r.f64()?;
+    let init_seconds = r.f64()?;
+    let graph_seconds = r.f64()?;
+    let hist_len = r.len_u64("history length")?;
+    let mut history = Vec::with_capacity(hist_len.min(1 << 20));
+    for _ in 0..hist_len {
+        let iter = r.len_u64("history iter")?;
+        let seconds = r.f64()?;
+        let distortion = r.f64()?;
+        let moves = r.len_u64("history moves")?;
+        history.push(IterStat { iter, seconds, distortion, moves });
+    }
+    let lab_len = r.len_u64("label count")?;
+    let labels = r.u32_vec(lab_len)?;
+    let crows = r.len_u64("centroid rows")?;
+    if crows != k {
+        return Err(format!("centroid rows {crows} != k {k}"));
+    }
+    let cflat = r.f32_vec(checked_mul(crows, dim, "centroid buffer")?)?;
+    let centroids = VecSet::from_flat(dim, cflat);
+    let graph = if flags & FLAG_GRAPH != 0 {
+        let gn = r.len_u64("graph n")?;
+        let gk = r.len_u64("graph kappa")?;
+        if gn != n_train {
+            return Err(format!("graph covers {gn} nodes but the model trained on {n_train}"));
+        }
+        let cells = checked_mul(gn, gk, "graph buffer")?;
+        let ids = r.u32_vec(cells)?;
+        let dists = r.f32_vec(cells)?;
+        Some(KnnGraph::from_parts(gn, gk, ids, dists)?)
+    } else {
+        None
+    };
+    let data = if flags & FLAG_DATA != 0 {
+        let rows = r.len_u64("data rows")?;
+        if rows != n_train {
+            return Err(format!("embedded {rows} vectors but the model trained on {n_train}"));
+        }
+        let flat = r.f32_vec(checked_mul(rows, dim, "data buffer")?)?;
+        Some(VecSet::from_flat(dim, flat))
+    } else {
+        None
+    };
+    if r.pos != bytes.len() {
+        return Err(format!(
+            "{} trailing bytes after model payload",
+            bytes.len() - r.pos
+        ));
+    }
+    Ok(FittedModel {
+        method,
+        k,
+        dim,
+        n_train,
+        threads,
+        centroids,
+        labels,
+        history,
+        total_seconds,
+        init_seconds,
+        graph_seconds,
+        graph,
+        data,
+    })
+}
+
+/// Write a model to `path`.
+pub fn save(m: &FittedModel, path: &Path) -> Result<(), String> {
+    std::fs::write(path, encode(m)).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Read a model from `path`.
+pub fn load(path: &Path) -> Result<FittedModel, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    decode(&bytes)
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn checked_mul(a: usize, b: usize, what: &str) -> Result<usize, String> {
+    a.checked_mul(b).ok_or_else(|| format!("{what} size overflows"))
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| "model file offset overflows".to_string())?;
+        if end > self.buf.len() {
+            return Err(format!(
+                "model file truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64 length/count field, checked to fit in usize.
+    fn len_u64(&mut self, what: &str) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("{what} {v} does not fit in usize"))
+    }
+
+    fn u32_vec(&mut self, len: usize) -> Result<Vec<u32>, String> {
+        let raw = self.take(checked_mul(len, 4, "u32 buffer")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32_vec(&mut self, len: usize) -> Result<Vec<f32>, String> {
+        let raw = self.take(checked_mul(len, 4, "f32 buffer")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::model::{Clusterer, GkMeans, Lloyd, RunContext};
+    use crate::runtime::Backend;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gkm_model_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn encode_decode_bit_identical() {
+        let data = blobs(&BlobSpec::quick(250, 5, 4), 7);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(4).keep_data(true);
+        let model = GkMeans::new(4).kappa(5).tau(2).xi(25).fit(&data, &ctx);
+        let back = decode(&encode(&model)).unwrap();
+        assert_eq!(back.method, model.method);
+        assert_eq!(back.k, model.k);
+        assert_eq!(back.dim, model.dim);
+        assert_eq!(back.n_train, model.n_train);
+        assert_eq!(back.labels, model.labels);
+        assert_eq!(back.centroids.flat().len(), model.centroids.flat().len());
+        for (a, b) in back.centroids.flat().iter().zip(model.centroids.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.total_seconds.to_bits(), model.total_seconds.to_bits());
+        let (ga, gb) = (back.graph.unwrap(), model.graph.as_ref().unwrap());
+        assert_eq!(ga.ids_flat(), gb.ids_flat());
+        for (a, b) in ga.dists_flat().iter().zip(gb.dists_flat()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "graph distances must round-trip bitwise");
+        }
+        let (da, db) = (back.data.unwrap(), model.data.as_ref().unwrap());
+        assert_eq!(da.flat().len(), db.flat().len());
+        for (a, b) in da.flat().iter().zip(db.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.history.len(), model.history.len());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let data = blobs(&BlobSpec::quick(120, 4, 3), 8);
+        let b = Backend::native();
+        let model = Lloyd::new(3).fit(&data, &RunContext::new(&b).max_iters(5));
+        let path = tmp("roundtrip.gkm");
+        model.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        assert_eq!(back.labels, model.labels);
+        assert!(back.graph.is_none() && back.data.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let data = blobs(&BlobSpec::quick(60, 3, 2), 9);
+        let b = Backend::native();
+        let model = Lloyd::new(2).fit(&data, &RunContext::new(&b).max_iters(3));
+        let bytes = encode(&model);
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().contains("magic"));
+        // bad version
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(decode(&bad).unwrap_err().contains("version"));
+        // truncation at every eighth boundary must error, never panic
+        for cut in (0..bytes.len() - 1).step_by(8) {
+            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode(&long).unwrap_err().contains("trailing"));
+    }
+}

@@ -116,7 +116,7 @@ fn graph_quality_improves_clustering_quality() {
             &ConstructParams { kappa: 10, xi: 40, tau, seed: 1, threads: 1 },
             &b,
         );
-        let out = gkmeans::gkm::gkmeans::run(&data, 40, &g.graph, &params, &b);
+        let out = gkmeans::gkm::gkmeans::run_core(&data, 40, &g.graph, &params, &b);
         dist_by_tau.push(out.distortion());
     }
     assert!(

@@ -1,0 +1,169 @@
+//! Integration tests for the fit → model → query surface: `Clusterer`
+//! configs, `FittedModel` predict/search, the versioned binary artifact
+//! round trip, and the deprecated-shim compatibility contract.
+
+use gkmeans::data::matrix::VecSet;
+use gkmeans::data::synth::{blobs, sift_like, BlobSpec};
+use gkmeans::gkm::ann::SearchParams;
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, KGraphGkMeans, Lloyd, RunContext};
+use gkmeans::runtime::Backend;
+use gkmeans::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gkm_model_api_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn save_load_predict_roundtrip_is_bit_identical() {
+    let data = blobs(&BlobSpec::quick(600, 8, 6), 11);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(6).keep_data(true);
+    let model = GkMeans::new(6).kappa(8).tau(3).xi(30).fit(&data, &ctx);
+
+    let path = tmp("roundtrip.gkm");
+    model.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // every persisted buffer round-trips bitwise
+    assert_eq!(loaded.method, model.method);
+    assert_eq!(loaded.labels, model.labels);
+    for (a, b) in loaded.centroids.flat().iter().zip(model.centroids.flat()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let (lg, mg) = (loaded.graph.as_ref().unwrap(), model.graph.as_ref().unwrap());
+    assert_eq!(lg.ids_flat(), mg.ids_flat());
+    for (a, b) in lg.dists_flat().iter().zip(mg.dists_flat()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // … so out-of-sample predict is bit-identical across the round trip
+    let queries = blobs(&BlobSpec::quick(300, 8, 6), 12);
+    assert_eq!(model.predict(&queries), loaded.predict(&queries));
+
+    // … and so is search, served purely from the loaded artifact
+    let sp = SearchParams { entries: 32, ..Default::default() };
+    let q = data.row(17);
+    assert_eq!(
+        model.search(q, 5, &sp).unwrap(),
+        loaded.search(q, 5, &sp).unwrap()
+    );
+}
+
+#[test]
+fn predict_matches_brute_force_nearest_centroid() {
+    let data = blobs(&BlobSpec::quick(400, 6, 5), 21);
+    let backend = Backend::native();
+    let model = Lloyd::new(5).fit(&data, &RunContext::new(&backend).max_iters(8));
+    // out-of-sample queries from the same distribution
+    let queries = blobs(&BlobSpec::quick(200, 6, 5), 22);
+    let preds = model.predict(&queries);
+    assert_eq!(preds.len(), 200);
+    for (i, &p) in preds.iter().enumerate() {
+        let q = queries.row(i);
+        let chosen = gkmeans::core_ops::dist::d2(q, model.centroids.row(p as usize));
+        let best = (0..model.k)
+            .map(|r| gkmeans::core_ops::dist::d2(q, model.centroids.row(r)))
+            .fold(f32::INFINITY, f32::min);
+        // blocked-kernel assignment may differ from the scalar path only
+        // at fp tie-break level
+        assert!(
+            chosen <= best + 1e-4 * (1.0 + best),
+            "query {i}: predicted centroid at {chosen}, brute best {best}"
+        );
+    }
+}
+
+#[test]
+fn predict_respects_thread_count() {
+    let data = sift_like(1_200, 5);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(4);
+    let mut model = KGraphGkMeans::new(12).kappa(8).fit(&data, &ctx);
+    let serial = model.predict(&data);
+    for threads in [2usize, 4, 0] {
+        model.threads = threads;
+        assert_eq!(model.predict(&data), serial, "threads={threads}");
+    }
+}
+
+#[test]
+fn search_recall_beats_floor_at_kappa_10() {
+    let n = 1_500;
+    let data = sift_like(n, 31);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    let model = GkMeans::new((n / 50).max(2)).kappa(10).tau(8).fit(&data, &ctx);
+
+    let mut rng = Rng::new(77);
+    let sp = SearchParams { ef: 64, entries: 48, seed: 3 };
+    let nq = 100;
+    let mut hits = 0usize;
+    for _ in 0..nq {
+        let qi = rng.below(n);
+        let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.001).collect();
+        // tiny perturbation: the true nearest neighbor is qi itself
+        let res = model.search(&q, 1, &sp).unwrap();
+        if res.first().map(|r| r.1) == Some(qi as u32) {
+            hits += 1;
+        }
+    }
+    let recall = hits as f64 / nq as f64;
+    assert!(
+        recall >= 0.6,
+        "graph ANN recall@1 {recall} below the 0.6 floor at kappa=10"
+    );
+}
+
+// The old free-function API must keep old call sites compiling and
+// produce the same numbers the trait surface does (threads=1 paths are
+// deterministic).
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_still_compile_and_agree_with_the_new_surface() {
+    let data = blobs(&BlobSpec::quick(300, 5, 4), 41);
+    let backend = Backend::native();
+    let params = gkmeans::kmeans::common::KmeansParams::default();
+
+    let old = gkmeans::kmeans::lloyd::run(&data, 4, &params, &backend);
+    let new = Lloyd::new(4).fit(&data, &RunContext::new(&backend));
+    assert_eq!(old.clustering.labels, new.labels);
+
+    let graph = gkmeans::graph::brute::build(&data, 8, &backend);
+    let gparams = gkmeans::gkm::gkmeans::GkMeansParams { kappa: 8, base: params };
+    let old_gk = gkmeans::gkm::gkmeans::run(&data, 4, &graph, &gparams, &backend);
+    assert_eq!(old_gk.clustering.labels.len(), 300);
+    let old_star = gkmeans::gkm::variant::run(&data, 4, &graph, &gparams, &backend);
+    assert_eq!(old_star.clustering.labels.len(), 300);
+    let old_e2e = gkmeans::gkm::cluster(&data, 4, &gparams, &backend);
+    assert!(old_e2e.distortion().is_finite());
+}
+
+#[test]
+fn corrupted_artifacts_are_rejected() {
+    let data = blobs(&BlobSpec::quick(100, 4, 3), 51);
+    let backend = Backend::native();
+    let model = Lloyd::new(3).fit(&data, &RunContext::new(&backend).max_iters(3));
+    let path = tmp("corrupt.gkm");
+    model.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes.truncate(bytes.len() / 2);
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(FittedModel::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+    assert!(FittedModel::load(std::path::Path::new("/definitely/not/here.gkm")).is_err());
+}
+
+#[test]
+fn keep_data_embeds_the_training_vectors() {
+    let data = blobs(&BlobSpec::quick(150, 4, 3), 61);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    let model = GkMeans::new(3).kappa(5).tau(2).fit(&data, &ctx);
+    let embedded = model.data.as_ref().unwrap();
+    assert_eq!(embedded.rows(), 150);
+    assert_eq!(embedded.flat(), data.flat());
+    // predict on a dimension mismatch must panic, not misread
+    let wrong = VecSet::zeros(5, 7);
+    assert!(std::panic::catch_unwind(|| model.predict(&wrong)).is_err());
+}

@@ -103,7 +103,7 @@ fn per_epoch_move_cost_tracks_candidates_not_k() {
         base: gkmeans::kmeans::common::KmeansParams { max_iters: 12, ..Default::default() },
     };
     for k in [30usize, 300] {
-        let out = gkmeans::gkm::gkmeans::run(&data, k, &graph, &params, &Backend::native());
+        let out = gkmeans::gkm::gkmeans::run_core(&data, k, &graph, &params, &Backend::native());
         let first = out.history.first().unwrap().distortion;
         let last = out.history.last().unwrap().distortion;
         assert!(last <= first, "k={k}: no improvement");

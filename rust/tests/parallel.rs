@@ -26,14 +26,14 @@ fn prop_parallel_gkmeans_valid_monotone_and_near_serial() {
         let graph = brute::build(&data, kappa, &Backend::native());
         let seed = g.rng.next_u64();
         let base = KmeansParams { max_iters: 10, seed, ..Default::default() };
-        let serial = gk::run(
+        let serial = gk::run_core(
             &data,
             k,
             &graph,
             &gk::GkMeansParams { kappa, base: base.clone() },
             &Backend::native(),
         );
-        let par = gk::run(
+        let par = gk::run_core(
             &data,
             k,
             &graph,
@@ -75,8 +75,8 @@ fn threads_one_reproduces_serial_exactly() {
         kappa: 8,
         base: KmeansParams { max_iters: 6, ..Default::default() },
     };
-    let a = gk::run(&data, 24, &graph, &explicit, &Backend::native());
-    let b = gk::run(&data, 24, &graph, &defaulted, &Backend::native());
+    let a = gk::run_core(&data, 24, &graph, &explicit, &Backend::native());
+    let b = gk::run_core(&data, 24, &graph, &defaulted, &Backend::native());
     assert_eq!(a.clustering.labels, b.clustering.labels);
     assert_eq!(a.history.len(), b.history.len());
     for (ha, hb) in a.history.iter().zip(&b.history) {
@@ -98,8 +98,8 @@ fn parallel_runs_deterministic_per_thread_count() {
         kappa: 6,
         base: KmeansParams { max_iters: 5, threads: 3, ..Default::default() },
     };
-    let a = gk::run(&data, 16, &graph, &p, &Backend::native());
-    let b = gk::run(&data, 16, &graph, &p, &Backend::native());
+    let a = gk::run_core(&data, 16, &graph, &p, &Backend::native());
+    let b = gk::run_core(&data, 16, &graph, &p, &Backend::native());
     assert_eq!(a.clustering.labels, b.clustering.labels);
 }
 

@@ -142,8 +142,8 @@ fn full_clustering_agrees_across_backends() {
     // algorithm, fp-level differences only).
     let data = blobs(&BlobSpec::quick(1500, 32, 12), 7);
     let params = gkmeans::kmeans::common::KmeansParams { max_iters: 8, ..Default::default() };
-    let a = gkmeans::kmeans::lloyd::run(&data, 12, &params, &Backend::native());
-    let b = gkmeans::kmeans::lloyd::run(&data, 12, &params, &pjrt);
+    let a = gkmeans::kmeans::lloyd::run_core(&data, 12, &params, &Backend::native());
+    let b = gkmeans::kmeans::lloyd::run_core(&data, 12, &params, &pjrt);
     let (da, db) = (a.distortion(), b.distortion());
     assert!(
         (da - db).abs() <= 0.05 * da.max(db),

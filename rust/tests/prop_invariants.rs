@@ -52,7 +52,7 @@ fn prop_moves_never_increase_distortion() {
             kappa,
             base: KmeansParams { max_iters: 6, seed: g.rng.next_u64(), ..Default::default() },
         };
-        let out = gk::run(&data, k, &graph, &params, &Backend::native());
+        let out = gk::run_core(&data, k, &graph, &params, &Backend::native());
         for w in out.history.windows(2) {
             if w[1].distortion > w[0].distortion + 1e-6 * (1.0 + w[0].distortion) {
                 return Err(format!("distortion rose {} -> {}", w[0].distortion, w[1].distortion));

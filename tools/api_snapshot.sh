@@ -1,0 +1,23 @@
+#!/bin/sh
+# Public-API snapshot: a simple `cargo public-api`-style textual dump of
+# the `pub` item signatures under rust/src, committed as rust/api.txt and
+# diffed in CI so public-surface changes are reviewed deliberately.
+#
+# Regenerate after an intentional surface change:
+#   sh tools/api_snapshot.sh > rust/api.txt
+#
+# Notes: only the first line of multi-line signatures is captured, and
+# `pub(crate)`/`pub(super)` items are excluded (they are not public API).
+# That is deliberate — the goal is a cheap, deterministic diff target,
+# not a full semantic API model.
+set -eu
+cd "$(dirname "$0")/.."
+
+echo "# Public API snapshot - regenerate: sh tools/api_snapshot.sh > rust/api.txt"
+find rust/src -name '*.rs' | LC_ALL=C sort | while read -r f; do
+    rel="${f#rust/src/}"
+    grep -hE '^[[:space:]]*pub (fn|struct|enum|trait|mod|use|const|type|static)' "$f" 2>/dev/null \
+        | sed -E -e 's/^[[:space:]]+//' -e 's/ \{.*$//' -e 's/;[[:space:]]*$//' \
+                 -e 's/[[:space:]]+/ /g' -e "s|^|${rel}: |" \
+        || true
+done
