@@ -67,20 +67,30 @@ fn main() {
         m
     };
     let data = model.data.as_ref().expect("index embeds its vectors");
+    println!(
+        "vectors: {} ({} x {})",
+        if data.is_resident() { "resident" } else { "paged from disk" },
+        data.rows(),
+        data.dim()
+    );
 
     // --- serve queries from the artifact ---
+    // (one cursor for exact-recall accounting; the model's own search
+    // path opens its own cursors internally)
+    use gkmeans::data::store::VecStore as _;
+    let mut cur = data.open();
     let mut rng = Rng::new(99);
     let sp = SearchParams { ef, entries: 48, seed: 5 };
     let mut latencies = Vec::with_capacity(nq);
     let mut hits = 0usize;
     for _ in 0..nq {
         let qi = rng.below(data.rows());
-        let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.5 * rng.normal()).collect();
+        let q: Vec<f32> = cur.row(qi).iter().map(|v| v + 0.5 * rng.normal()).collect();
         // exact answer for recall accounting
         let mut best = f32::INFINITY;
         let mut want = 0u32;
         for j in 0..data.rows() {
-            let dd = gkmeans::core_ops::dist::d2(&q, data.row(j));
+            let dd = gkmeans::core_ops::dist::d2(&q, cur.row(j));
             if dd < best {
                 best = dd;
                 want = j as u32;

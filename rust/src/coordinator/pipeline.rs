@@ -12,19 +12,27 @@
 //! and the per-epoch history can never disagree.
 
 use crate::coordinator::job::{ClusterJob, JobResult};
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::graph::recall;
 use crate::model::{Clusterer, FittedModel};
 use crate::runtime::Backend;
 
-/// Execute a job end to end.
+/// Execute a job end to end with the dataset materialized in RAM (see
+/// [`run_job_streaming`] for the out-of-core path).
 pub fn run_job(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String> {
     let data = job.dataset.load()?;
     Ok(run_job_on(job, &data, backend))
 }
 
-/// Execute a job on an already-loaded dataset (benches reuse the data).
-pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResult {
+/// [`run_job`] without materializing the dataset: file-backed specs
+/// stream from disk through the storage layer.
+pub fn run_job_streaming(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String> {
+    let data = job.dataset.open_store()?;
+    Ok(run_job_on(job, data.as_ref(), backend))
+}
+
+/// Execute a job on an already-opened store (benches reuse the data).
+pub fn run_job_on(job: &ClusterJob, data: &dyn VecStore, backend: &Backend) -> JobResult {
     let (model, rec) = fit_job(job, data, backend);
     result_from_model(&model, rec)
 }
@@ -32,16 +40,21 @@ pub fn run_job_on(job: &ClusterJob, data: &VecSet, backend: &Backend) -> JobResu
 /// Fit the job's [`Clusterer`](crate::model::Clusterer) and measure graph
 /// recall when the job asks for it.  The CLI calls this directly when it
 /// needs the artifact itself (`cluster --save`).
-pub fn fit_job(job: &ClusterJob, data: &VecSet, backend: &Backend) -> (FittedModel, Option<f64>) {
+pub fn fit_job(
+    job: &ClusterJob,
+    data: &dyn VecStore,
+    backend: &Backend,
+) -> (FittedModel, Option<f64>) {
     crate::log_info!(
-        "job: {} on n={} d={} k={} ({})",
+        "job: {} on n={} d={} k={} ({}{})",
         job.method.name(),
         data.rows(),
         data.dim(),
         job.k.min(data.rows()),
-        backend.name()
+        backend.name(),
+        if data.as_vecset().is_some() { "" } else { ", out-of-core" }
     );
-    let model = job.clusterer().fit(data, &job.context(backend));
+    let model = job.clusterer().fit_store(data, &job.context(backend));
     debug_assert_eq!(model.check_time_accounting(), Ok(()));
     let rec = if job.measure_recall {
         model
@@ -74,7 +87,7 @@ pub fn result_from_model(model: &FittedModel, recall: Option<f64>) -> JobResult 
 /// the paper's VLAD10M protocol).  The exact ground-truth build is the
 /// dominant cost and honors the job's `threads` knob.
 fn measure_recall(
-    data: &VecSet,
+    data: &dyn VecStore,
     graph: &crate::graph::knn::KnnGraph,
     seed: u64,
     threads: usize,

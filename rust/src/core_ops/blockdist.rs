@@ -89,6 +89,23 @@ pub fn block_l2_parallel(x: &[f32], y: &[f32], d: usize, out: &mut [f32], thread
     });
 }
 
+/// [`block_l2`] with the `x` operand pulled from a
+/// [`VecStore`](crate::data::store::VecStore) cursor:
+/// rows `[lo, hi)` of the store against all rows of `y`.  The in-RAM
+/// cursor serves the exact slice `rows_flat` would (zero copy), so the
+/// result is bit-identical to the slice-based kernel; a chunked cursor
+/// pages the block through its resident cache first.
+pub fn block_l2_store(
+    cur: &mut crate::data::store::StoreCursor<'_>,
+    lo: usize,
+    hi: usize,
+    y: &[f32],
+    d: usize,
+    out: &mut [f32],
+) {
+    block_l2(cur.block(lo, hi), y, d, out)
+}
+
 /// Allocating convenience wrapper around [`block_l2`].
 pub fn block_l2_alloc(x: &[f32], y: &[f32], d: usize) -> Vec<f32> {
     let m = x.len() / d;
@@ -139,6 +156,24 @@ mod tests {
     #[should_panic]
     fn wrong_out_len_panics() {
         block_l2(&[0.0; 4], &[0.0; 4], 2, &mut [0.0; 3]);
+    }
+
+    #[test]
+    fn store_blocked_kernel_matches_slices() {
+        let mut rng = Rng::new(5);
+        let (m, n, d) = (23usize, 9usize, 6usize);
+        let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let data = crate::data::matrix::VecSet::from_flat(d, x.clone());
+        let mut want = vec![0f32; m * n];
+        block_l2(&x, &y, d, &mut want);
+        // the store-fed kernel over a sub-range matches the slice kernel
+        let mut cur = crate::data::store::VecStore::open(&data);
+        for (lo, hi) in [(0usize, m), (3, 17), (22, 23)] {
+            let mut got = vec![0f32; (hi - lo) * n];
+            block_l2_store(&mut cur, lo, hi, &y, d, &mut got);
+            assert_eq!(got, want[lo * n..hi * n], "rows [{lo}, {hi})");
+        }
     }
 
     #[test]

@@ -19,21 +19,55 @@ fn read_i32le(r: &mut impl Read) -> std::io::Result<Option<i32>> {
     }
 }
 
+/// Sanity cap on per-row dimension headers: anything above this is a
+/// corrupt or garbage header, not a real dataset.
+const MAX_DIM: usize = 1 << 20;
+
+/// Validate a raw `i32` record header against the file's remaining
+/// length, returning the dimension.  A negative, zero, implausibly
+/// large, or beyond-EOF header is an error — never a panic or an OOM
+/// allocation (`vec![0; d]` with `d` from a hostile file).
+fn check_dim(
+    d: i32,
+    dim_so_far: usize,
+    elem_bytes: u64,
+    remaining: u64,
+    path: &Path,
+) -> Result<usize, String> {
+    if d <= 0 || d as usize > MAX_DIM {
+        return Err(format!("{}: implausible vector dim {d}", path.display()));
+    }
+    let d = d as usize;
+    if dim_so_far != 0 && d != dim_so_far {
+        return Err(format!(
+            "{}: inconsistent dim: {d} vs {dim_so_far}",
+            path.display()
+        ));
+    }
+    if d as u64 * elem_bytes > remaining {
+        return Err(format!(
+            "{}: truncated record: header promises {d} components but only \
+             {remaining} bytes remain",
+            path.display()
+        ));
+    }
+    Ok(d)
+}
+
 /// Read a `.fvecs` file into a `VecSet`.
 pub fn read_fvecs(path: &Path) -> Result<VecSet, String> {
     let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut remaining = f.metadata().map_err(|e| e.to_string())?.len();
     let mut r = BufReader::new(f);
     let mut dim = 0usize;
     let mut data: Vec<f32> = Vec::new();
     while let Some(d) = read_i32le(&mut r).map_err(|e| e.to_string())? {
-        let d = d as usize;
-        if dim == 0 {
-            dim = d;
-        } else if d != dim {
-            return Err(format!("inconsistent dim: {d} vs {dim}"));
-        }
+        remaining = remaining.saturating_sub(4);
+        let d = check_dim(d, dim, 4, remaining, path)?;
+        dim = d;
         let mut buf = vec![0u8; d * 4];
         r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+        remaining -= d as u64 * 4;
         for c in buf.chunks_exact(4) {
             data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
@@ -47,18 +81,17 @@ pub fn read_fvecs(path: &Path) -> Result<VecSet, String> {
 /// Read a `.bvecs` file (u8 components, promoted to f32).
 pub fn read_bvecs(path: &Path) -> Result<VecSet, String> {
     let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut remaining = f.metadata().map_err(|e| e.to_string())?.len();
     let mut r = BufReader::new(f);
     let mut dim = 0usize;
     let mut data: Vec<f32> = Vec::new();
     while let Some(d) = read_i32le(&mut r).map_err(|e| e.to_string())? {
-        let d = d as usize;
-        if dim == 0 {
-            dim = d;
-        } else if d != dim {
-            return Err(format!("inconsistent dim: {d} vs {dim}"));
-        }
+        remaining = remaining.saturating_sub(4);
+        let d = check_dim(d, dim, 1, remaining, path)?;
+        dim = d;
         let mut buf = vec![0u8; d];
         r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+        remaining -= d as u64;
         data.extend(buf.iter().map(|&b| b as f32));
     }
     if dim == 0 {
@@ -100,6 +133,9 @@ pub fn read_ivecs(path: &Path) -> Result<Vec<Vec<i32>>, String> {
     let mut r = BufReader::new(f);
     let mut out = Vec::new();
     while let Some(d) = read_i32le(&mut r).map_err(|e| e.to_string())? {
+        if d < 0 || d as usize > MAX_DIM {
+            return Err(format!("{}: implausible ivecs row length {d}", path.display()));
+        }
         let mut row = Vec::with_capacity(d as usize);
         for _ in 0..d {
             match read_i32le(&mut r).map_err(|e| e.to_string())? {
@@ -188,5 +224,78 @@ mod tests {
     #[test]
     fn unsupported_extension() {
         assert!(read_auto(Path::new("/tmp/foo.csv")).is_err());
+    }
+
+    #[test]
+    fn truncated_fvecs_is_err_not_panic() {
+        // header promises 4 components, payload holds only 2
+        let p = tmp("trunc.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(4i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_fvecs(&p).unwrap_err().contains("truncated"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn garbage_headers_are_err_not_panic() {
+        // a negative dim header used to wrap to a huge usize and abort on
+        // allocation; now it is a clean Err
+        for (name, header) in [("neg.fvecs", -7i32), ("zero.fvecs", 0), ("huge.fvecs", i32::MAX)] {
+            let p = tmp(name);
+            let mut bytes = Vec::new();
+            bytes.extend(header.to_le_bytes());
+            bytes.extend([0u8; 16]);
+            std::fs::write(&p, &bytes).unwrap();
+            assert!(
+                read_fvecs(&p).unwrap_err().contains("implausible"),
+                "{name}: header {header}"
+            );
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn truncated_and_garbage_bvecs_are_err() {
+        let p = tmp("trunc.bvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(8i32.to_le_bytes());
+        bytes.extend([1u8, 2, 3]); // 3 of 8 promised bytes
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_bvecs(&p).unwrap_err().contains("truncated"));
+        let mut bytes = Vec::new();
+        bytes.extend((-1i32).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_bvecs(&p).unwrap_err().contains("implausible"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn garbage_ivecs_length_is_err() {
+        let p = tmp("bad.ivecs");
+        let mut bytes = Vec::new();
+        bytes.extend((-3i32).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_ivecs(&p).unwrap_err().contains("implausible"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_auto_surfaces_dim_mismatch() {
+        // rows with different dims routed through the extension dispatcher
+        let p = tmp("mismatch.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(2i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2.0f32.to_le_bytes());
+        bytes.extend(3i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2.0f32.to_le_bytes());
+        bytes.extend(3.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_auto(&p).unwrap_err().contains("inconsistent dim"));
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -3,9 +3,11 @@
 
 pub mod io;
 pub mod matrix;
+pub mod store;
 pub mod synth;
 
 use crate::data::matrix::VecSet;
+use crate::data::store::{ChunkedVecStore, VecStore};
 
 /// A named dataset request: either one of the paper's four synthetic
 /// stand-ins at a given scale, or a file on disk.
@@ -44,11 +46,25 @@ impl DatasetSpec {
         Ok(DatasetSpec::Synth { kind, n, seed })
     }
 
-    /// Materialize the dataset.
+    /// Materialize the dataset in RAM.
     pub fn load(&self) -> Result<VecSet, String> {
         match self {
             DatasetSpec::Synth { kind, n, seed } => synth::by_name(kind, *n, *seed),
             DatasetSpec::File { path } => io::read_auto(std::path::Path::new(path)),
+        }
+    }
+
+    /// Open the dataset as a [`VecStore`] without materializing it:
+    /// file-backed specs stream through a [`ChunkedVecStore`] (out-of-core
+    /// clustering / serving), synthetic specs are generated in RAM.
+    pub fn open_store(&self) -> Result<Box<dyn VecStore>, String> {
+        match self {
+            DatasetSpec::Synth { kind, n, seed } => {
+                Ok(Box::new(synth::by_name(kind, *n, *seed)?))
+            }
+            DatasetSpec::File { path } => {
+                Ok(Box::new(ChunkedVecStore::open_auto(std::path::Path::new(path))?))
+            }
         }
     }
 }

@@ -1,0 +1,690 @@
+//! `VecStore` — the storage abstraction every data-scanning layer runs on.
+//!
+//! The paper's headline scale (10M × 512-d ≈ 20 GB of raw vectors) does
+//! not fit comfortably in RAM as one contiguous `Vec<f32>`, so the scan
+//! loops (blocked distance kernels, graph builds, k-means epochs, ANN
+//! serving) are written against this trait instead of the concrete
+//! [`VecSet`]:
+//!
+//! * [`VecSet`] implements [`VecStore`] with zero-copy cursors — the
+//!   in-RAM fast path is the exact same slices the pre-trait code read,
+//!   so serial in-RAM results stay bit-identical.
+//! * [`ChunkedVecStore`] streams fixed-size row blocks from disk through
+//!   a small resident-chunk cache (`std::fs` only, no mmap crate, no
+//!   external deps).  It reads raw flat `f32` files, `fvecs`/`bvecs`
+//!   interchange files, and byte ranges inside a larger file — the
+//!   GKMODEL v2 vectors section pages through exactly this type.
+//!
+//! ## Access model
+//!
+//! A store is shared immutable state (`Sync`); all reads go through a
+//! [`StoreCursor`] obtained from [`VecStore::open`].  Cursors own their
+//! file handle, chunk cache and scratch buffers, so **each worker thread
+//! opens its own cursor** and the store itself needs no locks.  In-RAM
+//! cursors are plain slice views with no cache and no copies.
+//!
+//! ## Errors
+//!
+//! Constructors validate eagerly (file exists, sizes consistent, headers
+//! sane) and return `Err` on anything suspicious.  Cursor reads after a
+//! successful open panic on I/O failure with a descriptive message —
+//! threading `Result` through every inner distance loop would poison the
+//! hot path for a failure mode (file truncated *mid-run*) that has no
+//! sensible recovery.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::core_ops::dist::d2;
+use crate::data::matrix::VecSet;
+
+/// Read-only `n × d` vector storage: the abstraction the scan loops run
+/// on.  See the [module docs](self) for the access model.
+pub trait VecStore: Sync {
+    /// Number of row vectors.
+    fn rows(&self) -> usize;
+
+    /// Dimensionality of each row.
+    fn dim(&self) -> usize;
+
+    /// Open a cursor for row/block reads.  Each thread opens its own.
+    fn open(&self) -> StoreCursor<'_>;
+
+    /// The whole dataset as one resident flat buffer, when it is in RAM.
+    /// Fast paths use this to keep serial in-RAM code bit-identical to
+    /// the pre-trait implementation.
+    fn as_flat(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// The store as an in-RAM [`VecSet`], when it is one (lets engines
+    /// that still require resident data borrow it without copying).
+    fn as_vecset(&self) -> Option<&VecSet> {
+        None
+    }
+
+    /// The disk backing of this store, when it streams from a file
+    /// (model artifacts keep a cheap handle instead of materializing).
+    fn disk_backing(&self) -> Option<&ChunkedVecStore> {
+        None
+    }
+}
+
+impl VecStore for VecSet {
+    fn rows(&self) -> usize {
+        VecSet::rows(self)
+    }
+
+    fn dim(&self) -> usize {
+        VecSet::dim(self)
+    }
+
+    fn open(&self) -> StoreCursor<'_> {
+        StoreCursor::Ram { flat: self.flat(), dim: VecSet::dim(self) }
+    }
+
+    fn as_flat(&self) -> Option<&[f32]> {
+        Some(self.flat())
+    }
+
+    fn as_vecset(&self) -> Option<&VecSet> {
+        Some(self)
+    }
+}
+
+/// Copy every row of `store` into a resident [`VecSet`].
+pub fn materialize(store: &dyn VecStore) -> VecSet {
+    if let Some(v) = store.as_vecset() {
+        return v.clone();
+    }
+    let (n, d) = (store.rows(), store.dim());
+    let mut cur = store.open();
+    let mut flat = Vec::with_capacity(n * d);
+    const B: usize = 1024;
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + B).min(n);
+        flat.extend_from_slice(cur.block(lo, hi));
+        lo = hi;
+    }
+    VecSet::from_flat(d, flat)
+}
+
+/// Copy the rows at `idx` (in order, repeats allowed) into a [`VecSet`].
+pub fn gather(store: &dyn VecStore, idx: &[usize]) -> VecSet {
+    if let Some(v) = store.as_vecset() {
+        return v.gather(idx);
+    }
+    let d = store.dim();
+    let mut cur = store.open();
+    let mut flat = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        flat.extend_from_slice(cur.row(i));
+    }
+    VecSet::from_flat(d, flat)
+}
+
+/// Component encoding of a [`ChunkedVecStore`]'s on-disk rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Elem {
+    /// Little-endian `f32` components.
+    F32,
+    /// `u8` components, promoted to `f32` on read (bvecs).
+    U8,
+}
+
+impl Elem {
+    fn size(self) -> u64 {
+        match self {
+            Elem::F32 => 4,
+            Elem::U8 => 1,
+        }
+    }
+}
+
+/// Default resident-chunk budget per cursor.
+const DEFAULT_CACHE_CHUNKS: usize = 8;
+/// Target bytes per chunk when sizing `chunk_rows` automatically.
+const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
+/// Sanity cap on per-row dimensionality headers read from disk.
+const MAX_DIM: usize = 1 << 20;
+
+/// An `n × d` matrix streamed from disk in fixed-size row chunks.
+///
+/// The struct itself is a cheap, cloneable description (path + layout +
+/// cache budget); all I/O state lives in the per-thread
+/// [`ChunkedCursor`]s it opens.  Supported layouts: raw flat `f32` rows
+/// ([`ChunkedVecStore::open_flat`]), fvecs/bvecs interchange files with
+/// their per-row dimension headers ([`ChunkedVecStore::open_fvecs`] /
+/// [`ChunkedVecStore::open_bvecs`]), and a byte range inside a larger
+/// file ([`ChunkedVecStore::from_section`] — how GKMODEL v2 artifacts
+/// page their vectors section).
+#[derive(Debug, Clone)]
+pub struct ChunkedVecStore {
+    path: PathBuf,
+    rows: usize,
+    dim: usize,
+    /// Byte offset of row 0's record (including any per-row header).
+    base: u64,
+    /// Bytes from one row record to the next.
+    row_stride: u64,
+    /// Per-row header bytes to skip (4 for fvecs/bvecs, 0 for flat).
+    row_skip: u64,
+    elem: Elem,
+    chunk_rows: usize,
+    cache_chunks: usize,
+}
+
+impl ChunkedVecStore {
+    fn new(
+        path: &Path,
+        rows: usize,
+        dim: usize,
+        base: u64,
+        row_skip: u64,
+        elem: Elem,
+    ) -> ChunkedVecStore {
+        let row_stride = row_skip + dim as u64 * elem.size();
+        let chunk_rows = (DEFAULT_CHUNK_BYTES / row_stride.max(1) as usize).max(1);
+        ChunkedVecStore {
+            path: path.to_path_buf(),
+            rows,
+            dim,
+            base,
+            row_stride,
+            row_skip,
+            elem,
+            chunk_rows,
+            cache_chunks: DEFAULT_CACHE_CHUNKS,
+        }
+    }
+
+    /// Open a raw flat little-endian `f32` file as `len / (4·dim)` rows.
+    pub fn open_flat(path: &Path, dim: usize) -> Result<ChunkedVecStore, String> {
+        if dim == 0 {
+            return Err("dim must be positive".into());
+        }
+        let len = file_len(path)?;
+        let stride = dim as u64 * 4;
+        if len == 0 || len % stride != 0 {
+            return Err(format!(
+                "{}: {len} bytes is not a whole number of {dim}-d f32 rows",
+                path.display()
+            ));
+        }
+        Ok(ChunkedVecStore::new(path, (len / stride) as usize, dim, 0, 0, Elem::F32))
+    }
+
+    /// Open an `.fvecs` file (per-row `i32` dim header + `f32` payload).
+    /// The dimension is probed from the first record; every record's
+    /// header is re-verified as chunks stream in.
+    pub fn open_fvecs(path: &Path) -> Result<ChunkedVecStore, String> {
+        Self::open_texmex(path, Elem::F32)
+    }
+
+    /// Open a `.bvecs` file (per-row `i32` dim header + `u8` payload,
+    /// promoted to `f32` on read).
+    pub fn open_bvecs(path: &Path) -> Result<ChunkedVecStore, String> {
+        Self::open_texmex(path, Elem::U8)
+    }
+
+    fn open_texmex(path: &Path, elem: Elem) -> Result<ChunkedVecStore, String> {
+        let len = file_len(path)?;
+        let mut f = File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut hdr = [0u8; 4];
+        f.read_exact(&mut hdr)
+            .map_err(|_| format!("{}: empty or truncated header", path.display()))?;
+        let d = i32::from_le_bytes(hdr);
+        if d <= 0 || d as usize > MAX_DIM {
+            return Err(format!("{}: implausible vector dim {d}", path.display()));
+        }
+        let dim = d as usize;
+        let stride = 4 + dim as u64 * elem.size();
+        if len % stride != 0 {
+            return Err(format!(
+                "{}: {len} bytes is not a whole number of {dim}-d records \
+                 ({stride} bytes each) — truncated or corrupt",
+                path.display()
+            ));
+        }
+        Ok(ChunkedVecStore::new(path, (len / stride) as usize, dim, 0, 4, elem))
+    }
+
+    /// Open a raw `rows × dim` little-endian `f32` region starting at
+    /// `byte_offset` inside `path` — the GKMODEL v2 vectors section.
+    pub fn from_section(
+        path: &Path,
+        byte_offset: u64,
+        rows: usize,
+        dim: usize,
+    ) -> Result<ChunkedVecStore, String> {
+        if dim == 0 {
+            return Err("dim must be positive".into());
+        }
+        let len = file_len(path)?;
+        let need = (rows as u64)
+            .checked_mul(dim as u64)
+            .and_then(|c| c.checked_mul(4))
+            .and_then(|c| byte_offset.checked_add(c))
+            .ok_or_else(|| "section extent overflows".to_string())?;
+        if need > len {
+            return Err(format!(
+                "{}: vectors section [{byte_offset}, {need}) exceeds file length {len}",
+                path.display()
+            ));
+        }
+        Ok(ChunkedVecStore::new(path, rows, dim, byte_offset, 0, Elem::F32))
+    }
+
+    /// Dispatch on file extension (`.fvecs` / `.bvecs`).
+    pub fn open_auto(path: &Path) -> Result<ChunkedVecStore, String> {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("fvecs") => ChunkedVecStore::open_fvecs(path),
+            Some("bvecs") => ChunkedVecStore::open_bvecs(path),
+            other => Err(format!(
+                "unsupported dataset extension {other:?} for streaming (fvecs/bvecs)"
+            )),
+        }
+    }
+
+    /// Set the rows per resident chunk (clamped to ≥ 1).
+    pub fn chunk_rows(mut self, rows: usize) -> Self {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+
+    /// Set the resident-chunk budget per cursor (clamped to ≥ 2 so a
+    /// pairwise scan always has both operand chunks resident).
+    pub fn cache_chunks(mut self, chunks: usize) -> Self {
+        self.cache_chunks = chunks.max(2);
+        self
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Read rows `[lo, hi)` from `file` into a fresh flat `f32` buffer,
+    /// verifying per-row headers where the layout has them.
+    fn read_rows(&self, file: &mut File, lo: usize, hi: usize) -> Vec<f32> {
+        let nrows = hi - lo;
+        let nbytes = nrows as u64 * self.row_stride;
+        let mut raw = vec![0u8; nbytes as usize];
+        file.seek(SeekFrom::Start(self.base + lo as u64 * self.row_stride))
+            .and_then(|_| file.read_exact(&mut raw))
+            .unwrap_or_else(|e| {
+                panic!(
+                    "ChunkedVecStore {}: reading rows [{lo}, {hi}) failed: {e}",
+                    self.path.display()
+                )
+            });
+        let mut out = Vec::with_capacity(nrows * self.dim);
+        let stride = self.row_stride as usize;
+        let skip = self.row_skip as usize;
+        for r in 0..nrows {
+            let rec = &raw[r * stride..(r + 1) * stride];
+            if skip == 4 {
+                let d = i32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
+                if d as usize != self.dim {
+                    panic!(
+                        "ChunkedVecStore {}: row {} header says dim {d}, expected {} \
+                         — inconsistent or corrupt file",
+                        self.path.display(),
+                        lo + r,
+                        self.dim
+                    );
+                }
+            }
+            match self.elem {
+                Elem::F32 => {
+                    for c in rec[skip..].chunks_exact(4) {
+                        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                    }
+                }
+                Elem::U8 => out.extend(rec[skip..].iter().map(|&b| b as f32)),
+            }
+        }
+        out
+    }
+}
+
+impl VecStore for ChunkedVecStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn open(&self) -> StoreCursor<'_> {
+        let file = File::open(&self.path).unwrap_or_else(|e| {
+            panic!("ChunkedVecStore {}: reopen failed: {e}", self.path.display())
+        });
+        StoreCursor::Chunked(ChunkedCursor {
+            store: self,
+            file,
+            slots: Vec::new(),
+            tick: 0,
+            scratch: Vec::new(),
+            pair: Vec::new(),
+        })
+    }
+
+    fn disk_backing(&self) -> Option<&ChunkedVecStore> {
+        Some(self)
+    }
+}
+
+fn file_len(path: &Path) -> Result<u64, String> {
+    std::fs::metadata(path)
+        .map(|m| m.len())
+        .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// A read cursor over a [`ChunkedVecStore`]: its own file handle, an
+/// LRU cache of resident chunks, and scratch for cross-chunk blocks.
+pub struct ChunkedCursor<'a> {
+    store: &'a ChunkedVecStore,
+    file: File,
+    /// Resident chunks: (chunk index, last-use tick, rows·dim floats).
+    slots: Vec<(usize, u64, Vec<f32>)>,
+    tick: u64,
+    scratch: Vec<f32>,
+    pair: Vec<f32>,
+}
+
+impl ChunkedCursor<'_> {
+    /// Slot index of chunk `c`, loading (and possibly evicting the
+    /// least-recently-used resident chunk) on miss.
+    fn slot_of(&mut self, c: usize) -> usize {
+        self.tick += 1;
+        if let Some(s) = self.slots.iter().position(|(ci, _, _)| *ci == c) {
+            self.slots[s].1 = self.tick;
+            return s;
+        }
+        let lo = c * self.store.chunk_rows;
+        let hi = (lo + self.store.chunk_rows).min(self.store.rows);
+        let buf = self.store.read_rows(&mut self.file, lo, hi);
+        if self.slots.len() < self.store.cache_chunks {
+            self.slots.push((c, self.tick, buf));
+            self.slots.len() - 1
+        } else {
+            let s = (0..self.slots.len())
+                .min_by_key(|&i| self.slots[i].1)
+                .expect("cache budget >= 2");
+            self.slots[s] = (c, self.tick, buf);
+            s
+        }
+    }
+
+    fn row(&mut self, i: usize) -> &[f32] {
+        debug_assert!(i < self.store.rows, "row {i} out of bounds");
+        let cr = self.store.chunk_rows;
+        let d = self.store.dim;
+        let c = i / cr;
+        let s = self.slot_of(c);
+        let off = (i - c * cr) * d;
+        &self.slots[s].2[off..off + d]
+    }
+
+    fn block(&mut self, lo: usize, hi: usize) -> &[f32] {
+        let cr = self.store.chunk_rows;
+        let d = self.store.dim;
+        if lo >= hi {
+            return &[];
+        }
+        if lo / cr == (hi - 1) / cr {
+            // fully inside one chunk: serve a direct slice
+            let c = lo / cr;
+            let s = self.slot_of(c);
+            let start = (lo - c * cr) * d;
+            return &self.slots[s].2[start..start + (hi - lo) * d];
+        }
+        // spans chunks: assemble into scratch
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.reserve((hi - lo) * d);
+        let mut r = lo;
+        while r < hi {
+            let c = r / cr;
+            let seg_hi = ((c + 1) * cr).min(hi);
+            let s = self.slot_of(c);
+            let start = (r - c * cr) * d;
+            scratch.extend_from_slice(&self.slots[s].2[start..start + (seg_hi - r) * d]);
+            r = seg_hi;
+        }
+        self.scratch = scratch;
+        &self.scratch
+    }
+
+    fn d2_pair(&mut self, i: usize, j: usize) -> f32 {
+        let mut pair = std::mem::take(&mut self.pair);
+        pair.clear();
+        pair.extend_from_slice(self.row(i));
+        let dd = d2(&pair, self.row(j));
+        self.pair = pair;
+        dd
+    }
+}
+
+/// A read cursor over any [`VecStore`].  In-RAM stores serve zero-copy
+/// slices; chunked stores page through their resident-chunk cache.
+///
+/// Returned slices borrow the cursor, so hold at most one at a time
+/// (copy via [`StoreCursor::read_row_into`] when two rows are needed
+/// simultaneously, or use [`StoreCursor::d2_pair`]).
+pub enum StoreCursor<'a> {
+    /// Zero-copy view of a resident flat buffer.
+    Ram {
+        /// The `rows · dim` flat buffer.
+        flat: &'a [f32],
+        /// Row dimensionality.
+        dim: usize,
+    },
+    /// Paged view of a [`ChunkedVecStore`].
+    Chunked(ChunkedCursor<'a>),
+}
+
+impl StoreCursor<'_> {
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&mut self, i: usize) -> &[f32] {
+        match self {
+            StoreCursor::Ram { flat, dim } => &flat[i * *dim..(i + 1) * *dim],
+            StoreCursor::Chunked(c) => c.row(i),
+        }
+    }
+
+    /// Borrow rows `[lo, hi)` as one flat slice.
+    #[inline]
+    pub fn block(&mut self, lo: usize, hi: usize) -> &[f32] {
+        match self {
+            StoreCursor::Ram { flat, dim } => &flat[lo * *dim..hi * *dim],
+            StoreCursor::Chunked(c) => c.block(lo, hi),
+        }
+    }
+
+    /// Copy row `i` into `out` (`out.len() == dim`).
+    pub fn read_row_into(&mut self, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.row(i));
+    }
+
+    /// Squared L2 distance between rows `i` and `j` (the random-pair
+    /// access pattern of NN-Descent and in-cell refinement).
+    #[inline]
+    pub fn d2_pair(&mut self, i: usize, j: usize) -> f32 {
+        match self {
+            StoreCursor::Ram { flat, dim } => {
+                let d = *dim;
+                d2(&flat[i * d..(i + 1) * d], &flat[j * d..(j + 1) * d])
+            }
+            StoreCursor::Chunked(c) => c.d2_pair(i, j),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gkm_store_{}_{name}", std::process::id()))
+    }
+
+    fn write_flat(path: &Path, v: &VecSet) {
+        let mut bytes = Vec::with_capacity(v.flat().len() * 4);
+        for &x in v.flat() {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VecSet {
+        let mut rng = Rng::new(seed);
+        VecSet::from_flat(d, (0..n * d).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn vecset_cursor_is_zero_copy_view() {
+        let v = random_set(10, 4, 1);
+        let mut cur = VecStore::open(&v);
+        assert_eq!(cur.row(3), v.row(3));
+        assert_eq!(cur.block(2, 7), v.rows_flat(2, 7));
+        assert_eq!(VecStore::rows(&v), 10);
+        assert_eq!(VecStore::dim(&v), 4);
+        assert!(v.as_flat().is_some());
+        assert!(v.as_vecset().is_some());
+        assert!(v.disk_backing().is_none());
+    }
+
+    #[test]
+    fn chunked_flat_matches_ram_rows_and_blocks() {
+        let v = random_set(137, 7, 2);
+        let p = tmp("flat.bin");
+        write_flat(&p, &v);
+        // deliberately awkward chunk geometry + tiny cache
+        let store = ChunkedVecStore::open_flat(&p, 7).unwrap().chunk_rows(11).cache_chunks(2);
+        assert_eq!(VecStore::rows(&store), 137);
+        assert_eq!(VecStore::dim(&store), 7);
+        let mut cur = store.open();
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let i = rng.below(137);
+            assert_eq!(cur.row(i), v.row(i), "row {i}");
+        }
+        for _ in 0..200 {
+            let lo = rng.below(137);
+            let hi = lo + rng.below(137 - lo) + 1;
+            assert_eq!(cur.block(lo, hi), v.rows_flat(lo, hi), "block [{lo}, {hi})");
+        }
+        for _ in 0..200 {
+            let i = rng.below(137);
+            let j = rng.below(137);
+            let want = d2(v.row(i), v.row(j));
+            assert_eq!(cur.d2_pair(i, j).to_bits(), want.to_bits());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn materialize_and_gather_roundtrip() {
+        let v = random_set(40, 3, 4);
+        let p = tmp("mat.bin");
+        write_flat(&p, &v);
+        let store = ChunkedVecStore::open_flat(&p, 3).unwrap().chunk_rows(7).cache_chunks(2);
+        let back = materialize(&store);
+        assert_eq!(back, v);
+        let idx = [5usize, 0, 39, 5];
+        assert_eq!(gather(&store, &idx), v.gather(&idx));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fvecs_streaming_matches_eager_reader() {
+        let v = random_set(63, 5, 5);
+        let p = tmp("s.fvecs");
+        crate::data::io::write_fvecs(&p, &v).unwrap();
+        let store = ChunkedVecStore::open_fvecs(&p).unwrap().chunk_rows(4).cache_chunks(3);
+        assert_eq!(VecStore::rows(&store), 63);
+        assert_eq!(VecStore::dim(&store), 5);
+        assert_eq!(materialize(&store), v);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bvecs_streaming_promotes_u8() {
+        let p = tmp("s.bvecs");
+        let mut bytes = Vec::new();
+        for row in [[7u8, 200u8], [0u8, 255u8], [3u8, 4u8]] {
+            bytes.extend(2i32.to_le_bytes());
+            bytes.extend(row);
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let store = ChunkedVecStore::open_bvecs(&p).unwrap().chunk_rows(2);
+        let mut cur = store.open();
+        assert_eq!(cur.row(0), &[7.0, 200.0]);
+        assert_eq!(cur.row(2), &[3.0, 4.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn section_view_reads_subrange() {
+        let v = random_set(20, 4, 6);
+        let p = tmp("sec.bin");
+        let mut bytes = vec![0xAAu8; 24]; // unrelated prefix
+        for &x in v.flat() {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0xBB; 16]); // unrelated suffix
+        std::fs::write(&p, &bytes).unwrap();
+        let store = ChunkedVecStore::from_section(&p, 24, 20, 4).unwrap().chunk_rows(3);
+        assert_eq!(materialize(&store), v);
+        // section extent beyond EOF is rejected
+        assert!(ChunkedVecStore::from_section(&p, 24, 1000, 4).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn constructors_reject_bad_files() {
+        let p = tmp("bad.fvecs");
+        // truncated: header promises 3 components, payload has 1
+        let mut bytes = Vec::new();
+        bytes.extend(3i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(ChunkedVecStore::open_fvecs(&p).is_err());
+        // negative dim header
+        let mut bytes = Vec::new();
+        bytes.extend((-5i32).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(ChunkedVecStore::open_fvecs(&p).unwrap_err().contains("implausible"));
+        // flat file not a whole number of rows
+        std::fs::write(&p, [0u8; 10]).unwrap();
+        assert!(ChunkedVecStore::open_flat(&p, 3).is_err());
+        std::fs::remove_file(&p).ok();
+        // missing file
+        assert!(ChunkedVecStore::open_fvecs(Path::new("/nonexistent.fvecs")).is_err());
+    }
+
+    #[test]
+    fn open_auto_dispatches_on_extension() {
+        let v = random_set(8, 2, 7);
+        let p = tmp("auto.fvecs");
+        crate::data::io::write_fvecs(&p, &v).unwrap();
+        assert_eq!(materialize(&ChunkedVecStore::open_auto(&p).unwrap()), v);
+        assert!(ChunkedVecStore::open_auto(Path::new("/tmp/x.csv")).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -9,7 +9,7 @@
 
 use crate::core_ops::dist::d2;
 use crate::core_ops::topk::TopK;
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::graph::knn::KnnGraph;
 use crate::util::rng::Rng;
 
@@ -37,57 +37,121 @@ pub struct SearchStats {
     pub hops: usize,
 }
 
+/// Reusable per-thread search state: the visited set (epoch-stamped so a
+/// new query costs O(1) to reset, not an O(n) clear) and the frontier
+/// heap.  Hoisted out of [`search`] so batched serving
+/// (`FittedModel::search_batch`) and long-lived services do not allocate
+/// an O(n) buffer per query.
+pub struct SearchScratch {
+    /// Epoch stamp per node; `stamp[i] == epoch` means visited.
+    stamp: Vec<u32>,
+    epoch: u32,
+    frontier: std::collections::BinaryHeap<std::cmp::Reverse<(Ordered, u32)>>,
+}
+
+impl SearchScratch {
+    /// Scratch sized for an `n`-node graph.
+    pub fn new(n: usize) -> SearchScratch {
+        SearchScratch {
+            stamp: vec![0; n],
+            epoch: 0,
+            frontier: std::collections::BinaryHeap::new(),
+        }
+    }
+
+    /// Start a new query: bump the epoch (clearing the visited set in
+    /// O(1)) and empty the frontier.
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // stamp wrap-around (once every 2^32 queries): hard reset
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+        self.frontier.clear();
+    }
+
+    /// Mark node `i` visited; returns false if it already was.
+    #[inline]
+    fn visit(&mut self, i: usize) -> bool {
+        if self.stamp[i] == self.epoch {
+            return false;
+        }
+        self.stamp[i] = self.epoch;
+        true
+    }
+}
+
 /// Find the approximate top-`k` neighbors of `query` in `data` using the
 /// graph.  Returns ascending-distance (dist, id) pairs plus stats.
+/// Allocates fresh scratch per call — batch callers should hold a
+/// [`SearchScratch`] and use [`search_with_scratch`].
 pub fn search(
-    data: &VecSet,
+    data: &dyn VecStore,
     graph: &KnnGraph,
     query: &[f32],
     k: usize,
     params: &SearchParams,
     rng: &mut Rng,
 ) -> (Vec<(f32, u32)>, SearchStats) {
-    let n = data.rows();
+    assert_eq!(data.rows(), graph.n(), "store/graph size mismatch");
+    let mut scratch = SearchScratch::new(data.rows());
+    let mut cur = data.open();
+    search_with_scratch(&mut cur, graph, query, k, params, rng, &mut scratch)
+}
+
+/// [`search`] with caller-owned cursor and scratch: identical results,
+/// no per-query O(n) allocation, and (for disk-backed stores) the
+/// cursor's block cache stays warm across a batch of queries.
+pub fn search_with_scratch(
+    cur: &mut crate::data::store::StoreCursor<'_>,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    rng: &mut Rng,
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
+    let n = graph.n();
     let ef = params.ef.max(k);
     let mut stats = SearchStats::default();
-    let mut visited = vec![false; n];
+    scratch.begin(n);
     // candidate min-queue (dist, id): BinaryHeap is a max-heap, use Reverse
-    let mut frontier: std::collections::BinaryHeap<std::cmp::Reverse<(Ordered, u32)>> =
-        std::collections::BinaryHeap::new();
     let mut pool = TopK::new(ef);
 
     for _ in 0..params.entries.max(1) {
         let e = rng.below(n);
-        if visited[e] {
+        if !scratch.visit(e) {
             continue;
         }
-        visited[e] = true;
-        let dd = d2(query, data.row(e));
+        let dd = d2(query, cur.row(e));
         stats.dist_evals += 1;
         pool.push(dd, e as u32);
-        frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+        scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
     }
 
-    while let Some(std::cmp::Reverse((od, cur))) = frontier.pop() {
+    while let Some(std::cmp::Reverse((od, node))) = scratch.frontier.pop() {
         let dcur = od.0;
         if dcur > pool.threshold() {
             break; // closest frontier node is worse than the worst pooled
         }
         stats.hops += 1;
-        for &nb in graph.neighbors(cur as usize) {
+        for &nb in graph.neighbors(node as usize) {
             if nb == u32::MAX {
                 continue;
             }
             let nb_us = nb as usize;
-            if visited[nb_us] {
+            if !scratch.visit(nb_us) {
                 continue;
             }
-            visited[nb_us] = true;
-            let dd = d2(query, data.row(nb_us));
+            let dd = d2(query, cur.row(nb_us));
             stats.dist_evals += 1;
             if dd < pool.threshold() {
                 pool.push(dd, nb);
-                frontier.push(std::cmp::Reverse((ordered_from(dd), nb)));
+                scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), nb)));
             }
         }
     }
@@ -157,6 +221,26 @@ mod tests {
         let ids: std::collections::HashSet<u32> = res.iter().map(|r| r.1).collect();
         assert_eq!(ids.len(), 10);
         assert!(stats.dist_evals > 0 && stats.dist_evals < 300, "visited {} nodes", stats.dist_evals);
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_allocation() {
+        let data = blobs(&BlobSpec::quick(400, 6, 6), 7);
+        let graph = brute::build(&data, 8, &Backend::native());
+        let mut scratch = SearchScratch::new(400);
+        let params = SearchParams::default();
+        for qi in (0..400).step_by(23) {
+            let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.02).collect();
+            let mut rng_a = Rng::new(qi as u64);
+            let mut rng_b = Rng::new(qi as u64);
+            let (fresh, fs) = search(&data, &graph, &q, 5, &params, &mut rng_a);
+            let mut cur = crate::data::store::VecStore::open(&data);
+            let (reused, rs) =
+                search_with_scratch(&mut cur, &graph, &q, 5, &params, &mut rng_b, &mut scratch);
+            assert_eq!(fresh, reused, "query {qi}");
+            assert_eq!(fs.dist_evals, rs.dist_evals);
+            assert_eq!(fs.hops, rs.hops);
+        }
     }
 
     #[test]

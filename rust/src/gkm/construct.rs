@@ -8,7 +8,7 @@
 //! → better cells → … (paper Fig. 2/3).  τ = 10 suffices for clustering;
 //! up to 32 for ANNS-grade graphs (§4.4).
 
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::gkm::gkmeans::{self, GkMeansParams};
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{Clustering, KmeansParams};
@@ -61,8 +61,8 @@ pub struct GraphBuildOutput {
     pub last_partition: Option<Clustering>,
 }
 
-/// Build the approximate KNN graph (Alg. 3).
-pub fn build(data: &VecSet, params: &ConstructParams, backend: &Backend) -> GraphBuildOutput {
+/// Build the approximate KNN graph (Alg. 3) over any [`VecStore`].
+pub fn build(data: &dyn VecStore, params: &ConstructParams, backend: &Backend) -> GraphBuildOutput {
     let timer = Timer::start();
     let n = data.rows();
     assert!(n >= 2, "need at least two samples");
@@ -111,7 +111,7 @@ pub fn build(data: &VecSet, params: &ConstructParams, backend: &Backend) -> Grap
 /// into the graph.  Cells up to the small-block size go through the
 /// backend's pairwise kernel; larger ones are chunked.
 pub fn refine_cells(
-    data: &VecSet,
+    data: &dyn VecStore,
     members: &[Vec<u32>],
     graph: &mut KnnGraph,
     backend: &Backend,
@@ -125,6 +125,8 @@ pub fn refine_cells(
     // cells where an m×m buffer would be quadratic.
     let mut updates = 0usize;
     let mut buf = Vec::new();
+    let mut cur = data.open();
+    let mut xa = vec![0f32; data.dim()];
     for cell in members {
         let m = cell.len();
         if m < 2 {
@@ -145,11 +147,11 @@ pub fn refine_cells(
             // equal-size init can't always hit ξ exactly)
             for a in 0..m {
                 let ia = cell[a] as usize;
-                let xa = data.row(ia);
+                cur.read_row_into(ia, &mut xa);
                 for b in (a + 1)..m {
                     let ib = cell[b] as usize;
                     let bound = graph.threshold(ia).max(graph.threshold(ib));
-                    let dd = crate::core_ops::dist::d2_bounded(xa, data.row(ib), bound);
+                    let dd = crate::core_ops::dist::d2_bounded(&xa, cur.row(ib), bound);
                     if dd < bound && graph.update_pair(ia, ib, dd) {
                         updates += 1;
                     }
@@ -172,7 +174,7 @@ pub fn refine_cells(
 /// unconditionally native — see its §Perf note — exactly the kernel the
 /// workers run.)
 pub fn refine_cells_threaded(
-    data: &VecSet,
+    data: &dyn VecStore,
     members: &[Vec<u32>],
     graph: &mut KnnGraph,
     backend: &Backend,
@@ -183,10 +185,13 @@ pub fn refine_cells_threaded(
         return refine_cells(data, members, graph, backend);
     }
     let d = data.dim();
+    let graph_ref: &KnnGraph = graph;
     let parts = crate::util::pool::par_map_chunks(threads, members.len(), |_, range| {
         let mut out: Vec<(u32, u32, f32)> = Vec::new();
         let mut buf = Vec::new();
         let mut gathered = Vec::new();
+        let mut cur = data.open();
+        let mut xa = vec![0f32; d];
         for cell in &members[range] {
             let m = cell.len();
             if m < 2 {
@@ -197,7 +202,7 @@ pub fn refine_cells_threaded(
                 // share a PJRT engine; see runtime::backend docs)
                 gathered.clear();
                 for &i in cell.iter() {
-                    gathered.extend_from_slice(data.row(i as usize));
+                    gathered.extend_from_slice(cur.row(i as usize));
                 }
                 buf.resize(m * m, 0.0);
                 crate::core_ops::blockdist::block_l2(&gathered, &gathered, d, &mut buf);
@@ -210,11 +215,11 @@ pub fn refine_cells_threaded(
                 // bounded scalar pairs against the threshold snapshot
                 for a in 0..m {
                     let ia = cell[a] as usize;
-                    let xa = data.row(ia);
+                    cur.read_row_into(ia, &mut xa);
                     for b in (a + 1)..m {
                         let ib = cell[b] as usize;
-                        let bound = graph.threshold(ia).max(graph.threshold(ib));
-                        let dd = crate::core_ops::dist::d2_bounded(xa, data.row(ib), bound);
+                        let bound = graph_ref.threshold(ia).max(graph_ref.threshold(ib));
+                        let dd = crate::core_ops::dist::d2_bounded(&xa, cur.row(ib), bound);
                         if dd < bound {
                             out.push((cell[a], cell[b], dd));
                         }

@@ -43,6 +43,7 @@
 
 use crate::core_ops::dist::norm2;
 use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::boost::DeltaCache;
@@ -81,9 +82,10 @@ pub fn run(
 
 /// The Alg. 2 engine with a 2M-tree initialization
 /// ([`crate::model::GkMeans`] / [`crate::model::KGraphGkMeans`] execute
-/// this on their respective graphs).
+/// this on their respective graphs).  Runs over any [`VecStore`]; the
+/// epoch scans read the store through per-worker cursors.
 pub fn run_core(
-    data: &VecSet,
+    data: &dyn VecStore,
     k: usize,
     graph: &KnnGraph,
     params: &GkMeansParams,
@@ -139,7 +141,7 @@ impl EpochScratch {
 /// worker's scratch (no shared mutable state: `c`/`cache`/`graph` are
 /// frozen for the whole scan phase).
 fn scan_shard(
-    data: &VecSet,
+    data: &dyn VecStore,
     c: &Clustering,
     cache: &DeltaCache,
     graph: &KnnGraph,
@@ -147,13 +149,14 @@ fn scan_shard(
     samples: &[usize],
     scratch: &mut EpochScratch,
 ) {
+    let mut cur = data.open();
     for &i in samples {
         let u = c.labels[i] as usize;
         scratch.cand.collect(&c.labels, graph.neighbors(i), kappa, None, Some(u as u32));
         if scratch.cand.q.is_empty() {
             continue;
         }
-        let x = data.row(i);
+        let x = cur.row(i);
         let xx = norm2(x) as f64;
         let leave = cache.leave(c, x, xx, u);
         let mut best_v = u;
@@ -174,7 +177,7 @@ fn scan_shard(
 
 /// Run Alg. 2's optimization loop from an existing partition.
 pub fn run_from(
-    data: &VecSet,
+    data: &dyn VecStore,
     mut c: Clustering,
     graph: &KnnGraph,
     params: &GkMeansParams,
@@ -184,7 +187,8 @@ pub fn run_from(
     assert_eq!(graph.n(), n, "graph size != dataset size");
     let kappa = params.kappa.min(graph.kappa());
     let threads = pool::resolve_threads(params.base.threads).min(n.max(1));
-    let total_norm: f64 = (0..n).map(|i| norm2(data.row(i)) as f64).sum();
+    let mut cur = data.open();
+    let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x6B6D_6561);
     let mut cache = DeltaCache::new(&c);
     let mut order: Vec<usize> = (0..n).collect();
@@ -203,7 +207,7 @@ pub fn run_from(
             rng.shuffle(&mut order);
             let mut moves = 0usize;
             for &i in &order {
-                let x = data.row(i);
+                let x = cur.row(i);
                 let u = c.labels[i] as usize;
                 // --- collect Q (lines 6–11), O(κ) dedup via CandidateSet ---
                 scratch.cand.collect(&c.labels, graph.neighbors(i), kappa, None, Some(u as u32));
@@ -278,7 +282,7 @@ pub fn run_from(
                         if u == v {
                             continue;
                         }
-                        let x = data.row(i);
+                        let x = cur.row(i);
                         let delta = cache.gain(&c, x, p.xx, v) + cache.leave(&c, x, p.xx, u);
                         if delta > 0.0 {
                             cache.commit_move(&mut c, i, x, p.xx, u, v);

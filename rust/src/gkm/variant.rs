@@ -10,6 +10,7 @@
 
 use crate::core_ops::dist::{d2_via_dot, dot, norm2};
 use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput};
@@ -33,9 +34,9 @@ pub fn run(
 }
 
 /// The traditional-core engine ([`crate::model::GkMeansStar`] executes
-/// this).
+/// this).  Runs over any [`VecStore`].
 pub fn run_core(
-    data: &VecSet,
+    data: &dyn VecStore,
     k: usize,
     graph: &KnnGraph,
     params: &GkMeansParams,
@@ -57,7 +58,8 @@ pub fn run_core(
     let mut clustering = Clustering::from_labels(data, labels, k);
     let init_seconds = timer.elapsed_s();
     let mut centroids = clustering.centroids();
-    let total_norm: f64 = (0..n).map(|i| norm2(data.row(i)) as f64).sum();
+    let mut cur = data.open();
+    let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x7452_6164);
     let mut order: Vec<usize> = (0..n).collect();
     // shared O(κ) epoch-stamped dedup (the Δℐ core uses the same helper;
@@ -86,7 +88,7 @@ pub fn run_core(
         // Δℐ-driven GK-means proper (gkmeans.rs) is untouched.
         let cnorms: Vec<f32> = (0..k).map(|r| norm2(centroids.row(r))).collect();
         for &i in &order {
-            let x = data.row(i);
+            let x = cur.row(i);
             let xx = norm2(x);
             let u = clustering.labels[i] as usize;
             cand.collect(&clustering.labels, graph.neighbors(i), kappa, Some(u as u32), None);

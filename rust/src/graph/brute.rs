@@ -10,26 +10,30 @@
 //! bit-identical to the serial build.
 
 use crate::core_ops::blockdist;
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::graph::knn::KnnGraph;
 use crate::runtime::Backend;
 use crate::util::pool;
 
-/// Build the exact κ-NN graph with blocked distance tiles (serial).
-pub fn build(data: &VecSet, kappa: usize, backend: &Backend) -> KnnGraph {
+/// Build the exact κ-NN graph with blocked distance tiles (serial) over
+/// any [`VecStore`] — two cursors stream the query-row and candidate-row
+/// tiles, so the n×n scan runs out-of-core with a bounded footprint.
+pub fn build(data: &dyn VecStore, kappa: usize, backend: &Backend) -> KnnGraph {
     let n = data.rows();
     let d = data.dim();
     let mut g = KnnGraph::empty(n, kappa);
     const B: usize = 256;
     let mut block = vec![0f32; B * B];
+    let mut xcur = data.open();
+    let mut ycur = data.open();
     let mut i0 = 0;
     while i0 < n {
         let rows = (n - i0).min(B);
-        let xb = data.rows_flat(i0, i0 + rows);
+        let xb = xcur.block(i0, i0 + rows);
         let mut j0 = 0;
         while j0 < n {
             let cols = (n - j0).min(B);
-            let yb = data.rows_flat(j0, j0 + cols);
+            let yb = ycur.block(j0, j0 + cols);
             let blk = &mut block[..rows * cols];
             backend.block_l2(xb, yb, d, blk);
             for r in 0..rows {
@@ -55,7 +59,12 @@ pub fn build(data: &VecSet, kappa: usize, backend: &Backend) -> KnnGraph {
 /// by design); against a native-backend serial build the result is
 /// bit-identical, while a PJRT serial build differs only at f32 kernel
 /// tolerance.
-pub fn build_threaded(data: &VecSet, kappa: usize, backend: &Backend, threads: usize) -> KnnGraph {
+pub fn build_threaded(
+    data: &dyn VecStore,
+    kappa: usize,
+    backend: &Backend,
+    threads: usize,
+) -> KnnGraph {
     let n = data.rows();
     let threads = pool::resolve_threads(threads).min(n.max(1));
     if threads <= 1 {
@@ -66,14 +75,16 @@ pub fn build_threaded(data: &VecSet, kappa: usize, backend: &Backend, threads: u
     let parts = pool::par_map_chunks(threads, n, |_, range| {
         let mut part = KnnGraph::empty(range.len(), kappa);
         let mut block = vec![0f32; B * B];
+        let mut xcur = data.open();
+        let mut ycur = data.open();
         let mut i0 = range.start;
         while i0 < range.end {
             let rows = (range.end - i0).min(B);
-            let xb = data.rows_flat(i0, i0 + rows);
+            let xb = xcur.block(i0, i0 + rows);
             let mut j0 = 0;
             while j0 < n {
                 let cols = (n - j0).min(B);
-                let yb = data.rows_flat(j0, j0 + cols);
+                let yb = ycur.block(j0, j0 + cols);
                 let blk = &mut block[..rows * cols];
                 blockdist::block_l2(xb, yb, d, blk);
                 for r in 0..rows {
@@ -101,13 +112,14 @@ pub fn build_threaded(data: &VecSet, kappa: usize, backend: &Backend, threads: u
 
 /// Exact κ nearest neighbors of one query row index (used by sampled
 /// recall on sets too large for the full graph).
-pub fn exact_neighbors_of(data: &VecSet, i: usize, kappa: usize) -> Vec<u32> {
+pub fn exact_neighbors_of(data: &dyn VecStore, i: usize, kappa: usize) -> Vec<u32> {
     use crate::core_ops::topk::TopK;
     let mut t = TopK::new(kappa);
-    let q = data.row(i);
+    let mut cur = data.open();
+    let q = cur.row(i).to_vec();
     for j in 0..data.rows() {
         if j != i {
-            t.push(crate::core_ops::dist::d2(q, data.row(j)), j as u32);
+            t.push(crate::core_ops::dist::d2(&q, cur.row(j)), j as u32);
         }
     }
     t.into_sorted().into_iter().map(|n| n.id).collect()

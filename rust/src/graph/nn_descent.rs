@@ -23,8 +23,7 @@
 //! would accept — no neighbor the serial pass would have found is ever
 //! missed.  `threads = 1` keeps the historical serial loop bit-for-bit.
 
-use crate::core_ops::dist::d2;
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::graph::knn::KnnGraph;
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -53,12 +52,13 @@ impl Default for NnDescentParams {
 /// Evaluate the local joins for one shard of nodes against a frozen
 /// threshold snapshot, returning the candidate updates that pass.
 fn join_shard(
-    data: &VecSet,
+    data: &dyn VecStore,
     g: &KnnGraph,
     new_cand: &mut [Vec<u32>],
     old_cand: &mut [Vec<u32>],
 ) -> Vec<(u32, u32, f32)> {
     let mut out = Vec::new();
+    let mut cur = data.open();
     for (news, olds) in new_cand.iter_mut().zip(old_cand.iter_mut()) {
         news.sort_unstable();
         news.dedup();
@@ -67,7 +67,7 @@ fn join_shard(
         for a in 0..news.len() {
             for b in (a + 1)..news.len() {
                 let (u, v) = (news[a] as usize, news[b] as usize);
-                let dd = d2(data.row(u), data.row(v));
+                let dd = cur.d2_pair(u, v);
                 if dd < g.threshold(u) || dd < g.threshold(v) {
                     out.push((news[a], news[b], dd));
                 }
@@ -78,7 +78,7 @@ fn join_shard(
                 if u == v {
                     continue;
                 }
-                let dd = d2(data.row(u), data.row(v));
+                let dd = cur.d2_pair(u, v);
                 if dd < g.threshold(u) || dd < g.threshold(v) {
                     out.push((news[a], vv, dd));
                 }
@@ -88,18 +88,20 @@ fn join_shard(
     out
 }
 
-/// Build an approximate κ-NN graph with NN-Descent.
-pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph {
+/// Build an approximate κ-NN graph with NN-Descent over any [`VecStore`]
+/// (the local joins read random row pairs through per-worker cursors).
+pub fn build(data: &dyn VecStore, kappa: usize, params: &NnDescentParams) -> KnnGraph {
     let n = data.rows();
     let threads = pool::resolve_threads(params.threads).min(n.max(1));
     let mut rng = Rng::new(params.seed);
     let g = KnnGraph::random(n, kappa, &mut rng);
+    let mut cur = data.open();
     // materialize distances for the random lists so thresholds are real
     let ids0: Vec<(usize, Vec<u32>)> = (0..n).map(|i| (i, g.neighbors(i).to_vec())).collect();
     let mut g2 = KnnGraph::empty(n, kappa);
     for (i, ids) in ids0 {
         for j in ids {
-            let dd = d2(data.row(i), data.row(j as usize));
+            let dd = cur.d2_pair(i, j as usize);
             g2.update(i, j, dd);
         }
     }
@@ -153,7 +155,7 @@ pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph 
                         if u == v {
                             continue;
                         }
-                        let dd = d2(data.row(u), data.row(v));
+                        let dd = cur.d2_pair(u, v);
                         if dd < g.threshold(u) || dd < g.threshold(v) {
                             if g.update_pair(u, v, dd) {
                                 updates += 1;
@@ -167,7 +169,7 @@ pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph 
                         if u == v {
                             continue;
                         }
-                        let dd = d2(data.row(u), data.row(v));
+                        let dd = cur.d2_pair(u, v);
                         if dd < g.threshold(u) || dd < g.threshold(v) {
                             if g.update_pair(u, v, dd) {
                                 updates += 1;
@@ -239,6 +241,7 @@ pub fn build(data: &VecSet, kappa: usize, params: &NnDescentParams) -> KnnGraph 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core_ops::dist::d2;
     use crate::data::synth::{blobs, BlobSpec};
     use crate::graph::{brute, recall};
     use crate::runtime::Backend;

@@ -6,7 +6,7 @@
 //! position — §5.1 measures "only the recall of top-1"; for VLAD10M it is
 //! estimated from 100 random samples.  Both modes live here.
 
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::graph::brute;
 use crate::graph::knn::KnnGraph;
 use crate::util::rng::Rng;
@@ -46,7 +46,7 @@ pub fn recall_at_k(approx: &KnnGraph, exact: &KnnGraph, kappa: usize) -> f64 {
 
 /// Sampled top-1 recall for large `n` (the paper's VLAD10M protocol:
 /// estimate from `samples` random nodes with exact per-query search).
-pub fn sampled_recall_at_1(data: &VecSet, approx: &KnnGraph, samples: usize, seed: u64) -> f64 {
+pub fn sampled_recall_at_1(data: &dyn VecStore, approx: &KnnGraph, samples: usize, seed: u64) -> f64 {
     let n = data.rows();
     let mut rng = Rng::new(seed);
     let picks = rng.sample_indices(n, samples.min(n));

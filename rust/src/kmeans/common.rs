@@ -9,6 +9,7 @@
 
 use crate::core_ops::dist::{dot, norm2};
 use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 
 /// Common iteration-control parameters shared by the k-means variants.
 #[derive(Debug, Clone)]
@@ -48,7 +49,7 @@ pub struct Clustering {
 
 impl Clustering {
     /// Build state from a label array (recomputes composites/counts).
-    pub fn from_labels(data: &VecSet, labels: Vec<u32>, k: usize) -> Clustering {
+    pub fn from_labels(data: &dyn VecStore, labels: Vec<u32>, k: usize) -> Clustering {
         assert_eq!(labels.len(), data.rows());
         let dim = data.dim();
         let mut c = Clustering {
@@ -62,15 +63,18 @@ impl Clustering {
         c
     }
 
-    /// Recompute composite vectors and counts from labels.
-    pub fn rebuild(&mut self, data: &VecSet) {
+    /// Recompute composite vectors and counts from labels (one
+    /// sequential pass over the store).
+    pub fn rebuild(&mut self, data: &dyn VecStore) {
         self.composite.iter_mut().for_each(|v| *v = 0.0);
         self.counts.iter_mut().for_each(|v| *v = 0);
+        let mut cur = data.open();
         for (i, &l) in self.labels.iter().enumerate() {
             let l = l as usize;
             debug_assert!(l < self.k, "label {l} out of range k={}", self.k);
+            let row = cur.row(i);
             let dst = &mut self.composite[l * self.dim..(l + 1) * self.dim];
-            for (dv, xv) in dst.iter_mut().zip(data.row(i)) {
+            for (dv, xv) in dst.iter_mut().zip(row) {
                 *dv += xv;
             }
             self.counts[l] += 1;
@@ -120,8 +124,9 @@ impl Clustering {
     /// Identity: Σ_i ‖x_i − C_{q(i)}‖² = Σ_i ‖x_i‖² − Σ_r ‖D_r‖²/n_r,
     /// so distortion falls exactly as ℐ rises — both views are used by the
     /// eval code; this one is O(n·d) only in the Σ‖x‖² term.
-    pub fn distortion(&self, data: &VecSet) -> f64 {
-        let total: f64 = (0..data.rows()).map(|i| norm2(data.row(i)) as f64).sum();
+    pub fn distortion(&self, data: &dyn VecStore) -> f64 {
+        let mut cur = data.open();
+        let total: f64 = (0..data.rows()).map(|i| norm2(cur.row(i)) as f64).sum();
         (total - self.objective()) / data.rows().max(1) as f64
     }
 
@@ -181,7 +186,7 @@ impl Clustering {
     }
 
     /// Structural invariants; used by tests and the property framework.
-    pub fn check_invariants(&self, data: &VecSet) -> Result<(), String> {
+    pub fn check_invariants(&self, data: &dyn VecStore) -> Result<(), String> {
         if self.labels.len() != data.rows() {
             return Err("label count != rows".into());
         }
@@ -196,13 +201,14 @@ impl Clustering {
             return Err("cached counts out of sync".into());
         }
         // composite check on a few clusters (full check is O(n·d))
+        let mut cur = data.open();
         let mut comp = vec![0f64; self.k.min(8) * self.dim];
         for (i, &l) in self.labels.iter().enumerate() {
             let l = l as usize;
             if l < self.k.min(8) {
                 for (a, v) in comp[l * self.dim..(l + 1) * self.dim]
                     .iter_mut()
-                    .zip(data.row(i))
+                    .zip(cur.row(i))
                 {
                     *a += *v as f64;
                 }
@@ -257,10 +263,11 @@ impl KmeansOutput {
 }
 
 /// Exact distortion computed from scratch (O(n·d), reference for tests).
-pub fn distortion_exact(data: &VecSet, labels: &[u32], centroids: &VecSet) -> f64 {
+pub fn distortion_exact(data: &dyn VecStore, labels: &[u32], centroids: &VecSet) -> f64 {
+    let mut cur = data.open();
     let mut s = 0f64;
     for (i, &l) in labels.iter().enumerate() {
-        s += crate::core_ops::dist::d2(data.row(i), centroids.row(l as usize)) as f64;
+        s += crate::core_ops::dist::d2(cur.row(i), centroids.row(l as usize)) as f64;
     }
     s / data.rows().max(1) as f64
 }

@@ -2,27 +2,29 @@
 
 use crate::core_ops::dist::d2;
 use crate::data::matrix::VecSet;
+use crate::data::store::{self, VecStore};
 use crate::util::rng::Rng;
 
 /// k distinct data points chosen uniformly at random.
-pub fn random_init(data: &VecSet, k: usize, rng: &mut Rng) -> VecSet {
+pub fn random_init(data: &dyn VecStore, k: usize, rng: &mut Rng) -> VecSet {
     assert!(k <= data.rows(), "k={k} > n={}", data.rows());
     let idx = rng.sample_indices(data.rows(), k);
-    data.gather(&idx)
+    store::gather(data, &idx)
 }
 
 /// k-means++ seeding: each next seed drawn ∝ D²(x) to the nearest chosen
-/// seed.  O(n·k·d); used by the Lloyd / Mini-Batch baselines.
-pub fn kmeanspp_init(data: &VecSet, k: usize, rng: &mut Rng) -> VecSet {
+/// seed.  O(n·k·d); used by the Lloyd / Mini-Batch baselines.  Each
+/// round is one sequential scan of the store, so it runs out-of-core.
+pub fn kmeanspp_init(data: &dyn VecStore, k: usize, rng: &mut Rng) -> VecSet {
     let n = data.rows();
     assert!(k <= n, "k={k} > n={n}");
+    let mut cur = data.open();
     let mut centers = VecSet::zeros(0, data.dim());
     let first = rng.below(n);
-    centers.push_row(data.row(first));
+    let c0 = cur.row(first).to_vec();
+    centers.push_row(&c0);
 
-    let mut best_d2: Vec<f64> = (0..n)
-        .map(|i| d2(data.row(i), data.row(first)) as f64)
-        .collect();
+    let mut best_d2: Vec<f64> = (0..n).map(|i| d2(cur.row(i), &c0) as f64).collect();
 
     for _ in 1..k {
         let total: f64 = best_d2.iter().sum();
@@ -40,12 +42,12 @@ pub fn kmeanspp_init(data: &VecSet, k: usize, rng: &mut Rng) -> VecSet {
             }
             chosen
         };
-        centers.push_row(data.row(pick));
-        let c = centers.row(centers.rows() - 1).to_vec();
-        for i in 0..n {
-            let dd = d2(data.row(i), &c) as f64;
-            if dd < best_d2[i] {
-                best_d2[i] = dd;
+        let c = cur.row(pick).to_vec();
+        centers.push_row(&c);
+        for (i, best) in best_d2.iter_mut().enumerate() {
+            let dd = d2(cur.row(i), &c) as f64;
+            if dd < *best {
+                *best = dd;
             }
         }
     }

@@ -6,9 +6,11 @@
 
 use crate::core_ops::argmin::ArgminAcc;
 use crate::data::matrix::VecSet;
+use crate::data::store::{StoreCursor, VecStore};
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
 use crate::kmeans::init::kmeanspp_init;
 use crate::runtime::Backend;
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -18,8 +20,15 @@ pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backend) ->
     run_core(data, k, params, backend)
 }
 
-/// The Lloyd engine ([`crate::model::Lloyd`] executes this).
-pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backend) -> KmeansOutput {
+/// The Lloyd engine ([`crate::model::Lloyd`] executes this) — runs over
+/// any [`VecStore`], so a disk-backed dataset streams through the
+/// assignment and update scans block by block.
+pub fn run_core(
+    data: &dyn VecStore,
+    k: usize,
+    params: &KmeansParams,
+    backend: &Backend,
+) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
     let mut rng = Rng::new(params.seed);
@@ -31,7 +40,7 @@ pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backen
     let mut history = Vec::new();
     for iter in 0..params.max_iters {
         // --- assignment (the bottleneck) ---
-        let acc = assign(data, &centroids, backend);
+        let acc = assign_threaded(data, &centroids, backend, params.threads);
         let mut moves = 0usize;
         for i in 0..n {
             if labels[i] != acc.idx[i] {
@@ -54,22 +63,89 @@ pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backen
     KmeansOutput { clustering, history, total_seconds: timer.elapsed_s(), init_seconds }
 }
 
-/// Full closest-centroid assignment via blocked distance tiles.
-pub fn assign(data: &VecSet, centroids: &VecSet, backend: &Backend) -> ArgminAcc {
-    backend.assign_blocks(data.flat(), centroids.flat(), data.dim(), centroids.rows())
+/// Rows streamed per `assign_blocks` call on the cursor path.
+const STREAM_ROWS: usize = 1024;
+
+/// Assign store rows `[lo, hi)` to their closest centroid, streaming
+/// blocks through the cursor.  Each row's result depends only on that
+/// row and the centroids, so the block boundaries do not affect values.
+fn assign_stream(
+    cur: &mut StoreCursor<'_>,
+    lo: usize,
+    hi: usize,
+    centroids: &VecSet,
+    backend: &Backend,
+    d: usize,
+) -> ArgminAcc {
+    let k = centroids.rows();
+    let mut acc = ArgminAcc::new(hi - lo);
+    let mut r = lo;
+    while r < hi {
+        let r2 = (r + STREAM_ROWS).min(hi);
+        let sub = backend.assign_blocks(cur.block(r, r2), centroids.flat(), d, k);
+        acc.best[r - lo..r2 - lo].copy_from_slice(&sub.best);
+        acc.idx[r - lo..r2 - lo].copy_from_slice(&sub.idx);
+        r = r2;
+    }
+    acc
+}
+
+/// Full closest-centroid assignment via blocked distance tiles.  A
+/// resident store routes its whole flat buffer through the backend in
+/// one call (the historical path, bit-identical); a chunked store
+/// streams fixed-size row blocks.
+pub fn assign(data: &dyn VecStore, centroids: &VecSet, backend: &Backend) -> ArgminAcc {
+    if let Some(flat) = data.as_flat() {
+        return backend.assign_blocks(flat, centroids.flat(), data.dim(), centroids.rows());
+    }
+    assign_stream(&mut data.open(), 0, data.rows(), centroids, backend, data.dim())
+}
+
+/// Row-sharded multi-threaded [`assign`] over `util::pool`: each worker
+/// opens its own cursor and runs the native kernel on its stripe.
+/// Stripes are disjoint and per-row results are independent, so the
+/// result is identical to the serial assignment; `threads <= 1` falls
+/// through to [`assign`] (bit-identical to the historical path).
+pub fn assign_threaded(
+    data: &dyn VecStore,
+    centroids: &VecSet,
+    backend: &Backend,
+    threads: usize,
+) -> ArgminAcc {
+    let n = data.rows();
+    let threads = pool::resolve_threads(threads).min(n.max(1));
+    if threads <= 1 {
+        return assign(data, centroids, backend);
+    }
+    let d = data.dim();
+    let parts = pool::par_map_chunks(threads, n, |_, r| {
+        let mut cur = data.open();
+        assign_stream(&mut cur, r.start, r.end, centroids, &Backend::Native, d)
+    });
+    let mut acc = ArgminAcc::new(n);
+    let mut off = 0;
+    for p in parts {
+        let m = p.idx.len();
+        acc.best[off..off + m].copy_from_slice(&p.best);
+        acc.idx[off..off + m].copy_from_slice(&p.idx);
+        off += m;
+    }
+    acc
 }
 
 /// Mean update; empty clusters keep their previous centroid (standard
 /// empty-cluster guard, keeps k constant like the paper's implementations).
-pub fn update_centroids(data: &VecSet, labels: &[u32], k: usize, prev: &VecSet) -> VecSet {
+pub fn update_centroids(data: &dyn VecStore, labels: &[u32], k: usize, prev: &VecSet) -> VecSet {
     let d = data.dim();
+    let mut cur = data.open();
     let mut sums = vec![0f64; k * d];
     let mut counts = vec![0u64; k];
     for (i, &l) in labels.iter().enumerate() {
         let l = l as usize;
         counts[l] += 1;
+        let row = cur.row(i);
         let dst = &mut sums[l * d..(l + 1) * d];
-        for (a, v) in dst.iter_mut().zip(data.row(i)) {
+        for (a, v) in dst.iter_mut().zip(row) {
             *a += *v as f64;
         }
     }
@@ -133,6 +209,38 @@ mod tests {
         assert_eq!(c.row(1), &[6.0]);
         assert_eq!(c.row(2), &[7.0]);
     }
+
+    #[test]
+    fn threaded_assignment_matches_serial_exactly() {
+        let data = blobs(&BlobSpec::quick(700, 6, 9), 6);
+        let mut rng = Rng::new(8);
+        let centroids = crate::kmeans::init::kmeanspp_init(&data, 9, &mut rng);
+        let serial = assign(&data, &centroids, &Backend::native());
+        for threads in [2usize, 3, 8] {
+            let par = assign_threaded(&data, &centroids, &Backend::native(), threads);
+            assert_eq!(serial.idx, par.idx, "threads={threads}");
+            assert_eq!(serial.best, par.best, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threaded_run_matches_serial_exactly() {
+        let data = blobs(&BlobSpec::quick(400, 5, 6), 7);
+        let serial = run_core(&data, 6, &KmeansParams::default(), &Backend::native());
+        let par = run_core(
+            &data,
+            6,
+            &KmeansParams { threads: 4, ..Default::default() },
+            &Backend::native(),
+        );
+        assert_eq!(serial.clustering.labels, par.clustering.labels);
+        for (a, b) in serial.history.iter().zip(&par.history) {
+            assert_eq!(a.distortion.to_bits(), b.distortion.to_bits());
+            assert_eq!(a.moves, b.moves);
+        }
+    }
+
+    use crate::util::rng::Rng;
 
     #[test]
     fn k_equals_n_zero_distortion() {

@@ -8,8 +8,10 @@
 
 use crate::core_ops::argmin::ArgminAcc;
 use crate::data::matrix::VecSet;
+use crate::data::store::{self, VecStore};
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
 use crate::kmeans::init::kmeanspp_init;
+use crate::kmeans::lloyd::assign_threaded;
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -38,22 +40,30 @@ pub fn run(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Backend)
 /// One "iteration" in the history = one batch step; `base.max_iters`
 /// counts batch steps (matching how the paper plots it against
 /// wall-clock, where Mini-Batch may terminate before one full data pass).
-pub fn run_core(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Backend) -> KmeansOutput {
+/// Runs over any [`VecStore`]: batches are gathered through a cursor and
+/// the full-dataset distortion/assignment passes stream in blocks,
+/// sharded over `base.threads` workers.
+pub fn run_core(
+    data: &dyn VecStore,
+    k: usize,
+    params: &MiniBatchParams,
+    backend: &Backend,
+) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
     let b = params.batch.min(n);
+    let threads = params.base.threads;
     let mut rng = Rng::new(params.base.seed);
 
     let mut centroids = kmeanspp_init(data, k, &mut rng);
     let init_seconds = timer.elapsed_s();
     let mut counts = vec![0u64; k];
-    let d = data.dim();
     let mut history = Vec::new();
 
     for iter in 0..params.base.max_iters {
         let batch_idx = rng.sample_indices(n, b);
-        let batch = data.gather(&batch_idx);
-        let acc: ArgminAcc = backend.assign_blocks(batch.flat(), centroids.flat(), d, k);
+        let batch = store::gather(data, &batch_idx);
+        let acc: ArgminAcc = assign_threaded(&batch, &centroids, backend, threads);
         let mut moved = 0usize;
         for (t, &_i) in batch_idx.iter().enumerate() {
             let c = acc.idx[t] as usize;
@@ -71,7 +81,7 @@ pub fn run_core(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Bac
         // Fig. 5 curves are honest.
         let full = iter % 10 == 9 || iter + 1 == params.base.max_iters;
         let distortion = if full {
-            let acc_all = backend.assign_blocks(data.flat(), centroids.flat(), d, k);
+            let acc_all = assign_threaded(data, &centroids, backend, threads);
             acc_all.best.iter().map(|&v| v as f64).sum::<f64>() / n as f64
         } else {
             acc.best.iter().map(|&v| v as f64).sum::<f64>() / b as f64
@@ -80,7 +90,7 @@ pub fn run_core(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Bac
     }
 
     // Final full assignment for the returned clustering.
-    let acc = backend.assign_blocks(data.flat(), centroids.flat(), d, k);
+    let acc = assign_threaded(data, &centroids, backend, threads);
     let clustering = Clustering::from_labels(data, acc.idx.clone(), k);
     KmeansOutput { clustering, history, total_seconds: timer.elapsed_s(), init_seconds }
 }

@@ -8,7 +8,7 @@
 //! it to produce its initial partition.
 
 use crate::core_ops::dist::d2;
-use crate::data::matrix::VecSet;
+use crate::data::store::{StoreCursor, VecStore};
 use crate::kmeans::common::Clustering;
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
@@ -37,7 +37,7 @@ impl Default for TwoMeansParams {
 
 /// Run Alg. 1: partition `data` into exactly `k` clusters of near-equal
 /// size.  Returns per-sample labels in `[0, k)`.
-pub fn run(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) -> Vec<u32> {
+pub fn run(data: &dyn VecStore, k: usize, params: &TwoMeansParams, backend: &Backend) -> Vec<u32> {
     let threads = crate::util::pool::resolve_threads(params.threads);
     if threads > 1 {
         return run_parallel(data, k, params, threads);
@@ -81,7 +81,12 @@ pub fn run(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) 
 }
 
 /// Convenience: run Alg. 1 and wrap into a [`Clustering`].
-pub fn cluster(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backend) -> Clustering {
+pub fn cluster(
+    data: &dyn VecStore,
+    k: usize,
+    params: &TwoMeansParams,
+    backend: &Backend,
+) -> Clustering {
     Clustering::from_labels(data, run(data, k, params, backend), k)
 }
 
@@ -92,7 +97,12 @@ pub fn cluster(data: &VecSet, k: usize, params: &TwoMeansParams, backend: &Backe
 /// deterministic for a fixed `(seed, threads)`.  Workers use the native
 /// margin path (`prefers_blocked` would only route subsets ≥ 200K through
 /// PJRT, and PJRT dispatch is not shared across threads).
-fn run_parallel(data: &VecSet, k: usize, params: &TwoMeansParams, threads: usize) -> Vec<u32> {
+fn run_parallel(
+    data: &dyn VecStore,
+    k: usize,
+    params: &TwoMeansParams,
+    threads: usize,
+) -> Vec<u32> {
     let n = data.rows();
     assert!(k >= 1 && k <= n, "k={k} n={n}");
     let mut members: Vec<Vec<u32>> = Vec::with_capacity(k);
@@ -166,7 +176,7 @@ fn run_parallel(data: &VecSet, k: usize, params: &TwoMeansParams, threads: usize
 
 /// Bisect one subset into two equal halves (Alg. 1 steps 8–9).
 fn bisect_equal(
-    data: &VecSet,
+    data: &dyn VecStore,
     subset: &[u32],
     params: &TwoMeansParams,
     rng: &mut Rng,
@@ -174,10 +184,11 @@ fn bisect_equal(
 ) -> (Vec<u32>, Vec<u32>) {
     let m = subset.len();
     let d = data.dim();
+    let mut cur = data.open();
 
     // --- 2-means on the subset ---
-    let mut c0 = data.row(subset[rng.below(m)] as usize).to_vec();
-    let mut c1 = data.row(subset[rng.below(m)] as usize).to_vec();
+    let mut c0 = cur.row(subset[rng.below(m)] as usize).to_vec();
+    let mut c1 = cur.row(subset[rng.below(m)] as usize).to_vec();
     if c0 == c1 {
         // nudge to break ties on duplicate draws
         for v in c1.iter_mut() {
@@ -188,11 +199,11 @@ fn bisect_equal(
 
     for _ in 0..params.bisect_iters.max(1) {
         // assignment by margin sign; margins via the backend for big subsets
-        compute_margins(data, subset, &c0, &c1, backend, &mut margins);
+        compute_margins(data, &mut cur, subset, &c0, &c1, backend, &mut margins);
         let (mut s0, mut s1) = (vec![0f64; d], vec![0f64; d]);
         let (mut n0, mut n1) = (0u32, 0u32);
         for (t, &i) in subset.iter().enumerate() {
-            let row = data.row(i as usize);
+            let row = cur.row(i as usize);
             if margins[t] <= 0.0 {
                 for (a, v) in s0.iter_mut().zip(row) {
                     *a += *v as f64;
@@ -209,9 +220,9 @@ fn bisect_equal(
             // degenerate split: re-seed the empty side and retry next sweep
             let pick = subset[rng.below(m)] as usize;
             if n0 == 0 {
-                c0 = data.row(pick).to_vec();
+                c0 = cur.row(pick).to_vec();
             } else {
-                c1 = data.row(pick).to_vec();
+                c1 = cur.row(pick).to_vec();
             }
             continue;
         }
@@ -225,11 +236,11 @@ fn bisect_equal(
 
     // --- BKM polish with k=2 on the subset (paper step 8) ---
     if params.boost_iters > 0 {
-        boost_polish(data, subset, &mut c0, &mut c1, params.boost_iters, rng, &mut margins);
+        boost_polish(&mut cur, subset, &mut c0, &mut c1, params.boost_iters, rng, &mut margins);
     }
 
     // --- equal-size adjustment (step 9): median split on the margin ---
-    compute_margins(data, subset, &c0, &c1, backend, &mut margins);
+    compute_margins(data, &mut cur, subset, &c0, &c1, backend, &mut margins);
     let mut order: Vec<usize> = (0..m).collect();
     order.sort_by(|&a, &b| margins[a].partial_cmp(&margins[b]).unwrap());
     let half = m / 2;
@@ -251,7 +262,8 @@ fn bisect_equal(
 /// margin[t] = d(x_t, c0) − d(x_t, c1); routed through the backend's
 /// bisect entry when the subset is large enough to amortize.
 fn compute_margins(
-    data: &VecSet,
+    data: &dyn VecStore,
+    cur: &mut StoreCursor<'_>,
     subset: &[u32],
     c0: &[f32],
     c1: &[f32],
@@ -262,7 +274,7 @@ fn compute_margins(
         backend.bisect_margins(data, subset, c0, c1, out);
     } else {
         for (t, &i) in subset.iter().enumerate() {
-            let row = data.row(i as usize);
+            let row = cur.row(i as usize);
             out[t] = d2(row, c0) - d2(row, c1);
         }
     }
@@ -270,7 +282,7 @@ fn compute_margins(
 
 /// A few BKM sweeps on the 2-cluster subproblem (incremental, Eqn. 3).
 fn boost_polish(
-    data: &VecSet,
+    cur: &mut StoreCursor<'_>,
     subset: &[u32],
     c0: &mut Vec<f32>,
     c1: &mut Vec<f32>,
@@ -279,11 +291,11 @@ fn boost_polish(
     margins: &mut [f32],
 ) {
     use crate::core_ops::dist::norm2;
-    let d = data.dim();
+    let d = c0.len();
     let m = subset.len();
     // composite vectors from the current margin assignment
     for (t, &i) in subset.iter().enumerate() {
-        let row = data.row(i as usize);
+        let row = cur.row(i as usize);
         margins[t] = d2(row, c0) - d2(row, c1);
     }
     let mut comp = vec![0f64; 2 * d];
@@ -293,7 +305,7 @@ fn boost_polish(
         let s = (margins[t] > 0.0) as usize;
         side[t] = s as u8;
         cnt[s] += 1.0;
-        for (a, v) in comp[s * d..(s + 1) * d].iter_mut().zip(data.row(i as usize)) {
+        for (a, v) in comp[s * d..(s + 1) * d].iter_mut().zip(cur.row(i as usize)) {
             *a += *v as f64;
         }
     }
@@ -313,7 +325,7 @@ fn boost_polish(
         rng.shuffle(&mut order);
         let mut moves = 0;
         for &t in &order {
-            let x = data.row(subset[t] as usize);
+            let x = cur.row(subset[t] as usize);
             let u = side[t] as usize;
             let v = 1 - u;
             if cnt[u] <= 1.0 {
@@ -356,6 +368,7 @@ fn boost_polish(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::VecSet;
     use crate::data::synth::{blobs, BlobSpec};
 
     #[test]

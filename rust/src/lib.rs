@@ -52,8 +52,11 @@
 //! * [`util`] — RNG, CLI/config parsing, timers, logging, and the
 //!   scoped-thread parallel execution layer ([`util::pool`]) — all with no
 //!   external deps.
-//! * [`data`] — dataset container, synthetic generators for the paper's
-//!   four datasets, fvecs/bvecs I/O.
+//! * [`data`] — dataset container, the [`data::store::VecStore`] storage
+//!   abstraction (in-RAM [`data::matrix::VecSet`] or the out-of-core
+//!   [`data::store::ChunkedVecStore`] streaming fixed-size row blocks
+//!   from disk), synthetic generators for the paper's four datasets,
+//!   fvecs/bvecs I/O.
 //! * [`core_ops`] — scalar & blocked distance math, top-κ selection.
 //! * [`kmeans`] — the engines for Lloyd, boost k-means (BKM), Mini-Batch,
 //!   closure k-means, and the 2M-tree initializer (Alg. 1).
@@ -86,6 +89,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::job::{ClusterJob, JobResult, Method};
     pub use crate::data::matrix::VecSet;
+    pub use crate::data::store::{ChunkedVecStore, VecStore};
     pub use crate::data::synth::{blobs, BlobSpec};
     pub use crate::data::DatasetSpec;
     pub use crate::gkm::ann::SearchParams;
@@ -93,7 +97,7 @@ pub mod prelude {
     pub use crate::kmeans::common::{Clustering, IterStat};
     pub use crate::model::{
         Boost, ClosureKmeans, Clusterer, FittedModel, GkMeans, GkMeansStar, KGraphGkMeans,
-        Lloyd, MiniBatch, RunContext,
+        Lloyd, MiniBatch, ModelVectors, RunContext,
     };
     pub use crate::runtime::Backend;
     pub use crate::util::rng::Rng;

@@ -57,7 +57,8 @@ const USAGE: &str = "\
 gkmeans — fast k-means driven by a KNN graph (Deng & Zhao 2017)
 
 USAGE:
-  gkmeans cluster --data <spec> --k <k> [--method gkmeans] [--save FILE [--keep-data]] [options]
+  gkmeans cluster --data <spec> --k <k> [--method gkmeans] [--save FILE [--keep-data]]
+                  [--stream] [options]
   gkmeans predict --model FILE --data <spec> [--out labels.ivecs]
   gkmeans graph   --data <spec> [--kappa 50 --tau 10 --xi 50] [--recall]
   gkmeans search  --data <spec> | --model FILE  [--queries 100 --topk 10 --ef 64]
@@ -76,9 +77,14 @@ COMMON OPTIONS:
                                0 = auto-detect; parallelizes GK-means
                                epochs, NN-Descent, graph builds, 2M-tree,
                                and model predict)
-  --save FILE                  persist the fitted model artifact
-  --keep-data                  embed the training vectors in the artifact
+  --save FILE                  persist the fitted model artifact (GKMODEL v2:
+                               section-offset layout; `search`/`predict`
+                               --model page the vectors from disk)
+  --keep-data                  carry the training vectors in the artifact
                                (required for `search --model`)
+  --stream                     cluster file-backed datasets out-of-core
+                               (fixed-size row blocks + resident cache
+                               instead of one in-RAM buffer)
   --config FILE                key=value config file (CLI overrides)
   --verbose / --quiet          log level
 ";
@@ -178,14 +184,26 @@ fn cmd_cluster(args: &Args) -> i32 {
     let args = effective(args);
     let job = job_of(&args);
     let backend = backend_of(&args);
-    let data = match job.dataset.load() {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
+    // --stream: file-backed datasets cluster out-of-core through the
+    // chunked storage layer instead of materializing in RAM
+    let data: Box<dyn gkmeans::data::store::VecStore> = if args.flag("stream") {
+        match job.dataset.open_store() {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        match job.dataset.load() {
+            Ok(d) => Box::new(d),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
         }
     };
-    let (model, rec) = pipeline::fit_job(&job, &data, &backend);
+    let (model, rec) = pipeline::fit_job(&job, data.as_ref(), &backend);
     print_result(&pipeline::result_from_model(&model, rec));
     if let Some(path) = args.get("save") {
         if let Err(e) = model.save(Path::new(path)) {
@@ -193,7 +211,7 @@ fn cmd_cluster(args: &Args) -> i32 {
             return 1;
         }
         let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
-        println!("saved model to {path} ({bytes} bytes)");
+        println!("saved model to {path} ({bytes} bytes, GKMODEL v2)");
         if model.graph.is_some() && model.data.is_none() {
             println!(
                 "note: vectors not embedded (pass --keep-data to serve `search --model`)"
@@ -330,16 +348,18 @@ fn cmd_graph(args: &Args) -> i32 {
     0
 }
 
-/// Serve ANN queries from a saved model artifact (`--model`).
+/// Serve ANN queries from a saved model artifact (`--model`) through the
+/// batched, multi-threaded query path.
 fn search_model(args: &Args) -> i32 {
     let model_path = args.get("model").expect("checked by caller");
-    let model = match FittedModel::load(Path::new(model_path)) {
+    let mut model = match FittedModel::load(Path::new(model_path)) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
         }
     };
+    model.threads = args.usize_or("threads", model.threads);
     let vecs = match model.data.as_ref() {
         Some(v) => v,
         None => {
@@ -351,10 +371,11 @@ fn search_model(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving {} ({} vectors, d={}, graph {})",
+        "serving {} ({} vectors, d={}, {}, graph {})",
         model_path,
         vecs.rows(),
         model.dim,
+        if vecs.is_resident() { "resident" } else { "paged from disk" },
         model
             .graph
             .as_ref()
@@ -368,25 +389,34 @@ fn search_model(args: &Args) -> i32 {
         seed: args.u64_or("seed", 20170707),
         ..Default::default()
     };
+    // sample perturbed indexed vectors as the query batch (one cursor:
+    // a paged store reuses its file handle + block cache across draws)
+    use gkmeans::data::store::VecStore as _;
+    let mut cur = vecs.open();
     let mut rng = Rng::new(sp.seed ^ 0x5EA5C);
-    let timer = Timer::start();
-    let mut evals = 0usize;
+    let mut qflat: Vec<f32> = Vec::with_capacity(nq * model.dim);
     for _ in 0..nq {
         let qi = rng.below(vecs.rows());
-        let q: Vec<f32> = vecs.row(qi).iter().map(|v| v + 0.001).collect();
-        match model.search_with_stats(&q, topk, &sp) {
-            Ok((_, stats)) => evals += stats.dist_evals,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 1;
-            }
-        }
+        qflat.extend(cur.row(qi).iter().map(|v| v + 0.001));
     }
+    drop(cur);
+    let queries = gkmeans::data::matrix::VecSet::from_flat(model.dim, qflat);
+    let timer = Timer::start();
+    let results = match model.search_batch(&queries, topk, &sp) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
     let total = timer.elapsed_s();
+    let hits: usize = results.iter().filter(|r| !r.is_empty()).count();
     println!(
-        "{nq} queries: avg latency={} avg dist-evals={}",
+        "{nq} queries (threads={}): {} non-empty, avg latency={}, {:.0} queries/s",
+        model.threads,
+        hits,
         fmt_secs(total / nq.max(1) as f64),
-        evals / nq.max(1)
+        nq as f64 / total.max(1e-12)
     );
     0
 }

@@ -9,6 +9,7 @@
 
 use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
+use crate::data::store::{self, VecStore};
 use crate::gkm::{construct, gkmeans, variant};
 use crate::graph::nn_descent;
 use crate::kmeans::{boost, closure, lloyd, minibatch};
@@ -29,13 +30,40 @@ pub trait Clusterer {
         self.method().name()
     }
 
-    /// Train on `data` under `ctx`, producing a [`FittedModel`].
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel;
+    /// Train on a resident dataset under `ctx`, producing a
+    /// [`FittedModel`].  Equivalent to [`Clusterer::fit_store`] on the
+    /// in-RAM store (bit-identical at `threads = 1`).
+    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+        self.fit_store(data, ctx)
+    }
+
+    /// Train on any [`VecStore`] under `ctx`.  The graph methods,
+    /// Lloyd, and Mini-Batch stream a disk-backed store block by block
+    /// (out-of-core); Boost and Closure k-means materialize a resident
+    /// copy first (logged) — their scan structure is an open item.
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel;
 }
 
 /// Clamp k to the dataset size (a 5-point dataset cannot hold 8 clusters).
-fn clamp_k(k: usize, data: &VecSet) -> usize {
+fn clamp_k(k: usize, data: &dyn VecStore) -> usize {
     k.min(data.rows()).max(1)
+}
+
+/// Borrow the store as a resident [`VecSet`], materializing (with a
+/// warning) when it is disk-backed — for the engines that still require
+/// resident data.
+fn resident<'a>(data: &'a dyn VecStore, owned: &'a mut Option<VecSet>, method: &str) -> &'a VecSet {
+    match data.as_vecset() {
+        Some(v) => v,
+        None => {
+            crate::log_warn!(
+                "{method} does not stream yet; materializing {} x {} store in RAM",
+                data.rows(),
+                data.dim()
+            );
+            owned.insert(store::materialize(data))
+        }
+    }
 }
 
 /// Alg. 3 construction params shared by both graph-building configs
@@ -67,7 +95,7 @@ impl Clusterer for Lloyd {
         Method::Lloyd
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
         let out = lloyd::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
         FittedModel::from_output(Method::Lloyd, data, ctx, out, None, 0.0)
     }
@@ -91,8 +119,10 @@ impl Clusterer for Boost {
         Method::Boost
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
-        let out = boost::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
+        let mut owned = None;
+        let v = resident(data, &mut owned, "boost k-means");
+        let out = boost::run_core(v, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
         FittedModel::from_output(Method::Boost, data, ctx, out, None, 0.0)
     }
 }
@@ -121,7 +151,7 @@ impl Clusterer for MiniBatch {
         Method::MiniBatch
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
         let params =
             minibatch::MiniBatchParams { batch: self.batch, base: ctx.kmeans_params() };
         let out = minibatch::run_core(data, clamp_k(self.k, data), &params, ctx.backend);
@@ -161,13 +191,15 @@ impl Clusterer for ClosureKmeans {
         Method::Closure
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
         let params = closure::ClosureParams {
             trees: self.trees,
             leaf_max: self.leaf_max,
             base: ctx.kmeans_params(),
         };
-        let out = closure::run_core(data, clamp_k(self.k, data), &params, ctx.backend);
+        let mut owned = None;
+        let v = resident(data, &mut owned, "closure k-means");
+        let out = closure::run_core(v, clamp_k(self.k, data), &params, ctx.backend);
         FittedModel::from_output(Method::Closure, data, ctx, out, None, 0.0)
     }
 }
@@ -212,7 +244,7 @@ impl Clusterer for GkMeans {
         Method::GkMeans
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
         let timer = Timer::start();
         let build =
             construct::build(data, &alg3_params(self.kappa, self.xi, self.tau, ctx), ctx.backend);
@@ -265,7 +297,7 @@ impl Clusterer for GkMeansStar {
         Method::GkMeansTrad
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
         let timer = Timer::start();
         let build =
             construct::build(data, &alg3_params(self.kappa, self.xi, self.tau, ctx), ctx.backend);
@@ -309,7 +341,7 @@ impl Clusterer for KGraphGkMeans {
         Method::KGraphGkMeans
     }
 
-    fn fit(&self, data: &VecSet, ctx: &RunContext) -> FittedModel {
+    fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
         let timer = Timer::start();
         let graph = nn_descent::build(
             data,

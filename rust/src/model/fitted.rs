@@ -13,6 +13,7 @@ use std::path::Path;
 
 use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
+use crate::data::store::{self, ChunkedVecStore, StoreCursor, VecStore};
 use crate::gkm::ann;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{IterStat, KmeansOutput};
@@ -20,6 +21,99 @@ use crate::model::RunContext;
 use crate::runtime::Backend;
 use crate::util::pool;
 use crate::util::rng::Rng;
+
+/// The indexed vectors a model serves ANN queries from: either embedded
+/// in RAM (the classic `keep_data` path) or paged from a file region —
+/// a GKMODEL v2 vectors section, or the original dataset file when the
+/// fit itself streamed from disk.
+#[derive(Debug, Clone)]
+pub enum ModelVectors {
+    /// Vectors resident in RAM (embedded in the artifact bytes).
+    Ram(VecSet),
+    /// Vectors paged on demand from disk through a block cache.
+    Disk(ChunkedVecStore),
+}
+
+impl ModelVectors {
+    pub fn rows(&self) -> usize {
+        match self {
+            ModelVectors::Ram(v) => v.rows(),
+            ModelVectors::Disk(c) => c.rows(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            ModelVectors::Ram(v) => v.dim(),
+            ModelVectors::Disk(c) => c.dim(),
+        }
+    }
+
+    /// Whether the vectors are resident in RAM.
+    pub fn is_resident(&self) -> bool {
+        matches!(self, ModelVectors::Ram(_))
+    }
+
+    /// Borrow the resident [`VecSet`], if any.
+    pub fn as_ram(&self) -> Option<&VecSet> {
+        match self {
+            ModelVectors::Ram(v) => Some(v),
+            ModelVectors::Disk(_) => None,
+        }
+    }
+
+    /// Copy out row `i` (allocates; fine for query sampling, not for
+    /// inner loops — those go through [`VecStore::open`]).
+    pub fn fetch_row(&self, i: usize) -> Vec<f32> {
+        match self {
+            ModelVectors::Ram(v) => v.row(i).to_vec(),
+            ModelVectors::Disk(c) => {
+                let mut cur = VecStore::open(c);
+                cur.row(i).to_vec()
+            }
+        }
+    }
+
+    /// Materialize into a resident [`VecSet`] (copies the Disk variant).
+    pub fn to_vecset(&self) -> VecSet {
+        match self {
+            ModelVectors::Ram(v) => v.clone(),
+            ModelVectors::Disk(c) => store::materialize(c),
+        }
+    }
+}
+
+impl VecStore for ModelVectors {
+    fn rows(&self) -> usize {
+        ModelVectors::rows(self)
+    }
+
+    fn dim(&self) -> usize {
+        ModelVectors::dim(self)
+    }
+
+    fn open(&self) -> StoreCursor<'_> {
+        match self {
+            ModelVectors::Ram(v) => VecStore::open(v),
+            ModelVectors::Disk(c) => VecStore::open(c),
+        }
+    }
+
+    fn as_flat(&self) -> Option<&[f32]> {
+        self.as_ram().map(|v| v.flat())
+    }
+
+    fn as_vecset(&self) -> Option<&VecSet> {
+        self.as_ram()
+    }
+
+    fn disk_backing(&self) -> Option<&ChunkedVecStore> {
+        match self {
+            ModelVectors::Ram(_) => None,
+            ModelVectors::Disk(c) => Some(c),
+        }
+    }
+}
 
 /// The artifact a [`crate::model::Clusterer`] fit produces.
 ///
@@ -57,8 +151,10 @@ pub struct FittedModel {
     /// The KNN graph the fit was driven by (graph methods only).
     pub graph: Option<KnnGraph>,
     /// Retained training vectors ([`RunContext::keep_data`]) — required
-    /// for [`FittedModel::search`] to serve after `save`/`load`.
-    pub data: Option<VecSet>,
+    /// for [`FittedModel::search`] to serve after `save`/`load`.  A v2
+    /// artifact opened with [`FittedModel::load`] pages these from disk
+    /// ([`ModelVectors::Disk`]) instead of holding them in RAM.
+    pub data: Option<ModelVectors>,
 }
 
 impl FittedModel {
@@ -67,7 +163,7 @@ impl FittedModel {
     /// emitting the history through the context's progress callback.
     pub(crate) fn from_output(
         method: Method,
-        data: &VecSet,
+        data: &dyn VecStore,
         ctx: &RunContext,
         out: KmeansOutput,
         graph: Option<KnnGraph>,
@@ -81,6 +177,16 @@ impl FittedModel {
             ctx.emit(method.name(), h);
         }
         let centroids = clustering.centroids();
+        // keep_data on a disk-backed store keeps the cheap disk handle —
+        // never a 20 GB RAM copy; `save` streams it into the artifact
+        let kept = if ctx.keep_data {
+            Some(match data.disk_backing() {
+                Some(c) => ModelVectors::Disk(c.clone()),
+                None => ModelVectors::Ram(store::materialize(data)),
+            })
+        } else {
+            None
+        };
         FittedModel {
             method,
             k: clustering.k,
@@ -94,7 +200,7 @@ impl FittedModel {
             init_seconds: init_seconds + graph_seconds,
             graph_seconds,
             graph,
-            data: if ctx.keep_data { Some(data.clone()) } else { None },
+            data: kept,
         }
     }
 
@@ -150,6 +256,34 @@ impl FittedModel {
         parts.concat()
     }
 
+    /// Batched out-of-sample assignment over any [`VecStore`]: query rows
+    /// are sharded across the model's worker threads, each worker opens
+    /// its own cursor and streams blocks through the native kernel
+    /// (`lloyd::assign_threaded` — one implementation of the sharded
+    /// scan) — so a disk-backed query set never has to fit in RAM.
+    /// Per-row results are independent of sharding, so any thread count
+    /// (and the in-RAM [`FittedModel::predict`]) returns identical
+    /// labels.
+    pub fn predict_batch(&self, queries: &dyn VecStore) -> Vec<u32> {
+        assert_eq!(
+            queries.dim(),
+            self.dim,
+            "query dim {} != model dim {}",
+            queries.dim(),
+            self.dim
+        );
+        if queries.rows() == 0 {
+            return Vec::new();
+        }
+        crate::kmeans::lloyd::assign_threaded(
+            queries,
+            &self.centroids,
+            &Backend::Native,
+            self.threads,
+        )
+        .idx
+    }
+
     /// Approximate top-`topk` nearest indexed vectors of `query`, served
     /// from the model's KNN graph.  Requires a graph method *and*
     /// [`RunContext::keep_data`] at fit time (the vectors travel with the
@@ -171,6 +305,17 @@ impl FittedModel {
         topk: usize,
         params: &ann::SearchParams,
     ) -> Result<(Vec<(f32, u32)>, ann::SearchStats), String> {
+        let (graph, data) = self.serving_parts()?;
+        if query.len() != self.dim {
+            return Err(format!("query dim {} != model dim {}", query.len(), self.dim));
+        }
+        // deterministic per-model entry points: same query, same answer
+        let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+        Ok(ann::search(data, graph, query, topk, params, &mut rng))
+    }
+
+    /// The graph + vectors a search needs, with the serving errors.
+    fn serving_parts(&self) -> Result<(&KnnGraph, &ModelVectors), String> {
         let graph = self.graph.as_ref().ok_or_else(|| {
             format!(
                 "{} model carries no KNN graph; ANN search needs a graph method \
@@ -183,12 +328,57 @@ impl FittedModel {
              RunContext::keep_data(true) to serve ANN queries"
                 .to_string()
         })?;
-        if query.len() != self.dim {
-            return Err(format!("query dim {} != model dim {}", query.len(), self.dim));
+        Ok((graph, data))
+    }
+
+    /// Batched ANN search: shard the query rows across the model's
+    /// worker threads, each worker reusing one [`ann::SearchScratch`]
+    /// (and, for disk-backed vectors, its own block-cache cursor) across
+    /// its queries.  Every query derives the same deterministic entry
+    /// points as [`FittedModel::search`], so the results are identical
+    /// to repeated single `search` calls at any thread count.
+    pub fn search_batch(
+        &self,
+        queries: &VecSet,
+        topk: usize,
+        params: &ann::SearchParams,
+    ) -> Result<Vec<Vec<(f32, u32)>>, String> {
+        let (graph, data) = self.serving_parts()?;
+        if queries.dim() != self.dim {
+            return Err(format!(
+                "query dim {} != model dim {}",
+                queries.dim(),
+                self.dim
+            ));
         }
-        // deterministic per-model entry points: same query, same answer
-        let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
-        Ok(ann::search(data, graph, query, topk, params, &mut rng))
+        let nq = queries.rows();
+        if nq == 0 {
+            return Ok(Vec::new());
+        }
+        let threads = pool::resolve_threads(self.threads).min(nq);
+        let n = data.rows();
+        let results = pool::par_map_chunks(threads.max(1), nq, |_, r| {
+            let mut scratch = ann::SearchScratch::new(n);
+            let mut cur = data.open();
+            let mut out = Vec::with_capacity(r.len());
+            for q in r {
+                // fresh per-query RNG with the `search` derivation keeps
+                // batch results equal to repeated single calls
+                let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+                let (res, _) = ann::search_with_scratch(
+                    &mut cur,
+                    graph,
+                    queries.row(q),
+                    topk,
+                    params,
+                    &mut rng,
+                    &mut scratch,
+                );
+                out.push(res);
+            }
+            out
+        });
+        Ok(results.concat())
     }
 
     /// Save as a versioned binary artifact (see [`crate::model::serde`]).

@@ -38,7 +38,7 @@ pub mod serde;
 pub use clusterer::{
     Boost, ClosureKmeans, Clusterer, GkMeans, GkMeansStar, KGraphGkMeans, Lloyd, MiniBatch,
 };
-pub use fitted::FittedModel;
+pub use fitted::{FittedModel, ModelVectors};
 
 use crate::kmeans::common::{IterStat, KmeansParams};
 use crate::runtime::Backend;

@@ -1,60 +1,615 @@
 //! Versioned binary save/load for [`FittedModel`] — no external deps.
 //!
-//! Layout (all integers/floats little-endian):
+//! ## GKMODEL v2 (written by [`save`])
+//!
+//! A section-offset layout so every component is independently
+//! addressable (all integers/floats little-endian):
 //!
 //! ```text
-//! magic   8 × u8   "GKMODEL\0"
-//! version u32      1
-//! method  u8       Method tag (see Method::tag)
-//! flags   u8       bit0 = graph present, bit1 = data present
-//! threads u32      predict thread preference
-//! k/dim/n 3 × u64
-//! timings 3 × f64  total_seconds, init_seconds, graph_seconds
-//! history u64 len, then per entry: u64 iter, f64 seconds,
-//!                  f64 distortion, u64 moves
-//! labels  u64 len, len × u32
-//! centroids        u64 rows, rows·dim × f32
-//! [graph]          u64 n, u64 kappa, n·kappa × u32 ids,
-//!                  n·kappa × f32 dists
-//! [data]           u64 rows, rows·dim × f32
+//! magic    8 × u8   "GKMODEL\0"
+//! version  u32      2
+//! count    u32      number of table entries
+//! table    count ×  { kind u32, reserved u32 = 0, offset u64, len u64 }
+//! ...      sections at their table offsets, each 64-byte aligned
 //! ```
 //!
-//! The encoding is exact (`to_le_bytes`/`from_le_bytes`), so a
+//! Section kinds (append-only; readers skip unknown kinds):
+//!
+//! | kind | section   | payload                                            |
+//! |-----:|-----------|----------------------------------------------------|
+//! | 1    | META      | method u8, threads u32, k/dim/n u64, 3 × f64 clocks, history (u64 len + 32-byte entries) |
+//! | 2    | LABELS    | u64 len, len × u32                                 |
+//! | 3    | CENTROIDS | u64 rows, rows·dim × f32                           |
+//! | 4    | GRAPH     | u64 n, u64 kappa, n·κ × u32 ids, n·κ × f32 dists   |
+//! | 5    | VECTORS   | u64 rows, rows·dim × f32                           |
+//!
+//! The aligned, raw-`f32` VECTORS payload is exactly a
+//! [`ChunkedVecStore::from_section`] region: [`load`] does **not** read
+//! it — the returned model pages vectors from disk on demand
+//! ([`ModelVectors::Disk`]), so a multi-GB index opens in milliseconds
+//! and serves `predict_batch`/`search_batch` with a bounded RAM
+//! footprint.  [`save`] streams the vectors out in blocks, so writing an
+//! out-of-core model never materializes them either.
+//!
+//! ## v1 (legacy, still read)
+//!
+//! The original single-blob layout (everything eagerly embedded).
+//! [`load`]/[`decode`] accept it transparently; [`encode_v1`] keeps a
+//! writer around for fixtures and migration tests.
+//!
+//! Both encodings are exact (`to_le_bytes`/`from_le_bytes`), so a
 //! save → load round trip is bit-identical — including the `+∞` distance
-//! sentinels in partially-filled graph rows — which the round-trip tests
-//! assert.  Unknown magic/version and trailing or missing bytes are
-//! errors, never misreads.
+//! sentinels in partially-filled graph rows.  Unknown magic/version,
+//! truncation, and out-of-bounds sections are errors, never misreads.
 
+use std::io::Write;
 use std::path::Path;
 
 use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
+use crate::data::store::{ChunkedVecStore, VecStore};
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::IterStat;
+use crate::model::fitted::ModelVectors;
 use crate::model::FittedModel;
 
 const MAGIC: &[u8; 8] = b"GKMODEL\0";
-const VERSION: u32 = 1;
+const V1: u32 = 1;
+const V2: u32 = 2;
+
+const SEC_META: u32 = 1;
+const SEC_LABELS: u32 = 2;
+const SEC_CENTROIDS: u32 = 3;
+const SEC_GRAPH: u32 = 4;
+const SEC_VECTORS: u32 = 5;
+
+/// Section alignment: offsets are multiples of 64 so payloads start on
+/// cache-line boundaries and the vectors region can be paged directly.
+const ALIGN: u64 = 64;
 
 const FLAG_GRAPH: u8 = 1 << 0;
 const FLAG_DATA: u8 = 1 << 1;
 
-/// Serialize a model to bytes.
+/// Rows per write when streaming the vectors section to disk.
+const VEC_STREAM_ROWS: usize = 4096;
+
+/// Cap on the persisted thread preference: a corrupt artifact's
+/// `threads` field must not become a thread-spawn bomb at serve time.
+const MAX_THREADS: usize = 1024;
+
+fn align_up(v: u64) -> u64 {
+    v.div_ceil(ALIGN) * ALIGN
+}
+
+// --- section payload builders (v2) -------------------------------------
+
+fn meta_payload(m: &FittedModel) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(61 + 32 * m.history.len());
+    buf.push(m.method.tag());
+    put_u32(&mut buf, m.threads as u32);
+    put_u64(&mut buf, m.k as u64);
+    put_u64(&mut buf, m.dim as u64);
+    put_u64(&mut buf, m.n_train as u64);
+    put_f64(&mut buf, m.total_seconds);
+    put_f64(&mut buf, m.init_seconds);
+    put_f64(&mut buf, m.graph_seconds);
+    put_u64(&mut buf, m.history.len() as u64);
+    for h in &m.history {
+        put_u64(&mut buf, h.iter as u64);
+        put_f64(&mut buf, h.seconds);
+        put_f64(&mut buf, h.distortion);
+        put_u64(&mut buf, h.moves as u64);
+    }
+    buf
+}
+
+fn labels_payload(m: &FittedModel) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + 4 * m.labels.len());
+    put_u64(&mut buf, m.labels.len() as u64);
+    for &l in &m.labels {
+        put_u32(&mut buf, l);
+    }
+    buf
+}
+
+fn centroids_payload(m: &FittedModel) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + 4 * m.centroids.flat().len());
+    put_u64(&mut buf, m.centroids.rows() as u64);
+    for &v in m.centroids.flat() {
+        put_f32(&mut buf, v);
+    }
+    buf
+}
+
+fn graph_payload(g: &KnnGraph) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + 8 * g.ids_flat().len());
+    put_u64(&mut buf, g.n() as u64);
+    put_u64(&mut buf, g.kappa() as u64);
+    for &id in g.ids_flat() {
+        put_u32(&mut buf, id);
+    }
+    for &d in g.dists_flat() {
+        put_f32(&mut buf, d);
+    }
+    buf
+}
+
+/// Write a model in the v2 layout to any sink, streaming the vectors
+/// section in [`VEC_STREAM_ROWS`]-row blocks.
+fn write_v2<W: Write>(
+    m: &FittedModel,
+    vectors: Option<&dyn VecStore>,
+    w: &mut W,
+) -> std::io::Result<()> {
+    let meta = meta_payload(m);
+    let labels = labels_payload(m);
+    let centroids = centroids_payload(m);
+    let graph = m.graph.as_ref().map(graph_payload);
+    let vec_len = vectors.map(|v| 8 + 4 * (v.rows() as u64) * (v.dim() as u64));
+
+    let mut sections: Vec<(u32, u64)> = vec![
+        (SEC_META, meta.len() as u64),
+        (SEC_LABELS, labels.len() as u64),
+        (SEC_CENTROIDS, centroids.len() as u64),
+    ];
+    if let Some(g) = &graph {
+        sections.push((SEC_GRAPH, g.len() as u64));
+    }
+    if let Some(len) = vec_len {
+        sections.push((SEC_VECTORS, len));
+    }
+
+    // header + table, then offsets assigned in table order, 64-aligned
+    let header_len = 16 + 24 * sections.len() as u64;
+    let mut offsets = Vec::with_capacity(sections.len());
+    let mut at = align_up(header_len);
+    for (_, len) in &sections {
+        offsets.push(at);
+        at = align_up(at + len);
+    }
+
+    let mut head = Vec::with_capacity(header_len as usize);
+    head.extend_from_slice(MAGIC);
+    put_u32(&mut head, V2);
+    put_u32(&mut head, sections.len() as u32);
+    for ((kind, len), off) in sections.iter().zip(&offsets) {
+        put_u32(&mut head, *kind);
+        put_u32(&mut head, 0);
+        put_u64(&mut head, *off);
+        put_u64(&mut head, *len);
+    }
+    w.write_all(&head)?;
+    let mut written = header_len;
+    let pad_to = |w: &mut W, written: &mut u64, target: u64| -> std::io::Result<()> {
+        debug_assert!(target >= *written);
+        let pad = (target - *written) as usize;
+        w.write_all(&vec![0u8; pad])?;
+        *written = target;
+        Ok(())
+    };
+
+    for ((kind, _), off) in sections.iter().zip(&offsets) {
+        pad_to(w, &mut written, *off)?;
+        match *kind {
+            SEC_META => {
+                w.write_all(&meta)?;
+                written += meta.len() as u64;
+            }
+            SEC_LABELS => {
+                w.write_all(&labels)?;
+                written += labels.len() as u64;
+            }
+            SEC_CENTROIDS => {
+                w.write_all(&centroids)?;
+                written += centroids.len() as u64;
+            }
+            SEC_GRAPH => {
+                let g = graph.as_ref().expect("graph section implies a graph");
+                w.write_all(g)?;
+                written += g.len() as u64;
+            }
+            SEC_VECTORS => {
+                let v = vectors.expect("vectors section implies a store");
+                let mut hdr = Vec::with_capacity(8);
+                put_u64(&mut hdr, v.rows() as u64);
+                w.write_all(&hdr)?;
+                let mut cur = v.open();
+                let (n, d) = (v.rows(), v.dim());
+                let mut lo = 0;
+                let mut block_bytes: Vec<u8> = Vec::new();
+                while lo < n {
+                    let hi = (lo + VEC_STREAM_ROWS).min(n);
+                    let block = cur.block(lo, hi);
+                    block_bytes.clear();
+                    block_bytes.reserve(block.len() * 4);
+                    for &x in block {
+                        block_bytes.extend_from_slice(&x.to_le_bytes());
+                    }
+                    w.write_all(&block_bytes)?;
+                    lo = hi;
+                }
+                written += 8 + 4 * (n as u64) * (d as u64);
+            }
+            other => unreachable!("writer emitted unknown section kind {other}"),
+        }
+    }
+    w.flush()
+}
+
+// --- section payload parsers (v2) --------------------------------------
+
+struct Meta {
+    method: Method,
+    threads: usize,
+    k: usize,
+    dim: usize,
+    n_train: usize,
+    total_seconds: f64,
+    init_seconds: f64,
+    graph_seconds: f64,
+    history: Vec<IterStat>,
+}
+
+fn parse_meta(bytes: &[u8]) -> Result<Meta, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let method = Method::from_tag(r.u8()?)?;
+    let threads = (r.u32()? as usize).min(MAX_THREADS);
+    let k = r.len_u64("k")?;
+    let dim = r.len_u64("dim")?;
+    if dim == 0 || dim > (1 << 20) {
+        return Err(format!("implausible model dim {dim}"));
+    }
+    let n_train = r.len_u64("n_train")?;
+    let total_seconds = r.f64()?;
+    let init_seconds = r.f64()?;
+    let graph_seconds = r.f64()?;
+    let hist_len = r.len_u64("history length")?;
+    let mut history = Vec::with_capacity(hist_len.min(1 << 20));
+    for _ in 0..hist_len {
+        let iter = r.len_u64("history iter")?;
+        let seconds = r.f64()?;
+        let distortion = r.f64()?;
+        let moves = r.len_u64("history moves")?;
+        history.push(IterStat { iter, seconds, distortion, moves });
+    }
+    r.done("META")?;
+    Ok(Meta {
+        method,
+        threads,
+        k,
+        dim,
+        n_train,
+        total_seconds,
+        init_seconds,
+        graph_seconds,
+        history,
+    })
+}
+
+fn parse_labels(bytes: &[u8]) -> Result<Vec<u32>, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let len = r.len_u64("label count")?;
+    let labels = r.u32_vec(len)?;
+    r.done("LABELS")?;
+    Ok(labels)
+}
+
+fn parse_centroids(bytes: &[u8], k: usize, dim: usize) -> Result<VecSet, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let rows = r.len_u64("centroid rows")?;
+    if rows != k {
+        return Err(format!("centroid rows {rows} != k {k}"));
+    }
+    let flat = r.f32_vec(checked_mul(rows, dim, "centroid buffer")?)?;
+    r.done("CENTROIDS")?;
+    Ok(VecSet::from_flat(dim, flat))
+}
+
+fn parse_graph(bytes: &[u8], n_train: usize) -> Result<KnnGraph, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let gn = r.len_u64("graph n")?;
+    let gk = r.len_u64("graph kappa")?;
+    if gn != n_train {
+        return Err(format!("graph covers {gn} nodes but the model trained on {n_train}"));
+    }
+    let cells = checked_mul(gn, gk, "graph buffer")?;
+    let ids = r.u32_vec(cells)?;
+    let dists = r.f32_vec(cells)?;
+    r.done("GRAPH")?;
+    KnnGraph::from_parts(gn, gk, ids, dists)
+}
+
+fn parse_vectors_eager(bytes: &[u8], n_train: usize, dim: usize) -> Result<VecSet, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let rows = r.len_u64("data rows")?;
+    if rows != n_train {
+        return Err(format!("embedded {rows} vectors but the model trained on {n_train}"));
+    }
+    let flat = r.f32_vec(checked_mul(rows, dim, "data buffer")?)?;
+    r.done("VECTORS")?;
+    Ok(VecSet::from_flat(dim, flat))
+}
+
+/// One parsed v2 table entry.
+struct Section {
+    kind: u32,
+    offset: u64,
+    len: u64,
+}
+
+/// Parse the v2 header + section table from the first bytes of a file
+/// or buffer; `total_len` bounds the section extents.
+fn parse_table(head: &[u8], total_len: u64) -> Result<Vec<Section>, String> {
+    let mut r = Reader { buf: head, pos: 0 };
+    if r.take(8)? != MAGIC {
+        return Err("not a gkmeans model file (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version != V2 {
+        return Err(format!("internal: parse_table on version {version}"));
+    }
+    let count = r.u32()? as usize;
+    if count > 64 {
+        return Err(format!("implausible section count {count}"));
+    }
+    let mut sections = Vec::with_capacity(count);
+    for _ in 0..count {
+        let kind = r.u32()?;
+        let _reserved = r.u32()?;
+        let offset = r.u64()?;
+        let len = r.u64()?;
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| "section extent overflows".to_string())?;
+        if end > total_len {
+            return Err(format!(
+                "section kind {kind} extent [{offset}, {end}) exceeds file length {total_len}"
+            ));
+        }
+        sections.push(Section { kind, offset, len });
+    }
+    for need in [SEC_META, SEC_LABELS, SEC_CENTROIDS] {
+        if !sections.iter().any(|s| s.kind == need) {
+            return Err(format!("missing required section kind {need}"));
+        }
+    }
+    Ok(sections)
+}
+
+fn section<'a>(sections: &'a [Section], kind: u32) -> Option<&'a Section> {
+    sections.iter().find(|s| s.kind == kind)
+}
+
+fn assemble(
+    meta: Meta,
+    labels: Vec<u32>,
+    centroids: VecSet,
+    graph: Option<KnnGraph>,
+    data: Option<ModelVectors>,
+) -> FittedModel {
+    FittedModel {
+        method: meta.method,
+        k: meta.k,
+        dim: meta.dim,
+        n_train: meta.n_train,
+        threads: meta.threads,
+        centroids,
+        labels,
+        history: meta.history,
+        total_seconds: meta.total_seconds,
+        init_seconds: meta.init_seconds,
+        graph_seconds: meta.graph_seconds,
+        graph,
+        data,
+    }
+}
+
+// --- public surface -----------------------------------------------------
+
+/// Serialize a model to v2 bytes (vectors embedded eagerly — use
+/// [`save`] to stream them to a file instead).
 pub fn encode(m: &FittedModel) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let vectors = m.data.as_ref().map(|d| d as &dyn VecStore);
+    write_v2(m, vectors, &mut buf).expect("writing to a Vec cannot fail");
+    buf
+}
+
+/// Deserialize a model from bytes (v1 or v2).  Vector sections are
+/// materialized in RAM — bytes have no backing file to page from.
+pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
+    if bytes.len() < 12 {
+        return Err("model file truncated before the version field".into());
+    }
+    if &bytes[..8] != MAGIC {
+        return Err("not a gkmeans model file (bad magic)".into());
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    match version {
+        V1 => decode_v1(bytes),
+        V2 => {
+            let count = u32::from_le_bytes(
+                bytes
+                    .get(12..16)
+                    .ok_or("model file truncated in the header")?
+                    .try_into()
+                    .unwrap(),
+            ) as usize;
+            if count > 64 {
+                return Err(format!("implausible section count {count}"));
+            }
+            let table_end = 16 + 24 * count;
+            let head = bytes
+                .get(..table_end)
+                .ok_or("model file truncated in the section table")?;
+            let sections = parse_table(head, bytes.len() as u64)?;
+            fn slice_of<'b>(bytes: &'b [u8], s: &Section) -> &'b [u8] {
+                &bytes[s.offset as usize..(s.offset + s.len) as usize]
+            }
+            let get = |s: &Section| slice_of(bytes, s);
+            let meta = parse_meta(get(section(&sections, SEC_META).unwrap()))?;
+            let labels = parse_labels(get(section(&sections, SEC_LABELS).unwrap()))?;
+            let centroids =
+                parse_centroids(get(section(&sections, SEC_CENTROIDS).unwrap()), meta.k, meta.dim)?;
+            let graph = match section(&sections, SEC_GRAPH) {
+                Some(s) => Some(parse_graph(get(s), meta.n_train)?),
+                None => None,
+            };
+            let data = match section(&sections, SEC_VECTORS) {
+                Some(s) => Some(ModelVectors::Ram(parse_vectors_eager(
+                    get(s),
+                    meta.n_train,
+                    meta.dim,
+                )?)),
+                None => None,
+            };
+            if labels.len() != meta.n_train {
+                return Err(format!(
+                    "label count {} != n_train {}",
+                    labels.len(),
+                    meta.n_train
+                ));
+            }
+            Ok(assemble(meta, labels, centroids, graph, data))
+        }
+        other => Err(format!("unsupported model version {other} (this build reads 1 and 2)")),
+    }
+}
+
+/// Write a model to `path` in the v2 layout.  The vectors section (if
+/// any) is streamed block by block, so saving a disk-backed model never
+/// materializes its vectors in RAM.  The write always goes to a
+/// temporary sibling first and is renamed over the target, so any
+/// artifact another model is currently paging from — including this
+/// model's own backing file — is never truncated mid-read, and a failed
+/// save never destroys a pre-existing artifact.
+pub fn save(m: &FittedModel, path: &Path) -> Result<(), String> {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(format!(".tmp.{}", std::process::id()));
+    let target = path.with_file_name(name);
+    let vectors: Option<&dyn VecStore> = m.data.as_ref().map(|mv| mv as &dyn VecStore);
+    let f = std::fs::File::create(&target).map_err(|e| format!("{}: {e}", target.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let wrote = write_v2(m, vectors, &mut w).map_err(|e| format!("{}: {e}", target.display()));
+    drop(w);
+    if let Err(e) = wrote {
+        std::fs::remove_file(&target).ok();
+        return Err(e);
+    }
+    std::fs::rename(&target, path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Read a model from `path` (v1 or v2).  A v2 vectors section is
+/// **not** loaded: the model pages it from disk on demand
+/// ([`ModelVectors::Disk`]), so opening a large artifact is cheap.
+pub fn load(path: &Path) -> Result<FittedModel, String> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let total_len = f.metadata().map_err(|e| e.to_string())?.len();
+    let mut head16 = [0u8; 16];
+    f.read_exact(&mut head16)
+        .map_err(|_| format!("{}: truncated model header", path.display()))?;
+    if &head16[..8] != MAGIC {
+        return Err("not a gkmeans model file (bad magic)".into());
+    }
+    let version = u32::from_le_bytes(head16[8..12].try_into().unwrap());
+    if version == V1 {
+        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        return decode_v1(&bytes);
+    }
+    if version != V2 {
+        return Err(format!("unsupported model version {version} (this build reads 1 and 2)"));
+    }
+    let count = u32::from_le_bytes(head16[12..16].try_into().unwrap()) as usize;
+    if count > 64 {
+        return Err(format!("implausible section count {count}"));
+    }
+    let mut head = head16.to_vec();
+    let mut table = vec![0u8; 24 * count];
+    f.read_exact(&mut table)
+        .map_err(|_| format!("{}: truncated section table", path.display()))?;
+    head.extend_from_slice(&table);
+    let sections = parse_table(&head, total_len)?;
+    let mut read_section = |s: &Section| -> Result<Vec<u8>, String> {
+        let mut buf = vec![0u8; s.len as usize];
+        f.seek(SeekFrom::Start(s.offset))
+            .and_then(|_| f.read_exact(&mut buf))
+            .map_err(|e| format!("{}: reading section kind {}: {e}", path.display(), s.kind))?;
+        Ok(buf)
+    };
+    let meta = parse_meta(&read_section(section(&sections, SEC_META).unwrap())?)?;
+    let labels = parse_labels(&read_section(section(&sections, SEC_LABELS).unwrap())?)?;
+    let centroids = parse_centroids(
+        &read_section(section(&sections, SEC_CENTROIDS).unwrap())?,
+        meta.k,
+        meta.dim,
+    )?;
+    let graph = match section(&sections, SEC_GRAPH) {
+        Some(s) => Some(parse_graph(&read_section(s)?, meta.n_train)?),
+        None => None,
+    };
+    let data = match section(&sections, SEC_VECTORS) {
+        Some(s) => {
+            if s.len < 8 {
+                return Err("vectors section shorter than its row header".into());
+            }
+            let mut hdr = [0u8; 8];
+            f.seek(SeekFrom::Start(s.offset))
+                .and_then(|_| f.read_exact(&mut hdr))
+                .map_err(|e| format!("{}: reading vectors header: {e}", path.display()))?;
+            let rows = u64::from_le_bytes(hdr) as usize;
+            if rows != meta.n_train {
+                return Err(format!(
+                    "embedded {rows} vectors but the model trained on {}",
+                    meta.n_train
+                ));
+            }
+            let payload = (rows as u64)
+                .checked_mul(meta.dim as u64)
+                .and_then(|c| c.checked_mul(4))
+                .and_then(|c| c.checked_add(8))
+                .ok_or_else(|| "vectors section size overflows".to_string())?;
+            if payload != s.len {
+                return Err(format!(
+                    "vectors section length {} != expected {payload}",
+                    s.len
+                ));
+            }
+            Some(ModelVectors::Disk(ChunkedVecStore::from_section(
+                path,
+                s.offset + 8,
+                rows,
+                meta.dim,
+            )?))
+        }
+        None => None,
+    };
+    if labels.len() != meta.n_train {
+        return Err(format!("label count {} != n_train {}", labels.len(), meta.n_train));
+    }
+    Ok(assemble(meta, labels, centroids, graph, data))
+}
+
+// --- v1 (legacy) --------------------------------------------------------
+
+/// Serialize a model in the legacy v1 single-blob layout.  Kept for
+/// fixtures and migration tests; [`save`] always writes v2.
+pub fn encode_v1(m: &FittedModel) -> Vec<u8> {
+    let data = m.data.as_ref().map(|d| d.to_vecset());
     let mut buf = Vec::with_capacity(
         64 + m.labels.len() * 4
             + m.centroids.flat().len() * 4
             + m.graph.as_ref().map_or(0, |g| g.ids_flat().len() * 8)
-            + m.data.as_ref().map_or(0, |d| d.flat().len() * 4),
+            + data.as_ref().map_or(0, |d| d.flat().len() * 4),
     );
     buf.extend_from_slice(MAGIC);
-    put_u32(&mut buf, VERSION);
+    put_u32(&mut buf, V1);
     buf.push(m.method.tag());
     let mut flags = 0u8;
     if m.graph.is_some() {
         flags |= FLAG_GRAPH;
     }
-    if m.data.is_some() {
+    if data.is_some() {
         flags |= FLAG_DATA;
     }
     buf.push(flags);
@@ -90,7 +645,7 @@ pub fn encode(m: &FittedModel) -> Vec<u8> {
             put_f32(&mut buf, d);
         }
     }
-    if let Some(d) = &m.data {
+    if let Some(d) = &data {
         put_u64(&mut buf, d.rows() as u64);
         for &v in d.flat() {
             put_f32(&mut buf, v);
@@ -99,19 +654,19 @@ pub fn encode(m: &FittedModel) -> Vec<u8> {
     buf
 }
 
-/// Deserialize a model from bytes.
-pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
+/// Deserialize the legacy v1 layout (whole buffer, magic included).
+fn decode_v1(bytes: &[u8]) -> Result<FittedModel, String> {
     let mut r = Reader { buf: bytes, pos: 0 };
     if r.take(8)? != MAGIC {
         return Err("not a gkmeans model file (bad magic)".into());
     }
     let version = r.u32()?;
-    if version != VERSION {
-        return Err(format!("unsupported model version {version} (this build reads {VERSION})"));
+    if version != V1 {
+        return Err(format!("internal: decode_v1 on version {version}"));
     }
     let method = Method::from_tag(r.u8()?)?;
     let flags = r.u8()?;
-    let threads = r.u32()? as usize;
+    let threads = (r.u32()? as usize).min(MAX_THREADS);
     let k = r.len_u64("k")?;
     let dim = r.len_u64("dim")?;
     if dim == 0 {
@@ -157,7 +712,7 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
             return Err(format!("embedded {rows} vectors but the model trained on {n_train}"));
         }
         let flat = r.f32_vec(checked_mul(rows, dim, "data buffer")?)?;
-        Some(VecSet::from_flat(dim, flat))
+        Some(ModelVectors::Ram(VecSet::from_flat(dim, flat)))
     } else {
         None
     };
@@ -182,17 +737,6 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
         graph,
         data,
     })
-}
-
-/// Write a model to `path`.
-pub fn save(m: &FittedModel, path: &Path) -> Result<(), String> {
-    std::fs::write(path, encode(m)).map_err(|e| format!("{}: {e}", path.display()))
-}
-
-/// Read a model from `path`.
-pub fn load(path: &Path) -> Result<FittedModel, String> {
-    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
-    decode(&bytes)
 }
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -275,6 +819,17 @@ impl<'a> Reader<'a> {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
+
+    /// Whole-payload sections must consume every byte.
+    fn done(&mut self, what: &str) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{} trailing bytes in {what} section",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -288,34 +843,51 @@ mod tests {
         std::env::temp_dir().join(format!("gkm_model_{}_{name}", std::process::id()))
     }
 
-    #[test]
-    fn encode_decode_bit_identical() {
+    fn graph_model() -> crate::model::FittedModel {
         let data = blobs(&BlobSpec::quick(250, 5, 4), 7);
         let b = Backend::native();
         let ctx = RunContext::new(&b).max_iters(4).keep_data(true);
-        let model = GkMeans::new(4).kappa(5).tau(2).xi(25).fit(&data, &ctx);
+        GkMeans::new(4).kappa(5).tau(2).xi(25).fit(&data, &ctx)
+    }
+
+    fn assert_models_bit_identical(a: &FittedModel, b: &FittedModel) {
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.dim, b.dim);
+        assert_eq!(a.n_train, b.n_train);
+        assert_eq!(a.threads, b.threads);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.history.len(), b.history.len());
+        assert_eq!(a.total_seconds.to_bits(), b.total_seconds.to_bits());
+        assert_eq!(a.init_seconds.to_bits(), b.init_seconds.to_bits());
+        assert_eq!(a.graph_seconds.to_bits(), b.graph_seconds.to_bits());
+        assert_eq!(a.centroids.flat().len(), b.centroids.flat().len());
+        for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.graph.is_some(), b.graph.is_some());
+        if let (Some(ga), Some(gb)) = (&a.graph, &b.graph) {
+            assert_eq!(ga.ids_flat(), gb.ids_flat());
+            for (x, y) in ga.dists_flat().iter().zip(gb.dists_flat()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "graph distances must round-trip bitwise");
+            }
+        }
+        assert_eq!(a.data.is_some(), b.data.is_some());
+        if let (Some(da), Some(db)) = (&a.data, &b.data) {
+            let (da, db) = (da.to_vecset(), db.to_vecset());
+            assert_eq!(da.flat().len(), db.flat().len());
+            for (x, y) in da.flat().iter().zip(db.flat()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_bit_identical() {
+        let model = graph_model();
         let back = decode(&encode(&model)).unwrap();
-        assert_eq!(back.method, model.method);
-        assert_eq!(back.k, model.k);
-        assert_eq!(back.dim, model.dim);
-        assert_eq!(back.n_train, model.n_train);
-        assert_eq!(back.labels, model.labels);
-        assert_eq!(back.centroids.flat().len(), model.centroids.flat().len());
-        for (a, b) in back.centroids.flat().iter().zip(model.centroids.flat()) {
-            assert_eq!(a.to_bits(), b.to_bits());
-        }
-        assert_eq!(back.total_seconds.to_bits(), model.total_seconds.to_bits());
-        let (ga, gb) = (back.graph.unwrap(), model.graph.as_ref().unwrap());
-        assert_eq!(ga.ids_flat(), gb.ids_flat());
-        for (a, b) in ga.dists_flat().iter().zip(gb.dists_flat()) {
-            assert_eq!(a.to_bits(), b.to_bits(), "graph distances must round-trip bitwise");
-        }
-        let (da, db) = (back.data.unwrap(), model.data.as_ref().unwrap());
-        assert_eq!(da.flat().len(), db.flat().len());
-        for (a, b) in da.flat().iter().zip(db.flat()) {
-            assert_eq!(a.to_bits(), b.to_bits());
-        }
-        assert_eq!(back.history.len(), model.history.len());
+        assert_models_bit_identical(&model, &back);
+        assert!(back.data.as_ref().unwrap().is_resident(), "decode is eager");
     }
 
     #[test]
@@ -329,6 +901,74 @@ mod tests {
         assert_eq!(back.labels, model.labels);
         assert!(back.graph.is_none() && back.data.is_none());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_load_pages_vectors_lazily_and_serves() {
+        let model = graph_model();
+        let path = tmp("lazy.gkm");
+        model.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        let vecs = back.data.as_ref().unwrap();
+        assert!(!vecs.is_resident(), "v2 load must page vectors from disk");
+        assert_models_bit_identical(&model, &back);
+        // the paged store serves the same rows the RAM copy holds
+        let ram = model.data.as_ref().unwrap().to_vecset();
+        for i in (0..250).step_by(37) {
+            let row = vecs.fetch_row(i);
+            for (a, b) in row.iter().zip(ram.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_artifacts_still_load_and_resave_as_v2() {
+        let model = graph_model();
+        let v1 = encode_v1(&model);
+        // v1 bytes decode
+        let from_v1 = decode(&v1).unwrap();
+        assert_models_bit_identical(&model, &from_v1);
+        // v1 file loads, re-saves as v2, loads again — bit-exact
+        let p1 = tmp("legacy.gkm");
+        std::fs::write(&p1, &v1).unwrap();
+        let loaded = FittedModel::load(&p1).unwrap();
+        assert_models_bit_identical(&model, &loaded);
+        let p2 = tmp("migrated.gkm");
+        loaded.save(&p2).unwrap();
+        let migrated = FittedModel::load(&p2).unwrap();
+        assert_models_bit_identical(&model, &migrated);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn resave_over_own_backing_file_is_safe() {
+        let model = graph_model();
+        let path = tmp("self.gkm");
+        model.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        assert!(!back.data.as_ref().unwrap().is_resident());
+        // saving the lazily-loaded model over its own backing file must
+        // snapshot the vectors first, not read while truncating
+        back.save(&path).unwrap();
+        let again = FittedModel::load(&path).unwrap();
+        assert_models_bit_identical(&model, &again);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sections_are_aligned() {
+        let model = graph_model();
+        let bytes = encode(&model);
+        let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        assert!(count >= 4);
+        for t in 0..count {
+            let at = 16 + 24 * t;
+            let offset = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap());
+            assert_eq!(offset % ALIGN, 0, "section {t} offset {offset} unaligned");
+        }
     }
 
     #[test]
@@ -349,9 +989,25 @@ mod tests {
         for cut in (0..bytes.len() - 1).step_by(8) {
             assert!(decode(&bytes[..cut]).is_err(), "cut at {cut}");
         }
-        // trailing garbage
-        let mut long = bytes.clone();
+        // v1 truncation too
+        let v1 = encode_v1(&model);
+        for cut in (0..v1.len() - 1).step_by(8) {
+            assert!(decode(&v1[..cut]).is_err(), "v1 cut at {cut}");
+        }
+        // v1 trailing garbage
+        let mut long = v1.clone();
         long.push(0);
         assert!(decode(&long).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_sections() {
+        let model = graph_model();
+        let mut bytes = encode(&model);
+        // corrupt the first section's length to overrun the buffer
+        let len_at = 16 + 16;
+        bytes[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("exceeds") || err.contains("overflows"), "{err}");
     }
 }

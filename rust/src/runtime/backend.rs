@@ -17,7 +17,7 @@ use std::path::Path;
 
 use crate::core_ops::argmin::ArgminAcc;
 use crate::core_ops::blockdist;
-use crate::data::matrix::VecSet;
+use crate::data::store::VecStore;
 use crate::runtime::{RtError, RtResult};
 
 #[cfg(feature = "pjrt")]
@@ -180,11 +180,19 @@ impl Backend {
 
     /// Two-means margins for Alg. 1: `out[t] = d(x_t, c0) − d(x_t, c1)`
     /// for the rows of `data` selected by `subset`.
-    pub fn bisect_margins(&self, data: &VecSet, subset: &[u32], c0: &[f32], c1: &[f32], out: &mut [f32]) {
+    pub fn bisect_margins(
+        &self,
+        data: &dyn VecStore,
+        subset: &[u32],
+        c0: &[f32],
+        c1: &[f32],
+        out: &mut [f32],
+    ) {
         match self {
             Backend::Native => {
+                let mut cur = data.open();
                 for (t, &i) in subset.iter().enumerate() {
-                    let row = data.row(i as usize);
+                    let row = cur.row(i as usize);
                     out[t] = crate::core_ops::dist::d2(row, c0) - crate::core_ops::dist::d2(row, c1);
                 }
             }
@@ -211,24 +219,27 @@ impl Backend {
     /// both backends.  `pjrt_pairwise_small` remains available (and
     /// cross-checked in tests) for batched multi-cell dispatch if cells
     /// ever grow past the crossover.
-    pub fn pairwise_among(&self, data: &VecSet, rows: &[u32], out: &mut [f32]) {
+    pub fn pairwise_among(&self, data: &dyn VecStore, rows: &[u32], out: &mut [f32]) {
         let d = data.dim();
-        let gathered: Vec<f32> = rows
-            .iter()
-            .flat_map(|&i| data.row(i as usize).iter().copied())
-            .collect();
+        let mut cur = data.open();
+        let mut gathered: Vec<f32> = Vec::with_capacity(rows.len() * d);
+        for &i in rows {
+            gathered.extend_from_slice(cur.row(i as usize));
+        }
         blockdist::block_l2(&gathered, &gathered, d, out);
     }
 
     /// PJRT variant of [`Backend::pairwise_among`] (kept for the
     /// cross-check tests and as the dispatch point for future batched
     /// refinement; see §Perf note above).
-    pub fn pairwise_among_pjrt(&self, data: &VecSet, rows: &[u32], out: &mut [f32]) {
+    pub fn pairwise_among_pjrt(&self, data: &dyn VecStore, rows: &[u32], out: &mut [f32]) {
         let d = data.dim();
-        let gathered: Vec<f32> = rows
-            .iter()
-            .flat_map(|&i| data.row(i as usize).iter().copied())
-            .collect();
+        let mut cur = data.open();
+        let mut gathered: Vec<f32> = Vec::with_capacity(rows.len() * d);
+        for &i in rows {
+            gathered.extend_from_slice(cur.row(i as usize));
+        }
+        drop(cur);
         match self {
             Backend::Native => blockdist::block_l2(&gathered, &gathered, d, out),
             #[cfg(feature = "pjrt")]
@@ -315,7 +326,7 @@ fn pjrt_assign(engine: &PjrtEngine, x: &[f32], c: &[f32], d: usize, k: usize, ac
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_bisect(engine: &PjrtEngine, data: &VecSet, subset: &[u32], c0: &[f32], c1: &[f32], out: &mut [f32]) -> RtResult<()> {
+fn pjrt_bisect(engine: &PjrtEngine, data: &dyn VecStore, subset: &[u32], c0: &[f32], c1: &[f32], out: &mut [f32]) -> RtResult<()> {
     let d = data.dim();
     let (bm, _) = engine
         .block_shape("bisect_assign", d)
@@ -325,12 +336,13 @@ fn pjrt_bisect(engine: &PjrtEngine, data: &VecSet, subset: &[u32], c0: &[f32], c
     c2.extend_from_slice(c1);
     let cl = literal_f32_2d(&c2, 2, d)?;
     let m = subset.len();
+    let mut cur = data.open();
     let mut t0 = 0;
     while t0 < m {
         let rows = (m - t0).min(bm);
         let mut xb = vec![0f32; bm * d];
         for (r, &i) in subset[t0..t0 + rows].iter().enumerate() {
-            xb[r * d..(r + 1) * d].copy_from_slice(data.row(i as usize));
+            cur.read_row_into(i as usize, &mut xb[r * d..(r + 1) * d]);
         }
         let xl = literal_f32_2d(&xb, bm, d)?;
         let outs = engine.run("bisect_assign", d, &[xl, cl.clone()])?;
@@ -364,6 +376,7 @@ fn pjrt_pairwise_small(engine: &PjrtEngine, gathered: &[f32], m: usize, d: usize
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::VecSet;
     use crate::util::rng::Rng;
 
     #[test]

@@ -161,8 +161,9 @@ fn keep_data_embeds_the_training_vectors() {
     let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
     let model = GkMeans::new(3).kappa(5).tau(2).fit(&data, &ctx);
     let embedded = model.data.as_ref().unwrap();
+    assert!(embedded.is_resident(), "in-RAM fit keeps vectors resident");
     assert_eq!(embedded.rows(), 150);
-    assert_eq!(embedded.flat(), data.flat());
+    assert_eq!(embedded.as_ram().unwrap().flat(), data.flat());
     // predict on a dimension mismatch must panic, not misread
     let wrong = VecSet::zeros(5, 7);
     assert!(std::panic::catch_unwind(|| model.predict(&wrong)).is_err());

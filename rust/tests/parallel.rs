@@ -191,3 +191,64 @@ fn pool_auto_resolution_is_sane() {
     assert_eq!(pool::resolve_threads(3), 3);
     assert!(pool::resolve_threads(0) >= 1);
 }
+
+#[test]
+fn parallel_lloyd_assignment_is_bit_identical() {
+    // Lloyd's assignment shards rows over workers; per-row results are
+    // independent of sharding, so the whole run (labels, every history
+    // entry) must be bit-identical at any thread count.
+    let data = gkmeans::data::synth::sift_like(1100, 53);
+    let params = KmeansParams { max_iters: 6, ..Default::default() };
+    let serial = gkmeans::kmeans::lloyd::run_core(&data, 12, &params, &Backend::native());
+    for threads in [2usize, 4] {
+        let par = gkmeans::kmeans::lloyd::run_core(
+            &data,
+            12,
+            &KmeansParams { threads, ..params.clone() },
+            &Backend::native(),
+        );
+        assert_eq!(serial.clustering.labels, par.clustering.labels, "threads={threads}");
+        assert_eq!(serial.history.len(), par.history.len());
+        for (a, b) in serial.history.iter().zip(&par.history) {
+            assert_eq!(a.moves, b.moves, "threads={threads} iter {}", a.iter);
+            assert_eq!(
+                a.distortion.to_bits(),
+                b.distortion.to_bits(),
+                "threads={threads} iter {} distortion not bit-identical",
+                a.iter
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_minibatch_is_bit_identical() {
+    // Mini-Batch's RNG stream is untouched by the sharded assignment, so
+    // threads > 1 reproduces the serial run exactly.
+    use gkmeans::kmeans::minibatch::{self, MiniBatchParams};
+    let data = gkmeans::data::synth::sift_like(900, 59);
+    let base = KmeansParams { max_iters: 12, ..Default::default() };
+    let serial = minibatch::run_core(
+        &data,
+        10,
+        &MiniBatchParams { batch: 128, base: base.clone() },
+        &Backend::native(),
+    );
+    for threads in [2usize, 4] {
+        let par = minibatch::run_core(
+            &data,
+            10,
+            &MiniBatchParams { batch: 128, base: KmeansParams { threads, ..base.clone() } },
+            &Backend::native(),
+        );
+        assert_eq!(serial.clustering.labels, par.clustering.labels, "threads={threads}");
+        for (a, b) in serial.history.iter().zip(&par.history) {
+            assert_eq!(
+                a.distortion.to_bits(),
+                b.distortion.to_bits(),
+                "threads={threads} iter {}",
+                a.iter
+            );
+        }
+    }
+}

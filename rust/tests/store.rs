@@ -1,0 +1,267 @@
+//! Integration tests for the `VecStore` storage layer: the
+//! ChunkedVecStore ↔ VecSet equivalence property, the GKMODEL v1 → v2
+//! migration contract (against a committed byte fixture), and the
+//! out-of-core serving path (`predict_batch` / `search_batch` from a v2
+//! artifact with vectors paged from disk through a deliberately tiny
+//! block cache).
+
+use std::path::{Path, PathBuf};
+
+use gkmeans::data::matrix::VecSet;
+use gkmeans::data::store::{self, ChunkedVecStore, VecStore};
+use gkmeans::gkm::ann::SearchParams;
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, ModelVectors, RunContext};
+use gkmeans::runtime::Backend;
+use gkmeans::testing::prop;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gkm_store_it_{}_{name}", std::process::id()))
+}
+
+fn write_flat(path: &Path, v: &VecSet) {
+    let mut bytes = Vec::with_capacity(v.flat().len() * 4);
+    for &x in v.flat() {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).unwrap();
+}
+
+#[test]
+fn prop_chunked_store_matches_vecset_on_random_access() {
+    // The storage-equivalence property: over random chunk geometries,
+    // cache budgets, and access patterns (single rows, blocks, row
+    // pairs), a ChunkedVecStore returns bit-identical data to the
+    // in-RAM VecSet it was written from.
+    prop::check("chunked store ≡ VecSet", 12, |g| {
+        let n = g.usize_in(1, 400);
+        let d = g.usize_in(1, 24);
+        let data = g.matrix(n, d, 3.0);
+        let path = tmp(&format!("prop_{n}_{d}.bin"));
+        write_flat(&path, &data);
+        let chunk_rows = g.usize_in(1, n + 3);
+        let cache = g.usize_in(2, 6);
+        let store = ChunkedVecStore::open_flat(&path, d)
+            .map_err(|e| e.to_string())?
+            .chunk_rows(chunk_rows)
+            .cache_chunks(cache);
+        if VecStore::rows(&store) != n || VecStore::dim(&store) != d {
+            std::fs::remove_file(&path).ok();
+            return Err(format!(
+                "shape mismatch: {}x{} vs {n}x{d}",
+                VecStore::rows(&store),
+                VecStore::dim(&store)
+            ));
+        }
+        let mut cur = store.open();
+        for _ in 0..200 {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let i = g.usize_in(0, n - 1);
+                    if cur.row(i) != data.row(i) {
+                        std::fs::remove_file(&path).ok();
+                        return Err(format!("row {i} mismatch (chunk_rows={chunk_rows})"));
+                    }
+                }
+                1 => {
+                    let lo = g.usize_in(0, n - 1);
+                    let hi = g.usize_in(lo + 1, n);
+                    if cur.block(lo, hi) != data.rows_flat(lo, hi) {
+                        std::fs::remove_file(&path).ok();
+                        return Err(format!("block [{lo},{hi}) mismatch"));
+                    }
+                }
+                _ => {
+                    let i = g.usize_in(0, n - 1);
+                    let j = g.usize_in(0, n - 1);
+                    let want = gkmeans::core_ops::dist::d2(data.row(i), data.row(j));
+                    if cur.d2_pair(i, j).to_bits() != want.to_bits() {
+                        std::fs::remove_file(&path).ok();
+                        return Err(format!("d2_pair({i},{j}) not bit-identical"));
+                    }
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn materialize_and_gather_agree_with_ram() {
+    let data = gkmeans::data::synth::sift_like(300, 9);
+    let path = tmp("gather.bin");
+    write_flat(&path, &data);
+    let chunked =
+        ChunkedVecStore::open_flat(&path, data.dim()).unwrap().chunk_rows(17).cache_chunks(2);
+    assert_eq!(store::materialize(&chunked), data);
+    let idx = [299usize, 0, 150, 150, 7];
+    assert_eq!(store::gather(&chunked, &idx), data.gather(&idx));
+    std::fs::remove_file(&path).ok();
+}
+
+fn assert_models_bit_identical(a: &FittedModel, b: &FittedModel) {
+    assert_eq!(a.method, b.method);
+    assert_eq!(a.k, b.k);
+    assert_eq!(a.dim, b.dim);
+    assert_eq!(a.n_train, b.n_train);
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.history.len(), b.history.len());
+    assert_eq!(a.total_seconds.to_bits(), b.total_seconds.to_bits());
+    for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(a.graph.is_some(), b.graph.is_some());
+    if let (Some(ga), Some(gb)) = (&a.graph, &b.graph) {
+        assert_eq!(ga.ids_flat(), gb.ids_flat());
+        for (x, y) in ga.dists_flat().iter().zip(gb.dists_flat()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    assert_eq!(a.data.is_some(), b.data.is_some());
+    if let (Some(da), Some(db)) = (&a.data, &b.data) {
+        let (da, db) = (da.to_vecset(), db.to_vecset());
+        assert_eq!(da.flat().len(), db.flat().len());
+        for (x, y) in da.flat().iter().zip(db.flat()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+#[test]
+fn committed_v1_fixture_loads_and_migrates_to_v2_bit_exact() {
+    // The fixture bytes were written by the v1 encoder and are committed
+    // so the legacy-format contract outlives the code that wrote it.
+    let fixture = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/model_v1_fixture.gkm");
+    let v1 = FittedModel::load(&fixture).expect("v1 fixture must load");
+    assert_eq!(v1.method, gkmeans::coordinator::job::Method::GkMeans);
+    assert_eq!((v1.k, v1.dim, v1.n_train), (2, 2, 4));
+    assert_eq!(v1.labels, vec![0, 0, 0, 1]);
+    assert_eq!(v1.history.len(), 1);
+    let graph = v1.graph.as_ref().expect("fixture embeds a graph");
+    assert_eq!(graph.neighbors(0), &[1, 2]);
+    assert_eq!(graph.neighbors(3), &[1, 2]);
+    let data = v1.data.as_ref().expect("fixture embeds vectors");
+    assert!(data.is_resident(), "v1 vectors are embedded");
+    assert_eq!(data.fetch_row(3), vec![5.0, 5.0]);
+
+    // v1 → save-as-v2 → load round-trips bit-exact, with lazy vectors
+    let out = tmp("migrated_fixture.gkm");
+    v1.save(&out).unwrap();
+    let v2 = FittedModel::load(&out).unwrap();
+    assert!(!v2.data.as_ref().unwrap().is_resident(), "v2 load pages vectors");
+    assert_models_bit_identical(&v1, &v2);
+    // the migrated artifact still answers queries
+    assert_eq!(v2.predict(&VecSet::from_flat(2, vec![4.9, 5.1]))[0], 1);
+    std::fs::remove_file(&out).ok();
+}
+
+/// Fit a small graph model with embedded vectors (the serving shape).
+fn serving_model(n: usize) -> (VecSet, FittedModel) {
+    let data = gkmeans::data::synth::sift_like(n, 4242);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(4).keep_data(true);
+    let model = GkMeans::new((n / 40).max(2)).kappa(8).tau(3).xi(30).fit(&data, &ctx);
+    (data, model)
+}
+
+/// Shrink a lazily-loaded model's block cache to a deliberately tiny
+/// budget so the test exercises real eviction, not one warm chunk.
+fn starve_cache(model: &mut FittedModel) {
+    let data = model.data.take().expect("model has vectors");
+    let disk = match data {
+        ModelVectors::Disk(c) => c,
+        ModelVectors::Ram(_) => panic!("expected paged vectors"),
+    };
+    model.data = Some(ModelVectors::Disk(disk.chunk_rows(8).cache_chunks(2)));
+}
+
+#[test]
+fn out_of_core_predict_batch_matches_in_ram() {
+    let (data, model) = serving_model(500);
+    let path = tmp("ooc_predict.gkm");
+    model.save(&path).unwrap();
+    let mut served = FittedModel::load(&path).unwrap();
+    starve_cache(&mut served);
+
+    let queries = gkmeans::data::synth::sift_like(200, 777);
+    let want = model.predict(&queries);
+    // in-RAM batch == in-RAM predict
+    assert_eq!(model.predict_batch(&queries), want);
+    // the reloaded artifact (eager centroids, paged vectors) agrees
+    assert_eq!(served.predict(&queries), want);
+    assert_eq!(served.predict_batch(&queries), want);
+    // threaded batch identical
+    served.threads = 4;
+    assert_eq!(served.predict_batch(&queries), want);
+    // and a disk-backed *query* store streams to the same labels
+    let qpath = tmp("ooc_queries.bin");
+    write_flat(&qpath, &queries);
+    let qstore =
+        ChunkedVecStore::open_flat(&qpath, queries.dim()).unwrap().chunk_rows(16).cache_chunks(2);
+    assert_eq!(served.predict_batch(&qstore), want);
+    assert_eq!(data.rows(), 500);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&qpath).ok();
+}
+
+#[test]
+fn out_of_core_search_batch_matches_single_queries() {
+    let (data, model) = serving_model(600);
+    let path = tmp("ooc_search.gkm");
+    model.save(&path).unwrap();
+    let mut served = FittedModel::load(&path).unwrap();
+    starve_cache(&mut served);
+    served.threads = 3;
+
+    let sp = SearchParams { ef: 32, entries: 16, seed: 11 };
+    let nq = 40;
+    let mut qflat = Vec::with_capacity(nq * data.dim());
+    for i in 0..nq {
+        qflat.extend(data.row(i * 7).iter().map(|v| v + 0.01));
+    }
+    let queries = VecSet::from_flat(data.dim(), qflat);
+
+    // batched multi-threaded search over paged vectors == repeated
+    // single searches over the embedded in-RAM vectors
+    let batched = served.search_batch(&queries, 5, &sp).unwrap();
+    assert_eq!(batched.len(), nq);
+    for (i, got) in batched.iter().enumerate() {
+        let single = model.search(queries.row(i), 5, &sp).unwrap();
+        assert_eq!(got, &single, "query {i}");
+        let served_single = served.search(queries.row(i), 5, &sp).unwrap();
+        assert_eq!(got, &served_single, "query {i} (served single)");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn out_of_core_fit_matches_in_ram_fit() {
+    // Clustering a disk-backed dataset (GK-means end to end, graph build
+    // included) must reproduce the in-RAM fit bit-for-bit at threads=1:
+    // the cursors feed the same bytes through the same kernels.
+    let data = gkmeans::data::synth::sift_like(400, 99);
+    let path = tmp("ooc_fit.bin");
+    write_flat(&path, &data);
+    let chunked =
+        ChunkedVecStore::open_flat(&path, data.dim()).unwrap().chunk_rows(32).cache_chunks(3);
+
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    let cfg = GkMeans::new(8).kappa(6).tau(2).xi(30);
+    let in_ram = cfg.fit(&data, &ctx);
+    let streamed = cfg.fit_store(&chunked, &ctx);
+
+    assert_eq!(in_ram.labels, streamed.labels);
+    for (a, b) in in_ram.centroids.flat().iter().zip(streamed.centroids.flat()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // keep_data on a streamed fit keeps the disk handle, not a RAM copy
+    assert!(!streamed.data.as_ref().unwrap().is_resident());
+    // ... and saving it embeds the same bytes the RAM fit embeds
+    let out = tmp("ooc_fit.gkm");
+    streamed.save(&out).unwrap();
+    let back = FittedModel::load(&out).unwrap();
+    assert_eq!(back.data.as_ref().unwrap().to_vecset(), data);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&out).ok();
+}
