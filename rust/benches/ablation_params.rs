@@ -31,7 +31,7 @@ fn main() {
     println!("\nkappa sweep (xi=50, tau=8):");
     let g = construct::build(
         &data,
-        &ConstructParams { kappa: 64, xi: 50, tau: 8, seed: 1, threads: 1 },
+        &ConstructParams { kappa: 64, xi: 50, tau: 8, seed: 1, threads: 1, ..Default::default() },
         &backend,
     );
     let mut tk = Table::new(&["kappa", "iter_s", "distortion"]);
@@ -57,7 +57,7 @@ fn main() {
     for xi in [20usize, 40, 50, 70, 100] {
         let b = construct::build(
             &data,
-            &ConstructParams { kappa: 20, xi, tau: 8, seed: 1, threads: 1 },
+            &ConstructParams { kappa: 20, xi, tau: 8, seed: 1, threads: 1, ..Default::default() },
             &backend,
         );
         let r = recall::recall_at_1(&b.graph, &exact);

@@ -30,7 +30,7 @@ fn main() {
     let (g_alg3, t_alg3) = gkmeans::util::timer::timed(|| {
         construct::build(
             &data,
-            &ConstructParams { kappa, xi: 50, tau: 16, seed: 1, threads: 1 },
+            &ConstructParams { kappa, xi: 50, tau: 16, seed: 1, threads: 1, ..Default::default() },
             &backend,
         )
         .graph

@@ -28,7 +28,14 @@ fn main() {
     for tau in 1..=tau_max {
         let out = construct::build(
             &data,
-            &ConstructParams { kappa, xi: 50, tau, seed: 20170707, threads: 1 },
+            &ConstructParams {
+                kappa,
+                xi: 50,
+                tau,
+                seed: 20170707,
+                threads: 1,
+                ..Default::default()
+            },
             &backend,
         );
         let r = recall::recall_at_1(&out.graph, &exact);

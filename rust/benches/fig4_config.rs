@@ -36,7 +36,7 @@ fn main() {
     for tau in [1usize, 2, 4, 7, 10] {
         let g = construct::build(
             &data,
-            &ConstructParams { kappa, xi: 50, tau, seed: 1, threads: 1 },
+            &ConstructParams { kappa, xi: 50, tau, seed: 1, threads: 1, ..Default::default() },
             &backend,
         );
         let r = recall::recall_at_1(&g.graph, &exact);

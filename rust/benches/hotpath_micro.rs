@@ -150,7 +150,14 @@ fn main() {
         let data = blobs(&BlobSpec::quick(n, 128, 32), 3);
         let graph = gkmeans::gkm::construct::build(
             &data,
-            &gkmeans::gkm::construct::ConstructParams { kappa: 20, xi: 50, tau: 3, seed: 1, threads: 1 },
+            &gkmeans::gkm::construct::ConstructParams {
+                kappa: 20,
+                xi: 50,
+                tau: 3,
+                seed: 1,
+                threads: 1,
+                ..Default::default()
+            },
             &Backend::native(),
         )
         .graph;

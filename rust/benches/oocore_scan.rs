@@ -1,0 +1,101 @@
+//! Out-of-core scan-order bench: chunk reads + wall time for GK-means
+//! epoch scans over a disk-backed `ChunkedVecStore` under the global
+//! shuffle vs the super-block plan (`data::plan`).
+//!
+//! The cache is sized to a small fraction of the chunks, so the global
+//! order degenerates to ≈ one chunk read per sample while the planned
+//! order reads each chunk once per epoch — the trajectory file records
+//! both so storage PRs can compare.  Emits `BENCH_oocore.json`
+//! (`$GKMEANS_BENCH_OOCORE_JSON` overrides the destination), uploaded by
+//! CI alongside `BENCH_gkm.json`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use gkmeans::bench_util;
+use gkmeans::data::plan::ScanOrder;
+use gkmeans::data::store::ChunkedVecStore;
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::gkm::gkmeans as gk;
+use gkmeans::kmeans::common::{Clustering, KmeansParams};
+use gkmeans::runtime::Backend;
+use gkmeans::util::timer::Timer;
+
+fn main() {
+    bench_util::banner("OOCore", "scan-order locality: chunk reads + wall time per epoch");
+    let n = bench_util::scaled(20_000);
+    let d = 32;
+    let k = (n / 100).max(2);
+    let kappa = 10;
+    let epochs = 5;
+    let data = blobs(&BlobSpec::quick(n, d, 64), 7);
+
+    // write the dataset as a raw flat f32 file and stream it back
+    let path = std::env::temp_dir().join(format!("gkm_oocore_{}.bin", std::process::id()));
+    let mut bytes = Vec::with_capacity(data.flat().len() * 4);
+    for &x in data.flat() {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(&path, &bytes).expect("write bench dataset");
+
+    let backend = Backend::native();
+    let graph = gkmeans::graph::brute::build_threaded(&data, kappa, &backend, 0);
+    let init = gkmeans::kmeans::two_means::run(
+        &data,
+        k,
+        &gkmeans::kmeans::two_means::TwoMeansParams::default(),
+        &backend,
+    );
+
+    // geometry: 64 rows per chunk, cache budget ~6% of the chunks
+    let chunk_rows = 64;
+    let n_chunks = n.div_ceil(chunk_rows);
+    let cache_chunks = (n_chunks / 16).max(2);
+    println!("n={n} d={d} k={k} chunks={n_chunks} cache={cache_chunks} epochs={epochs}");
+
+    let mut lines = Vec::new();
+    for order in [ScanOrder::Global, ScanOrder::Superblock] {
+        let reads = Arc::new(AtomicU64::new(0));
+        let store = ChunkedVecStore::open_flat(&path, d)
+            .expect("open streamed dataset")
+            .chunk_rows(chunk_rows)
+            .cache_chunks(cache_chunks)
+            .with_read_counter(reads.clone());
+        let clustering = Clustering::from_labels(&store, init.clone(), k);
+        reads.store(0, Ordering::Relaxed); // count only the epoch scans
+        let params = gk::GkMeansParams {
+            kappa,
+            base: KmeansParams {
+                max_iters: epochs,
+                min_move_rate: 0.0,
+                seed: 1,
+                threads: 1,
+                scan_order: order,
+            },
+        };
+        let timer = Timer::start();
+        let out = gk::run_from(&store, clustering, &graph, &params);
+        let wall_s = timer.elapsed_s();
+        let chunk_reads = reads.load(Ordering::Relaxed);
+        println!(
+            "scan_order={:<10} chunk_reads={chunk_reads:>8} wall={wall_s:.3}s distortion={:.5}",
+            order.name(),
+            out.distortion()
+        );
+        lines.push(format!(
+            "{{\"name\":\"oocore_gk_epochs\",\"scan_order\":\"{}\",\"n\":{n},\"d\":{d},\"k\":{k},\
+             \"chunk_rows\":{chunk_rows},\"cache_chunks\":{cache_chunks},\"epochs\":{epochs},\
+             \"chunk_reads\":{chunk_reads},\"wall_s\":{wall_s:.4}}}",
+            order.name()
+        ));
+    }
+    std::fs::remove_file(&path).ok();
+
+    let dest = std::env::var("GKMEANS_BENCH_OOCORE_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_oocore.json"));
+    match bench_util::write_json_array(&dest, &lines) {
+        Ok(()) => println!("wrote {}", dest.display()),
+        Err(e) => eprintln!("could not write {}: {e}", dest.display()),
+    }
+}

@@ -90,11 +90,19 @@ pub fn write_gk_bench_json_to(
     path: &std::path::Path,
     records: &[GkBenchRecord],
 ) -> std::io::Result<()> {
+    let lines: Vec<String> = records.iter().map(|r| r.to_json()).collect();
+    write_json_array(path, &lines)
+}
+
+/// Write pre-serialized JSON objects as one indented JSON array — the
+/// shared framing for every bench trajectory file (`BENCH_gkm.json`,
+/// `BENCH_oocore.json`).
+pub fn write_json_array(path: &std::path::Path, lines: &[String]) -> std::io::Result<()> {
     let mut s = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
+    for (i, l) in lines.iter().enumerate() {
         s.push_str("  ");
-        s.push_str(&r.to_json());
-        if i + 1 < records.len() {
+        s.push_str(l);
+        if i + 1 < lines.len() {
             s.push(',');
         }
         s.push('\n');

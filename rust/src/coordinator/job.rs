@@ -158,6 +158,7 @@ impl ClusterJob {
             .max_iters(self.base.max_iters)
             .min_move_rate(self.base.min_move_rate)
             .keep_data(self.keep_data)
+            .scan_order(self.base.scan_order)
     }
 }
 

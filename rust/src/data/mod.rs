@@ -1,8 +1,10 @@
-//! Datasets: container, synthetic generators for the paper's four
-//! benchmark sets, and fvecs/bvecs interchange I/O.
+//! Datasets: container, the out-of-core storage layer ([`store`]) and
+//! its locality-aware scan planner ([`plan`]), synthetic generators for
+//! the paper's four benchmark sets, and fvecs/bvecs interchange I/O.
 
 pub mod io;
 pub mod matrix;
+pub mod plan;
 pub mod store;
 pub mod synth;
 

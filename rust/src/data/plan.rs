@@ -1,0 +1,393 @@
+//! Locality-aware scan planning: who decides the *order* in which the
+//! scan loops visit rows of a [`VecStore`].
+//!
+//! PR 3 made every fit run on the storage abstraction, but the shuffled
+//! GK-means epoch scan, NN-Descent local joins, and 2M-tree subset reads
+//! are *random-access*: correct on a
+//! [`ChunkedVecStore`](crate::data::store::ChunkedVecStore), yet cache-
+//! hostile — a globally shuffled epoch over a store whose cache holds a
+//! small fraction of the chunks degenerates to ≈ one chunk read per
+//! sample.  At the paper's headline scale (10M × 512-d) that is the
+//! difference between hours and years of wall clock.
+//!
+//! The fix is the classic out-of-core trick (cluster-closure-style
+//! grouping): **shuffle within chunk-aligned super-blocks and permute the
+//! super-blocks across epochs**.  Every row is still visited exactly once
+//! per epoch and the visit order still varies between epochs (the
+//! stochastic ingredient the incremental optimizers need), but the scan
+//! only switches chunks when it crosses a super-block boundary, so an
+//! epoch costs one read per *chunk* instead of one read per *sample*.
+//!
+//! [`ScanPlan`] owns that decision.  It is built per fit from the store's
+//! [`ScanGeometry`] and a user-facing [`ScanOrder`] knob (params /
+//! `RunContext` / CLI `--scan-order`):
+//!
+//! * [`ScanOrder::Global`] — the historical full Fisher–Yates shuffle.
+//!   On a resident [`VecSet`](crate::data::matrix::VecSet) this is the
+//!   default and consumes the RNG identically to the pre-planner code,
+//!   so resident fits stay **bit-identical** with planning off.
+//! * [`ScanOrder::Superblock`] — chunk-aligned super-block order (the
+//!   description above).  Ignored (falls back to Global) on stores with
+//!   no chunk geometry: a resident store has no chunks to be kind to.
+//! * [`ScanOrder::Auto`] — Superblock when the store exposes a geometry,
+//!   Global otherwise.  What the engines use unless told otherwise.
+//!
+//! Besides epoch orders the plan also batches *subset* access patterns:
+//! [`ScanPlan::order_subset`] groups an arbitrary row-id list by chunk
+//! (2M-tree bisection reads), [`ScanPlan::order_pairs`] groups random row
+//! pairs by their chunk pair (NN-Descent local joins), and
+//! [`ScanPlan::shuffle_positions`] is the keyed super-block shuffle for
+//! visit orders over a subset (the 2M-tree's BKM polish).  All of them
+//! are no-ops under [`ScanOrder::Global`], so the resident path never
+//! changes behavior.
+
+use crate::data::store::VecStore;
+use crate::util::rng::Rng;
+
+/// User-facing epoch visit-order policy (params / `RunContext` / CLI
+/// `--scan-order`).  See the [module docs](self) for the semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanOrder {
+    /// Superblock for stores with a chunk geometry, Global otherwise.
+    #[default]
+    Auto,
+    /// Full global shuffle — the historical, cache-oblivious order.
+    Global,
+    /// Shuffle within chunk-aligned super-blocks, permute super-blocks.
+    Superblock,
+}
+
+impl ScanOrder {
+    /// Parse a CLI value (`auto` / `global` / `superblock`).
+    pub fn parse(s: &str) -> Result<ScanOrder, String> {
+        Ok(match s {
+            "auto" => ScanOrder::Auto,
+            "global" => ScanOrder::Global,
+            "superblock" | "super-block" => ScanOrder::Superblock,
+            other => {
+                return Err(format!(
+                    "unknown scan order {other:?} (expected auto|global|superblock)"
+                ))
+            }
+        })
+    }
+
+    /// The CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScanOrder::Auto => "auto",
+            ScanOrder::Global => "global",
+            ScanOrder::Superblock => "superblock",
+        }
+    }
+}
+
+/// The chunk geometry a paged store exposes so the planner can align
+/// super-blocks with its cache (see [`VecStore::scan_geometry`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScanGeometry {
+    /// Rows per resident chunk.
+    pub chunk_rows: usize,
+    /// Resident-chunk budget per cursor.
+    pub cache_chunks: usize,
+}
+
+impl ScanGeometry {
+    /// Rows per super-block: the largest run of whole chunks that fits in
+    /// one cursor's cache, so a super-block's chunks are each read from
+    /// disk at most once while the scan shuffles freely inside it.
+    pub fn superblock_rows(&self) -> usize {
+        self.chunk_rows.max(1) * self.cache_chunks.max(1)
+    }
+}
+
+/// A fit-time visit-order plan for one store (see the [module
+/// docs](self)).  Cheap plain data — build one per fit and share it
+/// across epochs and worker threads.
+#[derive(Debug, Clone)]
+pub struct ScanPlan {
+    /// `Some(geometry)` ⇔ super-block planning is in effect.
+    geometry: Option<ScanGeometry>,
+}
+
+impl ScanPlan {
+    /// Resolve `order` against the store's geometry.
+    pub fn new(store: &dyn VecStore, order: ScanOrder) -> ScanPlan {
+        let geometry = match order {
+            ScanOrder::Global => None,
+            ScanOrder::Auto | ScanOrder::Superblock => store.scan_geometry(),
+        };
+        ScanPlan { geometry }
+    }
+
+    /// A plan that always produces the global order (no geometry).
+    pub fn global() -> ScanPlan {
+        ScanPlan { geometry: None }
+    }
+
+    /// Whether super-block planning is in effect.
+    pub fn is_superblock(&self) -> bool {
+        self.geometry.is_some()
+    }
+
+    /// Rows per super-block (1 super-block spanning everything when the
+    /// plan is global — only meaningful when [`ScanPlan::is_superblock`]).
+    fn superblock_rows(&self) -> usize {
+        self.geometry.map(|g| g.superblock_rows()).unwrap_or(usize::MAX)
+    }
+
+    /// Produce this epoch's visit order over rows `0..order.len()`.
+    ///
+    /// Global: one Fisher–Yates shuffle of the existing `order` — exactly
+    /// the RNG consumption of the historical epoch loops, so resident
+    /// fits are bit-identical.  Superblock: rebuild `order` as a random
+    /// permutation of super-blocks, each internally shuffled.
+    pub fn shuffle_epoch(&self, order: &mut [usize], rng: &mut Rng) {
+        let n = order.len();
+        let sb = self.superblock_rows();
+        if self.geometry.is_none() || sb >= n {
+            rng.shuffle(order);
+            return;
+        }
+        let nsb = n.div_ceil(sb);
+        let mut blocks: Vec<usize> = (0..nsb).collect();
+        rng.shuffle(&mut blocks);
+        let mut pos = 0usize;
+        for &b in &blocks {
+            let lo = b * sb;
+            let hi = (lo + sb).min(n);
+            let seg = &mut order[pos..pos + (hi - lo)];
+            for (t, slot) in seg.iter_mut().enumerate() {
+                *slot = lo + t;
+            }
+            rng.shuffle(seg);
+            pos += hi - lo;
+        }
+        debug_assert_eq!(pos, n);
+    }
+
+    /// Shuffle a visit order whose entries are *positions* into a subset,
+    /// grouping by the super-block of the underlying row id (`row_of`).
+    /// Global: plain shuffle (bit-identical RNG use).  Superblock: the
+    /// positions are grouped by `row_of(pos) / superblock_rows`, the
+    /// group order is permuted, and each group is shuffled internally —
+    /// in place, with one transient copy of `order` (the 2M-tree's root
+    /// bisection passes the whole dataset through here every polish
+    /// sweep, so per-position allocations would dominate).
+    pub fn shuffle_positions(
+        &self,
+        order: &mut [usize],
+        row_of: impl Fn(usize) -> usize,
+        rng: &mut Rng,
+    ) {
+        if self.geometry.is_none() {
+            rng.shuffle(order);
+            return;
+        }
+        let sb = self.superblock_rows().max(1);
+        order.sort_unstable_by_key(|&p| row_of(p) / sb);
+        // contiguous group ranges after the sort
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        for t in 1..=order.len() {
+            if t == order.len() || row_of(order[t]) / sb != row_of(order[start]) / sb {
+                ranges.push((start, t));
+                start = t;
+            }
+        }
+        rng.shuffle(&mut ranges);
+        let sorted = order.to_vec();
+        let mut pos = 0usize;
+        for &(lo, hi) in &ranges {
+            let seg = &mut order[pos..pos + (hi - lo)];
+            seg.copy_from_slice(&sorted[lo..hi]);
+            rng.shuffle(seg);
+            pos += hi - lo;
+        }
+        debug_assert_eq!(pos, order.len());
+    }
+
+    /// Reorder a row-id subset ascending (≡ grouped by chunk) so a
+    /// sweep over it reads each chunk at most once.  No-op when the plan
+    /// is global, so the resident path keeps its historical order.
+    pub fn order_subset(&self, idx: &mut [u32]) {
+        if self.is_superblock() {
+            idx.sort_unstable();
+        }
+    }
+
+    /// Group row pairs by their (chunk, chunk) key so evaluating them in
+    /// order keeps both operand chunks hot.  No-op when the plan is
+    /// global — the caller's evaluation sequence is unchanged.
+    pub fn order_pairs(&self, pairs: &mut [(u32, u32)]) {
+        if let Some(g) = self.geometry {
+            let cr = g.chunk_rows.max(1) as u32;
+            pairs.sort_unstable_by_key(|&(a, b)| (a / cr, b / cr));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::VecSet;
+
+    fn is_permutation(order: &[usize]) -> bool {
+        let mut seen = vec![false; order.len()];
+        for &i in order {
+            if i >= order.len() || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+        true
+    }
+
+    fn chunked_plan(chunk_rows: usize, cache_chunks: usize) -> ScanPlan {
+        ScanPlan {
+            geometry: Some(ScanGeometry { chunk_rows, cache_chunks }),
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for s in ["auto", "global", "superblock"] {
+            assert_eq!(ScanOrder::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(ScanOrder::parse("super-block").unwrap(), ScanOrder::Superblock);
+        assert!(ScanOrder::parse("wat").is_err());
+        assert_eq!(ScanOrder::default(), ScanOrder::Auto);
+    }
+
+    #[test]
+    fn global_shuffle_is_bit_identical_to_plain_shuffle() {
+        // the resident bit-identity contract: a global plan consumes the
+        // RNG exactly like the historical `rng.shuffle(order)` epoch top
+        let mut a: Vec<usize> = (0..257).collect();
+        let mut b = a.clone();
+        let mut ra = Rng::new(42);
+        let mut rb = Rng::new(42);
+        ScanPlan::global().shuffle_epoch(&mut a, &mut ra);
+        rb.shuffle(&mut b);
+        assert_eq!(a, b);
+        assert_eq!(ra.next_u64(), rb.next_u64(), "RNG streams diverged");
+    }
+
+    #[test]
+    fn resident_store_resolves_to_global() {
+        let v = VecSet::from_flat(2, vec![0.0; 20]);
+        assert!(!ScanPlan::new(&v, ScanOrder::Auto).is_superblock());
+        assert!(!ScanPlan::new(&v, ScanOrder::Superblock).is_superblock());
+        assert!(!ScanPlan::new(&v, ScanOrder::Global).is_superblock());
+    }
+
+    #[test]
+    fn superblock_epoch_is_a_grouped_permutation() {
+        let plan = chunked_plan(8, 3); // super-blocks of 24 rows
+        let n = 200;
+        let mut order = vec![0usize; n];
+        let mut rng = Rng::new(7);
+        for _ in 0..5 {
+            plan.shuffle_epoch(&mut order, &mut rng);
+            assert!(is_permutation(&order));
+            // within any run of 24 consecutive positions all rows come
+            // from one super-block
+            let sb = 24;
+            let nsb = n.div_ceil(sb);
+            let mut pos = 0;
+            let mut seen_blocks = Vec::new();
+            // reconstruct block sizes: blocks are [0,24), [24,48), ...
+            // the epoch emits them contiguously in permuted order
+            while pos < n {
+                let block = order[pos] / sb;
+                let len = if block + 1 == nsb { n - block * sb } else { sb };
+                for &r in &order[pos..pos + len] {
+                    assert_eq!(r / sb, block, "row {r} outside super-block {block}");
+                }
+                seen_blocks.push(block);
+                pos += len;
+            }
+            let mut sorted = seen_blocks.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..nsb).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn superblock_epochs_permute_block_order() {
+        let plan = chunked_plan(4, 4); // 16-row super-blocks
+        let mut order = vec![0usize; 160];
+        let mut rng = Rng::new(9);
+        plan.shuffle_epoch(&mut order, &mut rng);
+        let first: Vec<usize> = order.iter().map(|&r| r / 16).collect();
+        plan.shuffle_epoch(&mut order, &mut rng);
+        let second: Vec<usize> = order.iter().map(|&r| r / 16).collect();
+        assert_ne!(first, second, "block order should vary across epochs");
+    }
+
+    #[test]
+    fn tiny_dataset_degenerates_to_global() {
+        // one super-block covers everything -> plain shuffle
+        let plan = chunked_plan(64, 8);
+        let mut a: Vec<usize> = (0..50).collect();
+        let mut b = a.clone();
+        let mut ra = Rng::new(3);
+        let mut rb = Rng::new(3);
+        plan.shuffle_epoch(&mut a, &mut ra);
+        rb.shuffle(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shuffle_positions_groups_by_row_superblock() {
+        let plan = chunked_plan(4, 2); // 8-row super-blocks
+        let subset: Vec<u32> = vec![33, 1, 9, 34, 2, 10, 0, 8];
+        let mut order: Vec<usize> = (0..subset.len()).collect();
+        let mut rng = Rng::new(5);
+        plan.shuffle_positions(&mut order, |p| subset[p] as usize, &mut rng);
+        assert!(is_permutation(&order));
+        // positions with the same row super-block must be contiguous
+        let keys: Vec<usize> = order.iter().map(|&p| subset[p] as usize / 8).collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut last = usize::MAX;
+        for k in keys {
+            if k != last {
+                assert!(seen.insert(k), "super-block {k} split across the order");
+                last = k;
+            }
+        }
+    }
+
+    #[test]
+    fn global_positions_match_plain_shuffle() {
+        let mut a: Vec<usize> = (0..31).collect();
+        let mut b = a.clone();
+        let mut ra = Rng::new(11);
+        let mut rb = Rng::new(11);
+        ScanPlan::global().shuffle_positions(&mut a, |p| p * 3, &mut ra);
+        rb.shuffle(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn order_subset_and_pairs() {
+        let plan = chunked_plan(10, 2);
+        let mut idx = vec![42u32, 7, 19, 3];
+        plan.order_subset(&mut idx);
+        assert_eq!(idx, vec![3, 7, 19, 42]);
+        let mut pairs = vec![(35u32, 2u32), (5, 40), (12, 3), (4, 4)];
+        plan.order_pairs(&mut pairs);
+        let keys: Vec<(u32, u32)> = pairs.iter().map(|&(a, b)| (a / 10, b / 10)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "pairs not grouped by chunk pair");
+        // global plan leaves both untouched
+        let g = ScanPlan::global();
+        let mut idx2 = vec![42u32, 7];
+        g.order_subset(&mut idx2);
+        assert_eq!(idx2, vec![42, 7]);
+        let mut p2 = vec![(9u32, 1u32), (1, 9)];
+        g.order_pairs(&mut p2);
+        assert_eq!(p2, vec![(9, 1), (1, 9)]);
+    }
+}

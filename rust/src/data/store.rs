@@ -26,18 +26,35 @@
 //! ## Errors
 //!
 //! Constructors validate eagerly (file exists, sizes consistent, headers
-//! sane) and return `Err` on anything suspicious.  Cursor reads after a
-//! successful open panic on I/O failure with a descriptive message —
-//! threading `Result` through every inner distance loop would poison the
-//! hot path for a failure mode (file truncated *mid-run*) that has no
-//! sensible recovery.
+//! sane) and return `Err` on anything suspicious.  Cursor reads come in
+//! two flavors: the fallible [`StoreCursor::try_row`] /
+//! [`StoreCursor::try_block`] / [`StoreCursor::try_d2_pair`] return `Err`
+//! on mid-stream corruption (an fvecs/bvecs per-row dimension header that
+//! disagrees with the probe, or plain I/O failure), while the infallible
+//! `row`/`block`/`d2_pair` the hot scan loops use panic with the same
+//! message — threading `Result` through every inner distance loop would
+//! poison the hot path for a failure mode (file truncated *mid-run*)
+//! that has no sensible recovery there.
+//!
+//! ## File handles
+//!
+//! All cursors of one [`ChunkedVecStore`] (and of its clones) share a
+//! single pooled read handle, opened lazily on the first cursor: reads
+//! go through positioned I/O at per-cursor offsets, so no seek state is
+//! shared and opening a cursor never pays a `File::open` (the
+//! `ModelVectors::Disk` serving path opens one cursor per query shard).
+//! Non-unix targets lack positioned reads and fall back to one handle
+//! per cursor.
 
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
+use std::io::Read;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::core_ops::dist::d2;
 use crate::data::matrix::VecSet;
+use crate::data::plan::ScanGeometry;
 
 /// Read-only `n × d` vector storage: the abstraction the scan loops run
 /// on.  See the [module docs](self) for the access model.
@@ -67,6 +84,14 @@ pub trait VecStore: Sync {
     /// The disk backing of this store, when it streams from a file
     /// (model artifacts keep a cheap handle instead of materializing).
     fn disk_backing(&self) -> Option<&ChunkedVecStore> {
+        None
+    }
+
+    /// The chunk geometry of this store, when it pages fixed-size row
+    /// chunks through a bounded cache — what the locality-aware scan
+    /// planner ([`crate::data::plan::ScanPlan`]) aligns super-blocks
+    /// with.  Resident stores return `None` (no chunks to be kind to).
+    fn scan_geometry(&self) -> Option<ScanGeometry> {
         None
     }
 }
@@ -112,15 +137,23 @@ pub fn materialize(store: &dyn VecStore) -> VecSet {
 }
 
 /// Copy the rows at `idx` (in order, repeats allowed) into a [`VecSet`].
+///
+/// On a paged store the rows are *read* in ascending-row order (so each
+/// chunk is loaded from disk at most once, however scattered `idx` is —
+/// the k-means++ / random-init sampling pattern) and scattered back to
+/// their requested positions: the output is bit-identical to a naive
+/// in-order gather.
 pub fn gather(store: &dyn VecStore, idx: &[usize]) -> VecSet {
     if let Some(v) = store.as_vecset() {
         return v.gather(idx);
     }
     let d = store.dim();
     let mut cur = store.open();
-    let mut flat = Vec::with_capacity(idx.len() * d);
-    for &i in idx {
-        flat.extend_from_slice(cur.row(i));
+    let mut flat = vec![0f32; idx.len() * d];
+    let mut order: Vec<usize> = (0..idx.len()).collect();
+    order.sort_unstable_by_key(|&t| idx[t]);
+    for t in order {
+        cur.read_row_into(idx[t], &mut flat[t * d..(t + 1) * d]);
     }
     VecSet::from_flat(d, flat)
 }
@@ -174,6 +207,13 @@ pub struct ChunkedVecStore {
     elem: Elem,
     chunk_rows: usize,
     cache_chunks: usize,
+    /// Pooled read handle shared by every cursor of this store (and of
+    /// its clones); opened lazily by the first cursor.  Cursors read at
+    /// absolute offsets (positioned I/O), so no seek state is shared.
+    handle: Arc<OnceLock<Arc<File>>>,
+    /// Optional chunk-read instrumentation: incremented once per chunk
+    /// loaded from disk, across all cursors sharing this store value.
+    read_counter: Option<Arc<AtomicU64>>,
 }
 
 impl ChunkedVecStore {
@@ -197,6 +237,8 @@ impl ChunkedVecStore {
             elem,
             chunk_rows,
             cache_chunks: DEFAULT_CACHE_CHUNKS,
+            handle: Arc::new(OnceLock::new()),
+            read_counter: None,
         }
     }
 
@@ -301,6 +343,14 @@ impl ChunkedVecStore {
         self
     }
 
+    /// Install a chunk-read counter: every chunk any cursor of this
+    /// store value loads from disk bumps it once.  The locality tests
+    /// and the out-of-core bench assert cache behavior through this.
+    pub fn with_read_counter(mut self, counter: Arc<AtomicU64>) -> Self {
+        self.read_counter = Some(counter);
+        self
+    }
+
     /// The backing file.
     pub fn path(&self) -> &Path {
         &self.path
@@ -314,20 +364,44 @@ impl ChunkedVecStore {
         self.dim
     }
 
-    /// Read rows `[lo, hi)` from `file` into a fresh flat `f32` buffer,
-    /// verifying per-row headers where the layout has them.
-    fn read_rows(&self, file: &mut File, lo: usize, hi: usize) -> Vec<f32> {
+    /// The handle a new cursor reads through: the pooled shared handle
+    /// on unix (positioned I/O, per-cursor offsets), a private handle
+    /// elsewhere (no positioned reads to share one safely).
+    fn cursor_file(&self) -> Result<Arc<File>, String> {
+        #[cfg(unix)]
+        {
+            if let Some(f) = self.handle.get() {
+                return Ok(f.clone());
+            }
+            let f = File::open(&self.path)
+                .map_err(|e| format!("{}: {e}", self.path.display()))?;
+            Ok(self.handle.get_or_init(|| Arc::new(f)).clone())
+        }
+        #[cfg(not(unix))]
+        {
+            File::open(&self.path)
+                .map(Arc::new)
+                .map_err(|e| format!("{}: {e}", self.path.display()))
+        }
+    }
+
+    /// Read rows `[lo, hi)` into a fresh flat `f32` buffer, verifying
+    /// per-row headers where the layout has them.  Mid-stream corruption
+    /// (an fvecs/bvecs record whose dimension header disagrees with the
+    /// probe) returns `Err` rather than aborting the process.
+    fn read_rows(&self, file: &File, lo: usize, hi: usize) -> Result<Vec<f32>, String> {
         let nrows = hi - lo;
         let nbytes = nrows as u64 * self.row_stride;
         let mut raw = vec![0u8; nbytes as usize];
-        file.seek(SeekFrom::Start(self.base + lo as u64 * self.row_stride))
-            .and_then(|_| file.read_exact(&mut raw))
-            .unwrap_or_else(|e| {
-                panic!(
-                    "ChunkedVecStore {}: reading rows [{lo}, {hi}) failed: {e}",
-                    self.path.display()
-                )
-            });
+        read_exact_at(file, &mut raw, self.base + lo as u64 * self.row_stride).map_err(|e| {
+            format!(
+                "ChunkedVecStore {}: reading rows [{lo}, {hi}) failed: {e}",
+                self.path.display()
+            )
+        })?;
+        if let Some(c) = &self.read_counter {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
         let mut out = Vec::with_capacity(nrows * self.dim);
         let stride = self.row_stride as usize;
         let skip = self.row_skip as usize;
@@ -336,13 +410,13 @@ impl ChunkedVecStore {
             if skip == 4 {
                 let d = i32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]);
                 if d as usize != self.dim {
-                    panic!(
+                    return Err(format!(
                         "ChunkedVecStore {}: row {} header says dim {d}, expected {} \
                          — inconsistent or corrupt file",
                         self.path.display(),
                         lo + r,
                         self.dim
-                    );
+                    ));
                 }
             }
             match self.elem {
@@ -354,7 +428,23 @@ impl ChunkedVecStore {
                 Elem::U8 => out.extend(rec[skip..].iter().map(|&b| b as f32)),
             }
         }
-        out
+        Ok(out)
+    }
+}
+
+/// Positioned read at `offset` without touching shared seek state (unix
+/// `pread`; the non-unix fallback seeks a cursor-private handle).
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::os::unix::fs::FileExt::read_exact_at(file, buf, offset)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
     }
 }
 
@@ -368,8 +458,8 @@ impl VecStore for ChunkedVecStore {
     }
 
     fn open(&self) -> StoreCursor<'_> {
-        let file = File::open(&self.path).unwrap_or_else(|e| {
-            panic!("ChunkedVecStore {}: reopen failed: {e}", self.path.display())
+        let file = self.cursor_file().unwrap_or_else(|e| {
+            panic!("ChunkedVecStore reopen failed: {e}")
         });
         StoreCursor::Chunked(ChunkedCursor {
             store: self,
@@ -384,6 +474,10 @@ impl VecStore for ChunkedVecStore {
     fn disk_backing(&self) -> Option<&ChunkedVecStore> {
         Some(self)
     }
+
+    fn scan_geometry(&self) -> Option<ScanGeometry> {
+        Some(ScanGeometry { chunk_rows: self.chunk_rows, cache_chunks: self.cache_chunks })
+    }
 }
 
 fn file_len(path: &Path) -> Result<u64, String> {
@@ -392,11 +486,12 @@ fn file_len(path: &Path) -> Result<u64, String> {
         .map_err(|e| format!("{}: {e}", path.display()))
 }
 
-/// A read cursor over a [`ChunkedVecStore`]: its own file handle, an
-/// LRU cache of resident chunks, and scratch for cross-chunk blocks.
+/// A read cursor over a [`ChunkedVecStore`]: the store's pooled file
+/// handle, an LRU cache of resident chunks, and scratch for cross-chunk
+/// blocks.
 pub struct ChunkedCursor<'a> {
     store: &'a ChunkedVecStore,
-    file: File,
+    file: Arc<File>,
     /// Resident chunks: (chunk index, last-use tick, rows·dim floats).
     slots: Vec<(usize, u64, Vec<f32>)>,
     tick: u64,
@@ -407,16 +502,16 @@ pub struct ChunkedCursor<'a> {
 impl ChunkedCursor<'_> {
     /// Slot index of chunk `c`, loading (and possibly evicting the
     /// least-recently-used resident chunk) on miss.
-    fn slot_of(&mut self, c: usize) -> usize {
+    fn slot_of(&mut self, c: usize) -> Result<usize, String> {
         self.tick += 1;
         if let Some(s) = self.slots.iter().position(|(ci, _, _)| *ci == c) {
             self.slots[s].1 = self.tick;
-            return s;
+            return Ok(s);
         }
         let lo = c * self.store.chunk_rows;
         let hi = (lo + self.store.chunk_rows).min(self.store.rows);
-        let buf = self.store.read_rows(&mut self.file, lo, hi);
-        if self.slots.len() < self.store.cache_chunks {
+        let buf = self.store.read_rows(&self.file, lo, hi)?;
+        Ok(if self.slots.len() < self.store.cache_chunks {
             self.slots.push((c, self.tick, buf));
             self.slots.len() - 1
         } else {
@@ -425,31 +520,31 @@ impl ChunkedCursor<'_> {
                 .expect("cache budget >= 2");
             self.slots[s] = (c, self.tick, buf);
             s
-        }
+        })
     }
 
-    fn row(&mut self, i: usize) -> &[f32] {
+    fn try_row(&mut self, i: usize) -> Result<&[f32], String> {
         debug_assert!(i < self.store.rows, "row {i} out of bounds");
         let cr = self.store.chunk_rows;
         let d = self.store.dim;
         let c = i / cr;
-        let s = self.slot_of(c);
+        let s = self.slot_of(c)?;
         let off = (i - c * cr) * d;
-        &self.slots[s].2[off..off + d]
+        Ok(&self.slots[s].2[off..off + d])
     }
 
-    fn block(&mut self, lo: usize, hi: usize) -> &[f32] {
+    fn try_block(&mut self, lo: usize, hi: usize) -> Result<&[f32], String> {
         let cr = self.store.chunk_rows;
         let d = self.store.dim;
         if lo >= hi {
-            return &[];
+            return Ok(&[]);
         }
         if lo / cr == (hi - 1) / cr {
             // fully inside one chunk: serve a direct slice
             let c = lo / cr;
-            let s = self.slot_of(c);
+            let s = self.slot_of(c)?;
             let start = (lo - c * cr) * d;
-            return &self.slots[s].2[start..start + (hi - lo) * d];
+            return Ok(&self.slots[s].2[start..start + (hi - lo) * d]);
         }
         // spans chunks: assemble into scratch
         let mut scratch = std::mem::take(&mut self.scratch);
@@ -459,20 +554,30 @@ impl ChunkedCursor<'_> {
         while r < hi {
             let c = r / cr;
             let seg_hi = ((c + 1) * cr).min(hi);
-            let s = self.slot_of(c);
+            let s = match self.slot_of(c) {
+                Ok(s) => s,
+                Err(e) => {
+                    self.scratch = scratch;
+                    return Err(e);
+                }
+            };
             let start = (r - c * cr) * d;
             scratch.extend_from_slice(&self.slots[s].2[start..start + (seg_hi - r) * d]);
             r = seg_hi;
         }
         self.scratch = scratch;
-        &self.scratch
+        Ok(&self.scratch)
     }
 
-    fn d2_pair(&mut self, i: usize, j: usize) -> f32 {
+    fn try_d2_pair(&mut self, i: usize, j: usize) -> Result<f32, String> {
         let mut pair = std::mem::take(&mut self.pair);
         pair.clear();
-        pair.extend_from_slice(self.row(i));
-        let dd = d2(&pair, self.row(j));
+        // copy row i out first so its borrow ends before row j is read
+        let copied = self.try_row(i).map(|row| pair.extend_from_slice(row));
+        let dd = match copied {
+            Ok(()) => self.try_row(j).map(|row_j| d2(&pair, row_j)),
+            Err(e) => Err(e),
+        };
         self.pair = pair;
         dd
     }
@@ -497,21 +602,43 @@ pub enum StoreCursor<'a> {
 }
 
 impl StoreCursor<'_> {
-    /// Borrow row `i`.
+    /// Borrow row `i`.  Panics on mid-stream I/O failure or corruption
+    /// (see [`StoreCursor::try_row`] for the recoverable variant).
     #[inline]
     pub fn row(&mut self, i: usize) -> &[f32] {
         match self {
             StoreCursor::Ram { flat, dim } => &flat[i * *dim..(i + 1) * *dim],
-            StoreCursor::Chunked(c) => c.row(i),
+            StoreCursor::Chunked(c) => c.try_row(i).unwrap_or_else(|e| panic!("{e}")),
         }
     }
 
-    /// Borrow rows `[lo, hi)` as one flat slice.
+    /// Borrow row `i`, surfacing mid-stream read failures (truncation,
+    /// an fvecs/bvecs per-row dim header disagreeing with the probe) as
+    /// `Err` instead of a panic.  In-RAM cursors never fail.
+    #[inline]
+    pub fn try_row(&mut self, i: usize) -> Result<&[f32], String> {
+        match self {
+            StoreCursor::Ram { flat, dim } => Ok(&flat[i * *dim..(i + 1) * *dim]),
+            StoreCursor::Chunked(c) => c.try_row(i),
+        }
+    }
+
+    /// Borrow rows `[lo, hi)` as one flat slice.  Panics on mid-stream
+    /// failure (see [`StoreCursor::try_block`]).
     #[inline]
     pub fn block(&mut self, lo: usize, hi: usize) -> &[f32] {
         match self {
             StoreCursor::Ram { flat, dim } => &flat[lo * *dim..hi * *dim],
-            StoreCursor::Chunked(c) => c.block(lo, hi),
+            StoreCursor::Chunked(c) => c.try_block(lo, hi).unwrap_or_else(|e| panic!("{e}")),
+        }
+    }
+
+    /// Fallible [`StoreCursor::block`].
+    #[inline]
+    pub fn try_block(&mut self, lo: usize, hi: usize) -> Result<&[f32], String> {
+        match self {
+            StoreCursor::Ram { flat, dim } => Ok(&flat[lo * *dim..hi * *dim]),
+            StoreCursor::Chunked(c) => c.try_block(lo, hi),
         }
     }
 
@@ -521,7 +648,8 @@ impl StoreCursor<'_> {
     }
 
     /// Squared L2 distance between rows `i` and `j` (the random-pair
-    /// access pattern of NN-Descent and in-cell refinement).
+    /// access pattern of NN-Descent and in-cell refinement).  Panics on
+    /// mid-stream failure (see [`StoreCursor::try_d2_pair`]).
     #[inline]
     pub fn d2_pair(&mut self, i: usize, j: usize) -> f32 {
         match self {
@@ -529,7 +657,19 @@ impl StoreCursor<'_> {
                 let d = *dim;
                 d2(&flat[i * d..(i + 1) * d], &flat[j * d..(j + 1) * d])
             }
-            StoreCursor::Chunked(c) => c.d2_pair(i, j),
+            StoreCursor::Chunked(c) => c.try_d2_pair(i, j).unwrap_or_else(|e| panic!("{e}")),
+        }
+    }
+
+    /// Fallible [`StoreCursor::d2_pair`].
+    #[inline]
+    pub fn try_d2_pair(&mut self, i: usize, j: usize) -> Result<f32, String> {
+        match self {
+            StoreCursor::Ram { flat, dim } => {
+                let d = *dim;
+                Ok(d2(&flat[i * d..(i + 1) * d], &flat[j * d..(j + 1) * d]))
+            }
+            StoreCursor::Chunked(c) => c.try_d2_pair(i, j),
         }
     }
 }
@@ -676,6 +816,95 @@ mod tests {
         std::fs::remove_file(&p).ok();
         // missing file
         assert!(ChunkedVecStore::open_fvecs(Path::new("/nonexistent.fvecs")).is_err());
+    }
+
+    #[test]
+    fn mid_stream_dim_mismatch_is_an_error_not_a_panic() {
+        // A bvecs file whose *second* record header is corrupt: the
+        // constructor's probe (first record) passes, the total length
+        // still divides evenly, but paging the bad record in must
+        // surface `Err` — not abort the process.
+        let p = tmp("corrupt.bvecs");
+        let mut bytes = Vec::new();
+        for (hdr, row) in [(2i32, [7u8, 200u8]), (3i32, [0u8, 255u8]), (2i32, [3u8, 4u8])] {
+            bytes.extend(hdr.to_le_bytes());
+            bytes.extend(row);
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let store = ChunkedVecStore::open_bvecs(&p).unwrap().chunk_rows(1);
+        let mut cur = store.open();
+        assert_eq!(cur.try_row(0).unwrap(), &[7.0, 200.0]);
+        let err = cur.try_row(1).unwrap_err();
+        assert!(err.contains("dim 3"), "unexpected error: {err}");
+        assert!(err.contains("row 1"), "unexpected error: {err}");
+        // the cursor stays usable for intact rows
+        assert_eq!(cur.try_row(2).unwrap(), &[3.0, 4.0]);
+        // the same corruption through try_block and try_d2_pair
+        assert!(cur.try_block(0, 3).is_err());
+        assert!(cur.try_d2_pair(0, 1).is_err());
+        assert_eq!(cur.try_d2_pair(0, 2).unwrap(), d2(&[7.0, 200.0], &[3.0, 4.0]));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_counter_counts_chunk_loads() {
+        let v = random_set(40, 3, 8);
+        let p = tmp("counted.bin");
+        write_flat(&p, &v);
+        let counter = Arc::new(AtomicU64::new(0));
+        let store = ChunkedVecStore::open_flat(&p, 3)
+            .unwrap()
+            .chunk_rows(10)
+            .cache_chunks(2)
+            .with_read_counter(counter.clone());
+        // sequential materialize loads each of the 4 chunks exactly once
+        assert_eq!(materialize(&store), v);
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+        // a cache-hostile back-and-forth scan reloads evicted chunks
+        let mut cur = store.open();
+        for _ in 0..3 {
+            cur.row(0);
+            cur.row(15);
+            cur.row(35);
+        }
+        assert!(counter.load(Ordering::Relaxed) > 4);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn scan_geometry_reports_chunk_shape() {
+        let v = random_set(30, 2, 9);
+        let p = tmp("geom.bin");
+        write_flat(&p, &v);
+        let store = ChunkedVecStore::open_flat(&p, 2).unwrap().chunk_rows(7).cache_chunks(3);
+        let g = VecStore::scan_geometry(&store).unwrap();
+        assert_eq!((g.chunk_rows, g.cache_chunks), (7, 3));
+        assert_eq!(g.superblock_rows(), 21);
+        assert!(VecStore::scan_geometry(&v).is_none(), "resident stores have no geometry");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cursors_share_one_pooled_handle() {
+        // Two cursors (and a cursor of a clone) read consistent data
+        // through the pooled handle — per-cursor offsets, no seek races.
+        let v = random_set(50, 4, 10);
+        let p = tmp("pooled.bin");
+        write_flat(&p, &v);
+        let store = ChunkedVecStore::open_flat(&p, 4).unwrap().chunk_rows(9).cache_chunks(2);
+        let clone = store.clone();
+        let mut a = store.open();
+        let mut b = store.open();
+        let mut c = clone.open();
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let i = rng.below(50);
+            assert_eq!(a.row(i), v.row(i));
+            let j = rng.below(50);
+            assert_eq!(b.row(j), v.row(j));
+            assert_eq!(c.row(i), v.row(i));
+        }
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -30,11 +30,23 @@ pub struct ConstructParams {
     /// the 2M-tree init and the in-cell refinement scan (`1` = serial,
     /// bit-identical to the historical build; `0` = auto).
     pub threads: usize,
+    /// Visit-order policy for the in-round GK-means epoch scans and the
+    /// 2M-tree subset reads (see [`crate::data::plan`]).  The in-cell
+    /// refinement needs no planning: `members_of` emits every cell in
+    /// ascending row order, which is already the chunk-grouped order.
+    pub scan_order: crate::data::plan::ScanOrder,
 }
 
 impl Default for ConstructParams {
     fn default() -> Self {
-        ConstructParams { kappa: 50, xi: 50, tau: 10, seed: 20170707, threads: 1 }
+        ConstructParams {
+            kappa: 50,
+            xi: 50,
+            tau: 10,
+            seed: 20170707,
+            threads: 1,
+            scan_order: crate::data::plan::ScanOrder::Auto,
+        }
     }
 }
 
@@ -83,6 +95,7 @@ pub fn build(data: &dyn VecStore, params: &ConstructParams, backend: &Backend) -
                 min_move_rate: 0.0,
                 seed: params.seed ^ (t as u64).wrapping_mul(0x9E37_79B9),
                 threads: params.threads,
+                scan_order: params.scan_order,
             },
         };
         let out = gkmeans::run_core(data, k0, &graph, &gk_params, backend);

@@ -43,6 +43,7 @@
 
 use crate::core_ops::dist::norm2;
 use crate::data::matrix::VecSet;
+use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
 use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
@@ -98,6 +99,7 @@ pub fn run_core(
         &TwoMeansParams {
             seed: params.base.seed,
             threads: params.base.threads,
+            scan_order: params.base.scan_order,
             ..Default::default()
         },
         backend,
@@ -187,6 +189,10 @@ pub fn run_from(
     assert_eq!(graph.n(), n, "graph size != dataset size");
     let kappa = params.kappa.min(graph.kappa());
     let threads = pool::resolve_threads(params.base.threads).min(n.max(1));
+    // the epoch visit order comes from the scan planner: a global
+    // Fisher–Yates on resident data (bit-identical to the historical
+    // loop) or chunk-aligned super-block shuffles on paged stores
+    let plan = ScanPlan::new(data, params.base.scan_order);
     let mut cur = data.open();
     let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x6B6D_6561);
@@ -204,7 +210,7 @@ pub fn run_from(
         // --- serial path: bit-identical to the historical implementation ---
         let mut scratch = EpochScratch::new(c.k, kappa);
         for iter in 1..=params.base.max_iters {
-            rng.shuffle(&mut order);
+            plan.shuffle_epoch(&mut order, &mut rng);
             let mut moves = 0usize;
             for &i in &order {
                 let x = cur.row(i);
@@ -252,7 +258,7 @@ pub fn run_from(
         // snapshot stays fresh within an epoch.
         let batch = (threads * 2048).max(4096);
         for iter in 1..=params.base.max_iters {
-            rng.shuffle(&mut order);
+            plan.shuffle_epoch(&mut order, &mut rng);
             let mut moves = 0usize;
             let mut start = 0usize;
             while start < n {

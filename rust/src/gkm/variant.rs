@@ -10,6 +10,7 @@
 
 use crate::core_ops::dist::{d2_via_dot, dot, norm2};
 use crate::data::matrix::VecSet;
+use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
 use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
@@ -51,6 +52,7 @@ pub fn run_core(
         &TwoMeansParams {
             seed: params.base.seed,
             threads: params.base.threads,
+            scan_order: params.base.scan_order,
             ..Default::default()
         },
         backend,
@@ -58,6 +60,7 @@ pub fn run_core(
     let mut clustering = Clustering::from_labels(data, labels, k);
     let init_seconds = timer.elapsed_s();
     let mut centroids = clustering.centroids();
+    let plan = ScanPlan::new(data, params.base.scan_order);
     let mut cur = data.open();
     let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x7452_6164);
@@ -74,7 +77,7 @@ pub fn run_core(
     }];
 
     for iter in 1..=params.base.max_iters {
-        rng.shuffle(&mut order);
+        plan.shuffle_epoch(&mut order, &mut rng);
         let mut new_labels = clustering.labels.clone();
         let mut moves = 0usize;
         // Precomputed-norm candidate evaluation (the d2_via_dot path): the
@@ -107,9 +110,12 @@ pub fn run_core(
             }
             new_labels[i] = best_c;
         }
-        // Lloyd-style batch update
-        centroids = crate::kmeans::lloyd::update_centroids(data, &new_labels, k, &centroids);
-        clustering = Clustering::from_labels(data, new_labels, k);
+        // Lloyd-style batch update, fused with the state rebuild so a
+        // streamed store is scanned once here instead of twice
+        let (next, next_centroids) =
+            Clustering::from_labels_with_centroids(data, new_labels, k, &centroids);
+        clustering = next;
+        centroids = next_centroids;
         history.push(IterStat {
             iter,
             seconds: timer.elapsed_s(),

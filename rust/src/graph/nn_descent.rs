@@ -23,6 +23,7 @@
 //! would accept — no neighbor the serial pass would have found is ever
 //! missed.  `threads = 1` keeps the historical serial loop bit-for-bit.
 
+use crate::data::plan::{ScanOrder, ScanPlan};
 use crate::data::store::VecStore;
 use crate::graph::knn::KnnGraph;
 use crate::util::pool;
@@ -41,47 +42,68 @@ pub struct NnDescentParams {
     /// Worker threads for the local-join phase (`1` = serial,
     /// bit-identical to the historical implementation; `0` = auto).
     pub threads: usize,
+    /// Access-order policy for the local-join distance evaluations (see
+    /// [`crate::data::plan`]): on paged stores the join's row pairs are
+    /// grouped by chunk before evaluation; on resident data the policy
+    /// is inert and the historical evaluation order is kept bit-for-bit.
+    pub scan_order: ScanOrder,
 }
 
 impl Default for NnDescentParams {
     fn default() -> Self {
-        NnDescentParams { rho: 1.0, delta: 0.001, max_iters: 12, seed: 20170707, threads: 1 }
+        NnDescentParams {
+            rho: 1.0,
+            delta: 0.001,
+            max_iters: 12,
+            seed: 20170707,
+            threads: 1,
+            scan_order: ScanOrder::Auto,
+        }
+    }
+}
+
+/// Collect one node's join pairs (new×new then new×old, the historical
+/// sequence) into `pair_buf` after sorting/deduping the candidate lists.
+fn collect_join_pairs(news: &mut Vec<u32>, olds: &mut Vec<u32>, pair_buf: &mut Vec<(u32, u32)>) {
+    news.sort_unstable();
+    news.dedup();
+    olds.sort_unstable();
+    olds.dedup();
+    pair_buf.clear();
+    for a in 0..news.len() {
+        for b in (a + 1)..news.len() {
+            pair_buf.push((news[a], news[b]));
+        }
+        for &vv in olds.iter() {
+            if news[a] != vv {
+                pair_buf.push((news[a], vv));
+            }
+        }
     }
 }
 
 /// Evaluate the local joins for one shard of nodes against a frozen
-/// threshold snapshot, returning the candidate updates that pass.
+/// threshold snapshot, returning the candidate updates that pass.  The
+/// pairs are gathered first and (under a super-block plan) grouped by
+/// chunk before the distance evaluations; with planning off the
+/// evaluation sequence is exactly the historical one.
 fn join_shard(
     data: &dyn VecStore,
     g: &KnnGraph,
+    plan: &ScanPlan,
     new_cand: &mut [Vec<u32>],
     old_cand: &mut [Vec<u32>],
 ) -> Vec<(u32, u32, f32)> {
     let mut out = Vec::new();
+    let mut pair_buf: Vec<(u32, u32)> = Vec::new();
     let mut cur = data.open();
     for (news, olds) in new_cand.iter_mut().zip(old_cand.iter_mut()) {
-        news.sort_unstable();
-        news.dedup();
-        olds.sort_unstable();
-        olds.dedup();
-        for a in 0..news.len() {
-            for b in (a + 1)..news.len() {
-                let (u, v) = (news[a] as usize, news[b] as usize);
-                let dd = cur.d2_pair(u, v);
-                if dd < g.threshold(u) || dd < g.threshold(v) {
-                    out.push((news[a], news[b], dd));
-                }
-            }
-            let u = news[a] as usize;
-            for &vv in olds.iter() {
-                let v = vv as usize;
-                if u == v {
-                    continue;
-                }
-                let dd = cur.d2_pair(u, v);
-                if dd < g.threshold(u) || dd < g.threshold(v) {
-                    out.push((news[a], vv, dd));
-                }
+        collect_join_pairs(news, olds, &mut pair_buf);
+        plan.order_pairs(&mut pair_buf);
+        for &(u, v) in pair_buf.iter() {
+            let dd = cur.d2_pair(u as usize, v as usize);
+            if dd < g.threshold(u as usize) || dd < g.threshold(v as usize) {
+                out.push((u, v, dd));
             }
         }
     }
@@ -93,16 +115,52 @@ fn join_shard(
 pub fn build(data: &dyn VecStore, kappa: usize, params: &NnDescentParams) -> KnnGraph {
     let n = data.rows();
     let threads = pool::resolve_threads(params.threads).min(n.max(1));
+    let plan = ScanPlan::new(data, params.scan_order);
     let mut rng = Rng::new(params.seed);
     let g = KnnGraph::random(n, kappa, &mut rng);
     let mut cur = data.open();
     // materialize distances for the random lists so thresholds are real
-    let ids0: Vec<(usize, Vec<u32>)> = (0..n).map(|i| (i, g.neighbors(i).to_vec())).collect();
+    // (vacant u32::MAX slots — tiny n, kappa ≥ n — are skipped)
     let mut g2 = KnnGraph::empty(n, kappa);
-    for (i, ids) in ids0 {
-        for j in ids {
-            let dd = cur.d2_pair(i, j as usize);
-            g2.update(i, j, dd);
+    if plan.is_superblock() {
+        // Random lists scatter across the whole store: group the (i, j)
+        // reads by chunk pair so each chunk pages in a bounded number of
+        // times instead of once per edge.  Grouping runs one i-segment
+        // (super-block of rows) at a time, so the pair buffer stays at
+        // `segment × κ` entries instead of `n × κ` — the paper's 10M×50
+        // scale would otherwise spike gigabytes of transient pairs.
+        let seg = data
+            .scan_geometry()
+            .map(|geo| geo.superblock_rows())
+            .unwrap_or(n)
+            .max(1);
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + seg).min(n);
+            pairs.clear();
+            for i in lo..hi {
+                for &j in g.neighbors(i) {
+                    if j != u32::MAX {
+                        pairs.push((i as u32, j));
+                    }
+                }
+            }
+            plan.order_pairs(&mut pairs);
+            for &(i, j) in pairs.iter() {
+                let dd = cur.d2_pair(i as usize, j as usize);
+                g2.update(i as usize, j, dd);
+            }
+            lo = hi;
+        }
+    } else {
+        for i in 0..n {
+            for &j in g.neighbors(i) {
+                if j != u32::MAX {
+                    let dd = cur.d2_pair(i, j as usize);
+                    g2.update(i, j, dd);
+                }
+            }
         }
     }
     let mut g = g2;
@@ -141,39 +199,21 @@ pub fn build(data: &dyn VecStore, kappa: usize, params: &NnDescentParams) -> Knn
         let mut updates = 0usize;
         if threads <= 1 {
             // --- serial join: updates applied in place, fresh thresholds ---
+            // Pairs are gathered per node (new×new then new×old — the
+            // historical sequence) and, under a super-block plan, grouped
+            // by chunk before evaluation; with planning off the
+            // evaluate/update sequence is bit-identical to the pre-planner
+            // loop.
+            let mut pair_buf: Vec<(u32, u32)> = Vec::new();
             for i in 0..n {
-                let news = &mut new_cand[i];
-                news.sort_unstable();
-                news.dedup();
-                let olds = &mut old_cand[i];
-                olds.sort_unstable();
-                olds.dedup();
-                // join new × new
-                for a in 0..news.len() {
-                    for b in (a + 1)..news.len() {
-                        let (u, v) = (news[a] as usize, news[b] as usize);
-                        if u == v {
-                            continue;
-                        }
-                        let dd = cur.d2_pair(u, v);
-                        if dd < g.threshold(u) || dd < g.threshold(v) {
-                            if g.update_pair(u, v, dd) {
-                                updates += 1;
-                            }
-                        }
-                    }
-                    // join new × old
-                    let u = news[a] as usize;
-                    for &vv in olds.iter() {
-                        let v = vv as usize;
-                        if u == v {
-                            continue;
-                        }
-                        let dd = cur.d2_pair(u, v);
-                        if dd < g.threshold(u) || dd < g.threshold(v) {
-                            if g.update_pair(u, v, dd) {
-                                updates += 1;
-                            }
+                collect_join_pairs(&mut new_cand[i], &mut old_cand[i], &mut pair_buf);
+                plan.order_pairs(&mut pair_buf);
+                for &(u, v) in pair_buf.iter() {
+                    let (u, v) = (u as usize, v as usize);
+                    let dd = cur.d2_pair(u, v);
+                    if dd < g.threshold(u) || dd < g.threshold(v) {
+                        if g.update_pair(u, v, dd) {
+                            updates += 1;
                         }
                     }
                 }
@@ -192,10 +232,11 @@ pub fn build(data: &dyn VecStore, kappa: usize, params: &NnDescentParams) -> Knn
                 let chunk = (span + threads - 1) / threads;
                 let collected: Vec<Vec<(u32, u32, f32)>> = std::thread::scope(|s| {
                     let g_ref = &g;
+                    let plan_ref = &plan;
                     let handles: Vec<_> = new_cand[lo..hi]
                         .chunks_mut(chunk)
                         .zip(old_cand[lo..hi].chunks_mut(chunk))
-                        .map(|(nc, oc)| s.spawn(move || join_shard(data, g_ref, nc, oc)))
+                        .map(|(nc, oc)| s.spawn(move || join_shard(data, g_ref, plan_ref, nc, oc)))
                         .collect();
                     handles
                         .into_iter()

@@ -10,9 +10,17 @@
 //!
 //! Implementation notes: per-cluster ‖D_r‖² is cached and updated on every
 //! move, so evaluating one candidate cluster costs a single O(d) dot.
+//!
+//! Runs over any [`VecStore`]: the epoch scan reads rows through a
+//! cursor, with the visit order coming from the locality-aware scan
+//! planner ([`crate::data::plan`]) — a disk-backed fit streams instead of
+//! materializing, and a resident fit keeps the historical global shuffle
+//! bit-for-bit.
 
 use crate::core_ops::dist::{dot, norm2};
 use crate::data::matrix::VecSet;
+use crate::data::plan::ScanPlan;
+use crate::data::store::VecStore;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -95,8 +103,13 @@ pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &crate::runt
 }
 
 /// The BKM engine ([`crate::model::Boost`] executes this): random
-/// balanced start, then [`run_from`].
-pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, _backend: &crate::runtime::Backend) -> KmeansOutput {
+/// balanced start, then [`run_from`].  Runs over any [`VecStore`].
+pub fn run_core(
+    data: &dyn VecStore,
+    k: usize,
+    params: &KmeansParams,
+    _backend: &crate::runtime::Backend,
+) -> KmeansOutput {
     let mut rng = Rng::new(params.seed);
     let labels: Vec<u32> = (0..data.rows()).map(|i| (i % k) as u32).collect();
     let mut shuffled = labels;
@@ -105,11 +118,13 @@ pub fn run_core(data: &VecSet, k: usize, params: &KmeansParams, _backend: &crate
 }
 
 /// Run BKM starting from an existing clustering.
-pub fn run_from(data: &VecSet, mut c: Clustering, params: &KmeansParams) -> KmeansOutput {
+pub fn run_from(data: &dyn VecStore, mut c: Clustering, params: &KmeansParams) -> KmeansOutput {
     let timer = Timer::start();
     let init_seconds = 0.0;
     let n = data.rows();
-    let total_norm: f64 = (0..n).map(|i| norm2(data.row(i)) as f64).sum();
+    let plan = ScanPlan::new(data, params.scan_order);
+    let mut cur = data.open();
+    let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.seed ^ 0xB005_7133);
     let mut cache = DeltaCache::new(&c);
     let mut order: Vec<usize> = (0..n).collect();
@@ -122,10 +137,10 @@ pub fn run_from(data: &VecSet, mut c: Clustering, params: &KmeansParams) -> Kmea
     }];
 
     for iter in 1..=params.max_iters {
-        rng.shuffle(&mut order);
+        plan.shuffle_epoch(&mut order, &mut rng);
         let mut moves = 0usize;
         for &i in &order {
-            let x = data.row(i);
+            let x = cur.row(i);
             let u = c.labels[i] as usize;
             let xx = norm2(x) as f64;
             let leave = cache.leave(&c, x, xx, u);

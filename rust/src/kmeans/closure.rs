@@ -13,6 +13,8 @@
 
 use crate::core_ops::dist::d2;
 use crate::data::matrix::VecSet;
+use crate::data::plan::ScanPlan;
+use crate::data::store::VecStore;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
 use crate::kmeans::two_means::{self, TwoMeansParams};
 use crate::runtime::Backend;
@@ -37,13 +39,23 @@ impl Default for ClosureParams {
 
 /// Leaves of one random-projection bisection tree: a permutation of sample
 /// ids plus `[start, end)` ranges, built iteratively to avoid recursion
-/// depth issues.
-fn rp_tree_leaves(data: &VecSet, leaf_max: usize, rng: &mut Rng) -> (Vec<u32>, Vec<(u32, u32)>) {
+/// depth issues.  Streams over any [`VecStore`]: each split's projections
+/// are evaluated through a cursor — in chunk-grouped order under a
+/// super-block plan (a row's projection is independent of read order), in
+/// the historical permutation order otherwise.
+fn rp_tree_leaves(
+    data: &dyn VecStore,
+    plan: &ScanPlan,
+    leaf_max: usize,
+    rng: &mut Rng,
+) -> (Vec<u32>, Vec<(u32, u32)>) {
     let n = data.rows();
     let d = data.dim();
+    let mut cur = data.open();
     let mut perm: Vec<u32> = (0..n as u32).collect();
     let mut leaves = Vec::new();
     let mut stack = vec![(0usize, n)];
+    let mut read_order: Vec<u32> = Vec::new();
     while let Some((lo, hi)) = stack.pop() {
         if hi - lo <= leaf_max.max(2) {
             leaves.push((lo as u32, hi as u32));
@@ -51,9 +63,17 @@ fn rp_tree_leaves(data: &VecSet, leaf_max: usize, rng: &mut Rng) -> (Vec<u32>, V
         }
         // random direction; median split on the projection
         let dir: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
-        let mut pairs: Vec<(f32, u32)> = perm[lo..hi]
+        let members: &[u32] = if plan.is_superblock() {
+            read_order.clear();
+            read_order.extend_from_slice(&perm[lo..hi]);
+            plan.order_subset(&mut read_order);
+            &read_order
+        } else {
+            &perm[lo..hi]
+        };
+        let mut pairs: Vec<(f32, u32)> = members
             .iter()
-            .map(|&id| (crate::core_ops::dist::dot(data.row(id as usize), &dir), id))
+            .map(|&id| (crate::core_ops::dist::dot(cur.row(id as usize), &dir), id))
             .collect();
         pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         for (off, (_, id)) in pairs.into_iter().enumerate() {
@@ -74,10 +94,20 @@ pub fn run(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backend) -
 
 /// The closure k-means engine ([`crate::model::ClosureKmeans`] executes
 /// this).  Initialization follows the paper's fast variants: a 2M-tree
-/// partition (cheap, balanced) provides the starting clusters.
-pub fn run_core(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backend) -> KmeansOutput {
+/// partition (cheap, balanced) provides the starting clusters.  Runs
+/// over any [`VecStore`]: the tree builds, the restricted assignment
+/// scan, and the centroid updates all stream through cursors (the
+/// assignment scan is sequential by construction, so it is already the
+/// chunk-friendly order).
+pub fn run_core(
+    data: &dyn VecStore,
+    k: usize,
+    params: &ClosureParams,
+    backend: &Backend,
+) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
+    let plan = ScanPlan::new(data, params.base.scan_order);
     let mut rng = Rng::new(params.base.seed ^ 0xC105_0513);
 
     // --- init: 2M-tree labels + centroids ---
@@ -87,6 +117,7 @@ pub fn run_core(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backe
         &TwoMeansParams {
             seed: params.base.seed,
             threads: params.base.threads,
+            scan_order: params.base.scan_order,
             ..Default::default()
         },
         backend,
@@ -97,11 +128,12 @@ pub fn run_core(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backe
 
     // --- random partitions (closures), built once ---
     let trees: Vec<(Vec<u32>, Vec<(u32, u32)>)> = (0..params.trees.max(1))
-        .map(|_| rp_tree_leaves(data, params.leaf_max, &mut rng))
+        .map(|_| rp_tree_leaves(data, &plan, params.leaf_max, &mut rng))
         .collect();
 
+    let mut cur = data.open();
     let total_norm: f64 = (0..n)
-        .map(|i| crate::core_ops::dist::norm2(data.row(i)) as f64)
+        .map(|i| crate::core_ops::dist::norm2(cur.row(i)) as f64)
         .sum();
     let mut history = vec![IterStat {
         iter: 0,
@@ -142,7 +174,7 @@ pub fn run_core(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backe
             cand.push(clustering.labels[i]);
             cand.sort_unstable();
             cand.dedup();
-            let row = data.row(i);
+            let row = cur.row(i);
             let mut best = f32::INFINITY;
             let mut best_c = clustering.labels[i];
             for &c in cand.iter() {
@@ -158,9 +190,12 @@ pub fn run_core(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backe
             new_labels[i] = best_c;
         }
 
-        // 3) Lloyd-style update
-        centroids = crate::kmeans::lloyd::update_centroids(data, &new_labels, k, &centroids);
-        clustering = Clustering::from_labels(data, new_labels, k);
+        // 3) Lloyd-style update, fused with the state rebuild so a
+        // streamed store is scanned once here instead of twice
+        let (next, next_centroids) =
+            Clustering::from_labels_with_centroids(data, new_labels, k, &centroids);
+        clustering = next;
+        centroids = next_centroids;
 
         history.push(IterStat {
             iter,
@@ -190,7 +225,7 @@ mod tests {
     fn rp_tree_leaves_partition_everything() {
         let data = blobs(&BlobSpec::quick(500, 6, 5), 1);
         let mut rng = Rng::new(2);
-        let (perm, leaves) = rp_tree_leaves(&data, 30, &mut rng);
+        let (perm, leaves) = rp_tree_leaves(&data, &ScanPlan::global(), 30, &mut rng);
         let mut seen = vec![false; 500];
         let mut total = 0;
         for &(lo, hi) in &leaves {

@@ -9,6 +9,7 @@
 
 use crate::core_ops::dist::{dot, norm2};
 use crate::data::matrix::VecSet;
+use crate::data::plan::ScanOrder;
 use crate::data::store::VecStore;
 
 /// Common iteration-control parameters shared by the k-means variants.
@@ -24,11 +25,21 @@ pub struct KmeansParams {
     /// `1` = serial, bit-identical to the pre-parallel implementation;
     /// `0` = auto (env `GKMEANS_THREADS`, else available parallelism).
     pub threads: usize,
+    /// Epoch visit-order policy (see [`crate::data::plan`]): `Auto` uses
+    /// chunk-aligned super-block shuffles on paged stores and the
+    /// historical global shuffle (bit-identical) on resident data.
+    pub scan_order: ScanOrder,
 }
 
 impl Default for KmeansParams {
     fn default() -> Self {
-        KmeansParams { max_iters: 30, min_move_rate: 1e-3, seed: 20170707, threads: 1 }
+        KmeansParams {
+            max_iters: 30,
+            min_move_rate: 1e-3,
+            seed: 20170707,
+            threads: 1,
+            scan_order: ScanOrder::Auto,
+        }
     }
 }
 
@@ -61,6 +72,56 @@ impl Clustering {
         };
         c.rebuild(data);
         c
+    }
+
+    /// [`Clustering::from_labels`] fused with the Lloyd mean update:
+    /// one sequential store scan produces both the clustering state and
+    /// the new centroids (empty clusters keep their `prev` row).  The
+    /// results are bit-identical to `from_labels` +
+    /// [`crate::kmeans::lloyd::update_centroids`] run separately — the
+    /// f32 composite and f64 mean accumulators see the same values in
+    /// the same order — but a disk-backed store is read once instead of
+    /// twice per iteration (the Closure / GK-means* update step).
+    pub fn from_labels_with_centroids(
+        data: &dyn VecStore,
+        labels: Vec<u32>,
+        k: usize,
+        prev: &VecSet,
+    ) -> (Clustering, VecSet) {
+        assert_eq!(labels.len(), data.rows());
+        let dim = data.dim();
+        let mut c = Clustering {
+            labels,
+            composite: vec![0.0; k * dim],
+            counts: vec![0; k],
+            k,
+            dim,
+        };
+        let mut sums = vec![0f64; k * dim];
+        let mut cur = data.open();
+        for (i, &l) in c.labels.iter().enumerate() {
+            let l = l as usize;
+            debug_assert!(l < k, "label {l} out of range k={k}");
+            let row = cur.row(i);
+            let comp = &mut c.composite[l * dim..(l + 1) * dim];
+            let sum = &mut sums[l * dim..(l + 1) * dim];
+            for ((dv, sv), xv) in comp.iter_mut().zip(sum.iter_mut()).zip(row) {
+                *dv += xv;
+                *sv += *xv as f64;
+            }
+            c.counts[l] += 1;
+        }
+        let mut out = Vec::with_capacity(k * dim);
+        for r in 0..k {
+            if c.counts[r] == 0 {
+                out.extend_from_slice(prev.row(r));
+            } else {
+                let cnt = c.counts[r] as f64;
+                out.extend(sums[r * dim..(r + 1) * dim].iter().map(|s| (*s / cnt) as f32));
+            }
+        }
+        let centroids = VecSet::from_flat(dim, out);
+        (c, centroids)
     }
 
     /// Recompute composite vectors and counts from labels (one
@@ -365,6 +426,33 @@ mod tests {
         let c = Clustering::from_labels(&data, labels, 5);
         let exact = distortion_exact(&data, &c.labels, &c.centroids());
         assert!((c.distortion(&data) - exact).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fused_rebuild_matches_two_pass_bit_for_bit() {
+        // from_labels_with_centroids must reproduce from_labels +
+        // lloyd::update_centroids exactly (same accumulators, same
+        // order) — it only fuses the two store scans into one.
+        let mut rng = Rng::new(13);
+        let n = 80;
+        let d = 4;
+        let k = 5;
+        let data = VecSet::from_flat(d, (0..n * d).map(|_| rng.normal()).collect());
+        // label 4 left empty to exercise the prev-centroid fallback
+        let labels: Vec<u32> = (0..n).map(|_| rng.below(k - 1) as u32).collect();
+        let prev = VecSet::from_flat(d, (0..k * d).map(|_| rng.normal()).collect());
+        let two_pass_c = Clustering::from_labels(&data, labels.clone(), k);
+        let two_pass_cent = crate::kmeans::lloyd::update_centroids(&data, &labels, k, &prev);
+        let (fused_c, fused_cent) = Clustering::from_labels_with_centroids(&data, labels, k, &prev);
+        assert_eq!(fused_c.labels, two_pass_c.labels);
+        assert_eq!(fused_c.counts, two_pass_c.counts);
+        for (a, b) in fused_c.composite.iter().zip(&two_pass_c.composite) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in fused_cent.flat().iter().zip(two_pass_cent.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(fused_cent.row(k - 1), prev.row(k - 1), "empty cluster keeps prev");
     }
 
     #[test]

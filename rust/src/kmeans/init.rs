@@ -6,6 +6,11 @@ use crate::data::store::{self, VecStore};
 use crate::util::rng::Rng;
 
 /// k distinct data points chosen uniformly at random.
+///
+/// The sampled indices are scattered uniformly over the store;
+/// [`store::gather`] reads them in ascending-row (chunk-grouped) order
+/// and scatters back, so a paged store loads each chunk at most once and
+/// the returned seeds are bit-identical to a naive in-order gather.
 pub fn random_init(data: &dyn VecStore, k: usize, rng: &mut Rng) -> VecSet {
     assert!(k <= data.rows(), "k={k} > n={}", data.rows());
     let idx = rng.sample_indices(data.rows(), k);

@@ -8,6 +8,7 @@
 //! it to produce its initial partition.
 
 use crate::core_ops::dist::d2;
+use crate::data::plan::{ScanOrder, ScanPlan};
 use crate::data::store::{StoreCursor, VecStore};
 use crate::kmeans::common::Clustering;
 use crate::runtime::Backend;
@@ -27,11 +28,23 @@ pub struct TwoMeansParams {
     /// derived RNG stream, so results are reproducible per `(seed,
     /// threads)` but differ from the serial split order.
     pub threads: usize,
+    /// Access-order policy for the per-bisection subset reads (see
+    /// [`crate::data::plan`]): on paged stores each bisected subset is
+    /// visited in chunk-grouped order (and the BKM polish shuffles
+    /// within super-blocks); resident data keeps the historical order
+    /// bit-for-bit.
+    pub scan_order: ScanOrder,
 }
 
 impl Default for TwoMeansParams {
     fn default() -> Self {
-        TwoMeansParams { bisect_iters: 4, boost_iters: 2, seed: 20170707, threads: 1 }
+        TwoMeansParams {
+            bisect_iters: 4,
+            boost_iters: 2,
+            seed: 20170707,
+            threads: 1,
+            scan_order: ScanOrder::Auto,
+        }
     }
 }
 
@@ -44,6 +57,7 @@ pub fn run(data: &dyn VecStore, k: usize, params: &TwoMeansParams, backend: &Bac
     }
     let n = data.rows();
     assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let plan = ScanPlan::new(data, params.scan_order);
     let mut rng = Rng::new(params.seed);
 
     // Cluster store: Vec of member-index lists; a simple binary max-heap of
@@ -63,7 +77,7 @@ pub fn run(data: &dyn VecStore, k: usize, params: &TwoMeansParams, backend: &Bac
             members[id] = subset;
             continue;
         }
-        let (left, right) = bisect_equal(data, &subset, params, &mut rng, backend);
+        let (left, right) = bisect_equal(data, &subset, params, &plan, &mut rng, backend);
         let new_id = members.len();
         heap.push((left.len(), id));
         heap.push((right.len(), new_id));
@@ -105,6 +119,7 @@ fn run_parallel(
 ) -> Vec<u32> {
     let n = data.rows();
     assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let plan = ScanPlan::new(data, params.scan_order);
     let mut members: Vec<Vec<u32>> = Vec::with_capacity(k);
     members.push((0..n as u32).collect());
     let mut heap: std::collections::BinaryHeap<(usize, usize)> =
@@ -135,6 +150,7 @@ fn run_parallel(
         round += 1;
 
         let results: Vec<(Vec<u32>, Vec<u32>)> = std::thread::scope(|s| {
+            let plan_ref = &plan;
             let handles: Vec<_> = tasks
                 .iter()
                 .map(|(id, subset)| {
@@ -146,7 +162,7 @@ fn run_parallel(
                     s.spawn(move || {
                         let mut rng = Rng::new(task_seed);
                         let backend = Backend::native();
-                        bisect_equal(data, subset, params, &mut rng, &backend)
+                        bisect_equal(data, subset, params, plan_ref, &mut rng, &backend)
                     })
                 })
                 .collect();
@@ -179,9 +195,22 @@ fn bisect_equal(
     data: &dyn VecStore,
     subset: &[u32],
     params: &TwoMeansParams,
+    plan: &ScanPlan,
     rng: &mut Rng,
     backend: &Backend,
 ) -> (Vec<u32>, Vec<u32>) {
+    // Under a super-block plan, visit the subset in chunk-grouped order:
+    // every margin/centroid sweep below then reads each chunk at most
+    // once however the parent splits scattered the ids.  (The returned
+    // halves are id *sets*; their order is irrelevant to the tree.)
+    let mut planned: Vec<u32>;
+    let subset: &[u32] = if plan.is_superblock() {
+        planned = subset.to_vec();
+        plan.order_subset(&mut planned);
+        &planned
+    } else {
+        subset
+    };
     let m = subset.len();
     let d = data.dim();
     let mut cur = data.open();
@@ -236,7 +265,16 @@ fn bisect_equal(
 
     // --- BKM polish with k=2 on the subset (paper step 8) ---
     if params.boost_iters > 0 {
-        boost_polish(&mut cur, subset, &mut c0, &mut c1, params.boost_iters, rng, &mut margins);
+        boost_polish(
+            &mut cur,
+            subset,
+            plan,
+            &mut c0,
+            &mut c1,
+            params.boost_iters,
+            rng,
+            &mut margins,
+        );
     }
 
     // --- equal-size adjustment (step 9): median split on the margin ---
@@ -281,9 +319,11 @@ fn compute_margins(
 }
 
 /// A few BKM sweeps on the 2-cluster subproblem (incremental, Eqn. 3).
+#[allow(clippy::too_many_arguments)]
 fn boost_polish(
     cur: &mut StoreCursor<'_>,
     subset: &[u32],
+    plan: &ScanPlan,
     c0: &mut Vec<f32>,
     c1: &mut Vec<f32>,
     iters: usize,
@@ -322,7 +362,9 @@ fn boost_polish(
     }
     let mut order: Vec<usize> = (0..m).collect();
     for _ in 0..iters {
-        rng.shuffle(&mut order);
+        // planned: shuffle within super-blocks of the underlying rows
+        // (plain shuffle — bit-identical RNG use — when planning is off)
+        plan.shuffle_positions(&mut order, |t| subset[t] as usize, rng);
         let mut moves = 0;
         for &t in &order {
             let x = cur.row(subset[t] as usize);

@@ -89,6 +89,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::job::{ClusterJob, JobResult, Method};
     pub use crate::data::matrix::VecSet;
+    pub use crate::data::plan::{ScanOrder, ScanPlan};
     pub use crate::data::store::{ChunkedVecStore, VecStore};
     pub use crate::data::synth::{blobs, BlobSpec};
     pub use crate::data::DatasetSpec;

@@ -33,7 +33,7 @@ use gkmeans::util::timer::{fmt_secs, Timer};
 
 const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
-    "topk", "ef", "config", "recall-samples", "threads", "save", "model",
+    "topk", "ef", "config", "recall-samples", "threads", "save", "model", "scan-order",
 ];
 
 fn main() {
@@ -85,6 +85,11 @@ COMMON OPTIONS:
   --stream                     cluster file-backed datasets out-of-core
                                (fixed-size row blocks + resident cache
                                instead of one in-RAM buffer)
+  --scan-order MODE            epoch visit order: auto (default; chunk-
+                               aligned super-block shuffles on streamed
+                               stores, global on resident data), global
+                               (historical full shuffle everywhere), or
+                               superblock (request locality planning)
   --config FILE                key=value config file (CLI overrides)
   --verbose / --quiet          log level
 ";
@@ -140,6 +145,16 @@ fn dataset_of(args: &Args) -> DatasetSpec {
     }
 }
 
+fn scan_order_of(args: &Args) -> gkmeans::data::plan::ScanOrder {
+    match gkmeans::data::plan::ScanOrder::parse(args.get_or("scan-order", "auto")) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn job_of(args: &Args) -> ClusterJob {
     let method = match Method::parse(args.get_or("method", "gkmeans")) {
         Ok(m) => m,
@@ -155,6 +170,7 @@ fn job_of(args: &Args) -> ClusterJob {
     job.base.max_iters = args.usize_or("iters", 30);
     job.base.seed = args.u64_or("seed", 20170707);
     job.base.threads = args.usize_or("threads", 1);
+    job.base.scan_order = scan_order_of(args);
     job.measure_recall = args.flag("recall");
     job.keep_data = args.flag("keep-data");
     job
@@ -298,6 +314,7 @@ fn cmd_graph(args: &Args) -> i32 {
         xi: args.usize_or("xi", 50),
         seed: args.u64_or("seed", 20170707),
         threads: args.usize_or("threads", 1),
+        scan_order: scan_order_of(&args),
     };
     let out = construct::build(&data, &params, &backend);
     println!(
@@ -441,6 +458,7 @@ fn cmd_search(args: &Args) -> i32 {
         xi: args.usize_or("xi", 50),
         seed,
         threads: args.usize_or("threads", 1),
+        scan_order: scan_order_of(&args),
     };
     let build = construct::build(&data, &params, &backend);
     println!("graph: {}", fmt_secs(build.total_seconds));

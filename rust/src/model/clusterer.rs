@@ -9,7 +9,7 @@
 
 use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
-use crate::data::store::{self, VecStore};
+use crate::data::store::VecStore;
 use crate::gkm::{construct, gkmeans, variant};
 use crate::graph::nn_descent;
 use crate::kmeans::{boost, closure, lloyd, minibatch};
@@ -37,33 +37,17 @@ pub trait Clusterer {
         self.fit_store(data, ctx)
     }
 
-    /// Train on any [`VecStore`] under `ctx`.  The graph methods,
-    /// Lloyd, and Mini-Batch stream a disk-backed store block by block
-    /// (out-of-core); Boost and Closure k-means materialize a resident
-    /// copy first (logged) — their scan structure is an open item.
+    /// Train on any [`VecStore`] under `ctx`.  Every method — the graph
+    /// methods, Lloyd, Mini-Batch, Boost, and Closure k-means — streams
+    /// a disk-backed store through planned cursors (out-of-core), with
+    /// the random-access scans visiting rows in the locality-aware order
+    /// [`RunContext::scan_order`] selects.
     fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel;
 }
 
 /// Clamp k to the dataset size (a 5-point dataset cannot hold 8 clusters).
 fn clamp_k(k: usize, data: &dyn VecStore) -> usize {
     k.min(data.rows()).max(1)
-}
-
-/// Borrow the store as a resident [`VecSet`], materializing (with a
-/// warning) when it is disk-backed — for the engines that still require
-/// resident data.
-fn resident<'a>(data: &'a dyn VecStore, owned: &'a mut Option<VecSet>, method: &str) -> &'a VecSet {
-    match data.as_vecset() {
-        Some(v) => v,
-        None => {
-            crate::log_warn!(
-                "{method} does not stream yet; materializing {} x {} store in RAM",
-                data.rows(),
-                data.dim()
-            );
-            owned.insert(store::materialize(data))
-        }
-    }
 }
 
 /// Alg. 3 construction params shared by both graph-building configs
@@ -75,7 +59,14 @@ fn alg3_params(
     tau: usize,
     ctx: &RunContext,
 ) -> construct::ConstructParams {
-    construct::ConstructParams { kappa, xi, tau, seed: ctx.seed, threads: ctx.threads }
+    construct::ConstructParams {
+        kappa,
+        xi,
+        tau,
+        seed: ctx.seed,
+        threads: ctx.threads,
+        scan_order: ctx.scan_order,
+    }
 }
 
 /// Traditional k-means (Lloyd) with k-means++ seeding.
@@ -120,9 +111,7 @@ impl Clusterer for Boost {
     }
 
     fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
-        let mut owned = None;
-        let v = resident(data, &mut owned, "boost k-means");
-        let out = boost::run_core(v, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
+        let out = boost::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
         FittedModel::from_output(Method::Boost, data, ctx, out, None, 0.0)
     }
 }
@@ -197,9 +186,7 @@ impl Clusterer for ClosureKmeans {
             leaf_max: self.leaf_max,
             base: ctx.kmeans_params(),
         };
-        let mut owned = None;
-        let v = resident(data, &mut owned, "closure k-means");
-        let out = closure::run_core(v, clamp_k(self.k, data), &params, ctx.backend);
+        let out = closure::run_core(data, clamp_k(self.k, data), &params, ctx.backend);
         FittedModel::from_output(Method::Closure, data, ctx, out, None, 0.0)
     }
 }
@@ -349,6 +336,7 @@ impl Clusterer for KGraphGkMeans {
             &nn_descent::NnDescentParams {
                 seed: ctx.seed,
                 threads: ctx.threads,
+                scan_order: ctx.scan_order,
                 ..Default::default()
             },
         );

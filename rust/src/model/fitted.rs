@@ -113,6 +113,13 @@ impl VecStore for ModelVectors {
             ModelVectors::Disk(c) => Some(c),
         }
     }
+
+    fn scan_geometry(&self) -> Option<crate::data::plan::ScanGeometry> {
+        match self {
+            ModelVectors::Ram(_) => None,
+            ModelVectors::Disk(c) => c.scan_geometry(),
+        }
+    }
 }
 
 /// The artifact a [`crate::model::Clusterer`] fit produces.

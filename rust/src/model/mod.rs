@@ -40,6 +40,7 @@ pub use clusterer::{
 };
 pub use fitted::{FittedModel, ModelVectors};
 
+use crate::data::plan::ScanOrder;
 use crate::kmeans::common::{IterStat, KmeansParams};
 use crate::runtime::Backend;
 
@@ -70,6 +71,15 @@ pub struct RunContext<'a> {
     /// Retain a copy of the training vectors inside the [`FittedModel`]
     /// so it can serve [`FittedModel::search`] after `save`/`load`.
     pub keep_data: bool,
+    /// Epoch visit-order policy for the random-access scan loops (see
+    /// [`crate::data::plan`]).  `Auto` (the default) shuffles within
+    /// chunk-aligned super-blocks on paged stores — one chunk read per
+    /// chunk per epoch instead of one per sample — and keeps the
+    /// historical global shuffle, bit-identical, on resident data.
+    /// `Global` forces the cache-oblivious order everywhere (exact
+    /// reproduction of in-RAM scans on a paged store); `Superblock`
+    /// requests locality planning explicitly.
+    pub scan_order: ScanOrder,
     /// Invoked once per recorded epoch stat.  **Batch semantics**: the
     /// engines do not stream — the callback fires for every history
     /// entry *after* the optimization loop (graph build included) has
@@ -91,6 +101,7 @@ impl<'a> RunContext<'a> {
             max_iters: base.max_iters,
             min_move_rate: base.min_move_rate,
             keep_data: false,
+            scan_order: base.scan_order,
             progress: None,
         }
     }
@@ -125,6 +136,12 @@ impl<'a> RunContext<'a> {
         self
     }
 
+    /// Set the epoch visit-order policy (CLI `--scan-order`).
+    pub fn scan_order(mut self, order: ScanOrder) -> Self {
+        self.scan_order = order;
+        self
+    }
+
     /// Install a per-epoch progress callback.
     pub fn on_progress(mut self, f: impl Fn(&str, &IterStat) + Sync + 'static) -> Self {
         self.progress = Some(Box::new(f));
@@ -139,6 +156,7 @@ impl<'a> RunContext<'a> {
             min_move_rate: self.min_move_rate,
             seed: self.seed,
             threads: self.threads,
+            scan_order: self.scan_order,
         }
     }
 
@@ -162,16 +180,19 @@ mod tests {
             .seed(9)
             .max_iters(12)
             .min_move_rate(0.5)
-            .keep_data(true);
+            .keep_data(true)
+            .scan_order(ScanOrder::Superblock);
         assert_eq!(ctx.threads, 4);
         assert_eq!(ctx.seed, 9);
         assert_eq!(ctx.max_iters, 12);
         assert_eq!(ctx.min_move_rate, 0.5);
         assert!(ctx.keep_data);
+        assert_eq!(ctx.scan_order, ScanOrder::Superblock);
         let p = ctx.kmeans_params();
         assert_eq!(p.max_iters, 12);
         assert_eq!(p.seed, 9);
         assert_eq!(p.threads, 4);
+        assert_eq!(p.scan_order, ScanOrder::Superblock);
     }
 
     #[test]

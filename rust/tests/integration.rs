@@ -89,7 +89,7 @@ fn alg3_converges_like_fig2() {
         .unwrap();
     let out = construct::build(
         &data,
-        &ConstructParams { kappa: 10, xi: 50, tau: 5, seed: 1, threads: 1 },
+        &ConstructParams { kappa: 10, xi: 50, tau: 5, seed: 1, threads: 1, ..Default::default() },
         &b,
     );
     let exact = brute::build(&data, 1, &b);
@@ -113,7 +113,7 @@ fn graph_quality_improves_clustering_quality() {
     for tau in [1usize, 6] {
         let g = construct::build(
             &data,
-            &ConstructParams { kappa: 10, xi: 40, tau, seed: 1, threads: 1 },
+            &ConstructParams { kappa: 10, xi: 40, tau, seed: 1, threads: 1, ..Default::default() },
             &b,
         );
         let out = gkmeans::gkm::gkmeans::run_core(&data, 40, &g.graph, &params, &b);
@@ -151,7 +151,7 @@ fn ann_on_constructed_graph_beats_random_guess() {
         .unwrap();
     let g = construct::build(
         &data,
-        &ConstructParams { kappa: 10, xi: 40, tau: 6, seed: 3, threads: 1 },
+        &ConstructParams { kappa: 10, xi: 40, tau: 6, seed: 3, threads: 1, ..Default::default() },
         &b,
     );
     let mut rng = gkmeans::util::rng::Rng::new(21);

@@ -39,7 +39,7 @@ fn setup(n: usize) -> (gkmeans::data::matrix::VecSet, KnnGraph) {
     let data = blobs(&BlobSpec::quick(n, 16, 20), 5);
     let graph = construct::build(
         &data,
-        &ConstructParams { kappa: 20, xi: 40, tau: 5, seed: 2, threads: 1 },
+        &ConstructParams { kappa: 20, xi: 40, tau: 5, seed: 2, threads: 1, ..Default::default() },
         &Backend::native(),
     )
     .graph;

@@ -93,6 +93,7 @@ fn prop_construct_graph_entries_are_true_distances() {
             tau: g.usize_in(1, 4),
             seed: g.rng.next_u64(),
             threads: 1,
+            ..Default::default()
         };
         let out = construct::build(&data, &params, &Backend::native());
         out.graph.check_invariants()?;

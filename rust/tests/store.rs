@@ -1,16 +1,25 @@
 //! Integration tests for the `VecStore` storage layer: the
 //! ChunkedVecStore ↔ VecSet equivalence property, the GKMODEL v1 → v2
-//! migration contract (against a committed byte fixture), and the
+//! migration contract (against a committed byte fixture), the
 //! out-of-core serving path (`predict_batch` / `search_batch` from a v2
 //! artifact with vectors paged from disk through a deliberately tiny
-//! block cache).
+//! block cache), and the locality-aware scan planner: a `CountingStore`
+//! wrapper instruments chunk reads to assert that super-block-planned
+//! GK-means epochs touch disk like a sequential scan while the global
+//! shuffle degenerates to ~one read per sample, plus quality parity and
+//! the streaming Boost/Closure fits.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use gkmeans::data::matrix::VecSet;
+use gkmeans::data::plan::ScanOrder;
 use gkmeans::data::store::{self, ChunkedVecStore, VecStore};
 use gkmeans::gkm::ann::SearchParams;
-use gkmeans::model::{Clusterer, FittedModel, GkMeans, ModelVectors, RunContext};
+use gkmeans::model::{
+    Boost, ClosureKmeans, Clusterer, FittedModel, GkMeans, ModelVectors, RunContext,
+};
 use gkmeans::runtime::Backend;
 use gkmeans::testing::prop;
 
@@ -234,11 +243,174 @@ fn out_of_core_search_batch_matches_single_queries() {
     std::fs::remove_file(&path).ok();
 }
 
+/// A [`VecStore`] wrapper with an instrumented chunk-read counter: every
+/// chunk its cursors page in from disk bumps the shared counter, so the
+/// locality assertions below are phrased directly in "chunks read".
+struct CountingStore {
+    inner: ChunkedVecStore,
+    reads: Arc<AtomicU64>,
+}
+
+impl CountingStore {
+    fn new(store: ChunkedVecStore) -> CountingStore {
+        let reads = Arc::new(AtomicU64::new(0));
+        CountingStore { inner: store.with_read_counter(reads.clone()), reads }
+    }
+
+    fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.reads.store(0, Ordering::Relaxed)
+    }
+}
+
+impl VecStore for CountingStore {
+    fn rows(&self) -> usize {
+        VecStore::rows(&self.inner)
+    }
+
+    fn dim(&self) -> usize {
+        VecStore::dim(&self.inner)
+    }
+
+    fn open(&self) -> gkmeans::data::store::StoreCursor<'_> {
+        self.inner.open()
+    }
+
+    fn disk_backing(&self) -> Option<&ChunkedVecStore> {
+        Some(&self.inner)
+    }
+
+    fn scan_geometry(&self) -> Option<gkmeans::data::plan::ScanGeometry> {
+        VecStore::scan_geometry(&self.inner)
+    }
+}
+
+#[test]
+fn superblock_gkmeans_epochs_read_5x_fewer_chunks_than_global() {
+    use gkmeans::data::synth::{blobs, BlobSpec};
+    use gkmeans::gkm::gkmeans as gk;
+    use gkmeans::kmeans::common::{Clustering, KmeansParams};
+
+    // 600 rows at 8 rows/chunk = 75 chunks; the cursor cache holds 8 of
+    // them (~11%, well under the 25% bound), so a globally shuffled
+    // epoch misses on nearly every row while the super-block order pages
+    // each chunk once per epoch.
+    let data = blobs(&BlobSpec { sigma: 0.5, ..BlobSpec::quick(600, 8, 12) }, 31);
+    let path = tmp("locality.bin");
+    write_flat(&path, &data);
+    let graph = gkmeans::graph::brute::build(&data, 8, &Backend::native());
+    let init = gkmeans::kmeans::two_means::run(
+        &data,
+        12,
+        &gkmeans::kmeans::two_means::TwoMeansParams::default(),
+        &Backend::native(),
+    );
+
+    let mut results = Vec::new();
+    for order in [ScanOrder::Global, ScanOrder::Superblock] {
+        let store = CountingStore::new(
+            ChunkedVecStore::open_flat(&path, data.dim()).unwrap().chunk_rows(8).cache_chunks(8),
+        );
+        let clustering = Clustering::from_labels(&store, init.clone(), 12);
+        store.reset(); // count only the optimization scans
+        let params = gk::GkMeansParams {
+            kappa: 8,
+            base: KmeansParams {
+                max_iters: 10,
+                min_move_rate: 0.0,
+                seed: 2,
+                threads: 1,
+                scan_order: order,
+            },
+        };
+        let out = gk::run_from(&store, clustering, &graph, &params);
+        assert_eq!(out.history.len(), 11, "all 10 epochs must run ({order:?})");
+        results.push((store.reads(), out.distortion()));
+    }
+    let (global_reads, global_distortion) = results[0];
+    let (sb_reads, sb_distortion) = results[1];
+    assert!(sb_reads > 0);
+    assert!(
+        global_reads >= 5 * sb_reads,
+        "expected >=5x fewer chunk reads: global={global_reads} superblock={sb_reads}"
+    );
+    // quality parity: same init, same graph — final distortion within 2%
+    assert!(
+        (sb_distortion - global_distortion).abs() <= 0.02 * global_distortion.abs() + 1e-9,
+        "distortion diverged: global={global_distortion} superblock={sb_distortion}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resident_fit_is_bit_identical_for_every_scan_order() {
+    // On resident data the planner resolves every policy to the global
+    // shuffle, so the knob cannot change results — planning off keeps
+    // the historical fits bit-for-bit.
+    let data = gkmeans::data::synth::sift_like(300, 55);
+    let backend = Backend::native();
+    let cfg = GkMeans::new(6).kappa(6).tau(2).xi(30);
+    let base = cfg.fit(&data, &RunContext::new(&backend).max_iters(4));
+    for order in [ScanOrder::Auto, ScanOrder::Global, ScanOrder::Superblock] {
+        let m = cfg.fit(&data, &RunContext::new(&backend).max_iters(4).scan_order(order));
+        assert_eq!(m.labels, base.labels, "{order:?}");
+        for (a, b) in m.centroids.flat().iter().zip(base.centroids.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{order:?}");
+        }
+    }
+}
+
+#[test]
+fn boost_and_closure_stream_out_of_core() {
+    // PR 3 left Boost and Closure materializing a resident copy inside
+    // fit_store; they now stream through planned cursors.  Under the
+    // global order the streamed fit is bit-identical to the resident
+    // fit; under the default (auto -> superblock) order it still
+    // converges to the same quality class.
+    let data = gkmeans::data::synth::sift_like(300, 77);
+    let path = tmp("stream_bc.bin");
+    write_flat(&path, &data);
+    let chunked =
+        ChunkedVecStore::open_flat(&path, data.dim()).unwrap().chunk_rows(16).cache_chunks(2);
+    let backend = Backend::native();
+
+    let configs: Vec<Box<dyn Clusterer>> =
+        vec![Box::new(Boost::new(6)), Box::new(ClosureKmeans::new(6).trees(2))];
+    for cfg in &configs {
+        let resident = cfg.fit(&data, &RunContext::new(&backend).max_iters(5));
+        let streamed = cfg.fit_store(
+            &chunked,
+            &RunContext::new(&backend).max_iters(5).scan_order(ScanOrder::Global),
+        );
+        assert_eq!(resident.labels, streamed.labels, "{}", cfg.name());
+        for (a, b) in resident.centroids.flat().iter().zip(streamed.centroids.flat()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", cfg.name());
+        }
+        // the planned (super-block) order reaches comparable quality
+        let planned = cfg.fit_store(&chunked, &RunContext::new(&backend).max_iters(5));
+        assert!(planned.distortion().is_finite(), "{}", cfg.name());
+        assert!(
+            planned.distortion() <= resident.distortion() * 1.15 + 1e-9,
+            "{}: planned {} vs resident {}",
+            cfg.name(),
+            planned.distortion(),
+            resident.distortion()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn out_of_core_fit_matches_in_ram_fit() {
     // Clustering a disk-backed dataset (GK-means end to end, graph build
-    // included) must reproduce the in-RAM fit bit-for-bit at threads=1:
-    // the cursors feed the same bytes through the same kernels.
+    // included) under `--scan-order global` must reproduce the in-RAM
+    // fit bit-for-bit at threads=1: the cursors feed the same bytes
+    // through the same kernels in the same order.  (The default `auto`
+    // order plans chunk-aligned super-blocks on a paged store — same
+    // quality class, different visit order; see the locality tests.)
     let data = gkmeans::data::synth::sift_like(400, 99);
     let path = tmp("ooc_fit.bin");
     write_flat(&path, &data);
@@ -247,9 +419,13 @@ fn out_of_core_fit_matches_in_ram_fit() {
 
     let backend = Backend::native();
     let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    let ctx_global = RunContext::new(&backend)
+        .max_iters(3)
+        .keep_data(true)
+        .scan_order(ScanOrder::Global);
     let cfg = GkMeans::new(8).kappa(6).tau(2).xi(30);
     let in_ram = cfg.fit(&data, &ctx);
-    let streamed = cfg.fit_store(&chunked, &ctx);
+    let streamed = cfg.fit_store(&chunked, &ctx_global);
 
     assert_eq!(in_ram.labels, streamed.labels);
     for (a, b) in in_ram.centroids.flat().iter().zip(streamed.centroids.flat()) {
