@@ -1,7 +1,8 @@
 //! §Perf microbenches over the hot paths: native vs PJRT block distance,
-//! assignment tiles, scalar d2/dot, top-κ updates, and one GK-means epoch.
-//! These are the numbers the EXPERIMENTS.md §Perf before/after table is
-//! built from.  Regenerate: `cargo bench --bench hotpath_micro`.
+//! assignment tiles, scalar d2/dot, batched vs scalar candidate-set
+//! evaluation (the Alg. 2 inner loop), top-κ updates, and one GK-means
+//! epoch.  These are the numbers the EXPERIMENTS.md §Perf before/after
+//! table is built from.  Regenerate: `cargo bench --bench hotpath_micro`.
 
 use gkmeans::bench_util;
 use gkmeans::core_ops::{blockdist, dist, topk};
@@ -29,6 +30,7 @@ fn main() {
     let budget = 0.5;
     let mut rng = Rng::new(1);
     let mut t = Table::new(&["op", "shape", "backend", "GFLOP/s", "ops_per_s"]);
+    let mut records = Vec::new();
 
     // --- scalar d2 / dot ---
     for d in [128usize, 512, 960] {
@@ -121,6 +123,101 @@ fn main() {
         }
     }
 
+    // --- candidate-set evaluation: scalar vs batched (the Δℐ / Alg. 2
+    //     inner loop; acceptance: batched ≥ 1.5× the scalar l2 path at
+    //     d ≥ 128, κ ≥ 10 — all three variants land in BENCH_gkm.json).
+    //     Two scalar baselines keep the comparison honest:
+    //       * cand_eval_scalar      — one plain `d2` per candidate (the
+    //         issue's "one scalar l2_sq at a time" framing; still what
+    //         closure assignment does per candidate)
+    //       * cand_eval_scalar_dot  — one `d2_via_dot` per candidate
+    //         (the pre-batch Δℐ / GK-means* inner loop since PR 1),
+    //         isolating the pure tiling+gather win from the norm-identity
+    //         saving that loop already had
+    for (d, kappa) in [(128usize, 10usize), (128, 50), (512, 20)] {
+        let k = 256; // candidate pool the κ candidates are drawn from
+        let centroids: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let cnorms: Vec<f32> = centroids.chunks_exact(d).map(dist::norm2).collect();
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let xx = dist::norm2(&x);
+        let cand: Vec<usize> = (0..kappa).map(|t| (t * 37) % k).collect();
+        let (r_scalar, it_s) = rate(budget, || {
+            let mut best = f32::INFINITY;
+            let mut best_c = 0usize;
+            for &c in &cand {
+                let dd = dist::d2(&x, &centroids[c * d..(c + 1) * d]);
+                if dd < best {
+                    best = dd;
+                    best_c = c;
+                }
+            }
+            std::hint::black_box((best, best_c));
+        });
+        let (r_dot, it_d) = rate(budget, || {
+            let mut best = f32::INFINITY;
+            let mut best_c = 0usize;
+            for &c in &cand {
+                let col = &centroids[c * d..(c + 1) * d];
+                let dd = dist::d2_via_dot(xx, cnorms[c], dist::dot(&x, col));
+                if dd < best {
+                    best = dd;
+                    best_c = c;
+                }
+            }
+            std::hint::black_box((best, best_c));
+        });
+        // batched path: gather the candidate block + cached norms, one
+        // d2_batch kernel call (gather cost included — it is part of the
+        // real hot path)
+        let mut block = vec![0f32; kappa * d];
+        let mut nsel = vec![0f32; kappa];
+        let mut out = vec![0f32; kappa];
+        let (r_batch, it_b) = rate(budget, || {
+            for (j, &c) in cand.iter().enumerate() {
+                block[j * d..(j + 1) * d].copy_from_slice(&centroids[c * d..(c + 1) * d]);
+                nsel[j] = cnorms[c];
+            }
+            dist::d2_batch(&x, xx, &block, &nsel, d, &mut out);
+            let mut best = f32::INFINITY;
+            let mut best_c = 0usize;
+            for (j, &v) in out.iter().enumerate() {
+                if v < best {
+                    best = v;
+                    best_c = cand[j];
+                }
+            }
+            std::hint::black_box((best, best_c));
+        });
+        for (name, r, iters) in [
+            ("cand_eval_scalar", r_scalar, it_s),
+            ("cand_eval_scalar_dot", r_dot, it_d),
+            ("cand_eval_batched", r_batch, it_b),
+        ] {
+            records.push(gkmeans::bench_util::GkBenchRecord {
+                name: name.into(),
+                n: k,
+                d,
+                k,
+                kappa,
+                threads: 1,
+                epochs: iters,
+                samples_per_s: r,
+            });
+            t.row(&[
+                name.into(),
+                format!("d={d},kappa={kappa}"),
+                "native".into(),
+                f(r * (2.0 * (d * kappa) as f64) / 1e9),
+                f(r),
+            ]);
+        }
+        println!(
+            "cand_eval d={d} kappa={kappa}: l2 {r_scalar:.0}/s, dot {r_dot:.0}/s, batched {r_batch:.0}/s ({:.2}x vs l2, {:.2}x vs dot)",
+            r_batch / r_scalar.max(1e-12),
+            r_batch / r_dot.max(1e-12)
+        );
+    }
+
     // --- top-κ update throughput ---
     {
         let mut g = gkmeans::graph::knn::KnnGraph::empty(1000, 50);
@@ -168,7 +265,6 @@ fn main() {
             &Backend::native(),
         );
         let avail = gkmeans::util::pool::resolve_threads(0);
-        let mut records = Vec::new();
         let mut serial_rate = 0f64;
         for &threads in &[1usize, 2, 4, 8] {
             if threads > 1 && threads > avail {

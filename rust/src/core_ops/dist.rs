@@ -1,10 +1,23 @@
-//! Scalar vector math: squared-L2 distance, dot product, norms.
+//! Scalar and batched vector math: squared-L2 distance, dot product,
+//! norms, and the gathered-block mini-GEMM candidate kernels.
 //!
 //! The 4-way unrolled loops below are the single hottest code in the
 //! native backend — `d2` is called `O(n·κ)` times per GK-means epoch and
 //! `O(n·ξ)` times per graph-refinement round.  The unrolling gives LLVM
 //! independent accumulator chains it reliably vectorizes; see
 //! `benches/hotpath_micro.rs` for the measured effect.
+//!
+//! The batched kernels ([`dot_batch`], [`d2_batch`], [`d2_batch_exact`])
+//! close the constant-factor gap left by evaluating κ candidates one
+//! scalar call at a time: the caller gathers the candidate vectors into
+//! a contiguous block and one tiled pass evaluates four candidates per
+//! load of the sample — the same mini-GEMM shape as `blockdist`, shrunk
+//! to the Alg. 2 candidate-set width.  `dot_batch`/`d2_batch_exact`
+//! replicate the scalar accumulation order per column (bit-identical —
+//! the Δℐ GK-means and ANN-search contract); `d2_batch` additionally
+//! exploits precomputed norms via [`d2_via_dot`] and is allowed to shift
+//! at f32 rounding (GK-means\*'s tolerance class).  `cargo bench --bench
+//! hotpath_micro` records the batched-vs-scalar gap in `BENCH_gkm.json`.
 
 /// Squared Euclidean distance ‖a − b‖².
 #[inline]
@@ -70,6 +83,186 @@ pub fn norm2(a: &[f32]) -> f32 {
 #[inline]
 pub fn d2_via_dot(xx: f32, yy: f32, xy: f32) -> f32 {
     (xx + yy - 2.0 * xy).max(0.0)
+}
+
+/// Candidates evaluated per tile of the batched kernels below.  Four
+/// columns share each load of `x`, which is where the batched win over
+/// per-candidate scalar calls comes from.  Public so callers can skip
+/// the gather entirely when a candidate set is too narrow to fill one
+/// tile (the kernels would just run per-column scalar calls on the
+/// gathered copy).
+pub const BATCH_TILE: usize = 4;
+
+/// Dimensionality below which [`d2_batch`] takes its one-shot scalar
+/// fallback: at tiny `d` the norm identity saves nothing over a direct
+/// `(x − y)²` scan and only adds rounding.
+pub const BATCH_MIN_DIM: usize = 16;
+
+/// Whether [`d2_batch`] will run its tiled norm-identity path for a
+/// `d`-dimensional sample against `w` candidates (`false` = the one-shot
+/// scalar fallback).  Callers that want to skip the gather entirely on
+/// fallback shapes branch on this — the single source of truth for the
+/// fallback condition, so call sites cannot drift from the kernel.
+#[inline]
+pub fn batch_eligible(d: usize, w: usize) -> bool {
+    d >= BATCH_MIN_DIM && w >= BATCH_TILE
+}
+
+/// Batched dot products against a gathered candidate block:
+/// `out[j] = ⟨x, block[j·d .. (j+1)·d]⟩` for `out.len()` candidates.
+///
+/// This is the mini-GEMM form of the Alg. 2 candidate scan: the caller
+/// gathers the κ̃ candidate composites/centroids contiguously, and one
+/// call produces every cross dot the Δℐ / nearest-centroid evaluation
+/// needs.
+///
+/// **Bit-identity contract**: each output is produced by *exactly* the
+/// accumulation sequence of the scalar [`dot`] — four independent
+/// accumulator chains over the unrolled body, one sequential remainder
+/// loop — and the tile only shares the loads of `x` across four
+/// candidate columns.  Callers on an exact-arithmetic budget (the Δℐ
+/// GK-means candidate scan, whose `threads = 1` results must stay
+/// bit-identical to the seed implementation) can therefore batch without
+/// shifting a single ulp; the unit tests assert equality of the raw bit
+/// patterns.
+pub fn dot_batch(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(block.len(), w * d, "block is not w × d");
+    let chunks = d / 4;
+    let mut j = 0;
+    while j + BATCH_TILE <= w {
+        let y0 = &block[j * d..(j + 1) * d];
+        let y1 = &block[(j + 1) * d..(j + 2) * d];
+        let y2 = &block[(j + 2) * d..(j + 3) * d];
+        let y3 = &block[(j + 3) * d..(j + 4) * d];
+        // s[c][l]: accumulator chain l of candidate column c — per
+        // column, the same four chains the scalar kernel keeps; keeping a
+        // column's chains contiguous lets LLVM run one 4-lane FMA per
+        // column per chunk with the x loads shared across columns.
+        let mut s = [[0f32; 4]; BATCH_TILE];
+        for i in 0..chunks {
+            let b = i * 4;
+            for l in 0..4 {
+                let xv = x[b + l];
+                s[0][l] += xv * y0[b + l];
+                s[1][l] += xv * y1[b + l];
+                s[2][l] += xv * y2[b + l];
+                s[3][l] += xv * y3[b + l];
+            }
+        }
+        // per column: ((s0 + s1) + s2) + s3, then the sequential tail —
+        // the exact reduction order of `dot`
+        let mut r = [
+            s[0][0] + s[0][1] + s[0][2] + s[0][3],
+            s[1][0] + s[1][1] + s[1][2] + s[1][3],
+            s[2][0] + s[2][1] + s[2][2] + s[2][3],
+            s[3][0] + s[3][1] + s[3][2] + s[3][3],
+        ];
+        for t in chunks * 4..d {
+            let xv = x[t];
+            r[0] += xv * y0[t];
+            r[1] += xv * y1[t];
+            r[2] += xv * y2[t];
+            r[3] += xv * y3[t];
+        }
+        out[j..j + BATCH_TILE].copy_from_slice(&r);
+        j += BATCH_TILE;
+    }
+    while j < w {
+        out[j] = dot(x, &block[j * d..(j + 1) * d]);
+        j += 1;
+    }
+}
+
+/// Batched candidate distances in the GEMM-compatible form
+/// (`‖x − y‖² = ‖x‖² + ‖y‖² − 2⟨x, y⟩`, see [`d2_via_dot`]) over a
+/// gathered candidate block: the caller supplies `xx = ‖x‖²` once per
+/// sample and the per-candidate norms once per epoch (the centroid-norm
+/// cache GK-means\* keeps, or the `DeltaCache` composite norms), so each
+/// candidate costs a single tiled dot.
+///
+/// Below [`BATCH_MIN_DIM`] — or when the block is narrower than one tile
+/// — the kernel takes a **one-shot scalar fallback**: a direct [`d2`]
+/// per candidate, which is cheaper than the norm identity at those
+/// shapes.  The two paths round differently at f32 (the same tolerance
+/// class as the blocked kernels; see [`d2_via_dot`]); callers that must
+/// not move an ulp use [`dot_batch`] or [`d2_batch_exact`] instead.
+pub fn d2_batch(x: &[f32], xx: f32, block: &[f32], norms: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(block.len(), w * d, "block is not w × d");
+    assert_eq!(norms.len(), w, "one precomputed norm per candidate");
+    if !batch_eligible(d, w) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = d2(x, &block[j * d..(j + 1) * d]);
+        }
+        return;
+    }
+    dot_batch(x, block, d, out);
+    for (o, &nn) in out.iter_mut().zip(norms) {
+        *o = d2_via_dot(xx, nn, *o);
+    }
+}
+
+/// Batched direct squared distances over a gathered block:
+/// `out[j] = ‖x − block_j‖²` with per-column arithmetic **bit-identical
+/// to [`d2`]** (same four accumulator chains, same reduction and
+/// remainder order; the tile only shares the loads of `x`).
+///
+/// The exact-form sibling of [`d2_batch`] for callers that need the
+/// batching without the norm identity's rounding shift and without
+/// precomputed norms — the ANN frontier expansion, whose results (and
+/// `search` ≡ `search_batch` equivalence) must not move under batching.
+pub fn d2_batch_exact(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(block.len(), w * d, "block is not w × d");
+    let chunks = d / 4;
+    let mut j = 0;
+    while j + BATCH_TILE <= w {
+        let y0 = &block[j * d..(j + 1) * d];
+        let y1 = &block[(j + 1) * d..(j + 2) * d];
+        let y2 = &block[(j + 2) * d..(j + 3) * d];
+        let y3 = &block[(j + 3) * d..(j + 4) * d];
+        let mut s = [[0f32; 4]; BATCH_TILE];
+        for i in 0..chunks {
+            let b = i * 4;
+            for l in 0..4 {
+                let xv = x[b + l];
+                let e0 = xv - y0[b + l];
+                let e1 = xv - y1[b + l];
+                let e2 = xv - y2[b + l];
+                let e3 = xv - y3[b + l];
+                s[0][l] += e0 * e0;
+                s[1][l] += e1 * e1;
+                s[2][l] += e2 * e2;
+                s[3][l] += e3 * e3;
+            }
+        }
+        let mut r = [
+            s[0][0] + s[0][1] + s[0][2] + s[0][3],
+            s[1][0] + s[1][1] + s[1][2] + s[1][3],
+            s[2][0] + s[2][1] + s[2][2] + s[2][3],
+            s[3][0] + s[3][1] + s[3][2] + s[3][3],
+        ];
+        for t in chunks * 4..d {
+            let e0 = x[t] - y0[t];
+            let e1 = x[t] - y1[t];
+            let e2 = x[t] - y2[t];
+            let e3 = x[t] - y3[t];
+            r[0] += e0 * e0;
+            r[1] += e1 * e1;
+            r[2] += e2 * e2;
+            r[3] += e3 * e3;
+        }
+        out[j..j + BATCH_TILE].copy_from_slice(&r);
+        j += BATCH_TILE;
+    }
+    while j < w {
+        out[j] = d2(x, &block[j * d..(j + 1) * d]);
+        j += 1;
+    }
 }
 
 /// Early-exit squared distance: abandons once the partial sum exceeds
@@ -149,6 +342,95 @@ mod tests {
     fn d2_zero_for_identical() {
         let a: Vec<f32> = (0..128).map(|i| i as f32).collect();
         assert_eq!(d2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn dot_batch_bit_identical_to_scalar_dot() {
+        // the load-bearing lemma for the batched Δℐ candidate scan: every
+        // column of the tiled kernel reproduces the scalar `dot` to the bit
+        let mut rng = crate::util::rng::Rng::new(7);
+        for d in [0usize, 1, 3, 4, 7, 15, 16, 33, 128, 513] {
+            for w in [0usize, 1, 2, 3, 4, 5, 7, 8, 11] {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+                let mut out = vec![0f32; w];
+                dot_batch(&x, &block, d, &mut out);
+                for j in 0..w {
+                    let want = dot(&x, &block[j * d..(j + 1) * d]);
+                    assert_eq!(
+                        out[j].to_bits(),
+                        want.to_bits(),
+                        "d={d} w={w} col {j}: {} vs {want}",
+                        out[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn d2_batch_exact_bit_identical_to_scalar_d2() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        for d in [0usize, 1, 4, 6, 16, 31, 128] {
+            for w in [0usize, 1, 3, 4, 6, 9] {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+                let mut out = vec![0f32; w];
+                d2_batch_exact(&x, &block, d, &mut out);
+                for j in 0..w {
+                    let want = d2(&x, &block[j * d..(j + 1) * d]);
+                    assert_eq!(out[j].to_bits(), want.to_bits(), "d={d} w={w} col {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn d2_batch_matches_scalar_within_tolerance() {
+        // both branches (scalar fallback below the threshold, norm
+        // identity above it) stay in the blocked-kernel tolerance class
+        let mut rng = crate::util::rng::Rng::new(9);
+        for d in [1usize, 4, 8, 15, 16, 32, 100, 128, 200] {
+            for w in [1usize, 2, 3, 4, 5, 10, 17] {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+                let xx = norm2(&x);
+                let norms: Vec<f32> = block.chunks_exact(d.max(1)).map(norm2).collect();
+                let mut out = vec![0f32; w];
+                d2_batch(&x, xx, &block, &norms, d, &mut out);
+                for j in 0..w {
+                    let want = d2(&x, &block[j * d..(j + 1) * d]);
+                    assert!(
+                        (out[j] - want).abs() <= 1e-3 * (1.0 + want),
+                        "d={d} w={w} col {j}: got {} want {want}",
+                        out[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn d2_batch_non_negative_under_cancellation() {
+        // self-distance through the norm identity must clamp at zero
+        let d = 128;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32) * 10.0).collect();
+        let mut block = Vec::new();
+        for _ in 0..4 {
+            block.extend_from_slice(&x);
+        }
+        let xx = norm2(&x);
+        let norms = vec![xx; 4];
+        let mut out = vec![f32::NAN; 4];
+        d2_batch(&x, xx, &block, &norms, d, &mut out);
+        assert!(out.iter().all(|&v| v >= 0.0), "{out:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_batch_rejects_ragged_block() {
+        let mut out = [0f32; 2];
+        dot_batch(&[1.0, 2.0], &[1.0, 2.0, 3.0], 2, &mut out);
     }
 
     #[test]

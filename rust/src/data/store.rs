@@ -193,6 +193,25 @@ const MAX_DIM: usize = 1 << 20;
 /// [`ChunkedVecStore::open_bvecs`]), and a byte range inside a larger
 /// file ([`ChunkedVecStore::from_section`] — how GKMODEL v2 artifacts
 /// page their vectors section).
+///
+/// ```
+/// use gkmeans::data::store::{ChunkedVecStore, VecStore};
+///
+/// // write 8 rows of 4-d f32 and stream them back with a tiny cache
+/// let path = std::env::temp_dir().join(format!("gkm_doc_chunked_{}.f32", std::process::id()));
+/// let flat: Vec<f32> = (0..32).map(|v| v as f32).collect();
+/// let bytes: Vec<u8> = flat.iter().flat_map(|v| v.to_le_bytes()).collect();
+/// std::fs::write(&path, &bytes).unwrap();
+///
+/// let store = ChunkedVecStore::open_flat(&path, 4)
+///     .unwrap()
+///     .chunk_rows(2)     // 2 rows per chunk…
+///     .cache_chunks(2);  // …and at most 2 resident chunks per cursor
+/// assert_eq!((store.rows(), store.dim()), (8, 4));
+/// let mut cur = VecStore::open(&store);
+/// assert_eq!(cur.row(5), &[20.0, 21.0, 22.0, 23.0]);
+/// # std::fs::remove_file(&path).ok();
+/// ```
 #[derive(Debug, Clone)]
 pub struct ChunkedVecStore {
     path: PathBuf,

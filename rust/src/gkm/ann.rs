@@ -6,8 +6,15 @@
 //! stop when the pool no longer improves.  The paper reports that graphs
 //! from Alg. 3 serve ANN queries competitively despite lower raw recall —
 //! `benches/ann_search.rs` reproduces that comparison vs NN-Descent.
+//!
+//! Each frontier expansion evaluates its ≤ κ unvisited neighbors as one
+//! gathered block through the exact-form batched kernel
+//! ([`crate::core_ops::dist::d2_batch_exact`]): four neighbors share
+//! every load of the query, and because the kernel is bit-identical per
+//! column to the scalar `d2`, results and stats are exactly those of the
+//! historical per-neighbor loop.
 
-use crate::core_ops::dist::d2;
+use crate::core_ops::dist::{d2, d2_batch_exact};
 use crate::core_ops::topk::TopK;
 use crate::data::store::VecStore;
 use crate::graph::knn::KnnGraph;
@@ -47,6 +54,12 @@ pub struct SearchScratch {
     stamp: Vec<u32>,
     epoch: u32,
     frontier: std::collections::BinaryHeap<std::cmp::Reverse<(Ordered, u32)>>,
+    /// Ids of the unvisited neighbors gathered for one frontier expansion.
+    batch_ids: Vec<u32>,
+    /// Their rows, gathered contiguously for the batched distance kernel.
+    batch_rows: Vec<f32>,
+    /// Per-gathered-neighbor squared distances from `d2_batch_exact`.
+    batch_d2: Vec<f32>,
 }
 
 impl SearchScratch {
@@ -56,6 +69,9 @@ impl SearchScratch {
             stamp: vec![0; n],
             epoch: 0,
             frontier: std::collections::BinaryHeap::new(),
+            batch_ids: Vec::new(),
+            batch_rows: Vec::new(),
+            batch_d2: Vec::new(),
         }
     }
 
@@ -139,16 +155,46 @@ pub fn search_with_scratch(
             break; // closest frontier node is worse than the worst pooled
         }
         stats.hops += 1;
+        // Frontier expansion, batched: mark + gather the unvisited
+        // neighbors' rows into a contiguous block, evaluate the whole
+        // block through the tiled kernel, then replay the pool/frontier
+        // updates in neighbor order.  `d2_batch_exact` is bit-identical
+        // per column to the scalar `d2` and the threshold sequence is
+        // replayed in the same order, so results and stats match the
+        // historical per-neighbor loop exactly (search ≡ search_batch
+        // equivalence is untouched).
+        scratch.batch_ids.clear();
         for &nb in graph.neighbors(node as usize) {
             if nb == u32::MAX {
                 continue;
             }
-            let nb_us = nb as usize;
-            if !scratch.visit(nb_us) {
+            if !scratch.visit(nb as usize) {
                 continue;
             }
-            let dd = d2(query, cur.row(nb_us));
-            stats.dist_evals += 1;
+            scratch.batch_ids.push(nb);
+        }
+        stats.dist_evals += scratch.batch_ids.len();
+        if scratch.batch_ids.len() < crate::core_ops::dist::BATCH_TILE {
+            // too narrow to fill one tile — evaluate in place (the
+            // historical loop; same bits, no gather)
+            for &nb in &scratch.batch_ids {
+                let dd = d2(query, cur.row(nb as usize));
+                if dd < pool.threshold() {
+                    pool.push(dd, nb);
+                    scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), nb)));
+                }
+            }
+            continue;
+        }
+        scratch.batch_rows.clear();
+        for &nb in &scratch.batch_ids {
+            scratch.batch_rows.extend_from_slice(cur.row(nb as usize));
+        }
+        scratch.batch_d2.clear();
+        scratch.batch_d2.resize(scratch.batch_ids.len(), 0.0);
+        d2_batch_exact(query, &scratch.batch_rows, query.len(), &mut scratch.batch_d2);
+        for (t, &nb) in scratch.batch_ids.iter().enumerate() {
+            let dd = scratch.batch_d2[t];
             if dd < pool.threshold() {
                 pool.push(dd, nb);
                 scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), nb)));

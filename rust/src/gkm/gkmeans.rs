@@ -9,6 +9,23 @@
 //!
 //! Initialization is Alg. 1 (2M-tree), exactly as the paper specifies.
 //!
+//! ## Batched candidate evaluation (the mini-GEMM hot path)
+//!
+//! The per-sample inner loop no longer evaluates the κ̃ candidates one
+//! scalar dot at a time: `EpochScratch::best_move` gathers `D_u` plus
+//! every candidate composite into a contiguous block and computes all
+//! the cross dots with one tiled
+//! [`dot_batch`](crate::core_ops::dist::dot_batch) call (four candidates
+//! share each load of `x`), then folds Δℐ from the `DeltaCache`'s
+//! composite-norm cache.  Because `dot_batch` replicates the scalar
+//! `dot` accumulation order per column and the `*_from_dot` folds are
+//! the scalar expressions verbatim, the batched scan picks the same
+//! moves with the same Δℐ bits — `threads = 1` results remain
+//! **bit-identical to the seed implementation**, which the tests pin
+//! against an in-test replica of the seed scalar loop.  (GK-means\* in
+//! [`crate::gkm::variant`] batches through the norm-identity `d2_batch`
+//! instead and is allowed to shift at f32 rounding.)
+//!
 //! ## Parallel epochs (`threads > 1`): batch-synchronous commit protocol
 //!
 //! The serial epoch is a chain of dependent moves: each move updates the
@@ -41,7 +58,7 @@
 //! stream, same visit order, same arithmetic): results are bit-identical
 //! to the pre-parallel implementation, which the seed tests rely on.
 
-use crate::core_ops::dist::norm2;
+use crate::core_ops::dist::{dot_batch, norm2};
 use crate::data::matrix::VecSet;
 use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
@@ -70,7 +87,14 @@ impl Default for GkMeansParams {
 }
 
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
-#[deprecated(note = "use `model::GkMeans::new(k).kappa(..).fit(data, &RunContext::new(&backend))`")]
+/// The modern surface is `model::GkMeans` (which builds the Alg. 3 graph
+/// itself and then runs this engine, resident or out-of-core via
+/// `fit`/`fit_store`); to run Alg. 2 on a *caller-supplied* graph as this
+/// shim does, call [`run_core`] directly.
+#[deprecated(
+    note = "use `model::GkMeans::new(k).kappa(..).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data); for a caller-supplied graph use `run_core`"
+)]
 pub fn run(
     data: &VecSet,
     k: usize,
@@ -127,15 +151,85 @@ struct Proposal {
 
 /// Per-worker scratch reused across batches and epochs: the shared
 /// [`CandidateSet`] (epoch-stamped mark array, O(κ) dedup — see
-/// [`crate::gkm`]) plus this core's proposal buffer.
+/// [`crate::gkm`]), this core's proposal buffer, and the gathered
+/// composite block the batched Δℐ evaluation runs on.
 struct EpochScratch {
     cand: CandidateSet,
     proposals: Vec<Proposal>,
+    /// Gathered composite block for [`EpochScratch::best_move`]: column 0
+    /// is `D_u` (the leave term), then one column per entry of `cand.q`.
+    block: Vec<f32>,
+    /// `⟨D, x⟩` per gathered column, filled by one [`dot_batch`] call.
+    dots: Vec<f32>,
 }
 
 impl EpochScratch {
     fn new(k: usize, kappa: usize) -> EpochScratch {
-        EpochScratch { cand: CandidateSet::new(k, kappa), proposals: Vec::new() }
+        EpochScratch {
+            cand: CandidateSet::new(k, kappa),
+            proposals: Vec::new(),
+            block: Vec::new(),
+            dots: Vec::new(),
+        }
+    }
+
+    /// Evaluate the collected candidate set for sample `x` (current
+    /// cluster `u`, ‖x‖² = `xx`) through the batched mini-GEMM path:
+    /// gather `D_u` plus every candidate composite into one contiguous
+    /// block, compute all the cross dots in a single [`dot_batch`] call,
+    /// and fold Δℐ from the [`DeltaCache`]'s cached ‖D_r‖².  Returns the
+    /// best destination and its Δℐ.
+    ///
+    /// Exact-arithmetic contract: `dot_batch` reproduces the scalar
+    /// `dot` bit-for-bit per column, and the `*_from_dot` fold is the
+    /// scalar Δℐ expression verbatim — so this evaluation selects the
+    /// same move, with the same Δℐ bits, as the seed per-candidate loop
+    /// (asserted by `batched_eval_bit_identical_to_seed_scalar_loop`).
+    fn best_move(
+        &mut self,
+        c: &Clustering,
+        cache: &DeltaCache,
+        x: &[f32],
+        xx: f64,
+        u: usize,
+    ) -> (usize, f64) {
+        if self.cand.q.len() + 1 < crate::core_ops::dist::BATCH_TILE {
+            // Too narrow to fill one tile: the kernel would degenerate to
+            // per-column scalar dots on a gathered copy, so skip the
+            // gather and take the scalar entry points straight from the
+            // composites — the exact same dots, hence the same bits.
+            let leave = cache.leave(c, x, xx, u);
+            let mut best_v = u;
+            let mut best_delta = 0f64;
+            for &v in &self.cand.q {
+                let v = v as usize;
+                let delta = cache.gain(c, x, xx, v) + leave;
+                if delta > best_delta {
+                    best_delta = delta;
+                    best_v = v;
+                }
+            }
+            return (best_v, best_delta);
+        }
+        self.block.clear();
+        self.block.extend_from_slice(c.composite_of(u));
+        for &v in &self.cand.q {
+            self.block.extend_from_slice(c.composite_of(v as usize));
+        }
+        self.dots.clear();
+        self.dots.resize(self.cand.q.len() + 1, 0.0);
+        dot_batch(x, &self.block, c.dim, &mut self.dots);
+        let leave = cache.leave_from_dot(c, xx, u, self.dots[0] as f64);
+        let mut best_v = u;
+        let mut best_delta = 0f64;
+        for (t, &v) in self.cand.q.iter().enumerate() {
+            let delta = cache.gain_from_dot(c, xx, v as usize, self.dots[t + 1] as f64) + leave;
+            if delta > best_delta {
+                best_delta = delta;
+                best_v = v as usize;
+            }
+        }
+        (best_v, best_delta)
     }
 }
 
@@ -160,17 +254,7 @@ fn scan_shard(
         }
         let x = cur.row(i);
         let xx = norm2(x) as f64;
-        let leave = cache.leave(c, x, xx, u);
-        let mut best_v = u;
-        let mut best_delta = 0f64;
-        for &v in &scratch.cand.q {
-            let v = v as usize;
-            let delta = cache.gain(c, x, xx, v) + leave;
-            if delta > best_delta {
-                best_delta = delta;
-                best_v = v;
-            }
-        }
+        let (best_v, best_delta) = scratch.best_move(c, cache, x, xx, u);
         if best_v != u && best_delta > 0.0 {
             scratch.proposals.push(Proposal { i: i as u32, v: best_v as u32, xx });
         }
@@ -220,19 +304,11 @@ pub fn run_from(
                 if scratch.cand.q.is_empty() {
                     continue;
                 }
-                // --- seek v maximizing Δℐ (line 12) ---
+                // --- seek v maximizing Δℐ (line 12): one batched kernel
+                //     pass over the gathered candidate composites, bit-
+                //     identical to the seed per-candidate loop ---
                 let xx = norm2(x) as f64;
-                let leave = cache.leave(&c, x, xx, u);
-                let mut best_v = u;
-                let mut best_delta = 0f64;
-                for &v in &scratch.cand.q {
-                    let v = v as usize;
-                    let delta = cache.gain(&c, x, xx, v) + leave;
-                    if delta > best_delta {
-                        best_delta = delta;
-                        best_v = v;
-                    }
-                }
+                let (best_v, best_delta) = scratch.best_move(&c, &cache, x, xx, u);
                 // --- move when positive (lines 13–15) ---
                 if best_v != u && best_delta > 0.0 {
                     cache.commit_move(&mut c, i, x, xx, u, best_v);
@@ -279,7 +355,10 @@ pub fn run_from(
                     }
                 });
                 // commit phase: serial, in shard order, Δℐ re-validated
-                // against the *current* state so distortion stays monotone
+                // against the *current* state so distortion stays monotone.
+                // The re-check is the scalar-verify side of the batched
+                // scan: two plain dots through the scalar entry points,
+                // deliberately not batched (one proposal at a time).
                 for scratch in scratches.iter_mut() {
                     for p in scratch.proposals.drain(..) {
                         let i = p.i as usize;
@@ -423,6 +502,78 @@ mod tests {
             (dp - ds).abs() <= 0.25 * ds.max(1e-12) + 1e-9,
             "parallel distortion {dp} too far from serial {ds}"
         );
+    }
+
+    #[test]
+    fn batched_eval_bit_identical_to_seed_scalar_loop() {
+        // The exact-arithmetic contract of the batched candidate
+        // evaluation: `run_from` at threads = 1 must reproduce the seed
+        // per-candidate scalar loop — replicated verbatim below through
+        // the scalar DeltaCache entry points — label for label, move
+        // count for move count, composite bit for composite bit.
+        let (data, graph) = setup(600, 12);
+        let params = GkMeansParams {
+            kappa: 10,
+            base: KmeansParams { max_iters: 8, ..Default::default() },
+        };
+        let init = two_means::cluster(
+            &data,
+            12,
+            &TwoMeansParams { seed: params.base.seed, ..Default::default() },
+            &Backend::native(),
+        );
+        let batched = run_from(&data, init.clone(), &graph, &params);
+
+        // --- the seed scalar epoch loop, replicated verbatim ---
+        let mut c = init;
+        let n = data.rows();
+        let kappa = params.kappa.min(graph.kappa());
+        let plan = ScanPlan::new(&data, params.base.scan_order);
+        let mut cur = crate::data::store::VecStore::open(&data);
+        let mut rng = Rng::new(params.base.seed ^ 0x6B6D_6561);
+        let mut cache = DeltaCache::new(&c);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut cand = CandidateSet::new(c.k, kappa);
+        let mut moves_per_epoch = Vec::new();
+        for _ in 1..=params.base.max_iters {
+            plan.shuffle_epoch(&mut order, &mut rng);
+            let mut moves = 0usize;
+            for &i in &order {
+                let x = cur.row(i);
+                let u = c.labels[i] as usize;
+                cand.collect(&c.labels, graph.neighbors(i), kappa, None, Some(u as u32));
+                if cand.q.is_empty() {
+                    continue;
+                }
+                let xx = norm2(x) as f64;
+                let leave = cache.leave(&c, x, xx, u);
+                let mut best_v = u;
+                let mut best_delta = 0f64;
+                for &v in &cand.q {
+                    let v = v as usize;
+                    let delta = cache.gain(&c, x, xx, v) + leave;
+                    if delta > best_delta {
+                        best_delta = delta;
+                        best_v = v;
+                    }
+                }
+                if best_v != u && best_delta > 0.0 {
+                    cache.commit_move(&mut c, i, x, xx, u, best_v);
+                    moves += 1;
+                }
+            }
+            moves_per_epoch.push(moves);
+            if (moves as f64) < params.base.min_move_rate * n as f64 {
+                break;
+            }
+        }
+
+        assert_eq!(batched.clustering.labels, c.labels, "labels diverged from the seed path");
+        let batched_moves: Vec<usize> = batched.history.iter().skip(1).map(|h| h.moves).collect();
+        assert_eq!(batched_moves, moves_per_epoch, "per-epoch move counts diverged");
+        for (a, b) in batched.clustering.composite.iter().zip(&c.composite) {
+            assert_eq!(a.to_bits(), b.to_bits(), "composite accumulators diverged");
+        }
     }
 
     #[test]

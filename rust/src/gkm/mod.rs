@@ -86,8 +86,13 @@ impl CandidateSet {
 }
 
 /// Deprecated shim — the pre-`Clusterer` end-to-end entry point
-/// (Alg. 3 graph build, then Alg. 2).
-#[deprecated(note = "use `model::GkMeans::new(k).kappa(..).fit(data, &RunContext::new(&backend))`")]
+/// (Alg. 3 graph build, then Alg. 2).  `model::GkMeans` is the same
+/// pipeline behind the trait, with `fit_store` for disk-backed data and
+/// a `FittedModel` (predict / ANN search / save / load) coming back.
+#[deprecated(
+    note = "use `model::GkMeans::new(k).kappa(..).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data)"
+)]
 pub fn cluster(
     data: &VecSet,
     k: usize,

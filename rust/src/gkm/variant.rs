@@ -8,7 +8,7 @@
 //! higher distortion than the Δℐ-driven version — our Fig. 4 bench
 //! reproduces exactly that gap.
 
-use crate::core_ops::dist::{d2_via_dot, dot, norm2};
+use crate::core_ops::dist::{batch_eligible, d2, norm2};
 use crate::data::matrix::VecSet;
 use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
@@ -23,7 +23,13 @@ use crate::util::timer::Timer;
 pub use crate::gkm::gkmeans::GkMeansParams;
 
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
-#[deprecated(note = "use `model::GkMeansStar::new(k).kappa(..).fit(data, &RunContext::new(&backend))`")]
+/// The modern surface is `model::GkMeansStar` (which builds the Alg. 3
+/// graph itself, resident or out-of-core via `fit`/`fit_store`); to run
+/// on a *caller-supplied* graph as this shim does, call [`run_core`].
+#[deprecated(
+    note = "use `model::GkMeansStar::new(k).kappa(..).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data); for a caller-supplied graph use `run_core`"
+)]
 pub fn run(
     data: &VecSet,
     k: usize,
@@ -45,6 +51,7 @@ pub fn run_core(
 ) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
+    let d = data.dim();
     let kappa = params.kappa.min(graph.kappa());
     let labels = two_means::run(
         data,
@@ -68,6 +75,11 @@ pub fn run_core(
     // shared O(κ) epoch-stamped dedup (the Δℐ core uses the same helper;
     // this loop previously re-scanned `q` per neighbor — O(κ²))
     let mut cand = CandidateSet::new(k, kappa);
+    // batched-evaluation scratch, reused across samples: the gathered
+    // candidate-centroid block, their cached norms, and the distances
+    let mut cblock: Vec<f32> = Vec::new();
+    let mut cnorm_sel: Vec<f32> = Vec::new();
+    let mut cdist: Vec<f32> = Vec::new();
 
     let mut history = vec![IterStat {
         iter: 0,
@@ -80,15 +92,18 @@ pub fn run_core(
         plan.shuffle_epoch(&mut order, &mut rng);
         let mut new_labels = clustering.labels.clone();
         let mut moves = 0usize;
-        // Precomputed-norm candidate evaluation (the d2_via_dot path): the
-        // centroid norms are fixed for the whole epoch, so each candidate
-        // costs one ⟨x, C_v⟩ dot — the same inner product a tiled
-        // mini-GEMM produces, keeping this loop GEMM-compatible.  Note the
-        // norm+dot identity rounds differently than a direct (x−y)² sum
-        // for near-zero distances (same tolerance class as the blocked
-        // kernels Lloyd assignment already uses), so GK-means* results
-        // shift at f32 precision relative to the pre-GEMM-form code; the
-        // Δℐ-driven GK-means proper (gkmeans.rs) is untouched.
+        // Batched candidate evaluation (the mini-GEMM hot path): the
+        // centroid norms are fixed for the whole epoch (this loop's
+        // centroid-norm cache), so evaluating the candidate set costs one
+        // gathered `Backend::candidate_d2` call — a tiled `d2_batch` pass
+        // where four candidates share every load of `x` — instead of one
+        // scalar dot per candidate.  Note the norm+dot identity rounds
+        // differently than a direct (x−y)² sum for near-zero distances
+        // (same tolerance class as the blocked kernels Lloyd assignment
+        // already uses; tiny dims take the kernel's one-shot scalar
+        // fallback), so GK-means* results may shift at f32 precision; the
+        // Δℐ-driven GK-means proper (gkmeans.rs) keeps its bit-exact
+        // contract through `dot_batch` instead.
         let cnorms: Vec<f32> = (0..k).map(|r| norm2(centroids.row(r))).collect();
         for &i in &order {
             let x = cur.row(i);
@@ -97,12 +112,34 @@ pub fn run_core(
             cand.collect(&clustering.labels, graph.neighbors(i), kappa, Some(u as u32), None);
             let mut best = f32::INFINITY;
             let mut best_c = u as u32;
-            for &v in &cand.q {
-                let c = v as usize;
-                let dd = d2_via_dot(xx, cnorms[c], dot(x, centroids.row(c)));
-                if dd < best {
-                    best = dd;
-                    best_c = v;
+            if !batch_eligible(d, cand.q.len()) {
+                // the kernel would take its one-shot scalar fallback on
+                // this shape — evaluate in place (same arithmetic as the
+                // fallback, without paying the gather)
+                for &v in &cand.q {
+                    let dd = d2(x, centroids.row(v as usize));
+                    if dd < best {
+                        best = dd;
+                        best_c = v;
+                    }
+                }
+            } else {
+                // gather the candidate centroids + cached norms
+                // contiguously and evaluate the set in one kernel call
+                cblock.clear();
+                cnorm_sel.clear();
+                for &v in &cand.q {
+                    cblock.extend_from_slice(centroids.row(v as usize));
+                    cnorm_sel.push(cnorms[v as usize]);
+                }
+                cdist.clear();
+                cdist.resize(cand.q.len(), 0.0);
+                backend.candidate_d2(x, xx, &cblock, &cnorm_sel, d, &mut cdist);
+                for (t, &v) in cand.q.iter().enumerate() {
+                    if cdist[t] < best {
+                        best = cdist[t];
+                        best_c = v;
+                    }
                 }
             }
             if best_c as usize != u {

@@ -25,7 +25,18 @@ use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
-/// Per-cluster cached state for fast Δℐ evaluation.
+/// Per-cluster cached state for fast Δℐ evaluation: the composite-norm
+/// cache `‖D_r‖²` the batched candidate kernels rely on.
+///
+/// Every Δℐ term needs the norm of a candidate's composite vector; with
+/// the cache, evaluating one candidate costs a single O(d) cross dot —
+/// and once the dots themselves come batched from
+/// [`crate::core_ops::dist::dot_batch`] over a gathered composite block,
+/// the whole candidate set is one tiled mini-GEMM pass plus O(κ̃) cached
+/// lookups.  [`DeltaCache::commit_move`] is the sole maintenance point:
+/// it updates the norms from the *pre-move* composites and applies the
+/// move as one operation, so the cache can never drift from the
+/// [`Clustering`] it summarizes.
 pub(crate) struct DeltaCache {
     /// ‖D_r‖² per cluster.
     pub comp_norm2: Vec<f64>,
@@ -42,9 +53,18 @@ impl DeltaCache {
     /// *loss* part of leaving `u` was precomputed (`leave_u`).
     #[inline]
     pub fn gain(&self, c: &Clustering, x: &[f32], xx: f64, v: usize) -> f64 {
+        self.gain_from_dot(c, xx, v, dot(c.composite_of(v), x) as f64)
+    }
+
+    /// [`DeltaCache::gain`] with the cross dot `⟨D_v, x⟩` supplied by the
+    /// caller — the batched candidate path computes every candidate's dot
+    /// in one `dot_batch` call over a gathered composite block.  The
+    /// arithmetic is identical to the scalar entry point (same cached
+    /// norms, same expression), so batched and scalar evaluation agree to
+    /// the bit whenever the dots do.
+    #[inline]
+    pub fn gain_from_dot(&self, c: &Clustering, xx: f64, v: usize, dvx: f64) -> f64 {
         let nv = c.counts[v] as f64;
-        let dv = c.composite_of(v);
-        let dvx = dot(dv, x) as f64;
         let dvdv = self.comp_norm2[v];
         if nv == 0.0 {
             return xx; // moving into an empty cluster contributes ‖x‖²
@@ -55,9 +75,14 @@ impl DeltaCache {
     /// The ℐ change contributed by removing `x` from its cluster `u`.
     #[inline]
     pub fn leave(&self, c: &Clustering, x: &[f32], xx: f64, u: usize) -> f64 {
+        self.leave_from_dot(c, xx, u, dot(c.composite_of(u), x) as f64)
+    }
+
+    /// [`DeltaCache::leave`] with the cross dot `⟨D_u, x⟩` supplied by
+    /// the caller (see [`DeltaCache::gain_from_dot`]).
+    #[inline]
+    pub fn leave_from_dot(&self, c: &Clustering, xx: f64, u: usize, dux: f64) -> f64 {
         let nu = c.counts[u] as f64;
-        let du = c.composite_of(u);
-        let dux = dot(du, x) as f64;
         let dudu = self.comp_norm2[u];
         let after = if nu <= 1.0 { 0.0 } else { (dudu - 2.0 * dux + xx) / (nu - 1.0) };
         after - dudu / nu.max(1.0)
@@ -97,7 +122,10 @@ impl DeltaCache {
 }
 
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
-#[deprecated(note = "use `model::Boost::new(k).fit(data, &RunContext::new(&backend))`")]
+#[deprecated(
+    note = "use `model::Boost::new(k).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data)"
+)]
 pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &crate::runtime::Backend) -> KmeansOutput {
     run_core(data, k, params, backend)
 }
@@ -258,6 +286,35 @@ mod tests {
                 }
                 c.check_invariants(&data).unwrap();
             }
+        }
+    }
+
+    #[test]
+    fn from_dot_variants_match_scalar_entry_points_exactly() {
+        // the batched candidate path feeds precomputed dots into
+        // gain_from_dot / leave_from_dot; with the same dot they must
+        // reproduce the scalar entry points to the bit
+        let mut rng = Rng::new(21);
+        let data = blobs(&BlobSpec::quick(120, 6, 5), 11);
+        let labels: Vec<u32> = (0..120).map(|_| rng.below(5) as u32).collect();
+        let c = Clustering::from_labels(&data, labels, 5);
+        let cache = DeltaCache::new(&c);
+        for _ in 0..100 {
+            let i = rng.below(120);
+            let x = data.row(i);
+            let xx = norm2(x) as f64;
+            let u = c.labels[i] as usize;
+            let v = rng.below(5);
+            let dvx = dot(c.composite_of(v), x) as f64;
+            let dux = dot(c.composite_of(u), x) as f64;
+            assert_eq!(
+                cache.gain(&c, x, xx, v).to_bits(),
+                cache.gain_from_dot(&c, xx, v, dvx).to_bits()
+            );
+            assert_eq!(
+                cache.leave(&c, x, xx, u).to_bits(),
+                cache.leave_from_dot(&c, xx, u, dux).to_bits()
+            );
         }
     }
 

@@ -10,6 +10,13 @@
 //! cluster labels present in its leaves, plus its current cluster.  Per-
 //! iteration cost is `O(n · d · |candidates|)` — near-constant in k, which
 //! is exactly the behaviour Fig. 6(b) shows.
+//!
+//! The restricted assignment scan is sharded over the worker pool
+//! (`assign_restricted`): per-worker cursors walk contiguous stripes of
+//! the sequential scan order, and since each sample's result depends only
+//! on frozen state, any thread count reproduces the serial labels
+//! bit-for-bit (the gather-then-merge discipline of
+//! [`crate::util::pool`]).
 
 use crate::core_ops::dist::d2;
 use crate::data::matrix::VecSet;
@@ -18,6 +25,7 @@ use crate::data::store::VecStore;
 use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
 use crate::kmeans::two_means::{self, TwoMeansParams};
 use crate::runtime::Backend;
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -86,8 +94,71 @@ fn rp_tree_leaves(
     (perm, leaves)
 }
 
+/// The restricted assignment scan of one closure iteration: every sample
+/// is compared only against the centroids of its closure candidate set
+/// (plus its current cluster).  Returns the new labels and the move
+/// count.
+///
+/// Sharded over [`util::pool`](crate::util::pool) with a per-worker
+/// cursor walking a contiguous stripe of the sequential scan order — the
+/// order the planner already considers chunk-friendly, so a streamed
+/// store reads each chunk once per stripe.  Per-sample results depend
+/// only on that sample's candidates and the frozen
+/// `labels`/`centroids`, and stripes fold back in index order, so any
+/// thread count (including 1, which runs on the caller's thread without
+/// spawning) produces labels **bit-identical** to the historical serial
+/// loop.
+fn assign_restricted(
+    data: &dyn VecStore,
+    candidates: &[Vec<u32>],
+    labels: &[u32],
+    centroids: &VecSet,
+    threads: usize,
+) -> (Vec<u32>, usize) {
+    let n = data.rows();
+    let threads = pool::resolve_threads(threads).min(n.max(1));
+    let parts = pool::par_map_chunks(threads, n, |_, r| {
+        let mut cur = data.open();
+        let mut cand: Vec<u32> = Vec::new();
+        let mut local = Vec::with_capacity(r.len());
+        let mut moves = 0usize;
+        for i in r {
+            cand.clear();
+            cand.extend_from_slice(&candidates[i]);
+            cand.push(labels[i]);
+            cand.sort_unstable();
+            cand.dedup();
+            let row = cur.row(i);
+            let mut best = f32::INFINITY;
+            let mut best_c = labels[i];
+            for &c in cand.iter() {
+                let dd = d2(row, centroids.row(c as usize));
+                if dd < best {
+                    best = dd;
+                    best_c = c;
+                }
+            }
+            if best_c != labels[i] {
+                moves += 1;
+            }
+            local.push(best_c);
+        }
+        (local, moves)
+    });
+    let mut new_labels: Vec<u32> = Vec::with_capacity(n);
+    let mut moves = 0usize;
+    for (part, m) in parts {
+        new_labels.extend_from_slice(&part);
+        moves += m;
+    }
+    (new_labels, moves)
+}
+
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
-#[deprecated(note = "use `model::ClosureKmeans::new(k).fit(data, &RunContext::new(&backend))`")]
+#[deprecated(
+    note = "use `model::ClosureKmeans::new(k).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data)"
+)]
 pub fn run(data: &VecSet, k: usize, params: &ClosureParams, backend: &Backend) -> KmeansOutput {
     run_core(data, k, params, backend)
 }
@@ -166,29 +237,17 @@ pub fn run_core(
             }
         }
 
-        // 2) restricted assignment
-        let mut moves = 0usize;
-        let mut new_labels = clustering.labels.clone();
-        for i in 0..n {
-            let cand = &mut candidates[i];
-            cand.push(clustering.labels[i]);
-            cand.sort_unstable();
-            cand.dedup();
-            let row = cur.row(i);
-            let mut best = f32::INFINITY;
-            let mut best_c = clustering.labels[i];
-            for &c in cand.iter() {
-                let dd = d2(row, centroids.row(c as usize));
-                if dd < best {
-                    best = dd;
-                    best_c = c;
-                }
-            }
-            if best_c != clustering.labels[i] {
-                moves += 1;
-            }
-            new_labels[i] = best_c;
-        }
+        // 2) restricted assignment, sharded over the worker pool (the
+        //    last "not yet parallel" fit — per-worker cursors on
+        //    contiguous stripes of the sequential scan order; results
+        //    are bit-identical to the serial loop at any thread count)
+        let (new_labels, moves) = assign_restricted(
+            data,
+            &candidates,
+            &clustering.labels,
+            &centroids,
+            params.base.threads,
+        );
 
         // 3) Lloyd-style update, fused with the state rebuild so a
         // streamed store is scanned once here instead of twice
@@ -247,6 +306,32 @@ mod tests {
         let first = out.history.first().unwrap().distortion;
         let last = out.history.last().unwrap().distortion;
         assert!(last <= first + 1e-9, "{first} -> {last}");
+    }
+
+    #[test]
+    fn parallel_assignment_bit_identical_to_serial() {
+        // the closure hot loop: same candidates, same frozen state —
+        // sharding must not move a single label or the move count
+        let data = blobs(&BlobSpec::quick(600, 6, 8), 9);
+        let mut rng = Rng::new(5);
+        let labels: Vec<u32> = (0..600).map(|_| rng.below(8) as u32).collect();
+        let clustering = Clustering::from_labels(&data, labels, 8);
+        let centroids = clustering.centroids();
+        let mut candidates: Vec<Vec<u32>> = vec![Vec::new(); 600];
+        for (i, c) in candidates.iter_mut().enumerate() {
+            let w = 1 + (i % 4);
+            for t in 0..w {
+                c.push(((i * 7 + t * 3) % 8) as u32);
+            }
+        }
+        let (serial_labels, serial_moves) =
+            assign_restricted(&data, &candidates, &clustering.labels, &centroids, 1);
+        for threads in [2usize, 3, 8] {
+            let (par_labels, par_moves) =
+                assign_restricted(&data, &candidates, &clustering.labels, &centroids, threads);
+            assert_eq!(serial_labels, par_labels, "threads={threads}");
+            assert_eq!(serial_moves, par_moves, "threads={threads}");
+        }
     }
 
     #[test]

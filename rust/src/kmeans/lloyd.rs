@@ -15,7 +15,10 @@ use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
-#[deprecated(note = "use `model::Lloyd::new(k).fit(data, &RunContext::new(&backend))`")]
+#[deprecated(
+    note = "use `model::Lloyd::new(k).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data)"
+)]
 pub fn run(data: &VecSet, k: usize, params: &KmeansParams, backend: &Backend) -> KmeansOutput {
     run_core(data, k, params, backend)
 }

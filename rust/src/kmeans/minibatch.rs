@@ -31,7 +31,10 @@ impl Default for MiniBatchParams {
 }
 
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
-#[deprecated(note = "use `model::MiniBatch::new(k).batch(b).fit(data, &RunContext::new(&backend))`")]
+#[deprecated(
+    note = "use `model::MiniBatch::new(k).batch(b).fit(&data, &RunContext::new(&backend))` \
+            (or `fit_store` for disk-backed data)"
+)]
 pub fn run(data: &VecSet, k: usize, params: &MiniBatchParams, backend: &Backend) -> KmeansOutput {
     run_core(data, k, params, backend)
 }

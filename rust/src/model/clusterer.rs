@@ -42,6 +42,21 @@ pub trait Clusterer {
     /// a disk-backed store through planned cursors (out-of-core), with
     /// the random-access scans visiting rows in the locality-aware order
     /// [`RunContext::scan_order`] selects.
+    ///
+    /// ```
+    /// use gkmeans::data::synth::{blobs, BlobSpec};
+    /// use gkmeans::model::{Clusterer, Lloyd, RunContext};
+    /// use gkmeans::runtime::Backend;
+    ///
+    /// let data = blobs(&BlobSpec::quick(120, 6, 3), 1);
+    /// let backend = Backend::native();
+    /// let ctx = RunContext::new(&backend).max_iters(4);
+    /// // a resident `VecSet` is a `VecStore` too; a disk-backed
+    /// // `ChunkedVecStore` streams through the exact same call
+    /// let model = Lloyd::new(3).fit_store(&data, &ctx);
+    /// assert_eq!(model.labels.len(), 120);
+    /// assert_eq!(model.k, 3);
+    /// ```
     fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel;
 }
 

@@ -271,6 +271,20 @@ impl FittedModel {
     /// Per-row results are independent of sharding, so any thread count
     /// (and the in-RAM [`FittedModel::predict`]) returns identical
     /// labels.
+    ///
+    /// ```
+    /// use gkmeans::data::synth::{blobs, BlobSpec};
+    /// use gkmeans::model::{Clusterer, Lloyd, RunContext};
+    /// use gkmeans::runtime::Backend;
+    ///
+    /// let data = blobs(&BlobSpec::quick(150, 4, 3), 3);
+    /// let backend = Backend::native();
+    /// let model = Lloyd::new(3).fit(&data, &RunContext::new(&backend).max_iters(3));
+    /// // any `VecStore` works as the query set — a resident `VecSet`
+    /// // here, a disk-backed `ChunkedVecStore` in production
+    /// let labels = model.predict_batch(&data);
+    /// assert_eq!(labels, model.predict(&data));
+    /// ```
     pub fn predict_batch(&self, queries: &dyn VecStore) -> Vec<u32> {
         assert_eq!(
             queries.dim(),
@@ -344,6 +358,21 @@ impl FittedModel {
     /// its queries.  Every query derives the same deterministic entry
     /// points as [`FittedModel::search`], so the results are identical
     /// to repeated single `search` calls at any thread count.
+    ///
+    /// ```
+    /// use gkmeans::data::synth::{blobs, BlobSpec};
+    /// use gkmeans::model::{Clusterer, GkMeans, RunContext};
+    /// use gkmeans::runtime::Backend;
+    ///
+    /// let data = blobs(&BlobSpec::quick(200, 6, 4), 5);
+    /// let backend = Backend::native();
+    /// // a graph method + keep_data(true) are what ANN serving needs
+    /// let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    /// let model = GkMeans::new(4).kappa(6).tau(2).xi(25).fit(&data, &ctx);
+    /// let hits = model.search_batch(&data, 5, &Default::default()).unwrap();
+    /// assert_eq!(hits.len(), 200);
+    /// assert!(hits.iter().all(|h| !h.is_empty() && h.len() <= 5));
+    /// ```
     pub fn search_batch(
         &self,
         queries: &VecSet,
@@ -388,12 +417,49 @@ impl FittedModel {
         Ok(results.concat())
     }
 
-    /// Save as a versioned binary artifact (see [`crate::model::serde`]).
+    /// Save as a versioned binary artifact (see [`crate::model::serde`]):
+    /// GKMODEL v2, section-offset layout, the vectors section streamed —
+    /// never materialized — from wherever the model keeps them.
+    ///
+    /// ```
+    /// use gkmeans::data::synth::{blobs, BlobSpec};
+    /// use gkmeans::model::{Clusterer, FittedModel, Lloyd, RunContext};
+    /// use gkmeans::runtime::Backend;
+    ///
+    /// let data = blobs(&BlobSpec::quick(100, 4, 3), 7);
+    /// let backend = Backend::native();
+    /// let model = Lloyd::new(3).fit(&data, &RunContext::new(&backend).max_iters(3));
+    /// let path = std::env::temp_dir().join(format!("gkm_doc_save_{}.gkm", std::process::id()));
+    /// model.save(&path).unwrap();
+    /// let served = FittedModel::load(&path).unwrap();
+    /// assert_eq!(served.labels, model.labels);
+    /// # std::fs::remove_file(&path).ok();
+    /// ```
     pub fn save(&self, path: &Path) -> Result<(), String> {
         crate::model::serde::save(self, path)
     }
 
-    /// Load a model saved by [`FittedModel::save`].
+    /// Load a model saved by [`FittedModel::save`].  Everything except
+    /// the vectors section is read eagerly; the vectors page from the
+    /// file on demand ([`ModelVectors::Disk`]), so a multi-GB artifact
+    /// opens in milliseconds.
+    ///
+    /// ```
+    /// use gkmeans::data::synth::{blobs, BlobSpec};
+    /// use gkmeans::model::{Clusterer, FittedModel, Lloyd, RunContext};
+    /// use gkmeans::runtime::Backend;
+    ///
+    /// let data = blobs(&BlobSpec::quick(80, 4, 2), 9);
+    /// let backend = Backend::native();
+    /// let model = Lloyd::new(2).fit(&data, &RunContext::new(&backend).max_iters(2));
+    /// let path = std::env::temp_dir().join(format!("gkm_doc_load_{}.gkm", std::process::id()));
+    /// model.save(&path).unwrap();
+    /// let served = FittedModel::load(&path).unwrap();
+    /// assert_eq!((served.k, served.dim, served.n_train), (model.k, 4, 80));
+    /// // a reloaded model predicts exactly like the fresh one
+    /// assert_eq!(served.predict(&data), model.predict(&data));
+    /// # std::fs::remove_file(&path).ok();
+    /// ```
     pub fn load(path: &Path) -> Result<FittedModel, String> {
         crate::model::serde::load(path)
     }

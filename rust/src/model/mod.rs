@@ -51,11 +51,18 @@ pub type ProgressFn = Box<dyn Fn(&str, &IterStat) + Sync>;
 /// compute backend, worker threads, RNG seed, iteration control, and an
 /// optional progress callback.  Built fluently:
 ///
-/// ```no_run
-/// # use gkmeans::model::RunContext;
-/// # use gkmeans::runtime::Backend;
-/// let backend = Backend::auto();
-/// let ctx = RunContext::new(&backend).threads(0).seed(7).max_iters(50);
+/// ```
+/// use gkmeans::model::RunContext;
+/// use gkmeans::runtime::Backend;
+///
+/// let backend = Backend::native(); // or Backend::auto() for PJRT-when-available
+/// let ctx = RunContext::new(&backend)
+///     .threads(2)       // 1 = serial/bit-identical, 0 = auto-detect
+///     .seed(7)
+///     .max_iters(50)
+///     .keep_data(true); // retain vectors so the model can serve ANN
+/// assert_eq!((ctx.threads, ctx.seed, ctx.max_iters), (2, 7, 50));
+/// assert!(ctx.keep_data);
 /// ```
 pub struct RunContext<'a> {
     /// Compute backend for the bulk distance math.

@@ -178,6 +178,28 @@ impl Backend {
         acc
     }
 
+    /// Batched candidate-set distance evaluation — the Alg. 2 inner-loop
+    /// op: squared distances from one sample `x` (`xx = ‖x‖²`) to a
+    /// gathered block of κ̃ candidate centroids with precomputed norms,
+    /// through the [`crate::core_ops::dist::d2_batch`] mini-GEMM form.
+    ///
+    /// §Perf: native on both backends by design — candidate sets are
+    /// κ-sized (tens of rows), far below the ~0.7 ms/dispatch PJRT
+    /// crossover that already keeps [`Backend::pairwise_among`] native;
+    /// batching *dispatches* (many samples per PJRT call) is the recorded
+    /// open item, and this method is the seam it would slot into.
+    pub fn candidate_d2(
+        &self,
+        x: &[f32],
+        xx: f32,
+        block: &[f32],
+        norms: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        crate::core_ops::dist::d2_batch(x, xx, block, norms, d, out)
+    }
+
     /// Two-means margins for Alg. 1: `out[t] = d(x_t, c0) − d(x_t, c1)`
     /// for the rows of `data` selected by `subset`.
     pub fn bisect_margins(

@@ -136,6 +136,37 @@ fn prop_composite_vectors_track_labels() {
 }
 
 #[test]
+fn prop_d2_batch_matches_scalar_l2() {
+    // the batched candidate kernel (both the norm-identity form and its
+    // scalar fallback) must agree with per-candidate scalar l2 over
+    // random dims and candidate widths; the exact-form sibling must
+    // agree to the bit
+    use gkmeans::core_ops::dist::{d2, d2_batch, d2_batch_exact, norm2};
+    prop::check("batched candidate eval ≡ scalar", 25, |g| {
+        let d = g.usize_in(1, 200);
+        let w = g.usize_in(1, 24);
+        let x = g.normal_vec(d);
+        let block = g.normal_vec(w * d);
+        let xx = norm2(&x);
+        let norms: Vec<f32> = block.chunks_exact(d).map(norm2).collect();
+        let mut out = vec![0f32; w];
+        d2_batch(&x, xx, &block, &norms, d, &mut out);
+        let mut exact = vec![0f32; w];
+        d2_batch_exact(&x, &block, d, &mut exact);
+        for j in 0..w {
+            let want = d2(&x, &block[j * d..(j + 1) * d]);
+            if (out[j] - want).abs() > 1e-3 * (1.0 + want) {
+                return Err(format!("d={d} w={w} col {j}: {} vs {want}", out[j]));
+            }
+            if exact[j].to_bits() != want.to_bits() {
+                return Err(format!("exact kernel shifted a bit at d={d} w={w} col {j}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_assign_blocks_matches_scalar() {
     prop::check("assign routing", 10, |g| {
         let d = g.usize_in(1, 40);
