@@ -109,6 +109,11 @@ pub struct ClusterJob {
     /// Retain the training vectors in the fitted model (ANN serving /
     /// `cluster --save` + `search --model`).
     pub keep_data: bool,
+    /// Periodic epoch checkpointing: `(dir, every_n_epochs)` — CLI
+    /// `--checkpoint DIR [--checkpoint-every N]`.
+    pub checkpoint: Option<(std::path::PathBuf, usize)>,
+    /// Resume from the checkpoint dir's `fit.gkckpt` (CLI `--resume`).
+    pub resume: bool,
 }
 
 impl ClusterJob {
@@ -123,6 +128,8 @@ impl ClusterJob {
             base: KmeansParams::default(),
             measure_recall: false,
             keep_data: false,
+            checkpoint: None,
+            resume: false,
         }
     }
 
@@ -147,18 +154,27 @@ impl ClusterJob {
     }
 
     /// The [`RunContext`](crate::model::RunContext) for this job's
-    /// iteration-control fields on the given backend.
+    /// iteration-control fields on the given backend.  Every job gets a
+    /// per-epoch heartbeat wired to the debug log level (`--verbose` in
+    /// the CLI), firing live from inside the hooked fit loops.
     pub fn context<'a>(
         &self,
         backend: &'a crate::runtime::Backend,
     ) -> crate::model::RunContext<'a> {
-        crate::model::RunContext::new(backend)
+        let mut ctx = crate::model::RunContext::new(backend)
             .threads(self.base.threads)
             .seed(self.base.seed)
             .max_iters(self.base.max_iters)
             .min_move_rate(self.base.min_move_rate)
             .keep_data(self.keep_data)
             .scan_order(self.base.scan_order)
+            .on_progress(|name, h| {
+                crate::log_debug!("{}", crate::coordinator::progress::progress_line(name, h));
+            });
+        if let Some((dir, every)) = &self.checkpoint {
+            ctx = ctx.checkpoint(dir.clone(), *every);
+        }
+        ctx.resume(self.resume)
     }
 }
 

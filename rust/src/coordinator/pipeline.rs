@@ -15,19 +15,27 @@ use crate::coordinator::job::{ClusterJob, JobResult};
 use crate::data::store::VecStore;
 use crate::graph::recall;
 use crate::model::{Clusterer, FittedModel};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, RtError, RtResult};
 
 /// Execute a job end to end with the dataset materialized in RAM (see
-/// [`run_job_streaming`] for the out-of-core path).
-pub fn run_job(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String> {
-    let data = job.dataset.load()?;
+/// [`run_job_streaming`] for the out-of-core path).  Dataset failures
+/// (bad path, truncated file) surface as typed [`RtError`]s rather than
+/// panics — the CLI turns them into nonzero exits.
+pub fn run_job(job: &ClusterJob, backend: &Backend) -> RtResult<JobResult> {
+    let data = job
+        .dataset
+        .load()
+        .map_err(|e| RtError::msg(e).context(format!("loading dataset {:?}", job.dataset)))?;
     Ok(run_job_on(job, &data, backend))
 }
 
 /// [`run_job`] without materializing the dataset: file-backed specs
 /// stream from disk through the storage layer.
-pub fn run_job_streaming(job: &ClusterJob, backend: &Backend) -> Result<JobResult, String> {
-    let data = job.dataset.open_store()?;
+pub fn run_job_streaming(job: &ClusterJob, backend: &Backend) -> RtResult<JobResult> {
+    let data = job
+        .dataset
+        .open_store()
+        .map_err(|e| RtError::msg(e).context(format!("opening dataset {:?}", job.dataset)))?;
     Ok(run_job_on(job, data.as_ref(), backend))
 }
 

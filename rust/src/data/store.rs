@@ -176,6 +176,58 @@ impl Elem {
     }
 }
 
+/// Bounded retry/backoff policy for *transient* chunk-read failures
+/// (`Interrupted` / `TimedOut` / `WouldBlock` — the kinds a flaky NFS
+/// mount or a signal-interrupted `pread` produces).  Permanent error
+/// kinds are never retried: a dead disk fails fast.  The store default
+/// is [`FaultPolicy::none`] — zero behavior change unless a policy is
+/// installed via [`ChunkedVecStore::with_fault_policy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// Retries after the first failed attempt (`0` = fail immediately).
+    pub retries: u32,
+    /// Sleep before the first retry; doubles on each further retry.
+    pub backoff: std::time::Duration,
+}
+
+impl FaultPolicy {
+    /// No retries: every failure surfaces immediately (the default).
+    pub fn none() -> FaultPolicy {
+        FaultPolicy { retries: 0, backoff: std::time::Duration::ZERO }
+    }
+
+    /// Whether `kind` is worth retrying under this policy.
+    pub fn is_transient(kind: std::io::ErrorKind) -> bool {
+        matches!(
+            kind,
+            std::io::ErrorKind::Interrupted
+                | std::io::ErrorKind::TimedOut
+                | std::io::ErrorKind::WouldBlock
+        )
+    }
+}
+
+impl Default for FaultPolicy {
+    /// A sane production policy: 3 retries, 1 ms initial backoff.
+    fn default() -> FaultPolicy {
+        FaultPolicy { retries: 3, backoff: std::time::Duration::from_millis(1) }
+    }
+}
+
+/// Test seam for I/O fault injection: consulted once per physical read
+/// attempt *before* the read; returning `Some(err)` fails that attempt
+/// with `err` without touching the file.  Lives on the store (not the
+/// cursor) so every cursor of a wrapped store shares one deterministic
+/// fault schedule — see `testing::fault::FaultStore`.
+#[derive(Clone)]
+pub struct FaultHook(pub Arc<dyn Fn() -> Option<std::io::Error> + Send + Sync>);
+
+impl std::fmt::Debug for FaultHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("FaultHook(..)")
+    }
+}
+
 /// Default resident-chunk budget per cursor.
 const DEFAULT_CACHE_CHUNKS: usize = 8;
 /// Target bytes per chunk when sizing `chunk_rows` automatically.
@@ -233,6 +285,10 @@ pub struct ChunkedVecStore {
     /// Optional chunk-read instrumentation: incremented once per chunk
     /// loaded from disk, across all cursors sharing this store value.
     read_counter: Option<Arc<AtomicU64>>,
+    /// Retry/backoff policy for transient read failures.
+    fault_policy: FaultPolicy,
+    /// Fault-injection seam (tests only in practice).
+    fault_hook: Option<FaultHook>,
 }
 
 impl ChunkedVecStore {
@@ -258,6 +314,8 @@ impl ChunkedVecStore {
             cache_chunks: DEFAULT_CACHE_CHUNKS,
             handle: Arc::new(OnceLock::new()),
             read_counter: None,
+            fault_policy: FaultPolicy::none(),
+            fault_hook: None,
         }
     }
 
@@ -370,6 +428,20 @@ impl ChunkedVecStore {
         self
     }
 
+    /// Install a retry/backoff policy for transient read failures (the
+    /// default is [`FaultPolicy::none`]: fail immediately).
+    pub fn with_fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault_policy = policy;
+        self
+    }
+
+    /// Install a fault-injection hook (see [`FaultHook`]); the test seam
+    /// `testing::fault::FaultStore` builds on this.
+    pub fn with_fault_hook(mut self, hook: FaultHook) -> Self {
+        self.fault_hook = Some(hook);
+        self
+    }
+
     /// The backing file.
     pub fn path(&self) -> &Path {
         &self.path
@@ -412,12 +484,49 @@ impl ChunkedVecStore {
         let nrows = hi - lo;
         let nbytes = nrows as u64 * self.row_stride;
         let mut raw = vec![0u8; nbytes as usize];
-        read_exact_at(file, &mut raw, self.base + lo as u64 * self.row_stride).map_err(|e| {
-            format!(
-                "ChunkedVecStore {}: reading rows [{lo}, {hi}) failed: {e}",
-                self.path.display()
-            )
-        })?;
+        let offset = self.base + lo as u64 * self.row_stride;
+        // Bounded retry with exponential backoff on *transient* I/O
+        // failures; permanent kinds (and exhausted retries) surface as
+        // the usual Err.  Each physical attempt first consults the
+        // fault-injection hook, so injected faults exercise the exact
+        // retry path real ones take.
+        let mut attempt = 0u32;
+        loop {
+            let attempted = match &self.fault_hook {
+                Some(h) => match (h.0)() {
+                    Some(e) => Err(e),
+                    None => read_exact_at(file, &mut raw, offset),
+                },
+                None => read_exact_at(file, &mut raw, offset),
+            };
+            match attempted {
+                Ok(()) => break,
+                Err(e) => {
+                    if FaultPolicy::is_transient(e.kind()) && attempt < self.fault_policy.retries {
+                        let pause = self.fault_policy.backoff * 2u32.saturating_pow(attempt);
+                        if !pause.is_zero() {
+                            std::thread::sleep(pause);
+                        }
+                        attempt += 1;
+                        crate::log_debug!(
+                            "ChunkedVecStore {}: transient read failure ({e}), retry {attempt}/{}",
+                            self.path.display(),
+                            self.fault_policy.retries
+                        );
+                        continue;
+                    }
+                    let retries = if attempt > 0 {
+                        format!(" after {attempt} retries")
+                    } else {
+                        String::new()
+                    };
+                    return Err(format!(
+                        "ChunkedVecStore {}: reading rows [{lo}, {hi}) failed{retries}: {e}",
+                        self.path.display()
+                    ));
+                }
+            }
+        }
         if let Some(c) = &self.read_counter {
             c.fetch_add(1, Ordering::Relaxed);
         }
@@ -923,6 +1032,67 @@ mod tests {
             assert_eq!(b.row(j), v.row(j));
             assert_eq!(c.row(i), v.row(i));
         }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn transient_faults_are_retried_within_policy() {
+        let v = random_set(30, 3, 12);
+        let p = tmp("transient.bin");
+        write_flat(&p, &v);
+        // fail the first two attempts of every chunk read, succeed after
+        let attempts = Arc::new(AtomicU64::new(0));
+        let a = attempts.clone();
+        let hook = FaultHook(Arc::new(move || {
+            if a.fetch_add(1, Ordering::SeqCst) % 3 < 2 {
+                Some(std::io::Error::new(std::io::ErrorKind::Interrupted, "injected"))
+            } else {
+                None
+            }
+        }));
+        let store = ChunkedVecStore::open_flat(&p, 3)
+            .unwrap()
+            .chunk_rows(10)
+            .with_fault_policy(FaultPolicy { retries: 4, backoff: std::time::Duration::ZERO })
+            .with_fault_hook(hook);
+        assert_eq!(materialize(&store), v, "retried reads must return clean data");
+        // 3 chunks, 3 attempts each (2 injected failures + 1 success)
+        assert_eq!(attempts.load(Ordering::SeqCst), 9);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn transient_faults_exhaust_retries_and_permanent_faults_fail_fast() {
+        let v = random_set(10, 2, 13);
+        let p = tmp("permanent.bin");
+        write_flat(&p, &v);
+        // always-transient hook + 2 retries: 3 attempts, then Err
+        let attempts = Arc::new(AtomicU64::new(0));
+        let a = attempts.clone();
+        let always = FaultHook(Arc::new(move || {
+            a.fetch_add(1, Ordering::SeqCst);
+            Some(std::io::Error::new(std::io::ErrorKind::TimedOut, "injected timeout"))
+        }));
+        let store = ChunkedVecStore::open_flat(&p, 2)
+            .unwrap()
+            .with_fault_policy(FaultPolicy { retries: 2, backoff: std::time::Duration::ZERO })
+            .with_fault_hook(always);
+        let err = store.open().try_row(0).unwrap_err();
+        assert!(err.contains("after 2 retries"), "unexpected error: {err}");
+        assert_eq!(attempts.load(Ordering::SeqCst), 3);
+        // a permanent error kind is never retried, even with retries left
+        let attempts2 = Arc::new(AtomicU64::new(0));
+        let a2 = attempts2.clone();
+        let dead = FaultHook(Arc::new(move || {
+            a2.fetch_add(1, Ordering::SeqCst);
+            Some(std::io::Error::new(std::io::ErrorKind::Other, "injected dead disk"))
+        }));
+        let store = ChunkedVecStore::open_flat(&p, 2)
+            .unwrap()
+            .with_fault_policy(FaultPolicy { retries: 5, backoff: std::time::Duration::ZERO })
+            .with_fault_hook(dead);
+        assert!(store.open().try_row(0).is_err());
+        assert_eq!(attempts2.load(Ordering::SeqCst), 1, "permanent faults must fail fast");
         std::fs::remove_file(&p).ok();
     }
 

@@ -64,8 +64,8 @@ use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
 use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
-use crate::kmeans::boost::DeltaCache;
-use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
+use crate::kmeans::boost::{fire_epoch, DeltaCache};
+use crate::kmeans::common::{Clustering, FitHooks, IterStat, KmeansOutput, KmeansParams};
 use crate::kmeans::two_means::{self, TwoMeansParams};
 use crate::runtime::Backend;
 use crate::util::pool;
@@ -116,6 +116,32 @@ pub fn run_core(
     params: &GkMeansParams,
     backend: &Backend,
 ) -> KmeansOutput {
+    run_core_hooked(data, k, graph, params, backend, &mut FitHooks::none())
+}
+
+/// [`run_core`] with fit instrumentation: a resume point skips the
+/// 2M-tree initialization entirely (the mid-fit state comes from the
+/// checkpoint), and on a fresh fit the initialization seconds are folded
+/// into `hooks.seconds_offset` before the first epoch fires, so hook
+/// consumers see the same wall-clock accounting the final model reports.
+pub fn run_core_hooked(
+    data: &dyn VecStore,
+    k: usize,
+    graph: &KnnGraph,
+    params: &GkMeansParams,
+    backend: &Backend,
+    hooks: &mut FitHooks<'_>,
+) -> KmeansOutput {
+    if hooks.resume.is_some() {
+        let placeholder = Clustering {
+            labels: Vec::new(),
+            composite: Vec::new(),
+            counts: Vec::new(),
+            k,
+            dim: data.dim(),
+        };
+        return run_from_hooked(data, placeholder, graph, params, hooks);
+    }
     let timer = Timer::start();
     let labels = two_means::run(
         data,
@@ -130,7 +156,9 @@ pub fn run_core(
     );
     let clustering = Clustering::from_labels(data, labels, k);
     let init_seconds = timer.elapsed_s();
-    let mut out = run_from(data, clustering, graph, params);
+    hooks.seconds_offset += init_seconds;
+    hooks.init_seconds = init_seconds;
+    let mut out = run_from_hooked(data, clustering, graph, params, hooks);
     out.init_seconds = init_seconds;
     out.total_seconds += init_seconds;
     for h in out.history.iter_mut() {
@@ -264,9 +292,23 @@ fn scan_shard(
 /// Run Alg. 2's optimization loop from an existing partition.
 pub fn run_from(
     data: &dyn VecStore,
+    c: Clustering,
+    graph: &KnnGraph,
+    params: &GkMeansParams,
+) -> KmeansOutput {
+    run_from_hooked(data, c, graph, params, &mut FitHooks::none())
+}
+
+/// [`run_from`] with fit instrumentation (per-epoch hook + resume).  With
+/// [`FitHooks::none`] this IS the historical `run_from`: same RNG stream,
+/// same visit order, same arithmetic — bit-identical output (the seed
+/// replica test pins this).
+pub fn run_from_hooked(
+    data: &dyn VecStore,
     mut c: Clustering,
     graph: &KnnGraph,
     params: &GkMeansParams,
+    hooks: &mut FitHooks<'_>,
 ) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
@@ -280,20 +322,49 @@ pub fn run_from(
     let mut cur = data.open();
     let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.base.seed ^ 0x6B6D_6561);
-    let mut cache = DeltaCache::new(&c);
     let mut order: Vec<usize> = (0..n).collect();
 
-    let mut history = vec![IterStat {
-        iter: 0,
-        seconds: timer.elapsed_s(),
-        distortion: (total_norm - c.objective()) / n as f64,
-        moves: 0,
-    }];
+    let (mut cache, mut history, start_iter, seconds_base) = match hooks.resume.take() {
+        Some(r) => {
+            // Restore the exact mid-fit state (labels, composites, counts
+            // and cached norms are raw checkpointed bits — rebuilding any
+            // of them would perturb the last ulp), then replay the epoch
+            // shuffles so the visit-order permutation and the RNG stream
+            // both match the uninterrupted run.
+            c = Clustering {
+                labels: r.labels,
+                composite: r.composite.expect("GK-means checkpoint carries composite vectors"),
+                counts: r.counts.expect("GK-means checkpoint carries cluster counts"),
+                k: c.k,
+                dim: c.dim,
+            };
+            let cache = DeltaCache {
+                comp_norm2: r.comp_norm2.expect("GK-means checkpoint carries ‖D_r‖²"),
+            };
+            for _ in 1..r.next_iter {
+                plan.shuffle_epoch(&mut order, &mut rng);
+            }
+            debug_assert_eq!(rng.state(), r.rng, "resume RNG replay diverged from the checkpoint");
+            let base = r.history.last().map(|h| h.seconds).unwrap_or(0.0);
+            (cache, r.history, r.next_iter, base)
+        }
+        None => {
+            let cache = DeltaCache::new(&c);
+            let history = vec![IterStat {
+                iter: 0,
+                seconds: timer.elapsed_s(),
+                distortion: (total_norm - c.objective()) / n as f64,
+                moves: 0,
+            }];
+            fire_epoch(hooks, &history, &rng, &c, &cache);
+            (cache, history, 1, 0.0)
+        }
+    };
 
     if threads <= 1 {
         // --- serial path: bit-identical to the historical implementation ---
         let mut scratch = EpochScratch::new(c.k, kappa);
-        for iter in 1..=params.base.max_iters {
+        for iter in start_iter..=params.base.max_iters {
             plan.shuffle_epoch(&mut order, &mut rng);
             let mut moves = 0usize;
             for &i in &order {
@@ -317,10 +388,11 @@ pub fn run_from(
             }
             history.push(IterStat {
                 iter,
-                seconds: timer.elapsed_s(),
+                seconds: seconds_base + timer.elapsed_s(),
                 distortion: (total_norm - c.objective()) / n as f64,
                 moves,
             });
+            fire_epoch(hooks, &history, &rng, &c, &cache);
             if (moves as f64) < params.base.min_move_rate * n as f64 {
                 break;
             }
@@ -333,7 +405,7 @@ pub fn run_from(
         // enough that spawn cost amortizes, small enough that the frozen
         // snapshot stays fresh within an epoch.
         let batch = (threads * 2048).max(4096);
-        for iter in 1..=params.base.max_iters {
+        for iter in start_iter..=params.base.max_iters {
             plan.shuffle_epoch(&mut order, &mut rng);
             let mut moves = 0usize;
             let mut start = 0usize;
@@ -379,17 +451,23 @@ pub fn run_from(
             }
             history.push(IterStat {
                 iter,
-                seconds: timer.elapsed_s(),
+                seconds: seconds_base + timer.elapsed_s(),
                 distortion: (total_norm - c.objective()) / n as f64,
                 moves,
             });
+            fire_epoch(hooks, &history, &rng, &c, &cache);
             if (moves as f64) < params.base.min_move_rate * n as f64 {
                 break;
             }
         }
     }
 
-    KmeansOutput { clustering: c, history, total_seconds: timer.elapsed_s(), init_seconds: 0.0 }
+    KmeansOutput {
+        clustering: c,
+        history,
+        total_seconds: seconds_base + timer.elapsed_s(),
+        init_seconds: 0.0,
+    }
 }
 
 /// Produce a partition into clusters-as-member-lists (the `S` view used by

@@ -14,7 +14,7 @@ use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
 use crate::gkm::CandidateSet;
 use crate::graph::knn::KnnGraph;
-use crate::kmeans::common::{Clustering, IterStat, KmeansOutput};
+use crate::kmeans::common::{Clustering, EpochState, FitHooks, IterStat, KmeansOutput};
 use crate::kmeans::two_means::{self, TwoMeansParams};
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
@@ -49,24 +49,57 @@ pub fn run_core(
     params: &GkMeansParams,
     backend: &Backend,
 ) -> KmeansOutput {
+    run_core_hooked(data, k, graph, params, backend, &mut FitHooks::none())
+}
+
+/// [`run_core`] with fit instrumentation (per-epoch hook + resume).  A
+/// resume point skips the 2M-tree initialization; the clustering state is
+/// rebuilt from the checkpointed labels (bit-identical to the state the
+/// uninterrupted run carried — `from_labels_with_centroids` is pinned to
+/// equal `from_labels` + `update_centroids`) and the centroids restored
+/// from their raw checkpointed bits.
+pub fn run_core_hooked(
+    data: &dyn VecStore,
+    k: usize,
+    graph: &KnnGraph,
+    params: &GkMeansParams,
+    backend: &Backend,
+    hooks: &mut FitHooks<'_>,
+) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
     let d = data.dim();
     let kappa = params.kappa.min(graph.kappa());
-    let labels = two_means::run(
-        data,
-        k,
-        &TwoMeansParams {
-            seed: params.base.seed,
-            threads: params.base.threads,
-            scan_order: params.base.scan_order,
-            ..Default::default()
-        },
-        backend,
-    );
-    let mut clustering = Clustering::from_labels(data, labels, k);
-    let init_seconds = timer.elapsed_s();
-    let mut centroids = clustering.centroids();
+    let resume = hooks.resume.take();
+
+    let (mut clustering, mut centroids, init_seconds) = match &resume {
+        Some(r) => {
+            let c = Clustering::from_labels(data, r.labels.clone(), k);
+            let cent = VecSet::from_flat(
+                d,
+                r.centroids.clone().expect("GK-means* checkpoint carries centroids"),
+            );
+            (c, cent, 0.0)
+        }
+        None => {
+            let labels = two_means::run(
+                data,
+                k,
+                &TwoMeansParams {
+                    seed: params.base.seed,
+                    threads: params.base.threads,
+                    scan_order: params.base.scan_order,
+                    ..Default::default()
+                },
+                backend,
+            );
+            let c = Clustering::from_labels(data, labels, k);
+            let init_seconds = timer.elapsed_s();
+            hooks.init_seconds = init_seconds;
+            let cent = c.centroids();
+            (c, cent, init_seconds)
+        }
+    };
     let plan = ScanPlan::new(data, params.base.scan_order);
     let mut cur = data.open();
     let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
@@ -81,14 +114,30 @@ pub fn run_core(
     let mut cnorm_sel: Vec<f32> = Vec::new();
     let mut cdist: Vec<f32> = Vec::new();
 
-    let mut history = vec![IterStat {
-        iter: 0,
-        seconds: timer.elapsed_s(),
-        distortion: (total_norm - clustering.objective()) / n as f64,
-        moves: 0,
-    }];
+    let (mut history, start_iter, seconds_base) = match resume {
+        Some(r) => {
+            // replay the epoch shuffles so the visit-order permutation and
+            // the RNG stream both match the uninterrupted run
+            for _ in 1..r.next_iter {
+                plan.shuffle_epoch(&mut order, &mut rng);
+            }
+            debug_assert_eq!(rng.state(), r.rng, "resume RNG replay diverged from the checkpoint");
+            let base = r.history.last().map(|h| h.seconds).unwrap_or(0.0);
+            (r.history, r.next_iter, base)
+        }
+        None => {
+            let history = vec![IterStat {
+                iter: 0,
+                seconds: timer.elapsed_s(),
+                distortion: (total_norm - clustering.objective()) / n as f64,
+                moves: 0,
+            }];
+            fire_variant_epoch(hooks, &history, &rng, &clustering, &centroids);
+            (history, 1, 0.0)
+        }
+    };
 
-    for iter in 1..=params.base.max_iters {
+    for iter in start_iter..=params.base.max_iters {
         plan.shuffle_epoch(&mut order, &mut rng);
         let mut new_labels = clustering.labels.clone();
         let mut moves = 0usize;
@@ -155,16 +204,55 @@ pub fn run_core(
         centroids = next_centroids;
         history.push(IterStat {
             iter,
-            seconds: timer.elapsed_s(),
+            seconds: seconds_base + timer.elapsed_s(),
             distortion: (total_norm - clustering.objective()) / n as f64,
             moves,
         });
+        fire_variant_epoch(hooks, &history, &rng, &clustering, &centroids);
         if (moves as f64) < params.base.min_move_rate * n as f64 {
             break;
         }
     }
 
-    KmeansOutput { clustering, history, total_seconds: timer.elapsed_s(), init_seconds }
+    KmeansOutput {
+        clustering,
+        history,
+        total_seconds: seconds_base + timer.elapsed_s(),
+        init_seconds,
+    }
+}
+
+/// Fire the per-epoch hook for the centroid-maintaining GK-means* loop
+/// (labels come from the clustering, centroids from the Lloyd-style
+/// update; no composite cache to snapshot — resume rebuilds it from the
+/// labels bit-identically).
+fn fire_variant_epoch(
+    hooks: &mut FitHooks<'_>,
+    history: &[IterStat],
+    rng: &Rng,
+    clustering: &Clustering,
+    centroids: &VecSet,
+) {
+    if hooks.on_epoch.is_none() {
+        return;
+    }
+    let seconds_offset = hooks.seconds_offset;
+    let init_seconds = hooks.init_seconds;
+    let stat = history.last().expect("fire_variant_epoch: history has the entry just pushed");
+    let state = EpochState {
+        completed_epoch: stat.iter,
+        rng: rng.state(),
+        stat,
+        history,
+        seconds_offset,
+        init_seconds,
+        labels: &clustering.labels,
+        composite: None,
+        counts: None,
+        comp_norm2: None,
+        centroids: Some(centroids.flat()),
+    };
+    hooks.fire(&state);
 }
 
 #[cfg(test)]

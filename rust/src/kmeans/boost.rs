@@ -21,7 +21,7 @@ use crate::core_ops::dist::{dot, norm2};
 use crate::data::matrix::VecSet;
 use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
-use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
+use crate::kmeans::common::{Clustering, EpochState, FitHooks, IterStat, KmeansOutput, KmeansParams};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -121,6 +121,38 @@ impl DeltaCache {
     }
 }
 
+/// Fire the per-epoch hook for a composite-maintaining engine (BKM and
+/// GK-means share the `Clustering` + `DeltaCache` state shape).  Reads
+/// the entry just pushed onto `history`.
+pub(crate) fn fire_epoch(
+    hooks: &mut FitHooks<'_>,
+    history: &[IterStat],
+    rng: &Rng,
+    c: &Clustering,
+    cache: &DeltaCache,
+) {
+    if hooks.on_epoch.is_none() {
+        return;
+    }
+    let seconds_offset = hooks.seconds_offset;
+    let init_seconds = hooks.init_seconds;
+    let stat = history.last().expect("fire_epoch: history has the entry just pushed");
+    let state = EpochState {
+        completed_epoch: stat.iter,
+        rng: rng.state(),
+        stat,
+        history,
+        seconds_offset,
+        init_seconds,
+        labels: &c.labels,
+        composite: Some(&c.composite),
+        counts: Some(&c.counts),
+        comp_norm2: Some(&cache.comp_norm2),
+        centroids: None,
+    };
+    hooks.fire(&state);
+}
+
 /// Deprecated shim over [`run_core`] — the pre-`Clusterer` entry point.
 #[deprecated(
     note = "use `model::Boost::new(k).fit(&data, &RunContext::new(&backend))` \
@@ -136,17 +168,51 @@ pub fn run_core(
     data: &dyn VecStore,
     k: usize,
     params: &KmeansParams,
-    _backend: &crate::runtime::Backend,
+    backend: &crate::runtime::Backend,
 ) -> KmeansOutput {
+    run_core_hooked(data, k, params, backend, &mut FitHooks::none())
+}
+
+/// [`run_core`] with fit instrumentation: a resume point skips the random
+/// balanced start entirely (the mid-fit state comes from the checkpoint).
+pub fn run_core_hooked(
+    data: &dyn VecStore,
+    k: usize,
+    params: &KmeansParams,
+    _backend: &crate::runtime::Backend,
+    hooks: &mut FitHooks<'_>,
+) -> KmeansOutput {
+    if hooks.resume.is_some() {
+        let placeholder = Clustering {
+            labels: Vec::new(),
+            composite: Vec::new(),
+            counts: Vec::new(),
+            k,
+            dim: data.dim(),
+        };
+        return run_from_hooked(data, placeholder, params, hooks);
+    }
     let mut rng = Rng::new(params.seed);
     let labels: Vec<u32> = (0..data.rows()).map(|i| (i % k) as u32).collect();
     let mut shuffled = labels;
     rng.shuffle(&mut shuffled);
-    run_from(data, Clustering::from_labels(data, shuffled, k), params)
+    run_from_hooked(data, Clustering::from_labels(data, shuffled, k), params, hooks)
 }
 
 /// Run BKM starting from an existing clustering.
-pub fn run_from(data: &dyn VecStore, mut c: Clustering, params: &KmeansParams) -> KmeansOutput {
+pub fn run_from(data: &dyn VecStore, c: Clustering, params: &KmeansParams) -> KmeansOutput {
+    run_from_hooked(data, c, params, &mut FitHooks::none())
+}
+
+/// [`run_from`] with fit instrumentation (per-epoch hook + resume).  With
+/// [`FitHooks::none`] this IS the historical `run_from`: same RNG stream,
+/// same visit order, same arithmetic — bit-identical output.
+pub fn run_from_hooked(
+    data: &dyn VecStore,
+    mut c: Clustering,
+    params: &KmeansParams,
+    hooks: &mut FitHooks<'_>,
+) -> KmeansOutput {
     let timer = Timer::start();
     let init_seconds = 0.0;
     let n = data.rows();
@@ -154,17 +220,45 @@ pub fn run_from(data: &dyn VecStore, mut c: Clustering, params: &KmeansParams) -
     let mut cur = data.open();
     let total_norm: f64 = (0..n).map(|i| norm2(cur.row(i)) as f64).sum();
     let mut rng = Rng::new(params.seed ^ 0xB005_7133);
-    let mut cache = DeltaCache::new(&c);
     let mut order: Vec<usize> = (0..n).collect();
 
-    let mut history = vec![IterStat {
-        iter: 0,
-        seconds: timer.elapsed_s(),
-        distortion: (total_norm - c.objective()) / n as f64,
-        moves: 0,
-    }];
+    let (mut cache, mut history, start_iter, seconds_base) = match hooks.resume.take() {
+        Some(r) => {
+            // Restore the exact mid-fit state (labels, composites, counts
+            // and cached norms are raw checkpointed bits — rebuilding any
+            // of them would perturb the last ulp), then replay the epoch
+            // shuffles so the visit-order permutation and the RNG stream
+            // both match the uninterrupted run.
+            c = Clustering {
+                labels: r.labels,
+                composite: r.composite.expect("BKM checkpoint carries composite vectors"),
+                counts: r.counts.expect("BKM checkpoint carries cluster counts"),
+                k: c.k,
+                dim: c.dim,
+            };
+            let cache =
+                DeltaCache { comp_norm2: r.comp_norm2.expect("BKM checkpoint carries ‖D_r‖²") };
+            for _ in 1..r.next_iter {
+                plan.shuffle_epoch(&mut order, &mut rng);
+            }
+            debug_assert_eq!(rng.state(), r.rng, "resume RNG replay diverged from the checkpoint");
+            let base = r.history.last().map(|h| h.seconds).unwrap_or(0.0);
+            (cache, r.history, r.next_iter, base)
+        }
+        None => {
+            let cache = DeltaCache::new(&c);
+            let history = vec![IterStat {
+                iter: 0,
+                seconds: timer.elapsed_s(),
+                distortion: (total_norm - c.objective()) / n as f64,
+                moves: 0,
+            }];
+            fire_epoch(hooks, &history, &rng, &c, &cache);
+            (cache, history, 1, 0.0)
+        }
+    };
 
-    for iter in 1..=params.max_iters {
+    for iter in start_iter..=params.max_iters {
         plan.shuffle_epoch(&mut order, &mut rng);
         let mut moves = 0usize;
         for &i in &order {
@@ -192,16 +286,22 @@ pub fn run_from(data: &dyn VecStore, mut c: Clustering, params: &KmeansParams) -
         }
         history.push(IterStat {
             iter,
-            seconds: timer.elapsed_s(),
+            seconds: seconds_base + timer.elapsed_s(),
             distortion: (total_norm - c.objective()) / n as f64,
             moves,
         });
+        fire_epoch(hooks, &history, &rng, &c, &cache);
         if (moves as f64) < params.min_move_rate * n as f64 {
             break;
         }
     }
 
-    KmeansOutput { clustering: c, history, total_seconds: timer.elapsed_s(), init_seconds }
+    KmeansOutput {
+        clustering: c,
+        history,
+        total_seconds: seconds_base + timer.elapsed_s(),
+        init_seconds,
+    }
 }
 
 #[cfg(test)]

@@ -323,6 +323,108 @@ impl KmeansOutput {
     }
 }
 
+/// Mid-fit snapshot handed to [`FitHooks::on_epoch`] after every recorded
+/// epoch (including the iteration-0 initialization entry of the engines
+/// that record one).  Borrows live engine state — the callback must copy
+/// whatever it wants to keep.
+///
+/// `stat`/`history` carry the engine's *raw* seconds (its own timer);
+/// callers that need wall-clock-consistent values fold in
+/// `seconds_offset` (graph construction + any engine initialization the
+/// engine accounts for separately).
+pub struct EpochState<'a> {
+    /// Epoch just finished (matches `stat.iter`).
+    pub completed_epoch: usize,
+    /// Engine RNG state *after* this epoch's draws (`[0; 4]` for engines
+    /// with no per-epoch randomness, e.g. Lloyd).
+    pub rng: [u64; 4],
+    /// The history entry just recorded (raw engine seconds).
+    pub stat: &'a IterStat,
+    /// Full history so far, including `stat` (raw engine seconds).
+    pub history: &'a [IterStat],
+    /// Seconds to add to raw history seconds for wall-clock consistency
+    /// with the final fitted model (graph construction, and for engines
+    /// that fold initialization into history post-hoc, that too).
+    pub seconds_offset: f64,
+    /// Engine-side initialization seconds (what the engine will report
+    /// as `KmeansOutput::init_seconds`); 0 while resuming.
+    pub init_seconds: f64,
+    /// Current labels.
+    pub labels: &'a [u32],
+    /// Flat `k × d` composite vectors (composite-maintaining engines).
+    pub composite: Option<&'a [f32]>,
+    /// Cluster sizes (composite-maintaining engines).
+    pub counts: Option<&'a [u32]>,
+    /// Cached `‖D_r‖²` (engines carrying a `DeltaCache`).
+    pub comp_norm2: Option<&'a [f64]>,
+    /// Flat `k × d` centroids (centroid-maintaining engines).
+    pub centroids: Option<&'a [f32]>,
+}
+
+/// Mid-fit state to restart an engine from — the deserialized form of a
+/// GKCKPT checkpoint (see [`crate::model::checkpoint`]).  The engine
+/// consumes this instead of running its initialization; at `threads = 1`
+/// the continued fit is bit-identical to the uninterrupted one.
+#[derive(Debug, Clone)]
+pub struct ResumePoint {
+    /// First epoch to run (`last completed + 1`).
+    pub next_iter: usize,
+    /// Engine RNG state at the checkpoint (consistency guard: the engine
+    /// replays its epoch shuffles and asserts it lands on this state).
+    pub rng: [u64; 4],
+    /// History up to the checkpoint, with *folded* (wall-clock) seconds;
+    /// new entries continue from the last folded value.
+    pub history: Vec<IterStat>,
+    /// Labels at the checkpoint.
+    pub labels: Vec<u32>,
+    /// Composite vectors at the checkpoint (raw f32 bits — an
+    /// incrementally maintained composite differs in the last ulp from a
+    /// rebuilt one, so it must be restored, not recomputed).
+    pub composite: Option<Vec<f32>>,
+    /// Cluster sizes at the checkpoint.
+    pub counts: Option<Vec<u32>>,
+    /// Cached `‖D_r‖²` at the checkpoint (raw f64 bits, same reasoning).
+    pub comp_norm2: Option<Vec<f64>>,
+    /// Centroids at the checkpoint (centroid-maintaining engines).
+    pub centroids: Option<Vec<f32>>,
+}
+
+/// Optional fit instrumentation threaded through the `*_hooked` engine
+/// entry points: a per-epoch callback (streaming progress + periodic
+/// checkpoints) and an optional [`ResumePoint`] to continue from.
+/// [`FitHooks::none`] is the inert default the plain entry points use —
+/// with it, the hooked engines run the historical code path unchanged.
+pub struct FitHooks<'a> {
+    /// Fires after every recorded epoch, including the iteration-0
+    /// initialization entry of the engines that record one.
+    pub on_epoch: Option<&'a mut dyn FnMut(&EpochState<'_>)>,
+    /// Seconds the caller wants folded into emitted/persisted history
+    /// (graph construction); engines that account initialization
+    /// separately add their share before the first fire.
+    pub seconds_offset: f64,
+    /// Set by the engine: its `KmeansOutput::init_seconds` share, so the
+    /// hook can persist model-consistent time accounting.
+    pub init_seconds: f64,
+    /// Consumed (`Option::take`) by the engine to skip initialization
+    /// and continue a checkpointed fit.
+    pub resume: Option<ResumePoint>,
+}
+
+impl<'a> FitHooks<'a> {
+    /// No callback, no resume — the hooked engines behave exactly like
+    /// their historical entry points.
+    pub fn none() -> FitHooks<'a> {
+        FitHooks { on_epoch: None, seconds_offset: 0.0, init_seconds: 0.0, resume: None }
+    }
+
+    /// Invoke the callback, if any.
+    pub fn fire(&mut self, state: &EpochState<'_>) {
+        if let Some(f) = self.on_epoch.as_mut() {
+            f(state);
+        }
+    }
+}
+
 /// Exact distortion computed from scratch (O(n·d), reference for tests).
 pub fn distortion_exact(data: &dyn VecStore, labels: &[u32], centroids: &VecSet) -> f64 {
     let mut cur = data.open();

@@ -7,7 +7,7 @@
 use crate::core_ops::argmin::ArgminAcc;
 use crate::data::matrix::VecSet;
 use crate::data::store::{StoreCursor, VecStore};
-use crate::kmeans::common::{Clustering, IterStat, KmeansOutput, KmeansParams};
+use crate::kmeans::common::{Clustering, EpochState, FitHooks, IterStat, KmeansOutput, KmeansParams};
 use crate::kmeans::init::kmeanspp_init;
 use crate::runtime::Backend;
 use crate::util::pool;
@@ -32,16 +32,44 @@ pub fn run_core(
     params: &KmeansParams,
     backend: &Backend,
 ) -> KmeansOutput {
+    run_core_hooked(data, k, params, backend, &mut FitHooks::none())
+}
+
+/// [`run_core`] with fit instrumentation (per-epoch hook + resume).  A
+/// resume point skips the k-means++ seeding and restores the checkpointed
+/// labels + centroids; Lloyd's epochs consume no randomness, so restoring
+/// those two arrays makes the continued fit bit-identical to the
+/// uninterrupted one at any thread count (assignment is row-independent).
+pub fn run_core_hooked(
+    data: &dyn VecStore,
+    k: usize,
+    params: &KmeansParams,
+    backend: &Backend,
+    hooks: &mut FitHooks<'_>,
+) -> KmeansOutput {
     let timer = Timer::start();
     let n = data.rows();
-    let mut rng = Rng::new(params.seed);
 
-    let mut centroids = kmeanspp_init(data, k, &mut rng);
-    let init_seconds = timer.elapsed_s();
+    let (mut centroids, mut labels, mut history, start_iter, seconds_base, init_seconds) =
+        match hooks.resume.take() {
+            Some(r) => {
+                let centroids = VecSet::from_flat(
+                    data.dim(),
+                    r.centroids.expect("Lloyd checkpoint carries centroids"),
+                );
+                let base = r.history.last().map(|h| h.seconds).unwrap_or(0.0);
+                (centroids, r.labels, r.history, r.next_iter, base, 0.0)
+            }
+            None => {
+                let mut rng = Rng::new(params.seed);
+                let centroids = kmeanspp_init(data, k, &mut rng);
+                let init_seconds = timer.elapsed_s();
+                hooks.init_seconds = init_seconds;
+                (centroids, vec![u32::MAX; n], Vec::new(), 0, 0.0, init_seconds)
+            }
+        };
 
-    let mut labels = vec![u32::MAX; n];
-    let mut history = Vec::new();
-    for iter in 0..params.max_iters {
+    for iter in start_iter..params.max_iters {
         // --- assignment (the bottleneck) ---
         let acc = assign_threaded(data, &centroids, backend, params.threads);
         let mut moves = 0usize;
@@ -56,14 +84,39 @@ pub fn run_core(
         // --- update ---
         centroids = update_centroids(data, &labels, k, &centroids);
 
-        history.push(IterStat { iter, seconds: timer.elapsed_s(), distortion, moves });
+        history.push(IterStat { iter, seconds: seconds_base + timer.elapsed_s(), distortion, moves });
+        if hooks.on_epoch.is_some() {
+            let seconds_offset = hooks.seconds_offset;
+            let hook_init = hooks.init_seconds;
+            let stat = history.last().expect("entry just pushed");
+            hooks.fire(&EpochState {
+                completed_epoch: iter,
+                // Lloyd's epochs draw no randomness; seeding consumed the
+                // RNG before the first epoch
+                rng: [0; 4],
+                stat,
+                history: &history,
+                seconds_offset,
+                init_seconds: hook_init,
+                labels: &labels,
+                composite: None,
+                counts: None,
+                comp_norm2: None,
+                centroids: Some(centroids.flat()),
+            });
+        }
         if (moves as f64) < params.min_move_rate * n as f64 {
             break;
         }
     }
 
     let clustering = Clustering::from_labels(data, labels, k);
-    KmeansOutput { clustering, history, total_seconds: timer.elapsed_s(), init_seconds }
+    KmeansOutput {
+        clustering,
+        history,
+        total_seconds: seconds_base + timer.elapsed_s(),
+        init_seconds,
+    }
 }
 
 /// Rows streamed per `assign_blocks` call on the cursor path.

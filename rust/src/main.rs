@@ -34,6 +34,7 @@ use gkmeans::util::timer::{fmt_secs, Timer};
 const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
     "topk", "ef", "config", "recall-samples", "threads", "save", "model", "scan-order",
+    "checkpoint", "checkpoint-every",
 ];
 
 fn main() {
@@ -58,7 +59,7 @@ gkmeans — fast k-means driven by a KNN graph (Deng & Zhao 2017)
 
 USAGE:
   gkmeans cluster --data <spec> --k <k> [--method gkmeans] [--save FILE [--keep-data]]
-                  [--stream] [options]
+                  [--stream] [--checkpoint DIR [--checkpoint-every N] [--resume]] [options]
   gkmeans predict --model FILE --data <spec> [--out labels.ivecs]
   gkmeans graph   --data <spec> [--kappa 50 --tau 10 --xi 50] [--recall]
   gkmeans search  --data <spec> | --model FILE  [--queries 100 --topk 10 --ef 64]
@@ -90,6 +91,13 @@ COMMON OPTIONS:
                                stores, global on resident data), global
                                (historical full shuffle everywhere), or
                                superblock (request locality planning)
+  --checkpoint DIR             write a fit.gkckpt checkpoint into DIR
+                               periodically during the fit (crash-safe:
+                               temp file + fsync + rename)
+  --checkpoint-every N         epochs between checkpoints (default 1)
+  --resume                     continue from DIR's checkpoint if present
+                               (bit-identical to the uninterrupted fit
+                               at --threads 1); starts fresh otherwise
   --config FILE                key=value config file (CLI overrides)
   --verbose / --quiet          log level
 ";
@@ -173,6 +181,14 @@ fn job_of(args: &Args) -> ClusterJob {
     job.base.scan_order = scan_order_of(args);
     job.measure_recall = args.flag("recall");
     job.keep_data = args.flag("keep-data");
+    job.checkpoint = args
+        .get("checkpoint")
+        .map(|d| (std::path::PathBuf::from(d), args.usize_or("checkpoint-every", 1)));
+    job.resume = args.flag("resume");
+    if job.resume && job.checkpoint.is_none() {
+        eprintln!("error: --resume needs --checkpoint DIR to name the checkpoint directory");
+        std::process::exit(2);
+    }
     job
 }
 
@@ -368,7 +384,13 @@ fn cmd_graph(args: &Args) -> i32 {
 /// Serve ANN queries from a saved model artifact (`--model`) through the
 /// batched, multi-threaded query path.
 fn search_model(args: &Args) -> i32 {
-    let model_path = args.get("model").expect("checked by caller");
+    let model_path = match args.get("model") {
+        Some(p) => p,
+        None => {
+            eprintln!("error: search --model needs a model file (from `cluster --save`)");
+            return 2;
+        }
+    };
     let mut model = match FittedModel::load(Path::new(model_path)) {
         Ok(m) => m,
         Err(e) => {

@@ -1,0 +1,508 @@
+//! GKCKPT — the epoch-level fit checkpoint artifact.
+//!
+//! A fit configured with [`RunContext::checkpoint`](crate::model::RunContext::checkpoint)
+//! periodically serializes its mid-fit engine state (labels, composites /
+//! centroids, cached norms, RNG state, epoch counter, folded history)
+//! into `<dir>/fit.gkckpt`; a later run with `resume` enabled picks the
+//! fit back up from the last completed checkpointed epoch.  At
+//! `threads = 1` the continued fit is **bit-identical** to the
+//! uninterrupted one: floating-point state is stored as raw bits, and
+//! the engines replay their epoch shuffles to land on the exact RNG
+//! stream position.
+//!
+//! Write protocol (crash safety): encode to a sibling temp file, `fsync`
+//! it, atomically rename over the target, then `fsync` the directory —
+//! a crash at any point leaves either the previous checkpoint or the new
+//! one, never a torn file.  The payload carries a trailing CRC-32, so a
+//! torn or bit-rotted file is rejected at load with a typed
+//! [`RtErrorKind::Corrupt`](crate::runtime::RtErrorKind) error instead
+//! of resuming from garbage.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::job::Method;
+use crate::kmeans::common::{IterStat, ResumePoint};
+use crate::runtime::{RtError, RtResult};
+use crate::util::crc32::crc32;
+
+/// Magic prefix of a GKCKPT file.
+pub const MAGIC: &[u8; 8] = b"GKCKPT\0\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// The canonical checkpoint file inside a checkpoint directory.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join("fit.gkckpt")
+}
+
+/// Everything a fit needs to continue from a completed epoch, plus the
+/// identity fields ([`CheckpointState::validate`]) that guard against
+/// resuming with a mismatched job.
+#[derive(Debug, Clone)]
+pub struct CheckpointState {
+    /// Method that wrote the checkpoint.
+    pub method: Method,
+    /// Number of clusters.
+    pub k: usize,
+    /// Dimensionality.
+    pub dim: usize,
+    /// Training rows.
+    pub n_train: usize,
+    /// Fit seed.
+    pub seed: u64,
+    /// First epoch the resumed fit should run.
+    pub next_iter: usize,
+    /// Engine RNG state at the checkpoint (replay consistency guard).
+    pub rng: [u64; 4],
+    /// History up to the checkpoint, seconds folded to the wall-clock
+    /// values the final model reports.
+    pub history: Vec<IterStat>,
+    /// Labels at the checkpoint.
+    pub labels: Vec<u32>,
+    /// Composite vectors (composite-maintaining engines), raw f32 bits.
+    pub composite: Option<Vec<f32>>,
+    /// Cluster sizes (composite-maintaining engines).
+    pub counts: Option<Vec<u32>>,
+    /// Cached ‖D_r‖² (engines carrying a `DeltaCache`), raw f64 bits.
+    pub comp_norm2: Option<Vec<f64>>,
+    /// Centroids (centroid-maintaining engines), raw f32 bits.
+    pub centroids: Option<Vec<f32>>,
+    /// Model-level initialization seconds (graph + seeding) the original
+    /// fit reported; restored verbatim into the resumed model.
+    pub init_seconds: f64,
+    /// Graph-construction seconds the original fit reported.
+    pub graph_seconds: f64,
+}
+
+impl CheckpointState {
+    /// Reject resuming into a job that does not match the checkpoint.
+    pub fn validate(
+        &self,
+        method: Method,
+        k: usize,
+        dim: usize,
+        n_train: usize,
+        seed: u64,
+    ) -> RtResult<()> {
+        if self.method != method {
+            return Err(RtError::msg(format!(
+                "checkpoint was written by {} but the job runs {}",
+                self.method.name(),
+                method.name()
+            )));
+        }
+        if (self.k, self.dim, self.n_train) != (k, dim, n_train) {
+            return Err(RtError::msg(format!(
+                "checkpoint shape (k={}, dim={}, n={}) != job shape (k={k}, dim={dim}, n={n_train})",
+                self.k, self.dim, self.n_train
+            )));
+        }
+        if self.seed != seed {
+            return Err(RtError::msg(format!(
+                "checkpoint seed {} != job seed {seed} (resume must replay the same stream)",
+                self.seed
+            )));
+        }
+        Ok(())
+    }
+
+    /// The engine-facing slice of this state.
+    pub fn into_resume_point(self) -> ResumePoint {
+        ResumePoint {
+            next_iter: self.next_iter,
+            rng: self.rng,
+            history: self.history,
+            labels: self.labels,
+            composite: self.composite,
+            counts: self.counts,
+            comp_norm2: self.comp_norm2,
+            centroids: self.centroids,
+        }
+    }
+}
+
+// --- little-endian encode/decode helpers (self-contained: the GKMODEL
+//     writer keeps its own — the formats evolve independently) ---
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        put_u32(out, v);
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    put_u64(out, vs.len() as u64);
+    for &v in vs {
+        put_f64(out, v);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> RtResult<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(RtError::corrupt("GKCKPT", "truncated checkpoint payload"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> RtResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> RtResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> RtResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> RtResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn len_checked(&mut self, elem: usize) -> RtResult<usize> {
+        let n = self.u64()? as usize;
+        // cheap sanity bound before allocating: the payload must actually
+        // contain the claimed bytes
+        if n.checked_mul(elem).map(|b| self.pos + b > self.buf.len()).unwrap_or(true) {
+            return Err(RtError::corrupt("GKCKPT", "array length exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    fn u32s(&mut self) -> RtResult<Vec<u32>> {
+        let n = self.len_checked(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self) -> RtResult<Vec<f32>> {
+        let n = self.len_checked(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self) -> RtResult<Vec<f64>> {
+        let n = self.len_checked(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+fn encode(state: &CheckpointState) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    out.push(state.method.tag());
+    put_u64(&mut out, state.k as u64);
+    put_u64(&mut out, state.dim as u64);
+    put_u64(&mut out, state.n_train as u64);
+    put_u64(&mut out, state.seed);
+    put_u64(&mut out, state.next_iter as u64);
+    for w in state.rng {
+        put_u64(&mut out, w);
+    }
+    put_f64(&mut out, state.init_seconds);
+    put_f64(&mut out, state.graph_seconds);
+    put_u64(&mut out, state.history.len() as u64);
+    for h in &state.history {
+        put_u64(&mut out, h.iter as u64);
+        put_f64(&mut out, h.seconds);
+        put_f64(&mut out, h.distortion);
+        put_u64(&mut out, h.moves as u64);
+    }
+    put_u32s(&mut out, &state.labels);
+    let flags = (state.composite.is_some() as u8)
+        | (state.counts.is_some() as u8) << 1
+        | (state.comp_norm2.is_some() as u8) << 2
+        | (state.centroids.is_some() as u8) << 3;
+    out.push(flags);
+    if let Some(v) = &state.composite {
+        put_f32s(&mut out, v);
+    }
+    if let Some(v) = &state.counts {
+        put_u32s(&mut out, v);
+    }
+    if let Some(v) = &state.comp_norm2 {
+        put_f64s(&mut out, v);
+    }
+    if let Some(v) = &state.centroids {
+        put_f32s(&mut out, v);
+    }
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
+    out
+}
+
+fn decode(bytes: &[u8]) -> RtResult<CheckpointState> {
+    if bytes.len() < MAGIC.len() + 8 {
+        return Err(RtError::corrupt("GKCKPT", "file shorter than header"));
+    }
+    if &bytes[..MAGIC.len()] != MAGIC {
+        return Err(RtError::corrupt("GKCKPT", "bad magic (not a GKCKPT file)"));
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let actual = crc32(body);
+    if stored != actual {
+        return Err(RtError::corrupt(
+            "GKCKPT",
+            format!("CRC mismatch: stored {stored:#010x}, computed {actual:#010x}"),
+        ));
+    }
+    let mut r = Reader { buf: body, pos: MAGIC.len() };
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(RtError::msg(format!("unsupported GKCKPT version {version}")));
+    }
+    let method = Method::from_tag(r.u8()?).map_err(RtError::msg)?;
+    let k = r.u64()? as usize;
+    let dim = r.u64()? as usize;
+    let n_train = r.u64()? as usize;
+    let seed = r.u64()?;
+    let next_iter = r.u64()? as usize;
+    let mut rng = [0u64; 4];
+    for w in rng.iter_mut() {
+        *w = r.u64()?;
+    }
+    let init_seconds = r.f64()?;
+    let graph_seconds = r.f64()?;
+    let hist_len = r.len_checked(32)?;
+    let mut history = Vec::with_capacity(hist_len);
+    for _ in 0..hist_len {
+        let iter = r.u64()? as usize;
+        let seconds = r.f64()?;
+        let distortion = r.f64()?;
+        let moves = r.u64()? as usize;
+        history.push(IterStat { iter, seconds, distortion, moves });
+    }
+    let labels = r.u32s()?;
+    let flags = r.u8()?;
+    let composite = if flags & 1 != 0 { Some(r.f32s()?) } else { None };
+    let counts = if flags & 2 != 0 { Some(r.u32s()?) } else { None };
+    let comp_norm2 = if flags & 4 != 0 { Some(r.f64s()?) } else { None };
+    let centroids = if flags & 8 != 0 { Some(r.f32s()?) } else { None };
+    if r.pos != body.len() {
+        return Err(RtError::corrupt("GKCKPT", "trailing bytes after payload"));
+    }
+    Ok(CheckpointState {
+        method,
+        k,
+        dim,
+        n_train,
+        seed,
+        next_iter,
+        rng,
+        history,
+        labels,
+        composite,
+        counts,
+        comp_norm2,
+        centroids,
+        init_seconds,
+        graph_seconds,
+    })
+}
+
+/// Best-effort directory fsync (crash safety of the rename; a filesystem
+/// that cannot fsync a directory handle just skips it).
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Atomically write the checkpoint into `dir` (created if missing):
+/// temp file → fsync → rename over `fit.gkckpt` → fsync dir.
+pub fn save(state: &CheckpointState, dir: &Path) -> RtResult<()> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| RtError::msg(format!("creating checkpoint dir {}: {e}", dir.display())))?;
+    let target = checkpoint_path(dir);
+    let tmp = dir.join(format!("fit.gkckpt.tmp.{}", std::process::id()));
+    let bytes = encode(state);
+    let write = || -> std::io::Result<()> {
+        let f = std::fs::File::create(&tmp)?;
+        {
+            use std::io::Write;
+            let mut w = std::io::BufWriter::new(&f);
+            w.write_all(&bytes)?;
+            w.flush()?;
+        }
+        f.sync_all()?;
+        std::fs::rename(&tmp, &target)?;
+        Ok(())
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(RtError::msg(format!("writing checkpoint {}: {e}", target.display())));
+    }
+    fsync_dir(dir);
+    Ok(())
+}
+
+/// Load and CRC-verify a checkpoint file.
+pub fn load(path: &Path) -> RtResult<CheckpointState> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| RtError::msg(format!("reading checkpoint {}: {e}", path.display())))?;
+    decode(&bytes).map_err(|e| e.context(format!("loading checkpoint {}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RtErrorKind;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gkckpt_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_state() -> CheckpointState {
+        CheckpointState {
+            method: Method::GkMeans,
+            k: 4,
+            dim: 3,
+            n_train: 10,
+            seed: 42,
+            next_iter: 3,
+            rng: [1, 2, 3, 4],
+            history: vec![
+                IterStat { iter: 0, seconds: 0.5, distortion: 9.0, moves: 0 },
+                IterStat { iter: 1, seconds: 1.5, distortion: 5.0, moves: 7 },
+                IterStat { iter: 2, seconds: 2.5, distortion: 4.0, moves: 3 },
+            ],
+            labels: (0..10u32).map(|i| i % 4).collect(),
+            composite: Some((0..12).map(|i| i as f32 * 0.25).collect()),
+            counts: Some(vec![3, 3, 2, 2]),
+            comp_norm2: Some(vec![1.25, 2.5, 3.75, 5.0]),
+            centroids: None,
+            init_seconds: 0.5,
+            graph_seconds: 0.25,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let s = sample_state();
+        save(&s, &dir).unwrap();
+        let r = load(&checkpoint_path(&dir)).unwrap();
+        assert_eq!(r.method, s.method);
+        assert_eq!((r.k, r.dim, r.n_train, r.seed, r.next_iter), (4, 3, 10, 42, 3));
+        assert_eq!(r.rng, s.rng);
+        assert_eq!(r.labels, s.labels);
+        assert_eq!(r.counts, s.counts);
+        assert_eq!(r.centroids, None);
+        for (a, b) in r.composite.unwrap().iter().zip(s.composite.as_ref().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in r.comp_norm2.unwrap().iter().zip(s.comp_norm2.as_ref().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r.history.len(), 3);
+        assert_eq!(r.history[1].moves, 7);
+        assert_eq!(r.history[2].seconds.to_bits(), 2.5f64.to_bits());
+        assert_eq!(r.init_seconds.to_bits(), 0.5f64.to_bits());
+        assert_eq!(r.graph_seconds.to_bits(), 0.25f64.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resave_overwrites_atomically() {
+        let dir = tmpdir("resave");
+        let mut s = sample_state();
+        save(&s, &dir).unwrap();
+        s.next_iter = 9;
+        save(&s, &dir).unwrap();
+        assert_eq!(load(&checkpoint_path(&dir)).unwrap().next_iter, 9);
+        // no temp litter left behind
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(litter.is_empty(), "temp files left behind: {litter:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_rejected_as_corrupt() {
+        let dir = tmpdir("corrupt");
+        save(&sample_state(), &dir).unwrap();
+        let path = checkpoint_path(&dir);
+        let clean = std::fs::read(&path).unwrap();
+        // flip one payload byte -> CRC mismatch
+        let mut bad = clean.clone();
+        bad[MAGIC.len() + 20] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let e = load(&path).unwrap_err();
+        assert!(e.is_corrupt(), "kind={:?}", e.kind);
+        assert!(format!("{e}").contains("CRC"), "{e}");
+        // truncate -> corrupt too
+        std::fs::write(&path, &clean[..clean.len() / 2]).unwrap();
+        assert!(load(&path).unwrap_err().is_corrupt());
+        // bad magic
+        let mut nonsense = clean.clone();
+        nonsense[0] = b'X';
+        std::fs::write(&path, &nonsense).unwrap();
+        let e = load(&path).unwrap_err();
+        assert_eq!(
+            e.kind,
+            RtErrorKind::Corrupt { section: "GKCKPT".into() },
+            "magic failure must be typed"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_guards_job_identity() {
+        let s = sample_state();
+        s.validate(Method::GkMeans, 4, 3, 10, 42).unwrap();
+        assert!(s.validate(Method::Lloyd, 4, 3, 10, 42).is_err());
+        assert!(s.validate(Method::GkMeans, 5, 3, 10, 42).is_err());
+        assert!(s.validate(Method::GkMeans, 4, 3, 10, 7).is_err());
+        let msg = format!("{}", s.validate(Method::Boost, 4, 3, 10, 42).unwrap_err());
+        assert!(msg.contains("GK-means") && msg.contains("boost"), "{msg}");
+    }
+
+    #[test]
+    fn resume_point_carries_everything() {
+        let rp = sample_state().into_resume_point();
+        assert_eq!(rp.next_iter, 3);
+        assert_eq!(rp.rng, [1, 2, 3, 4]);
+        assert_eq!(rp.history.len(), 3);
+        assert_eq!(rp.labels.len(), 10);
+        assert!(rp.composite.is_some() && rp.counts.is_some() && rp.comp_norm2.is_some());
+        assert!(rp.centroids.is_none());
+    }
+}

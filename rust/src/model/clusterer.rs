@@ -11,8 +11,11 @@ use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
 use crate::data::store::VecStore;
 use crate::gkm::{construct, gkmeans, variant};
+use crate::graph::knn::KnnGraph;
 use crate::graph::nn_descent;
+use crate::kmeans::common::{EpochState, FitHooks, IterStat, KmeansOutput};
 use crate::kmeans::{boost, closure, lloyd, minibatch};
+use crate::model::checkpoint::{self, CheckpointState};
 use crate::model::{FittedModel, RunContext};
 use crate::util::timer::Timer;
 
@@ -84,6 +87,135 @@ fn alg3_params(
     }
 }
 
+/// Load + validate the resume checkpoint for a job, when the context
+/// asks for one.  A missing file means "start fresh" (the first run of a
+/// job that will checkpoint); a corrupt or job-mismatched checkpoint is
+/// a hard, actionable panic — silently refitting from scratch would hide
+/// exactly the failure the operator asked to recover from.
+fn load_resume(
+    ctx: &RunContext,
+    method: Method,
+    k: usize,
+    dim: usize,
+    n_train: usize,
+) -> Option<CheckpointState> {
+    if !ctx.resume {
+        return None;
+    }
+    let cfg = ctx.checkpoint.as_ref().expect(
+        "RunContext::resume(true) needs RunContext::checkpoint(dir, every) \
+         to name the checkpoint directory",
+    );
+    let path = checkpoint::checkpoint_path(&cfg.dir);
+    if !path.exists() {
+        crate::log_info!("no checkpoint at {}; starting fresh", path.display());
+        return None;
+    }
+    let state = checkpoint::load(&path).unwrap_or_else(|e| panic!("cannot resume: {e}"));
+    state
+        .validate(method, k, dim, n_train, ctx.seed)
+        .unwrap_or_else(|e| panic!("cannot resume from {}: {e}", path.display()));
+    crate::log_info!(
+        "resuming {} fit from {} at epoch {}",
+        method.name(),
+        path.display(),
+        state.next_iter
+    );
+    Some(state)
+}
+
+/// Run a hooked engine under the context's fit instrumentation: stream
+/// each epoch stat (wall-clock folded) through the progress callback,
+/// write a checkpoint after every `every`-th completed epoch, and feed
+/// the engine a resume point when the context carries one.  Returns the
+/// engine output plus `Some((graph_seconds, init_seconds))` — the
+/// original run's clocks — when the fit resumed from a checkpoint.
+fn fit_hooked(
+    method: Method,
+    data: &dyn VecStore,
+    ctx: &RunContext,
+    k: usize,
+    graph_seconds: f64,
+    run: impl FnOnce(&mut FitHooks<'_>) -> KmeansOutput,
+) -> (KmeansOutput, Option<(f64, f64)>) {
+    let (dim, n_train) = (data.dim(), data.rows());
+    let resume = load_resume(ctx, method, k, dim, n_train);
+    let resumed_clocks = resume.as_ref().map(|s| (s.graph_seconds, s.init_seconds));
+    // the clocks a checkpoint written by *this* run reports: a fresh fit
+    // measures its own graph share and lets the engine contribute the
+    // seeding time; a resumed fit carries the original values forward
+    let (ckpt_graph, init_override) = match resumed_clocks {
+        Some((g, i)) => (g, Some(i)),
+        None => (graph_seconds, None),
+    };
+    let mut hook = move |state: &EpochState<'_>| {
+        let folded = IterStat {
+            iter: state.stat.iter,
+            seconds: state.stat.seconds + state.seconds_offset,
+            distortion: state.stat.distortion,
+            moves: state.stat.moves,
+        };
+        ctx.emit(method.name(), &folded);
+        if let Some(cfg) = &ctx.checkpoint {
+            if state.completed_epoch > 0 && state.completed_epoch % cfg.every == 0 {
+                let mut history = state.history.to_vec();
+                for h in history.iter_mut() {
+                    h.seconds += state.seconds_offset;
+                }
+                let snap = CheckpointState {
+                    method,
+                    k,
+                    dim,
+                    n_train,
+                    seed: ctx.seed,
+                    next_iter: state.completed_epoch + 1,
+                    rng: state.rng,
+                    history,
+                    labels: state.labels.to_vec(),
+                    composite: state.composite.map(|v| v.to_vec()),
+                    counts: state.counts.map(|v| v.to_vec()),
+                    comp_norm2: state.comp_norm2.map(|v| v.to_vec()),
+                    centroids: state.centroids.map(|v| v.to_vec()),
+                    init_seconds: init_override
+                        .unwrap_or(state.init_seconds + ckpt_graph),
+                    graph_seconds: ckpt_graph,
+                };
+                // checkpointing is belt-and-braces: a full disk must not
+                // kill the healthy fit it was meant to protect
+                if let Err(e) = checkpoint::save(&snap, &cfg.dir) {
+                    crate::log_warn!("checkpoint write failed (fit continues): {e}");
+                }
+            }
+        }
+    };
+    let mut hooks = FitHooks {
+        on_epoch: Some(&mut hook),
+        seconds_offset: if resumed_clocks.is_some() { 0.0 } else { graph_seconds },
+        init_seconds: 0.0,
+        resume: resume.map(|s| s.into_resume_point()),
+    };
+    let out = run(&mut hooks);
+    (out, resumed_clocks)
+}
+
+/// Assemble the [`FittedModel`] for a hooked fit: the streamed fresh
+/// path folds the graph clock, the resumed path restores the original
+/// run's clocks verbatim.
+fn assemble(
+    method: Method,
+    data: &dyn VecStore,
+    ctx: &RunContext,
+    out: KmeansOutput,
+    graph: Option<KnnGraph>,
+    graph_seconds: f64,
+    resumed: Option<(f64, f64)>,
+) -> FittedModel {
+    match resumed {
+        Some((g, i)) => FittedModel::from_resumed(method, data, ctx, out, graph, g, i),
+        None => FittedModel::from_output_streamed(method, data, ctx, out, graph, graph_seconds),
+    }
+}
+
 /// Traditional k-means (Lloyd) with k-means++ seeding.
 #[derive(Debug, Clone)]
 pub struct Lloyd {
@@ -102,8 +234,12 @@ impl Clusterer for Lloyd {
     }
 
     fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
-        let out = lloyd::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
-        FittedModel::from_output(Method::Lloyd, data, ctx, out, None, 0.0)
+        let k = clamp_k(self.k, data);
+        let params = ctx.kmeans_params();
+        let (out, resumed) = fit_hooked(Method::Lloyd, data, ctx, k, 0.0, |hooks| {
+            lloyd::run_core_hooked(data, k, &params, ctx.backend, hooks)
+        });
+        assemble(Method::Lloyd, data, ctx, out, None, 0.0, resumed)
     }
 }
 
@@ -126,8 +262,12 @@ impl Clusterer for Boost {
     }
 
     fn fit_store(&self, data: &dyn VecStore, ctx: &RunContext) -> FittedModel {
-        let out = boost::run_core(data, clamp_k(self.k, data), &ctx.kmeans_params(), ctx.backend);
-        FittedModel::from_output(Method::Boost, data, ctx, out, None, 0.0)
+        let k = clamp_k(self.k, data);
+        let params = ctx.kmeans_params();
+        let (out, resumed) = fit_hooked(Method::Boost, data, ctx, k, 0.0, |hooks| {
+            boost::run_core_hooked(data, k, &params, ctx.backend, hooks)
+        });
+        assemble(Method::Boost, data, ctx, out, None, 0.0, resumed)
     }
 }
 
@@ -251,10 +391,12 @@ impl Clusterer for GkMeans {
         let build =
             construct::build(data, &alg3_params(self.kappa, self.xi, self.tau, ctx), ctx.backend);
         let graph_seconds = timer.elapsed_s();
+        let k = clamp_k(self.k, data);
         let params = gkmeans::GkMeansParams { kappa: self.kappa, base: ctx.kmeans_params() };
-        let out =
-            gkmeans::run_core(data, clamp_k(self.k, data), &build.graph, &params, ctx.backend);
-        FittedModel::from_output(Method::GkMeans, data, ctx, out, Some(build.graph), graph_seconds)
+        let (out, resumed) = fit_hooked(Method::GkMeans, data, ctx, k, graph_seconds, |hooks| {
+            gkmeans::run_core_hooked(data, k, &build.graph, &params, ctx.backend, hooks)
+        });
+        assemble(Method::GkMeans, data, ctx, out, Some(build.graph), graph_seconds, resumed)
     }
 }
 
@@ -304,16 +446,20 @@ impl Clusterer for GkMeansStar {
         let build =
             construct::build(data, &alg3_params(self.kappa, self.xi, self.tau, ctx), ctx.backend);
         let graph_seconds = timer.elapsed_s();
+        let k = clamp_k(self.k, data);
         let params = gkmeans::GkMeansParams { kappa: self.kappa, base: ctx.kmeans_params() };
-        let out =
-            variant::run_core(data, clamp_k(self.k, data), &build.graph, &params, ctx.backend);
-        FittedModel::from_output(
+        let (out, resumed) =
+            fit_hooked(Method::GkMeansTrad, data, ctx, k, graph_seconds, |hooks| {
+                variant::run_core_hooked(data, k, &build.graph, &params, ctx.backend, hooks)
+            });
+        assemble(
             Method::GkMeansTrad,
             data,
             ctx,
             out,
             Some(build.graph),
             graph_seconds,
+            resumed,
         )
     }
 }
@@ -356,9 +502,13 @@ impl Clusterer for KGraphGkMeans {
             },
         );
         let graph_seconds = timer.elapsed_s();
+        let k = clamp_k(self.k, data);
         let params = gkmeans::GkMeansParams { kappa: self.kappa, base: ctx.kmeans_params() };
-        let out = gkmeans::run_core(data, clamp_k(self.k, data), &graph, &params, ctx.backend);
-        FittedModel::from_output(Method::KGraphGkMeans, data, ctx, out, Some(graph), graph_seconds)
+        let (out, resumed) =
+            fit_hooked(Method::KGraphGkMeans, data, ctx, k, graph_seconds, |hooks| {
+                gkmeans::run_core_hooked(data, k, &graph, &params, ctx.backend, hooks)
+            });
+        assemble(Method::KGraphGkMeans, data, ctx, out, Some(graph), graph_seconds, resumed)
     }
 }
 
@@ -421,6 +571,196 @@ mod tests {
         });
         let m = Boost::new(4).fit(&data, &ctx);
         assert_eq!(count.load(Ordering::Relaxed), m.history.len());
+    }
+
+    fn ckpt_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("gkm_resume_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// labels + centroid bits + history (iter/distortion-bits/moves; the
+    /// seconds are wall-clock and differ between runs by construction)
+    fn assert_fit_equal(a: &FittedModel, b: &FittedModel) {
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids.flat().len(), b.centroids.flat().len());
+        for (x, y) in a.centroids.flat().iter().zip(b.centroids.flat()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.iter, y.iter);
+            assert_eq!(x.moves, y.moves);
+            assert_eq!(x.distortion.to_bits(), y.distortion.to_bits());
+        }
+    }
+
+    #[test]
+    fn gkmeans_kill_and_resume_is_bit_identical() {
+        let data = blobs(&BlobSpec::quick(300, 5, 6), 4);
+        let b = Backend::native();
+        let cfg = GkMeans::new(6).kappa(6).tau(2).xi(25);
+        let full = cfg.fit(
+            &data,
+            &RunContext::new(&b).seed(5).max_iters(7).min_move_rate(0.0),
+        );
+        // "kill" at epoch 3 (the fit simply stops there), then resume
+        let dir = ckpt_dir("gkm");
+        let partial = cfg.fit(
+            &data,
+            &RunContext::new(&b).seed(5).max_iters(3).min_move_rate(0.0).checkpoint(&dir, 3),
+        );
+        assert_eq!(partial.history.len(), 4, "iter-0 entry + 3 epochs");
+        let state = checkpoint::load(&checkpoint::checkpoint_path(&dir)).unwrap();
+        assert_eq!(state.next_iter, 4);
+        state.validate(Method::GkMeans, 6, 5, 300, 5).unwrap();
+        let resumed = cfg.fit(
+            &data,
+            &RunContext::new(&b)
+                .seed(5)
+                .max_iters(7)
+                .min_move_rate(0.0)
+                .checkpoint(&dir, 3)
+                .resume(true),
+        );
+        assert_fit_equal(&full, &resumed);
+        resumed.check_time_accounting().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lloyd_and_boost_kill_and_resume_are_bit_identical() {
+        let data = blobs(&BlobSpec::quick(250, 4, 5), 8);
+        let b = Backend::native();
+        let configs: Vec<Box<dyn Clusterer>> =
+            vec![Box::new(Lloyd::new(5)), Box::new(Boost::new(5))];
+        for (t, cfg) in configs.iter().enumerate() {
+            let full = cfg.fit(
+                &data,
+                &RunContext::new(&b).seed(3).max_iters(6).min_move_rate(0.0),
+            );
+            let dir = ckpt_dir(&format!("lb{t}"));
+            let _partial = cfg.fit(
+                &data,
+                &RunContext::new(&b).seed(3).max_iters(3).min_move_rate(0.0).checkpoint(&dir, 2),
+            );
+            let resumed = cfg.fit(
+                &data,
+                &RunContext::new(&b)
+                    .seed(3)
+                    .max_iters(6)
+                    .min_move_rate(0.0)
+                    .checkpoint(&dir, 2)
+                    .resume(true),
+            );
+            // the checkpoint lands at epoch 2 of 3, so the resume re-runs
+            // epoch 3 — it must land on the exact same trajectory
+            assert_fit_equal(&full, &resumed);
+            resumed.check_time_accounting().unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn gkmeans_star_kill_and_resume_is_bit_identical() {
+        let data = blobs(&BlobSpec::quick(300, 5, 6), 9);
+        let b = Backend::native();
+        let cfg = GkMeansStar::new(6).kappa(6).tau(2).xi(25);
+        let full = cfg.fit(
+            &data,
+            &RunContext::new(&b).seed(7).max_iters(6).min_move_rate(0.0),
+        );
+        let dir = ckpt_dir("star");
+        let _partial = cfg.fit(
+            &data,
+            &RunContext::new(&b).seed(7).max_iters(2).min_move_rate(0.0).checkpoint(&dir, 2),
+        );
+        let resumed = cfg.fit(
+            &data,
+            &RunContext::new(&b)
+                .seed(7)
+                .max_iters(6)
+                .min_move_rate(0.0)
+                .checkpoint(&dir, 2)
+                .resume(true),
+        );
+        assert_fit_equal(&full, &resumed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn threaded_kill_and_resume_stays_in_tolerance() {
+        // threads > 1: per-epoch move application commutes only up to
+        // f32 rounding, so resume equivalence is a tolerance class, not
+        // bit identity
+        let data = blobs(&BlobSpec::quick(400, 6, 8), 10);
+        let b = Backend::native();
+        let cfg = GkMeans::new(8).kappa(8).tau(2).xi(25);
+        let full = cfg.fit(
+            &data,
+            &RunContext::new(&b).seed(2).threads(4).max_iters(6).min_move_rate(0.0),
+        );
+        let dir = ckpt_dir("mt");
+        let _partial = cfg.fit(
+            &data,
+            &RunContext::new(&b)
+                .seed(2)
+                .threads(4)
+                .max_iters(3)
+                .min_move_rate(0.0)
+                .checkpoint(&dir, 3),
+        );
+        let resumed = cfg.fit(
+            &data,
+            &RunContext::new(&b)
+                .seed(2)
+                .threads(4)
+                .max_iters(6)
+                .min_move_rate(0.0)
+                .checkpoint(&dir, 3)
+                .resume(true),
+        );
+        assert_eq!(resumed.history.len(), full.history.len());
+        assert!(
+            resumed.distortion() <= full.distortion() * 1.10 + 1e-9,
+            "resumed={} full={}",
+            resumed.distortion(),
+            full.distortion()
+        );
+        resumed.check_time_accounting().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_with_no_checkpoint_file_starts_fresh() {
+        let data = blobs(&BlobSpec::quick(150, 4, 3), 11);
+        let b = Backend::native();
+        let dir = ckpt_dir("fresh");
+        let plain = Lloyd::new(3).fit(&data, &RunContext::new(&b).seed(4).max_iters(4));
+        let resumed = Lloyd::new(3).fit(
+            &data,
+            &RunContext::new(&b).seed(4).max_iters(4).checkpoint(&dir, 2).resume(true),
+        );
+        assert_eq!(plain.labels, resumed.labels);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot resume")]
+    fn resume_rejects_a_mismatched_job() {
+        let data = blobs(&BlobSpec::quick(120, 4, 3), 12);
+        let b = Backend::native();
+        let dir = ckpt_dir("mismatch");
+        let _ = Lloyd::new(3).fit(
+            &data,
+            &RunContext::new(&b).seed(4).max_iters(4).min_move_rate(0.0).checkpoint(&dir, 2),
+        );
+        // different seed: replaying a different stream from this state
+        // would silently diverge — it must be refused loudly
+        let _ = Lloyd::new(3).fit(
+            &data,
+            &RunContext::new(&b).seed(5).max_iters(4).checkpoint(&dir, 2).resume(true),
+        );
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::gkm::ann;
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{IterStat, KmeansOutput};
 use crate::model::RunContext;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, RtError};
 use crate::util::pool;
 use crate::util::rng::Rng;
 
@@ -164,6 +164,19 @@ pub struct FittedModel {
     pub data: Option<ModelVectors>,
 }
 
+/// The vectors a fitted model retains under [`RunContext::keep_data`]:
+/// a disk-backed store keeps the cheap disk handle — never a 20 GB RAM
+/// copy; `save` streams it into the artifact.
+fn kept_data(data: &dyn VecStore, ctx: &RunContext) -> Option<ModelVectors> {
+    if !ctx.keep_data {
+        return None;
+    }
+    Some(match data.disk_backing() {
+        Some(c) => ModelVectors::Disk(c.clone()),
+        None => ModelVectors::Ram(store::materialize(data)),
+    })
+}
+
 impl FittedModel {
     /// Assemble a model from a legacy [`KmeansOutput`], folding
     /// graph-construction time into the shared clock exactly once and
@@ -176,24 +189,30 @@ impl FittedModel {
         graph: Option<KnnGraph>,
         graph_seconds: f64,
     ) -> FittedModel {
+        let model = FittedModel::from_output_streamed(method, data, ctx, out, graph, graph_seconds);
+        for h in &model.history {
+            ctx.emit(method.name(), h);
+        }
+        model
+    }
+
+    /// [`FittedModel::from_output`] minus the emit loop: the hooked
+    /// engines already streamed every epoch stat (folded) through the
+    /// context's progress callback from inside the fit, so re-emitting
+    /// here would double every entry.
+    pub(crate) fn from_output_streamed(
+        method: Method,
+        data: &dyn VecStore,
+        ctx: &RunContext,
+        out: KmeansOutput,
+        graph: Option<KnnGraph>,
+        graph_seconds: f64,
+    ) -> FittedModel {
         let KmeansOutput { clustering, mut history, total_seconds, init_seconds } = out;
         for h in history.iter_mut() {
             h.seconds += graph_seconds;
         }
-        for h in &history {
-            ctx.emit(method.name(), h);
-        }
         let centroids = clustering.centroids();
-        // keep_data on a disk-backed store keeps the cheap disk handle —
-        // never a 20 GB RAM copy; `save` streams it into the artifact
-        let kept = if ctx.keep_data {
-            Some(match data.disk_backing() {
-                Some(c) => ModelVectors::Disk(c.clone()),
-                None => ModelVectors::Ram(store::materialize(data)),
-            })
-        } else {
-            None
-        };
         FittedModel {
             method,
             k: clustering.k,
@@ -207,7 +226,40 @@ impl FittedModel {
             init_seconds: init_seconds + graph_seconds,
             graph_seconds,
             graph,
-            data: kept,
+            data: kept_data(data, ctx),
+        }
+    }
+
+    /// Assemble a model from a *resumed* hooked run.  The checkpointed
+    /// history prefix (and the `seconds_base` the engine folded into its
+    /// new entries) already carries the final wall-clock values, and the
+    /// init/graph split comes from the original run's checkpoint — so
+    /// nothing is folded again and nothing is re-emitted.
+    pub(crate) fn from_resumed(
+        method: Method,
+        data: &dyn VecStore,
+        ctx: &RunContext,
+        out: KmeansOutput,
+        graph: Option<KnnGraph>,
+        graph_seconds: f64,
+        init_seconds: f64,
+    ) -> FittedModel {
+        let KmeansOutput { clustering, history, total_seconds, .. } = out;
+        let centroids = clustering.centroids();
+        FittedModel {
+            method,
+            k: clustering.k,
+            dim: data.dim(),
+            n_train: data.rows(),
+            threads: ctx.threads,
+            centroids,
+            labels: clustering.labels,
+            history,
+            total_seconds,
+            init_seconds,
+            graph_seconds,
+            graph,
+            data: kept_data(data, ctx),
         }
     }
 
@@ -303,6 +355,82 @@ impl FittedModel {
             self.threads,
         )
         .idx
+    }
+
+    /// Degraded-mode [`FittedModel::predict_batch`]: per-query results,
+    /// with rows the store failed to serve (mid-stream truncation, a
+    /// corrupt fvecs record, an I/O error that survived the store's
+    /// retry policy) reported as per-row `Err` instead of poisoning the
+    /// whole batch.  Workers stream 1024-row blocks exactly like
+    /// `predict_batch`; when a block read fails the worker degrades to
+    /// row-at-a-time for that block, so only the rows actually hit by
+    /// the fault are lost (per-row assignment is independent of
+    /// blocking, so surviving rows get the exact `predict_batch`
+    /// labels).  The outer `Err` is reserved for a worker dying outright
+    /// ([`RtError::worker_panic`]).
+    pub fn try_predict_batch(
+        &self,
+        queries: &dyn VecStore,
+    ) -> Result<Vec<Result<u32, String>>, RtError> {
+        if queries.dim() != self.dim {
+            return Err(RtError::msg(format!(
+                "query dim {} != model dim {}",
+                queries.dim(),
+                self.dim
+            )));
+        }
+        let n = queries.rows();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        const BLOCK: usize = 1024;
+        let threads = pool::resolve_threads(self.threads).min(n);
+        let parts = pool::try_par_map_chunks(threads.max(1), n, |_, r| {
+            let mut cur = queries.open();
+            let mut out: Vec<Result<u32, String>> = Vec::with_capacity(r.len());
+            let mut lo = r.start;
+            while lo < r.end {
+                let hi = (lo + BLOCK).min(r.end);
+                match cur.try_block(lo, hi) {
+                    Ok(block) => {
+                        let sub = Backend::Native.assign_blocks(
+                            block,
+                            self.centroids.flat(),
+                            self.dim,
+                            self.k,
+                        );
+                        out.extend(sub.idx.into_iter().map(Ok));
+                    }
+                    Err(_) => {
+                        // the block spans a bad region: degrade to
+                        // row-at-a-time so intact rows still get answers
+                        for i in lo..hi {
+                            match cur.try_row(i) {
+                                Ok(row) => {
+                                    let sub = Backend::Native.assign_blocks(
+                                        row,
+                                        self.centroids.flat(),
+                                        self.dim,
+                                        self.k,
+                                    );
+                                    out.push(Ok(sub.idx[0]));
+                                }
+                                Err(e) => out.push(Err(e)),
+                            }
+                        }
+                    }
+                }
+                lo = hi;
+            }
+            out
+        });
+        match parts {
+            Ok(parts) => Ok(parts.concat()),
+            Err((payload, ctx)) => Err(RtError::worker_panic(format!(
+                "{ctx}: {}",
+                pool::panic_message(payload.as_ref())
+            ))),
+        }
     }
 
     /// Approximate top-`topk` nearest indexed vectors of `query`, served
@@ -417,9 +545,87 @@ impl FittedModel {
         Ok(results.concat())
     }
 
+    /// Degraded-mode [`FittedModel::search_batch`]: each query's search
+    /// runs under a panic guard, so one query tripping over a corrupt
+    /// region of the vectors file (the infallible cursor reads panic on
+    /// mid-stream corruption) yields a per-query `Err` while every other
+    /// query is still answered — the worker recreates its scratch and
+    /// cursor after a caught panic because a mid-search unwind can leave
+    /// both poisoned.  Surviving queries return exactly the
+    /// `search_batch` results (same per-query RNG derivation).  The
+    /// outer `Err` is a worker dying outside the per-query guard.
+    pub fn try_search_batch(
+        &self,
+        queries: &VecSet,
+        topk: usize,
+        params: &ann::SearchParams,
+    ) -> Result<Vec<Result<Vec<(f32, u32)>, String>>, RtError> {
+        let (graph, data) = self.serving_parts().map_err(RtError::msg)?;
+        if queries.dim() != self.dim {
+            return Err(RtError::msg(format!(
+                "query dim {} != model dim {}",
+                queries.dim(),
+                self.dim
+            )));
+        }
+        let nq = queries.rows();
+        if nq == 0 {
+            return Ok(Vec::new());
+        }
+        let threads = pool::resolve_threads(self.threads).min(nq);
+        let n = data.rows();
+        let parts = pool::try_par_map_chunks(threads.max(1), nq, |_, r| {
+            let mut scratch: Option<ann::SearchScratch> = None;
+            let mut cur: Option<crate::data::store::StoreCursor<'_>> = None;
+            let mut out: Vec<Result<Vec<(f32, u32)>, String>> = Vec::with_capacity(r.len());
+            for q in r {
+                let mut s = scratch.take().unwrap_or_else(|| ann::SearchScratch::new(n));
+                let mut c = cur.take().unwrap_or_else(|| data.open());
+                let guarded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+                    let (res, _) = ann::search_with_scratch(
+                        &mut c,
+                        graph,
+                        queries.row(q),
+                        topk,
+                        params,
+                        &mut rng,
+                        &mut s,
+                    );
+                    res
+                }));
+                match guarded {
+                    Ok(hits) => {
+                        out.push(Ok(hits));
+                        // reuse across queries, as search_batch does
+                        scratch = Some(s);
+                        cur = Some(c);
+                    }
+                    Err(payload) => {
+                        out.push(Err(format!(
+                            "query {q} failed: {}",
+                            pool::panic_message(payload.as_ref())
+                        )));
+                        // s and c drop here: rebuilt fresh for the next query
+                    }
+                }
+            }
+            out
+        });
+        match parts {
+            Ok(parts) => Ok(parts.concat()),
+            Err((payload, ctx)) => Err(RtError::worker_panic(format!(
+                "{ctx}: {}",
+                pool::panic_message(payload.as_ref())
+            ))),
+        }
+    }
+
     /// Save as a versioned binary artifact (see [`crate::model::serde`]):
     /// GKMODEL v2, section-offset layout, the vectors section streamed —
-    /// never materialized — from wherever the model keeps them.
+    /// never materialized — from wherever the model keeps them.  The
+    /// write is crash-safe (temp sibling + fsync + rename) and every
+    /// section carries a CRC-32 that [`FittedModel::load`] verifies.
     ///
     /// ```
     /// use gkmeans::data::synth::{blobs, BlobSpec};
@@ -435,14 +641,16 @@ impl FittedModel {
     /// assert_eq!(served.labels, model.labels);
     /// # std::fs::remove_file(&path).ok();
     /// ```
-    pub fn save(&self, path: &Path) -> Result<(), String> {
+    pub fn save(&self, path: &Path) -> crate::runtime::RtResult<()> {
         crate::model::serde::save(self, path)
     }
 
     /// Load a model saved by [`FittedModel::save`].  Everything except
     /// the vectors section is read eagerly; the vectors page from the
-    /// file on demand ([`ModelVectors::Disk`]), so a multi-GB artifact
-    /// opens in milliseconds.
+    /// file on demand ([`ModelVectors::Disk`]) after a streaming
+    /// checksum pass.  Corrupt artifacts are rejected with a typed
+    /// [`RtError`](crate::runtime::RtError) naming the damaged section
+    /// ([`is_corrupt`](crate::runtime::RtError::is_corrupt)).
     ///
     /// ```
     /// use gkmeans::data::synth::{blobs, BlobSpec};
@@ -460,7 +668,7 @@ impl FittedModel {
     /// assert_eq!(served.predict(&data), model.predict(&data));
     /// # std::fs::remove_file(&path).ok();
     /// ```
-    pub fn load(path: &Path) -> Result<FittedModel, String> {
+    pub fn load(path: &Path) -> crate::runtime::RtResult<FittedModel> {
         crate::model::serde::load(path)
     }
 
@@ -572,6 +780,56 @@ mod tests {
             .search(data.row(0), 1, &Default::default())
             .unwrap_err()
             .contains("keep_data"));
+    }
+
+    #[test]
+    fn try_variants_match_infallible_on_clean_data() {
+        let data = blobs(&BlobSpec::quick(200, 6, 4), 5);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(3).keep_data(true);
+        let model = GkMeans::new(4).kappa(6).tau(2).xi(25).fit(&data, &ctx);
+        let want = model.predict_batch(&data);
+        let got = model.try_predict_batch(&data).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(*g.as_ref().unwrap(), *w);
+        }
+        let hits = model.search_batch(&data, 5, &Default::default()).unwrap();
+        let try_hits = model.try_search_batch(&data, 5, &Default::default()).unwrap();
+        assert_eq!(hits.len(), try_hits.len());
+        for (h, t) in hits.iter().zip(&try_hits) {
+            assert_eq!(h, t.as_ref().unwrap());
+        }
+        // serving preconditions surface as the outer typed error
+        let no_graph = Lloyd::new(3).fit(&data, &RunContext::new(&b).max_iters(2));
+        assert!(no_graph.try_search_batch(&data, 1, &Default::default()).is_err());
+    }
+
+    #[test]
+    fn try_predict_batch_degrades_per_row_on_corruption() {
+        // model over 2-d data; queries stream from a bvecs file whose
+        // *middle* record header is corrupt — only that row may fail
+        let data = blobs(&BlobSpec::quick(100, 2, 3), 6);
+        let b = Backend::native();
+        let model = Lloyd::new(3).fit(&data, &RunContext::new(&b).max_iters(3));
+        let p = std::env::temp_dir().join(format!("gkm_tryq_{}.bvecs", std::process::id()));
+        let mut bytes = Vec::new();
+        for (hdr, row) in [(2i32, [7u8, 200u8]), (3i32, [0u8, 255u8]), (2i32, [3u8, 4u8])] {
+            bytes.extend(hdr.to_le_bytes());
+            bytes.extend(row);
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let queries = crate::data::store::ChunkedVecStore::open_bvecs(&p).unwrap().chunk_rows(1);
+        let out = model.try_predict_batch(&queries).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok() && out[2].is_ok(), "intact rows must be served");
+        assert!(out[1].is_err(), "the corrupt row must be reported, not invented");
+        // the surviving rows get the exact labels a clean predict yields
+        let clean = VecSet::from_flat(2, vec![7.0, 200.0, 3.0, 4.0]);
+        let want = model.predict(&clean);
+        assert_eq!(*out[0].as_ref().unwrap(), want[0]);
+        assert_eq!(*out[2].as_ref().unwrap(), want[1]);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

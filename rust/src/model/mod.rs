@@ -31,6 +31,7 @@
 //! # let _ = (labels, hits);
 //! ```
 
+pub mod checkpoint;
 pub mod clusterer;
 pub mod fitted;
 pub mod serde;
@@ -87,13 +88,34 @@ pub struct RunContext<'a> {
     /// reproduction of in-RAM scans on a paged store); `Superblock`
     /// requests locality planning explicitly.
     pub scan_order: ScanOrder,
-    /// Invoked once per recorded epoch stat.  **Batch semantics**: the
-    /// engines do not stream — the callback fires for every history
-    /// entry *after* the optimization loop (graph build included) has
-    /// finished, in epoch order.  Use it for structured reporting of the
-    /// convergence trace, not as a live progress bar; streaming per-epoch
-    /// callbacks through the engines is a recorded open item.
+    /// Invoked once per recorded epoch stat.  **Streaming semantics**
+    /// for the hooked engines (Lloyd, Boost, GK-means, GK-means\*,
+    /// KGraph+GK-means): the callback fires from inside the optimization
+    /// loop, right after each epoch completes (the iteration-0
+    /// initialization entry included), with `seconds` already folded to
+    /// the wall-clock values the final model reports — so it works as a
+    /// live heartbeat.  MiniBatch and Closure k-means still emit their
+    /// whole history once, after the fit finishes (batch semantics).
     pub progress: Option<ProgressFn>,
+    /// Periodic epoch-level checkpointing: `Some((dir, every))` writes a
+    /// `fit.gkckpt` into `dir` after every `every`-th completed epoch
+    /// (see [`checkpoint`]).  A write failure logs a warning and the fit
+    /// continues — checkpointing is belt-and-braces, never the thing
+    /// that kills a healthy fit.
+    pub checkpoint: Option<CheckpointConfig>,
+    /// Resume from `checkpoint` dir's `fit.gkckpt` if one exists (the
+    /// checkpoint must match the job: method, k, dim, n, seed).  With no
+    /// checkpoint file present the fit starts fresh.
+    pub resume: bool,
+}
+
+/// Where and how often [`RunContext::checkpoint`] writes.
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Directory holding `fit.gkckpt` (created on first write).
+    pub dir: std::path::PathBuf,
+    /// Write after every N completed epochs (≥ 1).
+    pub every: usize,
 }
 
 impl<'a> RunContext<'a> {
@@ -110,6 +132,8 @@ impl<'a> RunContext<'a> {
             keep_data: false,
             scan_order: base.scan_order,
             progress: None,
+            checkpoint: None,
+            resume: false,
         }
     }
 
@@ -152,6 +176,21 @@ impl<'a> RunContext<'a> {
     /// Install a per-epoch progress callback.
     pub fn on_progress(mut self, f: impl Fn(&str, &IterStat) + Sync + 'static) -> Self {
         self.progress = Some(Box::new(f));
+        self
+    }
+
+    /// Write a `fit.gkckpt` checkpoint into `dir` after every
+    /// `every_n_epochs` completed epochs (clamped to ≥ 1); see
+    /// [`checkpoint`].  Combine with [`RunContext::resume`] to continue
+    /// an interrupted fit.
+    pub fn checkpoint(mut self, dir: impl Into<std::path::PathBuf>, every_n_epochs: usize) -> Self {
+        self.checkpoint = Some(CheckpointConfig { dir: dir.into(), every: every_n_epochs.max(1) });
+        self
+    }
+
+    /// Resume from the checkpoint directory's `fit.gkckpt`, if present.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
         self
     }
 

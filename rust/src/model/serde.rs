@@ -22,6 +22,18 @@
 //! | 3    | CENTROIDS | u64 rows, rows·dim × f32                           |
 //! | 4    | GRAPH     | u64 n, u64 kappa, n·κ × u32 ids, n·κ × f32 dists   |
 //! | 5    | VECTORS   | u64 rows, rows·dim × f32                           |
+//! | 6    | CRC       | per-section { kind u32, crc32 u32 } records        |
+//!
+//! The CRC section (always written last) holds a CRC-32 (IEEE) of every
+//! other section's payload bytes; the vectors checksum is accumulated
+//! while the section streams out, so integrity costs no extra pass at
+//! save time.  [`load`] and [`decode`] verify every checksummed section
+//! — vectors are streamed through the hash in bounded blocks — and
+//! reject mismatches as typed [`RtError`] corruption errors naming the
+//! damaged section.  v2 files written before this section existed carry
+//! no kind-6 entry and load exactly as before (verification is simply
+//! skipped), and pre-CRC readers skip kind 6 as an unknown section:
+//! append-only compatibility in both directions.
 //!
 //! The aligned, raw-`f32` VECTORS payload is exactly a
 //! [`ChunkedVecStore::from_section`] region: [`load`] does **not** read
@@ -40,7 +52,10 @@
 //! Both encodings are exact (`to_le_bytes`/`from_le_bytes`), so a
 //! save → load round trip is bit-identical — including the `+∞` distance
 //! sentinels in partially-filled graph rows.  Unknown magic/version,
-//! truncation, and out-of-bounds sections are errors, never misreads.
+//! truncation, out-of-bounds sections, and checksum mismatches are
+//! errors, never misreads.  [`save`] is crash-safe: temp sibling →
+//! fsync → rename → fsync directory, so a crash at any point leaves
+//! either the old artifact or the new one, never a torn file.
 
 use std::io::Write;
 use std::path::Path;
@@ -52,6 +67,8 @@ use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::IterStat;
 use crate::model::fitted::ModelVectors;
 use crate::model::FittedModel;
+use crate::runtime::{RtError, RtResult};
+use crate::util::crc32::{crc32, Crc32};
 
 const MAGIC: &[u8; 8] = b"GKMODEL\0";
 const V1: u32 = 1;
@@ -62,6 +79,7 @@ const SEC_LABELS: u32 = 2;
 const SEC_CENTROIDS: u32 = 3;
 const SEC_GRAPH: u32 = 4;
 const SEC_VECTORS: u32 = 5;
+const SEC_CRC: u32 = 6;
 
 /// Section alignment: offsets are multiples of 64 so payloads start on
 /// cache-line boundaries and the vectors region can be paged directly.
@@ -158,6 +176,18 @@ fn write_v2<W: Write>(
     if let Some(len) = vec_len {
         sections.push((SEC_VECTORS, len));
     }
+    // One { kind, crc } record per payload section; the in-RAM payloads
+    // hash now, vectors hash as they stream, and the CRC section itself
+    // (always last in table and file) is written once every record is in.
+    let mut crc_records: Vec<(u32, u32)> = vec![
+        (SEC_META, crc32(&meta)),
+        (SEC_LABELS, crc32(&labels)),
+        (SEC_CENTROIDS, crc32(&centroids)),
+    ];
+    if let Some(g) = &graph {
+        crc_records.push((SEC_GRAPH, crc32(g)));
+    }
+    sections.push((SEC_CRC, 8 * sections.len() as u64));
 
     // header + table, then offsets assigned in table order, 64-aligned
     let header_len = 16 + 24 * sections.len() as u64;
@@ -210,9 +240,11 @@ fn write_v2<W: Write>(
             }
             SEC_VECTORS => {
                 let v = vectors.expect("vectors section implies a store");
+                let mut hasher = Crc32::new();
                 let mut hdr = Vec::with_capacity(8);
                 put_u64(&mut hdr, v.rows() as u64);
                 w.write_all(&hdr)?;
+                hasher.update(&hdr);
                 let mut cur = v.open();
                 let (n, d) = (v.rows(), v.dim());
                 let mut lo = 0;
@@ -226,9 +258,20 @@ fn write_v2<W: Write>(
                         block_bytes.extend_from_slice(&x.to_le_bytes());
                     }
                     w.write_all(&block_bytes)?;
+                    hasher.update(&block_bytes);
                     lo = hi;
                 }
                 written += 8 + 4 * (n as u64) * (d as u64);
+                crc_records.push((SEC_VECTORS, hasher.finish()));
+            }
+            SEC_CRC => {
+                let mut payload = Vec::with_capacity(8 * crc_records.len());
+                for (k, crc) in &crc_records {
+                    put_u32(&mut payload, *k);
+                    put_u32(&mut payload, *crc);
+                }
+                w.write_all(&payload)?;
+                written += payload.len() as u64;
             }
             other => unreachable!("writer emitted unknown section kind {other}"),
         }
@@ -380,6 +423,47 @@ fn section<'a>(sections: &'a [Section], kind: u32) -> Option<&'a Section> {
     sections.iter().find(|s| s.kind == kind)
 }
 
+/// Human name for a section kind (error messages).
+fn sec_name(kind: u32) -> String {
+    match kind {
+        SEC_META => "META".into(),
+        SEC_LABELS => "LABELS".into(),
+        SEC_CENTROIDS => "CENTROIDS".into(),
+        SEC_GRAPH => "GRAPH".into(),
+        SEC_VECTORS => "VECTORS".into(),
+        SEC_CRC => "CRC".into(),
+        other => format!("kind {other}"),
+    }
+}
+
+/// Parse the CRC section payload: `{ kind u32, crc u32 }` records.
+fn parse_crc_records(bytes: &[u8]) -> Result<Vec<(u32, u32)>, String> {
+    if bytes.len() % 8 != 0 {
+        return Err(format!("CRC section length {} is not a whole number of records", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| {
+            (
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            )
+        })
+        .collect())
+}
+
+/// The stored checksum for `kind`, when the artifact carries one.
+fn stored_crc(records: &Option<Vec<(u32, u32)>>, kind: u32) -> Option<u32> {
+    records.as_ref().and_then(|r| r.iter().find(|(k, _)| *k == kind).map(|(_, c)| *c))
+}
+
+fn crc_mismatch(kind: u32, stored: u32, computed: u32) -> String {
+    format!(
+        "{} section checksum mismatch (stored {stored:#010x}, computed {computed:#010x})",
+        sec_name(kind)
+    )
+}
+
 fn assemble(
     meta: Meta,
     labels: Vec<u32>,
@@ -447,6 +531,18 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                 &bytes[s.offset as usize..(s.offset + s.len) as usize]
             }
             let get = |s: &Section| slice_of(bytes, s);
+            // Verify every checksummed section before parsing anything.
+            if let Some(c) = section(&sections, SEC_CRC) {
+                for (kind, stored) in parse_crc_records(get(c))? {
+                    let s = section(&sections, kind).ok_or_else(|| {
+                        format!("checksum record names missing section {}", sec_name(kind))
+                    })?;
+                    let computed = crc32(get(s));
+                    if computed != stored {
+                        return Err(crc_mismatch(kind, stored, computed));
+                    }
+                }
+            }
             let meta = parse_meta(get(section(&sections, SEC_META).unwrap()))?;
             let labels = parse_labels(get(section(&sections, SEC_LABELS).unwrap()))?;
             let centroids =
@@ -478,114 +574,222 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
 
 /// Write a model to `path` in the v2 layout.  The vectors section (if
 /// any) is streamed block by block, so saving a disk-backed model never
-/// materializes its vectors in RAM.  The write always goes to a
-/// temporary sibling first and is renamed over the target, so any
-/// artifact another model is currently paging from — including this
-/// model's own backing file — is never truncated mid-read, and a failed
-/// save never destroys a pre-existing artifact.
-pub fn save(m: &FittedModel, path: &Path) -> Result<(), String> {
+/// materializes its vectors in RAM.
+///
+/// The write is crash-safe: it goes to a temporary sibling first, the
+/// file is fsynced, renamed over the target, and the parent directory
+/// is fsynced — a crash (or power cut) at any point leaves either the
+/// complete old artifact or the complete new one on disk, never a torn
+/// file.  The rename also means any artifact another model is currently
+/// paging from — including this model's own backing file — is never
+/// truncated mid-read, and a failed save never destroys a pre-existing
+/// artifact.
+pub fn save(m: &FittedModel, path: &Path) -> RtResult<()> {
     let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
     name.push(format!(".tmp.{}", std::process::id()));
     let target = path.with_file_name(name);
     let vectors: Option<&dyn VecStore> = m.data.as_ref().map(|mv| mv as &dyn VecStore);
-    let f = std::fs::File::create(&target).map_err(|e| format!("{}: {e}", target.display()))?;
-    let mut w = std::io::BufWriter::new(f);
-    let wrote = write_v2(m, vectors, &mut w).map_err(|e| format!("{}: {e}", target.display()));
-    drop(w);
-    if let Err(e) = wrote {
+    let write = || -> std::io::Result<()> {
+        let f = std::fs::File::create(&target)?;
+        {
+            let mut w = std::io::BufWriter::new(&f);
+            write_v2(m, vectors, &mut w)?;
+            w.flush()?;
+        }
+        f.sync_all()
+    };
+    if let Err(e) = write() {
         std::fs::remove_file(&target).ok();
-        return Err(e);
+        return Err(RtError::msg(format!("{}: {e}", target.display())));
     }
-    std::fs::rename(&target, path).map_err(|e| format!("{}: {e}", path.display()))
+    std::fs::rename(&target, path)
+        .map_err(|e| RtError::msg(format!("{}: {e}", path.display())))?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(if dir.as_os_str().is_empty() {
+            Path::new(".")
+        } else {
+            dir
+        }) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Read one section's bytes out of an open model file.
+fn read_section_bytes(
+    f: &mut std::fs::File,
+    path: &Path,
+    s: &Section,
+) -> RtResult<Vec<u8>> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut buf = vec![0u8; s.len as usize];
+    f.seek(SeekFrom::Start(s.offset))
+        .and_then(|_| f.read_exact(&mut buf))
+        .map_err(|e| {
+            RtError::corrupt(
+                sec_name(s.kind),
+                format!("{}: reading section: {e}", path.display()),
+            )
+        })?;
+    Ok(buf)
 }
 
 /// Read a model from `path` (v1 or v2).  A v2 vectors section is
-/// **not** loaded: the model pages it from disk on demand
-/// ([`ModelVectors::Disk`]), so opening a large artifact is cheap.
-pub fn load(path: &Path) -> Result<FittedModel, String> {
+/// **not** materialized: the model pages it from disk on demand
+/// ([`ModelVectors::Disk`]), so opening a large artifact stays cheap —
+/// but when the artifact carries a CRC section, every section is
+/// verified first (the vectors payload streams through the hash in
+/// bounded blocks, one sequential pass at disk bandwidth).  Corruption
+/// — bad magic, truncation, parse failures, checksum mismatches —
+/// surfaces as [`RtError`] values with
+/// [`is_corrupt`](RtError::is_corrupt) set and the damaged section
+/// named; plain I/O failures (missing file, permissions) stay generic.
+pub fn load(path: &Path) -> RtResult<FittedModel> {
     use std::io::{Read, Seek, SeekFrom};
-    let mut f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
-    let total_len = f.metadata().map_err(|e| e.to_string())?.len();
+    let corrupt = |section: &str, detail: String| RtError::corrupt(section, detail);
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| RtError::msg(format!("{}: {e}", path.display())))?;
+    let total_len = f
+        .metadata()
+        .map_err(|e| RtError::msg(format!("{}: {e}", path.display())))?
+        .len();
     let mut head16 = [0u8; 16];
     f.read_exact(&mut head16)
-        .map_err(|_| format!("{}: truncated model header", path.display()))?;
+        .map_err(|_| corrupt("header", format!("{}: truncated model header", path.display())))?;
     if &head16[..8] != MAGIC {
-        return Err("not a gkmeans model file (bad magic)".into());
+        return Err(corrupt("header", "not a gkmeans model file (bad magic)".into()));
     }
     let version = u32::from_le_bytes(head16[8..12].try_into().unwrap());
     if version == V1 {
-        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
-        return decode_v1(&bytes);
+        let bytes =
+            std::fs::read(path).map_err(|e| RtError::msg(format!("{}: {e}", path.display())))?;
+        return decode_v1(&bytes).map_err(|e| corrupt("v1", e));
     }
     if version != V2 {
-        return Err(format!("unsupported model version {version} (this build reads 1 and 2)"));
+        return Err(RtError::msg(format!(
+            "unsupported model version {version} (this build reads 1 and 2)"
+        )));
     }
     let count = u32::from_le_bytes(head16[12..16].try_into().unwrap()) as usize;
     if count > 64 {
-        return Err(format!("implausible section count {count}"));
+        return Err(corrupt("header", format!("implausible section count {count}")));
     }
     let mut head = head16.to_vec();
     let mut table = vec![0u8; 24 * count];
     f.read_exact(&mut table)
-        .map_err(|_| format!("{}: truncated section table", path.display()))?;
+        .map_err(|_| corrupt("header", format!("{}: truncated section table", path.display())))?;
     head.extend_from_slice(&table);
-    let sections = parse_table(&head, total_len)?;
-    let mut read_section = |s: &Section| -> Result<Vec<u8>, String> {
-        let mut buf = vec![0u8; s.len as usize];
-        f.seek(SeekFrom::Start(s.offset))
-            .and_then(|_| f.read_exact(&mut buf))
-            .map_err(|e| format!("{}: reading section kind {}: {e}", path.display(), s.kind))?;
+    let sections = parse_table(&head, total_len).map_err(|e| corrupt("header", e))?;
+    let crcs = match section(&sections, SEC_CRC) {
+        Some(s) => Some(
+            parse_crc_records(&read_section_bytes(&mut f, path, s)?)
+                .map_err(|e| corrupt("CRC", e))?,
+        ),
+        None => None,
+    };
+    let mut read_verified = |s: &Section| -> RtResult<Vec<u8>> {
+        let buf = read_section_bytes(&mut f, path, s)?;
+        if let Some(stored) = stored_crc(&crcs, s.kind) {
+            let computed = crc32(&buf);
+            if computed != stored {
+                return Err(RtError::corrupt(
+                    sec_name(s.kind),
+                    crc_mismatch(s.kind, stored, computed),
+                ));
+            }
+        }
         Ok(buf)
     };
-    let meta = parse_meta(&read_section(section(&sections, SEC_META).unwrap())?)?;
-    let labels = parse_labels(&read_section(section(&sections, SEC_LABELS).unwrap())?)?;
+    let meta = parse_meta(&read_verified(section(&sections, SEC_META).unwrap())?)
+        .map_err(|e| corrupt("META", e))?;
+    let labels = parse_labels(&read_verified(section(&sections, SEC_LABELS).unwrap())?)
+        .map_err(|e| corrupt("LABELS", e))?;
     let centroids = parse_centroids(
-        &read_section(section(&sections, SEC_CENTROIDS).unwrap())?,
+        &read_verified(section(&sections, SEC_CENTROIDS).unwrap())?,
         meta.k,
         meta.dim,
-    )?;
+    )
+    .map_err(|e| corrupt("CENTROIDS", e))?;
     let graph = match section(&sections, SEC_GRAPH) {
-        Some(s) => Some(parse_graph(&read_section(s)?, meta.n_train)?),
+        Some(s) => Some(
+            parse_graph(&read_verified(s)?, meta.n_train).map_err(|e| corrupt("GRAPH", e))?,
+        ),
         None => None,
     };
     let data = match section(&sections, SEC_VECTORS) {
         Some(s) => {
             if s.len < 8 {
-                return Err("vectors section shorter than its row header".into());
+                return Err(corrupt(
+                    "VECTORS",
+                    "vectors section shorter than its row header".into(),
+                ));
             }
             let mut hdr = [0u8; 8];
             f.seek(SeekFrom::Start(s.offset))
                 .and_then(|_| f.read_exact(&mut hdr))
-                .map_err(|e| format!("{}: reading vectors header: {e}", path.display()))?;
+                .map_err(|e| {
+                    corrupt("VECTORS", format!("{}: reading vectors header: {e}", path.display()))
+                })?;
             let rows = u64::from_le_bytes(hdr) as usize;
             if rows != meta.n_train {
-                return Err(format!(
-                    "embedded {rows} vectors but the model trained on {}",
-                    meta.n_train
+                return Err(corrupt(
+                    "VECTORS",
+                    format!("embedded {rows} vectors but the model trained on {}", meta.n_train),
                 ));
             }
             let payload = (rows as u64)
                 .checked_mul(meta.dim as u64)
                 .and_then(|c| c.checked_mul(4))
                 .and_then(|c| c.checked_add(8))
-                .ok_or_else(|| "vectors section size overflows".to_string())?;
+                .ok_or_else(|| corrupt("VECTORS", "vectors section size overflows".into()))?;
             if payload != s.len {
-                return Err(format!(
-                    "vectors section length {} != expected {payload}",
-                    s.len
+                return Err(corrupt(
+                    "VECTORS",
+                    format!("vectors section length {} != expected {payload}", s.len),
                 ));
             }
-            Some(ModelVectors::Disk(ChunkedVecStore::from_section(
-                path,
-                s.offset + 8,
-                rows,
-                meta.dim,
-            )?))
+            // Stream the (not-materialized) vectors payload through the
+            // hash in bounded blocks: integrity is checked up front, the
+            // rows still page lazily afterwards.
+            if let Some(stored) = stored_crc(&crcs, SEC_VECTORS) {
+                f.seek(SeekFrom::Start(s.offset)).map_err(|e| {
+                    corrupt("VECTORS", format!("{}: seeking for checksum: {e}", path.display()))
+                })?;
+                let mut hasher = Crc32::new();
+                let mut block = vec![0u8; 1 << 20];
+                let mut remaining = s.len;
+                while remaining > 0 {
+                    let take = remaining.min(block.len() as u64) as usize;
+                    f.read_exact(&mut block[..take]).map_err(|e| {
+                        corrupt(
+                            "VECTORS",
+                            format!("{}: reading for checksum: {e}", path.display()),
+                        )
+                    })?;
+                    hasher.update(&block[..take]);
+                    remaining -= take as u64;
+                }
+                let computed = hasher.finish();
+                if computed != stored {
+                    return Err(corrupt(
+                        "VECTORS",
+                        crc_mismatch(SEC_VECTORS, stored, computed),
+                    ));
+                }
+            }
+            Some(ModelVectors::Disk(
+                ChunkedVecStore::from_section(path, s.offset + 8, rows, meta.dim)
+                    .map_err(|e| corrupt("VECTORS", e))?,
+            ))
         }
         None => None,
     };
     if labels.len() != meta.n_train {
-        return Err(format!("label count {} != n_train {}", labels.len(), meta.n_train));
+        return Err(corrupt(
+            "LABELS",
+            format!("label count {} != n_train {}", labels.len(), meta.n_train),
+        ));
     }
     Ok(assemble(meta, labels, centroids, graph, data))
 }
@@ -998,6 +1202,93 @@ mod tests {
         let mut long = v1.clone();
         long.push(0);
         assert!(decode(&long).unwrap_err().contains("trailing"));
+    }
+
+    /// The v2 table entry for `kind`: `(offset, len)`.
+    fn table_entry(bytes: &[u8], kind: u32) -> (usize, usize) {
+        let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        for t in 0..count {
+            let at = 16 + 24 * t;
+            if u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) == kind {
+                let off = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap());
+                let len = u64::from_le_bytes(bytes[at + 16..at + 24].try_into().unwrap());
+                return (off as usize, len as usize);
+            }
+        }
+        panic!("no section kind {kind} in table");
+    }
+
+    #[test]
+    fn crc_section_rejects_single_flipped_bytes() {
+        let model = graph_model();
+        let bytes = encode(&model);
+        // every payload section is covered by a CRC record
+        let (crc_off, crc_len) = table_entry(&bytes, SEC_CRC);
+        assert_eq!(crc_len % 8, 0);
+        let covered: Vec<u32> = bytes[crc_off..crc_off + crc_len]
+            .chunks_exact(8)
+            .map(|c| u32::from_le_bytes(c[..4].try_into().unwrap()))
+            .collect();
+        for kind in [SEC_META, SEC_LABELS, SEC_CENTROIDS, SEC_GRAPH, SEC_VECTORS] {
+            assert!(covered.contains(&kind), "no CRC record for kind {kind}");
+        }
+        // a flipped byte in any eager payload fails the checksum in decode
+        for kind in [SEC_META, SEC_LABELS, SEC_CENTROIDS, SEC_GRAPH] {
+            let (off, len) = table_entry(&bytes, kind);
+            let mut bad = bytes.clone();
+            bad[off + len / 2] ^= 0xFF;
+            let err = decode(&bad).unwrap_err();
+            assert!(err.contains("checksum mismatch"), "kind {kind}: {err}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_corrupt_files_with_typed_section_errors() {
+        let model = graph_model();
+        let path = tmp("corrupt.gkm");
+        model.save(&path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // damage an eager section (CENTROIDS) and the lazily-paged
+        // VECTORS payload: both must be caught at load, with the error
+        // typed as corruption and naming the section.
+        for (kind, name) in [(SEC_CENTROIDS, "CENTROIDS"), (SEC_VECTORS, "VECTORS")] {
+            let (off, len) = table_entry(&clean, kind);
+            let mut bad = clean.clone();
+            bad[off + len / 2] ^= 0xFF;
+            std::fs::write(&path, &bad).unwrap();
+            let err = FittedModel::load(&path).unwrap_err();
+            assert!(err.is_corrupt(), "{name}: {err}");
+            assert!(err.to_string().contains(name), "{name}: {err}");
+            assert!(err.to_string().contains("checksum mismatch"), "{name}: {err}");
+        }
+        // the pristine bytes still load
+        std::fs::write(&path, &clean).unwrap();
+        FittedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_artifacts_without_crc_section_still_load() {
+        let model = graph_model();
+        let bytes = encode(&model);
+        // drop the trailing CRC table entry, leaving its payload as
+        // ignored slack — exactly what a pre-CRC v2 writer produced
+        let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let last = 16 + 24 * (count - 1);
+        assert_eq!(
+            u32::from_le_bytes(bytes[last..last + 4].try_into().unwrap()),
+            SEC_CRC,
+            "CRC section must be the last table entry"
+        );
+        let mut old = bytes.clone();
+        old[12..16].copy_from_slice(&((count - 1) as u32).to_le_bytes());
+        let back = decode(&old).unwrap();
+        assert_models_bit_identical(&model, &back);
+        let path = tmp("nocrc.gkm");
+        std::fs::write(&path, &old).unwrap();
+        let loaded = FittedModel::load(&path).unwrap();
+        assert_models_bit_identical(&model, &loaded);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -285,7 +285,7 @@ impl Backend {
 fn pjrt_block_l2(engine: &PjrtEngine, x: &[f32], y: &[f32], d: usize, out: &mut [f32]) -> RtResult<()> {
     let (bm, bn) = engine
         .block_shape("block_l2", d)
-        .ok_or_else(|| RtError(format!("no block_l2 artifact for d={d}")))?;
+        .ok_or_else(|| RtError::msg(format!("no block_l2 artifact for d={d}")))?;
     let m = x.len() / d;
     let n = y.len() / d;
     if out.len() != m * n {
@@ -318,7 +318,7 @@ fn pjrt_block_l2(engine: &PjrtEngine, x: &[f32], y: &[f32], d: usize, out: &mut 
 fn pjrt_assign(engine: &PjrtEngine, x: &[f32], c: &[f32], d: usize, k: usize, acc: &mut ArgminAcc) -> RtResult<()> {
     let (bm, bn) = engine
         .block_shape("assign_argmin", d)
-        .ok_or_else(|| RtError(format!("no assign_argmin artifact for d={d}")))?;
+        .ok_or_else(|| RtError::msg(format!("no assign_argmin artifact for d={d}")))?;
     let m = x.len() / d;
     let mut row0 = 0;
     while row0 < m {
@@ -352,7 +352,7 @@ fn pjrt_bisect(engine: &PjrtEngine, data: &dyn VecStore, subset: &[u32], c0: &[f
     let d = data.dim();
     let (bm, _) = engine
         .block_shape("bisect_assign", d)
-        .ok_or_else(|| RtError(format!("no bisect_assign artifact for d={d}")))?;
+        .ok_or_else(|| RtError::msg(format!("no bisect_assign artifact for d={d}")))?;
     let mut c2 = Vec::with_capacity(2 * d);
     c2.extend_from_slice(c0);
     c2.extend_from_slice(c1);
@@ -379,9 +379,9 @@ fn pjrt_bisect(engine: &PjrtEngine, data: &dyn VecStore, subset: &[u32], c0: &[f
 fn pjrt_pairwise_small(engine: &PjrtEngine, gathered: &[f32], m: usize, d: usize, out: &mut [f32]) -> RtResult<()> {
     let (bs, _) = engine
         .block_shape("block_l2_small", d)
-        .ok_or_else(|| RtError(format!("no block_l2_small artifact for d={d}")))?;
+        .ok_or_else(|| RtError::msg(format!("no block_l2_small artifact for d={d}")))?;
     if m > bs {
-        return Err(RtError(format!("cell of {m} exceeds small block {bs}")));
+        return Err(RtError::msg(format!("cell of {m} exceeds small block {bs}")));
     }
     let xb = pad_block(gathered, d, 0, m, bs, 0.0);
     let yb = pad_block(gathered, d, 0, m, bs, PAD_SENTINEL);

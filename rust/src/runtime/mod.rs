@@ -22,27 +22,77 @@ pub mod pjrt;
 
 pub use backend::Backend;
 
+/// What failed — the coarse, matchable classification carried by every
+/// [`RtError`].  Most errors are [`Generic`](RtErrorKind::Generic);
+/// the reliability layer (PR 6) adds kinds callers genuinely branch on:
+/// artifact corruption (refuse to serve) and worker panics (batch
+/// degraded, process alive).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RtErrorKind {
+    /// A plain human-readable failure (the historical `RtError`).
+    Generic,
+    /// An on-disk artifact failed validation (bad checksum, truncated or
+    /// out-of-bounds section).  `section` names the GKMODEL/GKCKPT
+    /// section that failed, e.g. `"CENTROIDS"`.
+    Corrupt { section: String },
+    /// A pool worker panicked; the panic was contained at the pool
+    /// boundary instead of unwinding through the caller.
+    WorkerPanic,
+}
+
 /// Minimal runtime error (the in-tree substitute for `anyhow`, which is
-/// unavailable in the offline dependency-free build).  Carries a single
-/// human-readable message; context is prepended by callers.
+/// unavailable in the offline dependency-free build).  Carries a typed
+/// [`RtErrorKind`] plus a human-readable message; context is prepended
+/// by callers.
 #[derive(Debug, Clone)]
-pub struct RtError(pub String);
+pub struct RtError {
+    /// Matchable classification (most errors are `Generic`).
+    pub kind: RtErrorKind,
+    message: String,
+}
 
 impl RtError {
-    /// Build an error from anything displayable.
+    /// Build a generic error from anything displayable.
     pub fn msg(m: impl std::fmt::Display) -> RtError {
-        RtError(m.to_string())
+        RtError { kind: RtErrorKind::Generic, message: m.to_string() }
+    }
+
+    /// Build a [`RtErrorKind::Corrupt`] error for a named artifact
+    /// section, e.g. `RtError::corrupt("CENTROIDS", "CRC mismatch ...")`.
+    pub fn corrupt(section: impl Into<String>, detail: impl std::fmt::Display) -> RtError {
+        let section = section.into();
+        RtError {
+            message: format!("corrupt artifact ({section} section): {detail}"),
+            kind: RtErrorKind::Corrupt { section },
+        }
+    }
+
+    /// Build a [`RtErrorKind::WorkerPanic`] error from a panic payload.
+    pub fn worker_panic(detail: impl std::fmt::Display) -> RtError {
+        RtError { kind: RtErrorKind::WorkerPanic, message: format!("worker panicked: {detail}") }
     }
 
     /// Prepend context, anyhow-style: `e.context("compiling artifact")`.
+    /// The kind is preserved.
     pub fn context(self, ctx: impl std::fmt::Display) -> RtError {
-        RtError(format!("{ctx}: {}", self.0))
+        RtError { kind: self.kind, message: format!("{ctx}: {}", self.message) }
+    }
+
+    /// The human-readable message (what [`Display`](std::fmt::Display)
+    /// prints).
+    pub fn message(&self) -> &str {
+        &self.message
+    }
+
+    /// True iff this is a [`RtErrorKind::Corrupt`] error.
+    pub fn is_corrupt(&self) -> bool {
+        matches!(self.kind, RtErrorKind::Corrupt { .. })
     }
 }
 
 impl std::fmt::Display for RtError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(&self.0)
+        f.write_str(&self.message)
     }
 }
 
@@ -50,13 +100,13 @@ impl std::error::Error for RtError {}
 
 impl From<String> for RtError {
     fn from(s: String) -> Self {
-        RtError(s)
+        RtError { kind: RtErrorKind::Generic, message: s }
     }
 }
 
 impl From<&str> for RtError {
     fn from(s: &str) -> Self {
-        RtError(s.to_string())
+        RtError::msg(s)
     }
 }
 
@@ -74,6 +124,20 @@ mod tests {
         // alternate formatting (used by the CLI's `{e:#}`) must not panic
         assert_eq!(format!("{e:#}"), "loading artifact: boom");
         let from_string: RtError = String::from("x").into();
-        assert_eq!(from_string.0, "x");
+        assert_eq!(from_string.message(), "x");
+        assert_eq!(from_string.kind, RtErrorKind::Generic);
+    }
+
+    #[test]
+    fn typed_kinds_survive_context() {
+        let e = RtError::corrupt("CENTROIDS", "CRC mismatch").context("loading model");
+        assert_eq!(e.kind, RtErrorKind::Corrupt { section: "CENTROIDS".into() });
+        assert!(e.is_corrupt());
+        assert!(format!("{e}").contains("CENTROIDS"));
+        assert!(format!("{e}").starts_with("loading model: "));
+        let p = RtError::worker_panic("index out of bounds");
+        assert_eq!(p.kind, RtErrorKind::WorkerPanic);
+        assert!(format!("{p}").contains("index out of bounds"));
+        assert!(!p.is_corrupt());
     }
 }

@@ -24,7 +24,7 @@ use crate::runtime::{RtError, RtResult};
 
 impl From<xla::Error> for RtError {
     fn from(e: xla::Error) -> Self {
-        RtError(format!("{e}"))
+        RtError::msg(format!("{e}"))
     }
 }
 
@@ -107,7 +107,7 @@ impl PjrtEngine {
         let art = self
             .manifest
             .get(entry, dim)
-            .ok_or_else(|| RtError(format!("no artifact for entry={entry} dim={dim}")))?;
+            .ok_or_else(|| RtError::msg(format!("no artifact for entry={entry} dim={dim}")))?;
         let proto = HloModuleProto::from_text_file(&art.path)
             .map_err(|e| RtError::from(e).context(format!("parsing HLO text {}", art.path.display())))?;
         let comp = XlaComputation::from_proto(&proto);

@@ -1,0 +1,279 @@
+//! Deterministic I/O fault injection for the out-of-core storage layer.
+//!
+//! [`FaultStore`] wraps a [`ChunkedVecStore`] and makes its physical
+//! chunk reads fail on a schedule derived *only* from a seed and a
+//! global operation counter — no wall clock, no OS randomness — so a
+//! "flaky disk" run is exactly reproducible:
+//!
+//! * **Transient faults** (`ErrorKind::Interrupted`) fire on the ops
+//!   where `splitmix64(seed ^ op·φ)` falls below `transient_rate`.
+//!   Combined with a [`FaultPolicy`] retry budget on the inner store,
+//!   a fit over a transiently-faulty store must be *bit-identical* to
+//!   the fault-free fit: retries re-read the same bytes.
+//! * **Permanent faults** (`ErrorKind::Other`) fire on every op from
+//!   `fail_at_op` onward, modeling a disk that dies mid-fit and stays
+//!   dead.  Retry policies rightly give up immediately (the kind is
+//!   not transient) and the failure surfaces to the caller.
+//!
+//! The injection point is [`ChunkedVecStore::with_fault_hook`]: the
+//! hook is consulted once per *physical* read attempt (retries
+//! included), so injected faults exercise the exact code path real
+//! ones take.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::data::plan::ScanGeometry;
+use crate::data::store::{ChunkedVecStore, FaultHook, FaultPolicy, StoreCursor, VecStore};
+
+/// What to inject, derived deterministically from (seed, op index).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-op hash deciding transient faults.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that any given read attempt fails with
+    /// a transient (`Interrupted`) error.
+    pub transient_rate: f64,
+    /// First op index at which the store fails *permanently*: that op
+    /// and every later one error with `ErrorKind::Other`.
+    pub fail_at_op: Option<u64>,
+}
+
+impl FaultPlan {
+    /// A plan that never injects anything (useful for op counting).
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan { seed, transient_rate: 0.0, fail_at_op: None }
+    }
+
+    /// Transient faults only, at `rate`.
+    pub fn transient(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, transient_rate: rate, fail_at_op: None }
+    }
+
+    /// Permanent failure from op `at` onward, no transient noise.
+    pub fn dies_at(seed: u64, at: u64) -> FaultPlan {
+        FaultPlan { seed, transient_rate: 0.0, fail_at_op: Some(at) }
+    }
+}
+
+/// SplitMix64 finalizer: the standard 64-bit avalanche used to turn
+/// `(seed, op)` into an i.i.d.-looking decision stream.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A [`VecStore`] that reads through a fault-injecting
+/// [`ChunkedVecStore`], counting every physical attempt and every
+/// injected fault.
+pub struct FaultStore {
+    inner: ChunkedVecStore,
+    ops: Arc<AtomicU64>,
+    injected: Arc<AtomicU64>,
+}
+
+impl FaultStore {
+    /// Wrap `store` so its chunk reads fail per `plan`, retried per
+    /// `policy`.  The hook and policy are installed on a clone-free
+    /// move of `store`; the original cursors (if any) are unaffected.
+    pub fn new(store: ChunkedVecStore, plan: FaultPlan, policy: FaultPolicy) -> FaultStore {
+        let ops = Arc::new(AtomicU64::new(0));
+        let injected = Arc::new(AtomicU64::new(0));
+        let (ops_h, injected_h) = (ops.clone(), injected.clone());
+        let hook = FaultHook(Arc::new(move || {
+            let op = ops_h.fetch_add(1, Ordering::SeqCst);
+            if let Some(at) = plan.fail_at_op {
+                if op >= at {
+                    injected_h.fetch_add(1, Ordering::SeqCst);
+                    return Some(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        format!("injected permanent fault at op {op}"),
+                    ));
+                }
+            }
+            if plan.transient_rate > 0.0 {
+                let h = splitmix64(plan.seed ^ op.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                if (h as f64 / u64::MAX as f64) < plan.transient_rate {
+                    injected_h.fetch_add(1, Ordering::SeqCst);
+                    return Some(std::io::Error::new(
+                        std::io::ErrorKind::Interrupted,
+                        format!("injected transient fault at op {op}"),
+                    ));
+                }
+            }
+            None
+        }));
+        FaultStore {
+            inner: store.with_fault_hook(hook).with_fault_policy(policy),
+            ops,
+            injected,
+        }
+    }
+
+    /// Physical read attempts seen so far (retries included).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::SeqCst)
+    }
+
+    /// Faults injected so far (transient + permanent).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// The wrapped store (hook and policy installed).
+    pub fn inner(&self) -> &ChunkedVecStore {
+        &self.inner
+    }
+}
+
+impl VecStore for FaultStore {
+    fn rows(&self) -> usize {
+        VecStore::rows(&self.inner)
+    }
+
+    fn dim(&self) -> usize {
+        VecStore::dim(&self.inner)
+    }
+
+    fn open(&self) -> StoreCursor<'_> {
+        self.inner.open()
+    }
+
+    fn disk_backing(&self) -> Option<&ChunkedVecStore> {
+        Some(&self.inner)
+    }
+
+    fn scan_geometry(&self) -> Option<ScanGeometry> {
+        self.inner.scan_geometry()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::VecSet;
+    use crate::data::store::materialize;
+    use crate::model::{checkpoint, Clusterer, GkMeans, RunContext};
+    use crate::runtime::Backend;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gkm_fault_{}_{name}", std::process::id()))
+    }
+
+    fn write_dataset(path: &std::path::Path, n: usize, d: usize, seed: u64) -> VecSet {
+        let mut rng = Rng::new(seed);
+        let v = VecSet::from_flat(d, (0..n * d).map(|_| rng.normal()).collect());
+        crate::data::io::write_fvecs(path, &v).unwrap();
+        v
+    }
+
+    fn open_chunked(path: &std::path::Path) -> ChunkedVecStore {
+        ChunkedVecStore::open_fvecs(path).unwrap().chunk_rows(16).cache_chunks(4)
+    }
+
+    #[test]
+    fn splitmix64_known_answers() {
+        // SplitMix64 reference values (seed 0 stream: first two outputs).
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(0xE220_A839_7B1D_CDAF ^ 1), splitmix64(0xE220_A839_7B1D_CDAF ^ 1));
+        assert_ne!(splitmix64(1), splitmix64(2));
+    }
+
+    #[test]
+    fn transient_faults_leave_reads_bit_identical() {
+        let p = tmp("transient.fvecs");
+        let v = write_dataset(&p, 120, 6, 11);
+        let clean = open_chunked(&p);
+        let faulty = FaultStore::new(
+            open_chunked(&p),
+            FaultPlan::transient(42, 0.1),
+            FaultPolicy { retries: 12, backoff: std::time::Duration::ZERO },
+        );
+        assert_eq!(materialize(&faulty), materialize(&clean));
+        assert_eq!(materialize(&faulty), v);
+        assert!(faulty.injected() > 0, "rate 0.1 over {} ops injected nothing", faulty.ops());
+        assert!(faulty.ops() > faulty.injected());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn transient_faults_do_not_change_a_fit() {
+        let p = tmp("fit.fvecs");
+        write_dataset(&p, 240, 8, 3);
+        let backend = Backend::native();
+        let ctx = RunContext::new(&backend).threads(1).seed(5).max_iters(6).min_move_rate(0.0);
+
+        let clean = open_chunked(&p);
+        let want = GkMeans::new(6).kappa(4).fit_store(&clean, &ctx);
+
+        let faulty = FaultStore::new(
+            open_chunked(&p),
+            FaultPlan::transient(42, 0.1),
+            FaultPolicy { retries: 12, backoff: std::time::Duration::ZERO },
+        );
+        let got = GkMeans::new(6).kappa(4).fit_store(&faulty, &ctx);
+
+        assert!(faulty.injected() > 0, "no faults injected over {} ops", faulty.ops());
+        assert_eq!(got.labels, want.labels);
+        assert_eq!(got.centroids.flat(), want.centroids.flat());
+        assert_eq!(got.history.len(), want.history.len());
+        for (a, b) in got.history.iter().zip(want.history.iter()) {
+            assert_eq!(a.distortion.to_bits(), b.distortion.to_bits());
+            assert_eq!(a.moves, b.moves);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn permanent_fault_fails_cleanly_and_resume_completes() {
+        let p = tmp("perm.fvecs");
+        write_dataset(&p, 240, 8, 7);
+        let dir = tmp("perm_ckpt");
+        std::fs::remove_dir_all(&dir).ok();
+        let backend = Backend::native();
+        let ctx = |resume: bool| {
+            RunContext::new(&backend)
+                .threads(1)
+                .seed(9)
+                .max_iters(8)
+                .min_move_rate(0.0)
+                .checkpoint(&dir, 1)
+                .resume(resume)
+        };
+
+        // Pass 1: count the ops a fault-free fit performs end to end.
+        let counting = FaultStore::new(open_chunked(&p), FaultPlan::none(0), FaultPolicy::none());
+        let want = GkMeans::new(6).kappa(4).fit_store(&counting, &ctx(false));
+        let total = counting.ops();
+        assert!(total > 2, "op count {total} too small to stage a late failure");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Pass 2: same fit, but the disk dies one read before the end.
+        let dying =
+            FaultStore::new(open_chunked(&p), FaultPlan::dies_at(0, total - 1), FaultPolicy::none());
+        let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            GkMeans::new(6).kappa(4).fit_store(&dying, &ctx(false))
+        }));
+        assert!(crashed.is_err(), "fit should fail once the store dies");
+        assert!(dying.injected() > 0);
+
+        // The periodic checkpoint survived the crash and names a later epoch.
+        let ck = checkpoint::load(&checkpoint::checkpoint_path(&dir)).unwrap();
+        assert!(ck.next_iter >= 2, "checkpoint stuck at next_iter {}", ck.next_iter);
+
+        // Pass 3: resume on a healthy store finishes and matches the
+        // uninterrupted fit bit-for-bit (threads = 1 contract).
+        let clean = open_chunked(&p);
+        let resumed = GkMeans::new(6).kappa(4).fit_store(&clean, &ctx(true));
+        assert_eq!(resumed.labels, want.labels);
+        assert_eq!(resumed.centroids.flat(), want.centroids.flat());
+        assert_eq!(resumed.history.len(), want.history.len());
+
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_file(&p).ok();
+    }
+}

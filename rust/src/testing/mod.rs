@@ -1,3 +1,5 @@
-//! In-tree property-based testing mini-framework (proptest substitute).
+//! In-tree property-based testing mini-framework (proptest substitute)
+//! and deterministic I/O fault injection ([`fault`]).
 
+pub mod fault;
 pub mod prop;

@@ -1,0 +1,103 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven and
+//! dependency-free — the artifact-integrity checksum for GKMODEL /
+//! GKCKPT sections.
+//!
+//! The table is built in a `const fn` at compile time, so there is no
+//! runtime init and no `lazy_static`-style machinery.  [`Crc32`] is a
+//! streaming hasher for sections that are produced incrementally (the
+//! VECTORS section is streamed block-by-block and never resident);
+//! [`crc32`] is the one-shot convenience.
+
+/// Streaming CRC-32 hasher.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Feed bytes into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// The checksum of everything fed so far (the hasher stays usable).
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_vectors() {
+        // the classic check values for CRC-32/ISO-HDLC
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 2654435761) as u8).collect();
+        let whole = crc32(&data);
+        for chunk in [1usize, 7, 64, 4096] {
+            let mut h = Crc32::new();
+            for c in data.chunks(chunk) {
+                h.update(c);
+            }
+            assert_eq!(h.finish(), whole, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut data = vec![0xA5u8; 257];
+        let clean = crc32(&data);
+        for pos in [0usize, 100, 256] {
+            data[pos] ^= 0x01;
+            assert_ne!(crc32(&data), clean, "flip at {pos} undetected");
+            data[pos] ^= 0x01;
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod cli;
 pub mod configfile;
+pub mod crc32;
 pub mod logging;
 pub mod pool;
 pub mod rng;

@@ -71,14 +71,64 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
 ///
 /// With one range (or `threads <= 1`) the closure runs on the caller's
 /// thread — no spawn, no overhead, same code path as a plain loop.
+///
+/// A worker panic is re-raised on the caller's thread with its original
+/// payload (so the failure reads like a serial panic, not a generic
+/// join error).  Callers that must survive worker panics — the serving
+/// surface — use [`try_par_map_chunks`] instead.
 pub fn par_map_chunks<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, Range<usize>) -> T + Sync,
 {
+    match try_par_map_chunks(threads, n, f) {
+        Ok(out) => out,
+        Err((payload, _)) => std::panic::resume_unwind(payload),
+    }
+}
+
+/// Panic payload + best-effort rendering of its message, as returned by
+/// [`try_par_map_chunks`].
+type PanicInfo = (Box<dyn std::any::Any + Send>, String);
+
+/// Render a panic payload's message (`&str` / `String` payloads; the
+/// overwhelmingly common case for `panic!`/`assert!`/`expect`).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// [`par_map_chunks`] with panic containment: a panicking worker (or a
+/// panic on the caller-thread fast path) is caught at the pool boundary
+/// and returned as `Err((payload, message))` instead of unwinding the
+/// caller.  All workers are still joined first, so no borrowed data is
+/// left aliased; results of non-panicking workers are discarded.
+///
+/// The caller decides whether to re-raise ([`par_map_chunks`] does) or
+/// to degrade — e.g. convert to
+/// [`RtError::worker_panic`](crate::runtime::RtError::worker_panic) and
+/// keep serving.
+pub fn try_par_map_chunks<T, F>(threads: usize, n: usize, f: F) -> Result<Vec<T>, PanicInfo>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    use std::panic::{catch_unwind, AssertUnwindSafe};
     let ranges = split_ranges(n, threads.max(1));
     if ranges.len() <= 1 {
-        return ranges.into_iter().enumerate().map(|(t, r)| f(t, r)).collect();
+        return ranges
+            .into_iter()
+            .enumerate()
+            .map(|(t, r)| {
+                catch_unwind(AssertUnwindSafe(|| f(t, r)))
+                    .map_err(|p| { let m = panic_message(p.as_ref()); (p, m) })
+            })
+            .collect();
     }
     let f = &f;
     std::thread::scope(|s| {
@@ -87,10 +137,22 @@ where
             .enumerate()
             .map(|(t, r)| s.spawn(move || f(t, r)))
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
+        let mut out = Vec::with_capacity(handles.len());
+        let mut panic: Option<PanicInfo> = None;
+        for h in handles {
+            match h.join() {
+                Ok(v) => out.push(v),
+                Err(p) if panic.is_none() => {
+                    let m = panic_message(p.as_ref());
+                    panic = Some((p, m));
+                }
+                Err(_) => {}
+            }
+        }
+        match panic {
+            Some(p) => Err(p),
+            None => Ok(out),
+        }
     })
 }
 
@@ -147,5 +209,33 @@ mod tests {
     fn zero_items_runs_nothing() {
         let parts: Vec<usize> = par_map_chunks(4, 0, |_, r| r.len());
         assert!(parts.is_empty());
+    }
+
+    #[test]
+    fn try_par_map_chunks_contains_worker_panics() {
+        for threads in [1usize, 4] {
+            let r = try_par_map_chunks(threads, 100, |_, range| {
+                if range.contains(&50) {
+                    panic!("worker blew up at 50");
+                }
+                range.len()
+            });
+            let (_, msg) = r.err().expect("panic must be reported, threads={threads}");
+            assert!(msg.contains("worker blew up"), "got {msg:?}");
+        }
+        // and the non-panicking path is unchanged
+        let ok = try_par_map_chunks(4, 10, |_, r| r.len()).unwrap();
+        assert_eq!(ok.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "original payload")]
+    fn par_map_chunks_reraises_original_payload() {
+        par_map_chunks(3, 30, |_, r| {
+            if r.start == 0 {
+                panic!("original payload");
+            }
+            r.len()
+        });
     }
 }
