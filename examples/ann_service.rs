@@ -1,120 +1,174 @@
-//! ANN search service over a *saved model artifact* (§4.3's application,
-//! production shape): the first run fits GK-means (Alg. 3 graph + Alg. 2
-//! clustering, vectors embedded) and saves the `FittedModel`; every later
-//! run loads the artifact and serves immediately — no re-indexing on
-//! startup, which is the whole point of the fit → model → query surface.
+//! ANN serving, production shape: a thin *client* of `gkm-serve`
+//! (§4.3's application behind a real network front door).
 //!
-//! Reports per-query latency and recall against exact search — the
-//! serving-side numbers behind the paper's "<3 ms per query at recall
-//! >0.9" claim (at their 100M scale; this runs the same pipeline at a
-//! laptop scale).
+//! The first run fits GK-means (Alg. 3 graph + Alg. 2 clustering,
+//! vectors embedded) and saves the `FittedModel` artifact; every later
+//! run reuses it — no re-indexing on startup.  Serving itself lives in
+//! the `gkm-serve` binary (micro-batching, sharding, metrics); this
+//! example just bootstraps an artifact, talks the wire protocol, and
+//! summarizes what the service did.
 //!
 //! ```bash
+//! # self-hosted: bootstrap an artifact, start an in-process server,
+//! # drive mixed predict/search traffic against it over TCP
 //! cargo run --release --example ann_service -- [--n 20000] [--queries 500] [--ef 64]
-//! # second invocation loads the saved index:
-//! cargo run --release --example ann_service
-//! # force a refit:
+//! # force a refit of the artifact:
 //! cargo run --release --example ann_service -- --refit
+//! # against an already-running `gkm-serve MODEL.gkm`:
+//! cargo run --release --example ann_service -- --addr 127.0.0.1:7070
 //! ```
 
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use gkmeans::data::synth;
-use gkmeans::gkm::ann::SearchParams;
 use gkmeans::model::{Clusterer, FittedModel, GkMeans, RunContext};
 use gkmeans::runtime::Backend;
+use gkmeans::serve::proto::{stats_value, Client};
+use gkmeans::serve::{ServeConfig, Server, ShardedIndex};
 use gkmeans::util::cli;
 use gkmeans::util::rng::Rng;
-use gkmeans::util::timer::Timer;
 
 fn main() {
-    let args = cli::parse_env(&["n", "queries", "ef", "kappa", "tau", "index"]);
+    let args = cli::parse_env(&["n", "queries", "ef", "kappa", "tau", "index", "addr", "clients"]);
     let n = args.usize_or("n", 20_000);
     let nq = args.usize_or("queries", 500);
     let ef = args.usize_or("ef", 64);
     let kappa = args.usize_or("kappa", 20);
     let tau = args.usize_or("tau", 16);
-    let index: PathBuf = args.get("index").map(PathBuf::from).unwrap_or_else(|| {
-        std::env::temp_dir().join(format!("ann_service_n{n}_kappa{kappa}_tau{tau}.gkm"))
-    });
-    let backend = Backend::auto();
+    let clients = args.usize_or("clients", 4);
 
-    // --- load the artifact, or fit + save it on the first run ---
-    let model = if index.exists() && !args.flag("refit") {
-        let t = Timer::start();
-        let m = FittedModel::load(&index).expect("loading saved index");
-        println!(
-            "loaded index {} in {:.3}s (n={}, kappa={}, fitted by {})",
-            index.display(),
-            t.elapsed_s(),
-            m.n_train,
-            m.graph.as_ref().map(|g| g.kappa()).unwrap_or(0),
-            m.method.name()
-        );
-        m
-    } else {
-        println!("indexing: n={n} SIFT-like descriptors, kappa={kappa}, tau={tau}");
-        let data = synth::sift_like(n, 20170707);
-        let ctx = RunContext::new(&backend).seed(1).keep_data(true).max_iters(5);
-        let m = GkMeans::new((n / 50).max(2)).kappa(kappa).tau(tau).fit(&data, &ctx);
-        println!(
-            "fitted in {:.2}s (graph {:.2}s); saving {}",
-            m.total_seconds,
-            m.graph_seconds,
-            index.display()
-        );
-        m.save(&index).expect("saving index");
-        m
+    // --- resolve a serving endpoint ---------------------------------
+    // --addr: talk to an external gkm-serve.  Otherwise bootstrap an
+    // artifact (fit + save on the first run, load after) and self-host
+    // an in-process `serve::Server` — the same code path the binary runs.
+    let mut _local: Option<gkmeans::serve::ServerHandle> = None;
+    let (addr, dim) = match args.get("addr") {
+        Some(a) => {
+            let addr: std::net::SocketAddr = a.parse().expect("--addr host:port");
+            // dim is discovered by probing: a deliberately wrong-sized
+            // predict comes back as "query dim X != index dim D"
+            let mut probe = Client::connect(addr).expect("connect");
+            probe.ping().expect("ping");
+            let err = probe.predict(&[0.0]).expect_err("1-d probe should mismatch");
+            let dim: usize = err
+                .rsplit(' ')
+                .next()
+                .and_then(|s| s.parse().ok())
+                .expect("server names its dim in the mismatch error");
+            println!("using external server at {addr} (dim {dim})");
+            (addr, dim)
+        }
+        None => {
+            let index_path: PathBuf = args.get("index").map(PathBuf::from).unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("ann_service_n{n}_kappa{kappa}_tau{tau}.gkm"))
+            });
+            let model = if index_path.exists() && !args.flag("refit") {
+                let t = Instant::now();
+                let m = FittedModel::load(&index_path).expect("loading saved index");
+                println!(
+                    "loaded index {} in {:.3}s (n={}, kappa={}, fitted by {})",
+                    index_path.display(),
+                    t.elapsed().as_secs_f64(),
+                    m.n_train,
+                    m.graph.as_ref().map(|g| g.kappa()).unwrap_or(0),
+                    m.method.name()
+                );
+                m
+            } else {
+                println!("indexing: n={n} SIFT-like descriptors, kappa={kappa}, tau={tau}");
+                let data = synth::sift_like(n, 20170707);
+                let backend = Backend::auto();
+                let ctx = RunContext::new(&backend).seed(1).keep_data(true).max_iters(5);
+                let m = GkMeans::new((n / 50).max(2)).kappa(kappa).tau(tau).fit(&data, &ctx);
+                println!(
+                    "fitted in {:.2}s (graph {:.2}s); saving {}",
+                    m.total_seconds,
+                    m.graph_seconds,
+                    index_path.display()
+                );
+                m.save(&index_path).expect("saving index");
+                m
+            };
+            let dim = model.dim;
+            let backing = match &model.data {
+                Some(d) if d.is_resident() => "resident",
+                Some(_) => "paged from disk",
+                None => panic!("index must embed its vectors (keep_data)"),
+            };
+            println!("vectors: {backing} ({} x {dim})", model.n_train);
+            let index = ShardedIndex::new(vec![model]).expect("index");
+            let cfg = ServeConfig {
+                default_ef: ef,
+                batch_window: Duration::from_micros(200),
+                max_batch: 64,
+                ..ServeConfig::default()
+            };
+            let handle = Server::start(index, &cfg).expect("start server");
+            let addr = handle.addr();
+            println!("self-hosted gkm-serve listening on {addr}");
+            _local = Some(handle);
+            (addr, dim)
+        }
     };
-    let data = model.data.as_ref().expect("index embeds its vectors");
-    println!(
-        "vectors: {} ({} x {})",
-        if data.is_resident() { "resident" } else { "paged from disk" },
-        data.rows(),
-        data.dim()
-    );
 
-    // --- serve queries from the artifact ---
-    // (one cursor for exact-recall accounting; the model's own search
-    // path opens its own cursors internally)
-    use gkmeans::data::store::VecStore as _;
-    let mut cur = data.open();
-    let mut rng = Rng::new(99);
-    let sp = SearchParams { ef, entries: 48, seed: 5 };
-    let mut latencies = Vec::with_capacity(nq);
-    let mut hits = 0usize;
-    for _ in 0..nq {
-        let qi = rng.below(data.rows());
-        let q: Vec<f32> = cur.row(qi).iter().map(|v| v + 0.5 * rng.normal()).collect();
-        // exact answer for recall accounting
-        let mut best = f32::INFINITY;
-        let mut want = 0u32;
-        for j in 0..data.rows() {
-            let dd = gkmeans::core_ops::dist::d2(&q, cur.row(j));
-            if dd < best {
-                best = dd;
-                want = j as u32;
-            }
-        }
-        let t = Timer::start();
-        let res = model.search(&q, 10, &sp).expect("graph + vectors present");
-        latencies.push(t.elapsed_s());
-        if res.first().map(|r| r.1) == Some(want) {
-            hits += 1;
-        }
-    }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean = latencies.iter().sum::<f64>() / nq as f64;
-    println!("served {nq} queries (top-10, ef={ef}):");
-    println!("  recall@1 = {:.3}", hits as f64 / nq as f64);
+    // --- drive mixed predict/search traffic over the wire -----------
+    // every 5th request is a predict; `clients` connections run
+    // concurrently so the server's micro-batcher has queries to coalesce
+    let per_client = (nq / clients.max(1)).max(1);
+    println!("driving {clients} clients x {per_client} requests (top-10, ef={ef})...");
+    let t0 = Instant::now();
+    let lat_groups: Vec<Vec<(bool, u64)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|tid| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    let mut rng = Rng::new(99 + tid as u64);
+                    let mut out = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let q: Vec<f32> = (0..dim).map(|_| 30.0 * rng.normal()).collect();
+                        let t = Instant::now();
+                        let is_search = i % 5 != 0;
+                        if is_search {
+                            c.search(&q, 10, ef).expect("search");
+                        } else {
+                            c.predict(&q).expect("predict");
+                        }
+                        out.push((is_search, t.elapsed().as_micros() as u64));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut lats: Vec<u64> = lat_groups.iter().flatten().map(|&(_, us)| us).collect();
+    let searches = lat_groups.iter().flatten().filter(|&&(is_s, _)| is_s).count();
+    let total = lats.len();
+    lats.sort_unstable();
+    let mean = lats.iter().sum::<u64>() as f64 / total as f64;
+    println!("served {total} requests ({searches} searches) in {wall:.2}s:");
     println!(
         "  latency: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
-        mean * 1e3,
-        latencies[nq / 2] * 1e3,
-        latencies[(nq * 99 / 100).min(nq - 1)] * 1e3
+        mean / 1e3,
+        lats[total / 2] as f64 / 1e3,
+        lats[(total * 99 / 100).min(total - 1)] as f64 / 1e3
     );
-    println!(
-        "  throughput: {:.0} queries/s (single thread)",
-        1.0 / mean
-    );
+    println!("  throughput: {:.0} requests/s across {clients} clients", total as f64 / wall);
+
+    // --- what the service saw, from its own metrics ------------------
+    let mut c = Client::connect(addr).expect("connect for stats");
+    let stats = c.stats().expect("stats");
+    println!("server-side STATS:");
+    for key in ["requests", "qps", "lat_p50_us", "lat_p99_us", "batch_mean", "cache_hit_rate"] {
+        if let Some(v) = stats_value(&stats, key) {
+            println!("  {key} = {v}");
+        }
+    }
+    if let Some(handle) = _local.take() {
+        handle.shutdown();
+        println!("self-hosted server drained cleanly");
+    }
 }

@@ -1,0 +1,328 @@
+//! Serving load generator: drives a `gkm-serve` endpoint through the
+//! wire protocol and measures QPS and client-observed latency across
+//! batch-window × client-count × RAM/disk configurations, emitting
+//! `BENCH_serve.json` (override with `$GKMEANS_BENCH_SERVE_JSON`).
+//!
+//! Two generator modes:
+//! * **closed-loop** — each client keeps exactly one request in flight
+//!   (back-to-back), so QPS measures service capacity at that
+//!   concurrency.
+//! * **open-loop** — each client fires on a fixed arrival schedule
+//!   regardless of completions, so latency percentiles include queueing
+//!   under a sustained offered load.
+//!
+//! By default the harness starts in-process servers (the same
+//! `serve::Server` the binary wraps) over a freshly fitted model, once
+//! RAM-resident and once disk-backed through a saved GKMODEL artifact.
+//! Set `$GKM_SERVE_ADDR` to aim the generator at an already-running
+//! external `gkm-serve` instead (what the CI smoke job does): only the
+//! load grid runs, against that one endpoint.
+//!
+//! The batched-vs-unbatched pair at 8 clients is the PR 7 acceptance
+//! gate: micro-batching must deliver ≥ 2× the unbatched QPS there
+//! (asserted by CI over the JSON, and printed here).
+
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use gkmeans::bench_util;
+use gkmeans::data::synth;
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, ModelVectors, RunContext};
+use gkmeans::serve::proto::{stats_value, Client};
+use gkmeans::serve::{ServeConfig, Server, ShardedIndex};
+use gkmeans::util::pool;
+use gkmeans::util::rng::Rng;
+
+const TOPK: usize = 10;
+
+struct Rec {
+    mode: &'static str,
+    backing: String,
+    window_us: u64,
+    max_batch: usize,
+    clients: usize,
+    threads: usize,
+    requests: usize,
+    qps: f64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    batch_mean: f64,
+    cache_hit_rate: f64,
+}
+
+impl Rec {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"mode\":\"{}\",\"backing\":\"{}\",\"window_us\":{},\"max_batch\":{},\
+             \"clients\":{},\"threads\":{},\"requests\":{},\"qps\":{:.1},\
+             \"p50_us\":{:.1},\"p95_us\":{:.1},\"p99_us\":{:.1},\
+             \"batch_mean\":{:.2},\"cache_hit_rate\":{:.4}}}",
+            self.mode,
+            self.backing,
+            self.window_us,
+            self.max_batch,
+            self.clients,
+            self.threads,
+            self.requests,
+            self.qps,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.batch_mean,
+            self.cache_hit_rate
+        )
+    }
+}
+
+fn pct(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)] as f64
+}
+
+/// Run one load configuration; `interval_us = 0` is closed-loop,
+/// otherwise each client fires every `interval_us` (open-loop).
+fn run_load(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    per_client: usize,
+    interval_us: u64,
+    queries: &[Vec<f32>],
+) -> (f64, Vec<u64>) {
+    let barrier = Barrier::new(clients + 1);
+    let mut lats: Vec<Vec<u64>> = Vec::new();
+    let wall = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|tid| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    let mut lat = Vec::with_capacity(per_client);
+                    barrier.wait();
+                    let start = Instant::now();
+                    for i in 0..per_client {
+                        if interval_us > 0 {
+                            // open-loop: hold the arrival schedule even
+                            // when responses run late
+                            let due = Duration::from_micros(interval_us * i as u64);
+                            let now = start.elapsed();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
+                        let q = &queries[(tid * per_client + i) % queries.len()];
+                        let t0 = Instant::now();
+                        c.search(q, TOPK, 0).expect("search");
+                        lat.push(t0.elapsed().as_micros() as u64);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        barrier.wait();
+        let t0 = Instant::now();
+        for h in handles {
+            lats.push(h.join().expect("client thread"));
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    let total = clients * per_client;
+    let mut all: Vec<u64> = lats.into_iter().flatten().collect();
+    all.sort_unstable();
+    (total as f64 / wall, all)
+}
+
+/// Pull batch-size / cache figures from the server's STATS verb.
+fn server_stats(addr: std::net::SocketAddr) -> (f64, f64) {
+    let mut c = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return (0.0, 0.0),
+    };
+    match c.stats() {
+        Ok(s) => (
+            stats_value(&s, "batch_mean").unwrap_or(0.0),
+            stats_value(&s, "cache_hit_rate").unwrap_or(0.0),
+        ),
+        Err(_) => (0.0, 0.0),
+    }
+}
+
+fn measure_grid(
+    addr: std::net::SocketAddr,
+    backing: &str,
+    window_us: u64,
+    max_batch: usize,
+    per_client: usize,
+    queries: &[Vec<f32>],
+    records: &mut Vec<Rec>,
+) {
+    let threads = pool::resolve_threads(0);
+    for &clients in &[1usize, 8] {
+        let (qps, lats) = run_load(addr, clients, per_client, 0, queries);
+        let (batch_mean, cache_hit_rate) = server_stats(addr);
+        println!(
+            "closed {backing:<5} window={window_us:<5}us max_batch={max_batch:<3} \
+             clients={clients} qps={qps:<8.0} p50={:<6.0}us p99={:.0}us batch_mean={batch_mean:.2}",
+            pct(&lats, 0.50),
+            pct(&lats, 0.99),
+        );
+        records.push(Rec {
+            mode: "closed",
+            backing: backing.to_string(),
+            window_us,
+            max_batch,
+            clients,
+            threads,
+            requests: clients * per_client,
+            qps,
+            p50_us: pct(&lats, 0.50),
+            p95_us: pct(&lats, 0.95),
+            p99_us: pct(&lats, 0.99),
+            batch_mean,
+            cache_hit_rate,
+        });
+    }
+    // one open-loop point: 8 clients at a sustainable arrival rate
+    let clients = 8usize;
+    let interval_us = 1500u64;
+    let (qps, lats) = run_load(addr, clients, per_client, interval_us, queries);
+    let (batch_mean, cache_hit_rate) = server_stats(addr);
+    println!(
+        "open   {backing:<5} window={window_us:<5}us max_batch={max_batch:<3} \
+         clients={clients} qps={qps:<8.0} p50={:<6.0}us p99={:.0}us",
+        pct(&lats, 0.50),
+        pct(&lats, 0.99),
+    );
+    records.push(Rec {
+        mode: "open",
+        backing: backing.to_string(),
+        window_us,
+        max_batch,
+        clients,
+        threads,
+        requests: clients * per_client,
+        qps,
+        p50_us: pct(&lats, 0.50),
+        p95_us: pct(&lats, 0.95),
+        p99_us: pct(&lats, 0.99),
+        batch_mean,
+        cache_hit_rate,
+    });
+}
+
+fn main() {
+    bench_util::banner("SERVE", "gkm-serve load: QPS x batch window x clients x RAM/disk");
+    let per_client = if std::env::var("GKMEANS_BENCH_FAST").is_ok() {
+        40
+    } else {
+        bench_util::scaled(150).min(2000)
+    };
+    let mut records: Vec<Rec> = Vec::new();
+
+    // query pool: perturbed indexed rows (dim must match the model)
+    let make_queries = |dim: usize, data: Option<&gkmeans::data::matrix::VecSet>| -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(99);
+        (0..256)
+            .map(|_| match data {
+                Some(d) => {
+                    let r = d.row(rng.below(d.rows()));
+                    r.iter().map(|v| v + 0.1 * rng.normal()).collect()
+                }
+                None => (0..dim).map(|_| rng.normal()).collect(),
+            })
+            .collect()
+    };
+
+    if let Ok(ext) = std::env::var("GKM_SERVE_ADDR") {
+        // external mode: the CI smoke job points us at a live gkm-serve
+        let addr: std::net::SocketAddr = ext.parse().expect("GKM_SERVE_ADDR host:port");
+        let mut probe = Client::connect(addr).expect("connect to GKM_SERVE_ADDR");
+        probe.ping().expect("ping external server");
+        // discover dim from STATS? the protocol doesn't carry it; the
+        // caller passes it explicitly
+        let dim: usize = std::env::var("GKM_SERVE_DIM")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .expect("external mode needs GKM_SERVE_DIM");
+        let queries = make_queries(dim, None);
+        measure_grid(addr, "extern", 0, 0, per_client, &queries, &mut records);
+    } else {
+        // fit once; serve it RAM-resident and disk-backed
+        let n = bench_util::scaled(3000);
+        let data = synth::sift_like(n, 20170707);
+        let backend = bench_util::backend();
+        let k = (n / 100).max(4);
+        let ctx = RunContext::new(&backend).keep_data(true).max_iters(3);
+        println!("fitting serving model (n={n}, k={k})...");
+        let model = GkMeans::new(k).kappa(10).tau(4).fit(&data, &ctx);
+        let art = std::env::temp_dir().join(format!("serve_load_{}.gkm", std::process::id()));
+        model.save(&art).expect("save artifact");
+        let queries = make_queries(data.dim(), Some(&data));
+
+        for (backing, window_us, max_batch) in [
+            ("ram", 0u64, 1usize), // unbatched baseline
+            ("ram", 200, 64),      // the production default
+            ("ram", 1000, 64),     // a wide window
+            ("disk", 0, 1),
+            ("disk", 200, 64),
+        ] {
+            let shard = if backing == "ram" {
+                model.clone()
+            } else {
+                let m = FittedModel::load(&art).expect("load artifact");
+                assert!(
+                    matches!(m.data, Some(ModelVectors::Disk(_))),
+                    "v2 artifact must page vectors from disk"
+                );
+                m
+            };
+            let index = ShardedIndex::new(vec![shard]).expect("index");
+            let cfg = ServeConfig {
+                batch_window: Duration::from_micros(window_us),
+                max_batch,
+                ..ServeConfig::default()
+            };
+            let handle = Server::start(index, &cfg).expect("start server");
+            measure_grid(
+                handle.addr(),
+                backing,
+                window_us,
+                max_batch,
+                per_client,
+                &queries,
+                &mut records,
+            );
+            handle.shutdown();
+        }
+        std::fs::remove_file(&art).ok();
+
+        // the acceptance gate: batched vs unbatched at 8 clients
+        let find = |backing: &str, max_batch: usize, clients: usize| {
+            records
+                .iter()
+                .find(|r| {
+                    r.mode == "closed"
+                        && r.backing == backing
+                        && r.max_batch == max_batch
+                        && r.clients == clients
+                })
+                .map(|r| r.qps)
+        };
+        if let (Some(unbatched), Some(batched)) = (find("ram", 1, 8), find("ram", 64, 8)) {
+            println!(
+                "batched/unbatched QPS at 8 clients (ram): {batched:.0}/{unbatched:.0} = {:.2}x",
+                batched / unbatched
+            );
+        }
+    }
+
+    let lines: Vec<String> = records.iter().map(|r| r.to_json()).collect();
+    let path = std::env::var("GKMEANS_BENCH_SERVE_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_serve.json"));
+    bench_util::write_json_array(&path, &lines).expect("write bench json");
+    println!("wrote {} records to {}", lines.len(), path.display());
+}

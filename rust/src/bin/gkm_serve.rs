@@ -1,0 +1,129 @@
+//! `gkm-serve` — serve one or more GKMODEL artifacts over TCP.
+//!
+//! ```text
+//! gkm-serve model.gkm [more-shards.gkm ...] \
+//!     [--addr 127.0.0.1:7070] [--batch-window-us 200] [--max-batch 64] \
+//!     [--ef 64] [--threads 0] [--max-conns 256] [--heartbeat-s 10] \
+//!     [--resident]
+//! ```
+//!
+//! Several model paths shard one logical index: global ids are assigned
+//! in argument order (shard 0's rows first).  Vectors page from disk by
+//! default (GKMODEL v2 lazy loading); `--resident` materializes them
+//! into RAM at startup.  The process exits cleanly on SIGTERM/SIGINT or
+//! a protocol SHUTDOWN frame.
+
+use std::time::Duration;
+
+use gkmeans::model::{FittedModel, ModelVectors};
+use gkmeans::serve::{install_termination_handler, ServeConfig, Server, ShardedIndex};
+use gkmeans::util::cli;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: gkm-serve MODEL.gkm [SHARD2.gkm ...] [--addr HOST:PORT] \
+         [--batch-window-us N] [--max-batch N] [--ef N] [--threads N] \
+         [--max-conns N] [--heartbeat-s N] [--resident]"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args = cli::parse_env(&[
+        "addr",
+        "model",
+        "batch-window-us",
+        "max-batch",
+        "ef",
+        "threads",
+        "max-conns",
+        "heartbeat-s",
+    ]);
+    // model paths: positionals (plus the subcommand slot, which the
+    // parser claims for a bare first path) and an optional --model
+    let mut paths: Vec<String> = Vec::new();
+    if let Some(sub) = &args.subcommand {
+        paths.push(sub.clone());
+    }
+    paths.extend(args.positionals.iter().cloned());
+    if let Some(m) = args.get("model") {
+        paths.push(m.to_string());
+    }
+    if paths.is_empty() {
+        usage();
+    }
+    let resident = args.flag("resident");
+
+    let mut shards = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let mut model = match FittedModel::load(std::path::Path::new(p)) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("gkm-serve: cannot load {p}: {e}");
+                std::process::exit(1);
+            }
+        };
+        if resident {
+            if let Some(data) = &model.data {
+                model.data = Some(ModelVectors::Ram(data.to_vecset()));
+            }
+        }
+        let backing = match &model.data {
+            Some(d) if d.is_resident() => "resident",
+            Some(_) => "disk",
+            None => "no-vectors (predict only)",
+        };
+        eprintln!(
+            "[gkm-serve] loaded {p}: {} n={} dim={} k={} [{backing}]",
+            model.method.name(),
+            model.n_train,
+            model.dim,
+            model.k
+        );
+        shards.push(model);
+    }
+
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        batch_window: Duration::from_micros(args.u64_or("batch-window-us", 200)),
+        max_batch: args.usize_or("max-batch", 64),
+        default_ef: args.usize_or("ef", 64),
+        threads: args.usize_or("threads", 0),
+        max_conns: args.usize_or("max-conns", 256),
+        heartbeat: match args.u64_or("heartbeat-s", 10) {
+            0 => None,
+            s => Some(Duration::from_secs(s)),
+        },
+    };
+
+    let index = match ShardedIndex::new(shards) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("gkm-serve: {e}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "[gkm-serve] index: {} shards, {} rows, dim {}",
+        index.num_shards(),
+        index.total_rows(),
+        index.dim()
+    );
+
+    install_termination_handler();
+    let handle = match Server::start(index, &cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("gkm-serve: {e}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "[gkm-serve] listening on {} (window {}us, max-batch {})",
+        handle.addr(),
+        cfg.batch_window.as_micros(),
+        cfg.max_batch
+    );
+    handle.wait();
+    eprintln!("[gkm-serve] shutdown complete");
+}

@@ -214,6 +214,57 @@ impl Default for FaultPolicy {
     }
 }
 
+/// Shared hit/miss accounting for a [`ChunkedVecStore`]'s resident-chunk
+/// cache.  The counters live behind `Arc`s, so every cursor of a store
+/// — and of its clones, including the `ModelVectors::Disk` serving path
+/// where each query shard opens its own cursor — feeds one ledger.
+/// A *miss* is one chunk loaded from disk (exactly what the historical
+/// [`ChunkedVecStore::with_read_counter`] test seam counted; that seam
+/// now just installs its counter as the miss counter, so the
+/// instrumentation and the serving metrics are one mechanism); a *hit*
+/// is a chunk access served from the resident cache.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    hits: Arc<AtomicU64>,
+    misses: Arc<AtomicU64>,
+}
+
+impl CacheStats {
+    pub fn new() -> CacheStats {
+        CacheStats::default()
+    }
+
+    /// Chunk accesses served from the resident cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Chunks loaded from disk.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// `hits / (hits + misses)`, or `0.0` before any access.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits(), self.misses());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    #[inline]
+    fn add_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn add_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Test seam for I/O fault injection: consulted once per physical read
 /// attempt *before* the read; returning `Some(err)` fails that attempt
 /// with `err` without touching the file.  Lives on the store (not the
@@ -282,9 +333,9 @@ pub struct ChunkedVecStore {
     /// its clones); opened lazily by the first cursor.  Cursors read at
     /// absolute offsets (positioned I/O), so no seek state is shared.
     handle: Arc<OnceLock<Arc<File>>>,
-    /// Optional chunk-read instrumentation: incremented once per chunk
-    /// loaded from disk, across all cursors sharing this store value.
-    read_counter: Option<Arc<AtomicU64>>,
+    /// Chunk-cache hit/miss ledger shared by every cursor of this store
+    /// value (and of its clones) — see [`CacheStats`].
+    cache_stats: CacheStats,
     /// Retry/backoff policy for transient read failures.
     fault_policy: FaultPolicy,
     /// Fault-injection seam (tests only in practice).
@@ -313,7 +364,7 @@ impl ChunkedVecStore {
             chunk_rows,
             cache_chunks: DEFAULT_CACHE_CHUNKS,
             handle: Arc::new(OnceLock::new()),
-            read_counter: None,
+            cache_stats: CacheStats::new(),
             fault_policy: FaultPolicy::none(),
             fault_hook: None,
         }
@@ -423,9 +474,16 @@ impl ChunkedVecStore {
     /// Install a chunk-read counter: every chunk any cursor of this
     /// store value loads from disk bumps it once.  The locality tests
     /// and the out-of-core bench assert cache behavior through this.
+    /// The counter *is* the [`CacheStats`] miss counter — one mechanism
+    /// feeds both the test seam and the serving metrics.
     pub fn with_read_counter(mut self, counter: Arc<AtomicU64>) -> Self {
-        self.read_counter = Some(counter);
+        self.cache_stats = CacheStats { hits: Arc::new(AtomicU64::new(0)), misses: counter };
         self
+    }
+
+    /// The shared chunk-cache hit/miss ledger (see [`CacheStats`]).
+    pub fn cache_stats(&self) -> &CacheStats {
+        &self.cache_stats
     }
 
     /// Install a retry/backoff policy for transient read failures (the
@@ -527,9 +585,7 @@ impl ChunkedVecStore {
                 }
             }
         }
-        if let Some(c) = &self.read_counter {
-            c.fetch_add(1, Ordering::Relaxed);
-        }
+        self.cache_stats.add_miss();
         let mut out = Vec::with_capacity(nrows * self.dim);
         let stride = self.row_stride as usize;
         let skip = self.row_skip as usize;
@@ -634,6 +690,7 @@ impl ChunkedCursor<'_> {
         self.tick += 1;
         if let Some(s) = self.slots.iter().position(|(ci, _, _)| *ci == c) {
             self.slots[s].1 = self.tick;
+            self.store.cache_stats.add_hit();
             return Ok(s);
         }
         let lo = c * self.store.chunk_rows;
@@ -996,6 +1053,45 @@ mod tests {
             cur.row(35);
         }
         assert!(counter.load(Ordering::Relaxed) > 4);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cache_stats_count_hits_and_misses_across_cursors() {
+        let v = random_set(40, 3, 21);
+        let p = tmp("cstats.bin");
+        write_flat(&p, &v);
+        let store = ChunkedVecStore::open_flat(&p, 3).unwrap().chunk_rows(10).cache_chunks(2);
+        assert_eq!(store.cache_stats().hit_rate(), 0.0, "no accesses yet");
+        // sequential materialize: 4 chunk loads, each followed by 9
+        // same-chunk row hits would be the row-at-a-time pattern; block
+        // reads touch each chunk once → 4 misses
+        assert_eq!(materialize(&store), v);
+        assert_eq!(store.cache_stats().misses(), 4);
+        // re-reading rows of a resident chunk is all hits
+        let mut cur = store.open();
+        let before_hits = store.cache_stats().hits();
+        cur.row(0);
+        cur.row(1);
+        cur.row(2);
+        let s = store.cache_stats();
+        assert!(s.hits() >= before_hits + 2, "resident rereads must hit");
+        assert!(s.hit_rate() > 0.0 && s.hit_rate() < 1.0);
+        // clones share the same ledger (the serving path clones the
+        // store into ModelVectors::Disk and opens cursors per shard)
+        let clone = store.clone();
+        let h0 = store.cache_stats().hits();
+        clone.open().row(0);
+        assert!(store.cache_stats().hits() > h0, "clone accesses feed one ledger");
+        // the legacy read-counter seam is the same miss counter
+        let counter = Arc::new(AtomicU64::new(0));
+        let counted = ChunkedVecStore::open_flat(&p, 3)
+            .unwrap()
+            .chunk_rows(10)
+            .with_read_counter(counter.clone());
+        materialize(&counted);
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+        assert_eq!(counted.cache_stats().misses(), 4);
         std::fs::remove_file(&p).ok();
     }
 

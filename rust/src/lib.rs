@@ -67,6 +67,10 @@
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts;
 //!   the [`runtime::Backend`] enum lets every bulk op run Native or PJRT.
 //! * [`coordinator`] — job specs, the end-to-end pipeline, metrics.
+//! * [`serve`] — production ANN serving: the `gkm-serve` TCP front door
+//!   with micro-batching ([`serve::Batcher`]), shard scatter-gather
+//!   ([`serve::ShardedIndex`]), a dependency-free wire protocol
+//!   ([`serve::proto`]) and live metrics ([`serve::ServeMetrics`]).
 //! * [`eval`] — distortion (Eqn. 4), recall, co-occurrence statistics.
 //! * [`testing`] — in-tree property-based testing mini-framework.
 
@@ -80,6 +84,7 @@ pub mod graph;
 pub mod kmeans;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 
@@ -101,5 +106,6 @@ pub mod prelude {
         Lloyd, MiniBatch, ModelVectors, RunContext,
     };
     pub use crate::runtime::Backend;
+    pub use crate::serve::{Client, ServeConfig, Server, ServerHandle, ShardedIndex};
     pub use crate::util::rng::Rng;
 }

@@ -263,6 +263,16 @@ impl FittedModel {
         }
     }
 
+    /// The chunk-cache hit/miss ledger of a disk-backed model's vectors
+    /// (`None` when the vectors are resident or absent).  The serving
+    /// layer ([`crate::serve`]) exports this through its `STATS` verb.
+    pub fn cache_stats(&self) -> Option<&crate::data::store::CacheStats> {
+        match &self.data {
+            Some(ModelVectors::Disk(c)) => Some(c.cache_stats()),
+            _ => None,
+        }
+    }
+
     /// Final distortion ℰ (from the last history entry).
     pub fn distortion(&self) -> f64 {
         self.history.last().map(|h| h.distortion).unwrap_or(f64::NAN)

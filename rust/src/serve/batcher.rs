@@ -1,0 +1,325 @@
+//! The latency-bounded micro-batcher: the front door that turns many
+//! concurrent single-query connections into the batched kernel calls
+//! ([`FittedModel::search_batch`](crate::model::FittedModel::search_batch))
+//! the engine is actually fast at.
+//!
+//! ## Shape
+//!
+//! Connection workers [`Batcher::submit`] one query each and block; a
+//! single dispatcher thread collects whatever arrives within a window
+//! (`batch_window`, counted from the *first* queued query so an idle
+//! server adds no latency floor) or until `max_batch` queries are
+//! waiting, executes the whole batch with one closure call, and
+//! fulfills every submitter.  Parallelism is *inside* the batch — the
+//! exec closure fans the batch across the model's worker pool — so one
+//! dispatcher never becomes the bottleneck it would be if it executed
+//! queries one at a time.
+//!
+//! ## Fault containment
+//!
+//! The exec closure runs under `catch_unwind`.  A panicking batch (or a
+//! closure returning the wrong number of results — a bug, but not one
+//! worth deadlocking submitters over) resolves every submitter with
+//! `on_panic(message)` instead of hanging them, and the dispatcher
+//! lives on to serve the next batch.  Per-query faults never reach this
+//! guard: the serving exec uses the degraded `try_*` kernels, which
+//! report them as per-query typed errors.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Slot<R> {
+    result: Mutex<Option<R>>,
+    ready: Condvar,
+}
+
+impl<R> Slot<R> {
+    fn new() -> Arc<Slot<R>> {
+        Arc::new(Slot { result: Mutex::new(None), ready: Condvar::new() })
+    }
+
+    fn fulfill(&self, r: R) {
+        *self.result.lock().unwrap() = Some(r);
+        self.ready.notify_one();
+    }
+
+    fn wait(&self) -> R {
+        let mut guard = self.result.lock().unwrap();
+        loop {
+            if let Some(r) = guard.take() {
+                return r;
+            }
+            guard = self.ready.wait(guard).unwrap();
+        }
+    }
+}
+
+struct Job<Q, R> {
+    query: Q,
+    slot: Arc<Slot<R>>,
+}
+
+struct State<Q, R> {
+    jobs: VecDeque<Job<Q, R>>,
+    closed: bool,
+}
+
+struct Shared<Q, R> {
+    state: Mutex<State<Q, R>>,
+    arrived: Condvar,
+}
+
+/// A latency-bounded micro-batcher over an arbitrary batch executor.
+///
+/// Generic so the batching/panic logic is testable without a model:
+/// the server instantiates it with `Q` = decoded request, `R` = wire
+/// response.
+pub struct Batcher<Q: Send + 'static, R: Send + 'static> {
+    shared: Arc<Shared<Q, R>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<Q: Send + 'static, R: Send + 'static> Batcher<Q, R> {
+    /// Start the dispatcher.
+    ///
+    /// * `window` — how long the dispatcher waits after the first query
+    ///   queues before executing an undersized batch (`0` = dispatch
+    ///   immediately with whatever has accumulated).
+    /// * `max_batch` — execute as soon as this many queries wait.
+    /// * `exec` — runs each batch; must return exactly one result per
+    ///   query, in order.
+    /// * `on_panic` — builds the per-query result when `exec` panics or
+    ///   miscounts (the serving layer returns a typed ERROR frame).
+    pub fn new<E, P>(window: Duration, max_batch: usize, exec: E, on_panic: P) -> Batcher<Q, R>
+    where
+        E: Fn(Vec<Q>) -> Vec<R> + Send + 'static,
+        P: Fn(&str) -> R + Send + 'static,
+    {
+        let max_batch = max_batch.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { jobs: VecDeque::new(), closed: false }),
+            arrived: Condvar::new(),
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                Self::dispatch_loop(&shared, window, max_batch, exec, on_panic)
+            })
+        };
+        Batcher { shared, dispatcher: Some(dispatcher) }
+    }
+
+    fn dispatch_loop<E, P>(
+        shared: &Shared<Q, R>,
+        window: Duration,
+        max_batch: usize,
+        exec: E,
+        on_panic: P,
+    ) where
+        E: Fn(Vec<Q>) -> Vec<R>,
+        P: Fn(&str) -> R,
+    {
+        loop {
+            let batch: Vec<Job<Q, R>> = {
+                let mut state = shared.state.lock().unwrap();
+                // sleep until the first query (or shutdown)
+                while state.jobs.is_empty() && !state.closed {
+                    state = shared.arrived.wait(state).unwrap();
+                }
+                if state.jobs.is_empty() && state.closed {
+                    return;
+                }
+                // the window opens at the first queued query
+                let deadline = Instant::now() + window;
+                while state.jobs.len() < max_batch && !state.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (next, timeout) =
+                        shared.arrived.wait_timeout(state, deadline - now).unwrap();
+                    state = next;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                let take = state.jobs.len().min(max_batch);
+                state.jobs.drain(..take).collect()
+            };
+            let (queries, slots): (Vec<Q>, Vec<Arc<Slot<R>>>) =
+                batch.into_iter().map(|j| (j.query, j.slot)).unzip();
+            let n = queries.len();
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec(queries)));
+            match outcome {
+                Ok(results) if results.len() == n => {
+                    for (slot, r) in slots.iter().zip(results) {
+                        slot.fulfill(r);
+                    }
+                }
+                Ok(results) => {
+                    let msg = format!(
+                        "batch executor returned {} results for {n} queries",
+                        results.len()
+                    );
+                    for slot in &slots {
+                        slot.fulfill(on_panic(&msg));
+                    }
+                }
+                Err(payload) => {
+                    let msg = crate::util::pool::panic_message(payload.as_ref());
+                    for slot in &slots {
+                        slot.fulfill(on_panic(&msg));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Queue one query and block until its batch executes.  Called from
+    /// connection workers; safe from any number of threads.
+    pub fn submit(&self, query: Q) -> R {
+        let slot = Slot::new();
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            state.jobs.push_back(Job { query, slot: Arc::clone(&slot) });
+        }
+        self.shared.arrived.notify_all();
+        slot.wait()
+    }
+
+    /// Queries currently waiting for a batch (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+}
+
+impl<Q: Send + 'static, R: Send + 'static> Drop for Batcher<Q, R> {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.arrived.notify_all();
+        if let Some(d) = self.dispatcher.take() {
+            // the dispatcher drains queued jobs before exiting, so no
+            // submitter is left hanging
+            d.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_query_roundtrips() {
+        let b = Batcher::new(
+            Duration::from_millis(1),
+            8,
+            |qs: Vec<u32>| qs.into_iter().map(|q| q * 2).collect(),
+            |e| panic!("unexpected batch failure: {e}"),
+        );
+        assert_eq!(b.submit(21), 42);
+        assert_eq!(b.submit(0), 0);
+    }
+
+    #[test]
+    fn concurrent_submissions_coalesce_and_stay_ordered() {
+        let batches = Arc::new(AtomicUsize::new(0));
+        let bc = Arc::clone(&batches);
+        // a wide window so concurrent submitters land in one batch
+        let b = Arc::new(Batcher::new(
+            Duration::from_millis(50),
+            64,
+            move |qs: Vec<u64>| {
+                bc.fetch_add(1, Ordering::SeqCst);
+                qs.into_iter().map(|q| q + 1000).collect()
+            },
+            |e: &str| panic!("unexpected: {e}"),
+        ));
+        let results: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..16u64)
+                .map(|i| {
+                    let b = Arc::clone(&b);
+                    s.spawn(move || b.submit(i))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // every submitter got *its own* answer, not a neighbor's
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, i as u64 + 1000);
+        }
+        let n = batches.load(Ordering::SeqCst);
+        assert!(n < 16, "16 concurrent submissions ran as {n} batches — nothing coalesced");
+    }
+
+    #[test]
+    fn max_batch_caps_execution_size() {
+        let seen_max = Arc::new(AtomicUsize::new(0));
+        let sm = Arc::clone(&seen_max);
+        let b = Arc::new(Batcher::new(
+            Duration::from_millis(30),
+            3,
+            move |qs: Vec<usize>| {
+                sm.fetch_max(qs.len(), Ordering::SeqCst);
+                qs
+            },
+            |e: &str| panic!("unexpected: {e}"),
+        ));
+        std::thread::scope(|s| {
+            for i in 0..10 {
+                let b = Arc::clone(&b);
+                s.spawn(move || b.submit(i));
+            }
+        });
+        let m = seen_max.load(Ordering::SeqCst);
+        assert!(m <= 3, "batch of {m} exceeded max_batch=3");
+    }
+
+    #[test]
+    fn panicking_executor_fails_the_batch_not_the_batcher() {
+        let b = Batcher::new(
+            Duration::from_millis(1),
+            8,
+            |qs: Vec<i32>| {
+                if qs.contains(&-1) {
+                    panic!("poison query");
+                }
+                qs.into_iter().map(Ok).collect()
+            },
+            |e: &str| Err(e.to_string()),
+        );
+        assert_eq!(b.submit(-1), Err("poison query".to_string()));
+        // the dispatcher survived: the next clean batch still works
+        assert_eq!(b.submit(7), Ok(7));
+    }
+
+    #[test]
+    fn miscounting_executor_is_reported_not_deadlocked() {
+        let b = Batcher::new(
+            Duration::from_millis(1),
+            8,
+            |_qs: Vec<u8>| Vec::<Result<u8, String>>::new(),
+            |e: &str| Err(e.to_string()),
+        );
+        let err = b.submit(1).unwrap_err();
+        assert!(err.contains("0 results for 1"), "got {err}");
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs() {
+        // submit from another thread, drop the batcher promptly: the
+        // submitter must still get an answer, not hang forever
+        let b = Arc::new(Batcher::new(
+            Duration::from_millis(5),
+            4,
+            |qs: Vec<u32>| qs,
+            |e: &str| panic!("unexpected: {e}"),
+        ));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.submit(9));
+        assert_eq!(h.join().unwrap(), 9);
+        drop(b);
+    }
+}

@@ -1,0 +1,236 @@
+//! Serving observability: lock-cheap counters and histograms behind the
+//! `STATS` protocol verb and the periodic stderr heartbeat.
+//!
+//! Everything here is relaxed atomics over
+//! [`Histogram`](crate::coordinator::metrics::Histogram) — recording a
+//! request costs a handful of uncontended `fetch_add`s, so the metrics
+//! layer never shows up in a latency profile.  Snapshots
+//! ([`ServeMetrics::render`]) read the same atomics without stopping
+//! writers, which is why every figure is "as of roughly now" rather than
+//! a consistent cut — exactly what a dashboard needs and no more.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Histogram;
+
+/// The live serving counters one [`super::server::Server`] owns.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    /// Completed requests (any verb that touched the index).
+    requests: AtomicU64,
+    /// Completed PREDICT requests.
+    predicts: AtomicU64,
+    /// Completed SEARCH requests.
+    searches: AtomicU64,
+    /// Requests answered with a typed ERROR frame (degraded rows,
+    /// malformed frames, worker panics).
+    degraded: AtomicU64,
+    /// Requests currently between arrival and response (gauge).
+    in_flight: AtomicU64,
+    /// Connections accepted since start.
+    connections: AtomicU64,
+    /// Per-request latency, microseconds (arrival → response written).
+    pub latency_us: Histogram,
+    /// Executed batch sizes (1 = a query that rode alone).
+    pub batch_size: Histogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            predicts: AtomicU64::new(0),
+            searches: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            latency_us: Histogram::new(),
+            batch_size: Histogram::new(),
+        }
+    }
+
+    /// A query entered the front door.
+    #[inline]
+    pub fn begin(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A query's response hit the socket; `kind` is `"predict"` or
+    /// `"search"`, `ok` is whether it carried a result (vs. ERROR).
+    pub fn finish(&self, kind: RequestKind, ok: bool, latency_us: u64) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match kind {
+            RequestKind::Predict => self.predicts.fetch_add(1, Ordering::Relaxed),
+            RequestKind::Search => self.searches.fetch_add(1, Ordering::Relaxed),
+        };
+        if !ok {
+            self.degraded.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency_us.record(latency_us);
+    }
+
+    /// Count a typed failure that never reached the index (malformed
+    /// frame, dimension mismatch).
+    #[inline]
+    pub fn degraded_only(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count an accepted connection.
+    #[inline]
+    pub fn connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an executed batch's size.
+    #[inline]
+    pub fn batch(&self, size: usize) {
+        self.batch_size.record(size as u64);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Render the `STATS` text: one `key=value` per line, parseable with
+    /// [`super::proto::stats_value`].  `cache` is the aggregated chunk
+    /// -cache ledger of the disk-backed shards, if any.
+    pub fn render(&self, cache: Option<(u64, u64)>) -> String {
+        let uptime = self.uptime_s();
+        let requests = self.requests();
+        let mut out = String::new();
+        let mut line = |k: &str, v: String| {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(&v);
+            out.push('\n');
+        };
+        line("uptime_s", format!("{uptime:.3}"));
+        line("connections", self.connections.load(Ordering::Relaxed).to_string());
+        line("requests", requests.to_string());
+        line("predicts", self.predicts.load(Ordering::Relaxed).to_string());
+        line("searches", self.searches.load(Ordering::Relaxed).to_string());
+        line("degraded", self.degraded().to_string());
+        line("in_flight", self.in_flight().to_string());
+        line("qps", format!("{:.2}", if uptime > 0.0 { requests as f64 / uptime } else { 0.0 }));
+        let pct = |p: f64| {
+            let v = self.latency_us.percentile(p);
+            if v.is_nan() { "0".to_string() } else { format!("{v:.1}") }
+        };
+        line("lat_p50_us", pct(0.50));
+        line("lat_p95_us", pct(0.95));
+        line("lat_p99_us", pct(0.99));
+        let mean = self.latency_us.mean();
+        line("lat_mean_us", if mean.is_nan() { "0".into() } else { format!("{mean:.1}") });
+        line("lat_max_us", self.latency_us.max().to_string());
+        line("batches", self.batch_size.count().to_string());
+        let bmean = self.batch_size.mean();
+        line("batch_mean", if bmean.is_nan() { "0".into() } else { format!("{bmean:.2}") });
+        line("batch_max", self.batch_size.max().to_string());
+        if let Some((hits, misses)) = cache {
+            let total = hits + misses;
+            line("cache_hits", hits.to_string());
+            line("cache_misses", misses.to_string());
+            line(
+                "cache_hit_rate",
+                format!("{:.4}", if total > 0 { hits as f64 / total as f64 } else { 0.0 }),
+            );
+        }
+        out
+    }
+
+    /// One-line summary for the periodic stderr heartbeat.
+    pub fn heartbeat_line(&self, cache: Option<(u64, u64)>) -> String {
+        let uptime = self.uptime_s();
+        let requests = self.requests();
+        let qps = if uptime > 0.0 { requests as f64 / uptime } else { 0.0 };
+        let p50 = self.latency_us.percentile(0.50);
+        let p99 = self.latency_us.percentile(0.99);
+        let mut s = format!(
+            "[gkm-serve] up {uptime:.0}s req {requests} qps {qps:.1} \
+             p50 {:.0}us p99 {:.0}us in-flight {} degraded {}",
+            if p50.is_nan() { 0.0 } else { p50 },
+            if p99.is_nan() { 0.0 } else { p99 },
+            self.in_flight(),
+            self.degraded(),
+        );
+        if let Some((h, m)) = cache {
+            let total = h + m;
+            let rate = if total > 0 { h as f64 / total as f64 } else { 0.0 };
+            s.push_str(&format!(" cache {:.1}%", rate * 100.0));
+        }
+        s
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
+}
+
+/// Which serving verb a completed request was (for per-verb counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    Predict,
+    Search,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::proto::stats_value;
+
+    #[test]
+    fn render_reports_counts_and_percentiles() {
+        let m = ServeMetrics::new();
+        for i in 0..50u64 {
+            m.begin();
+            m.finish(RequestKind::Search, true, 100 + i);
+        }
+        m.begin();
+        m.finish(RequestKind::Predict, false, 10_000);
+        m.batch(8);
+        m.batch(1);
+        let s = m.render(Some((90, 10)));
+        assert_eq!(stats_value(&s, "requests"), Some(51.0));
+        assert_eq!(stats_value(&s, "searches"), Some(50.0));
+        assert_eq!(stats_value(&s, "predicts"), Some(1.0));
+        assert_eq!(stats_value(&s, "degraded"), Some(1.0));
+        assert_eq!(stats_value(&s, "in_flight"), Some(0.0));
+        assert_eq!(stats_value(&s, "batches"), Some(2.0));
+        assert_eq!(stats_value(&s, "cache_hit_rate"), Some(0.9));
+        let p50 = stats_value(&s, "lat_p50_us").unwrap();
+        assert!(p50 > 0.0, "p50 must be nonzero after recording: {s}");
+        let p99 = stats_value(&s, "lat_p99_us").unwrap();
+        assert!(p99 >= p50);
+        assert!(stats_value(&s, "qps").unwrap() >= 0.0);
+        assert!(!m.heartbeat_line(Some((90, 10))).is_empty());
+    }
+
+    #[test]
+    fn empty_metrics_render_zeros_not_nans() {
+        let m = ServeMetrics::new();
+        let s = m.render(None);
+        assert_eq!(stats_value(&s, "requests"), Some(0.0));
+        assert_eq!(stats_value(&s, "lat_p50_us"), Some(0.0));
+        assert_eq!(stats_value(&s, "batch_mean"), Some(0.0));
+        assert_eq!(stats_value(&s, "cache_hits"), None, "no cache section without a ledger");
+    }
+}

@@ -1,0 +1,37 @@
+//! Production ANN serving: the `gkm-serve` subsystem.
+//!
+//! A fitted GKMODEL artifact is already a *servable* index — centroids
+//! for `predict`, a KNN graph plus (RAM- or disk-resident) vectors for
+//! `search`.  This module turns one or more of them into a network
+//! service without adding a single dependency:
+//!
+//! * [`proto`] — the length-prefixed binary wire protocol and the
+//!   blocking [`Client`](proto::Client) everything speaks it with.
+//! * [`batcher`] — the latency-bounded micro-batcher that coalesces
+//!   concurrent single-query connections into the batched kernels
+//!   ([`FittedModel::search_batch`](crate::model::FittedModel::search_batch))
+//!   the engine is actually fast at.
+//! * [`shard`] — one logical index fanned across several artifacts,
+//!   with deterministic scatter-gather top-k merging.
+//! * [`metrics`] — lock-cheap serving counters/histograms behind the
+//!   `STATS` verb and the stderr heartbeat.
+//! * [`server`] — the TCP front door tying the above together, with
+//!   panic-contained connection workers and signal-driven shutdown.
+//!
+//! The `gkm-serve` binary (`rust/src/bin/gkm_serve.rs`) is a thin CLI
+//! over [`server::Server::start`]; the `serve_load` bench drives it
+//! over loopback and emits `BENCH_serve.json`.
+
+pub mod batcher;
+pub mod metrics;
+pub mod proto;
+pub mod server;
+pub mod shard;
+
+pub use batcher::Batcher;
+pub use metrics::{RequestKind, ServeMetrics};
+pub use proto::{Client, Request, Response};
+pub use server::{
+    install_termination_handler, termination_requested, ServeConfig, Server, ServerHandle,
+};
+pub use shard::ShardedIndex;

@@ -1,0 +1,531 @@
+//! The `gkm-serve` wire protocol: dependency-free, length-prefixed
+//! binary frames over TCP, plus the blocking [`Client`] every consumer
+//! (the `serve_load` load generator, `examples/ann_service.rs`, tests)
+//! speaks it with.
+//!
+//! ## Framing
+//!
+//! Every message — request or response — is one frame:
+//!
+//! ```text
+//! [u32 LE payload length][payload bytes]
+//! ```
+//!
+//! A payload longer than [`MAX_FRAME`] is rejected *before* any
+//! allocation: the server answers with a typed error frame and closes
+//! the connection (a desynced peer cannot be trusted to frame the next
+//! message correctly).  All integers are little-endian; vectors are raw
+//! `f32` components.
+//!
+//! ## Requests (first payload byte = verb)
+//!
+//! | verb | name     | body                                            |
+//! |------|----------|-------------------------------------------------|
+//! | 1    | PREDICT  | `u32 dim`, `dim × f32` query                    |
+//! | 2    | SEARCH   | `u32 topk`, `u32 ef` (0 = server default), `u32 dim`, `dim × f32` |
+//! | 3    | STATS    | (empty) — serving metrics as `key=value` lines  |
+//! | 4    | PING     | (empty)                                         |
+//! | 5    | SHUTDOWN | (empty) — graceful server stop (tests/benches)  |
+//!
+//! ## Responses (first payload byte = tag)
+//!
+//! | tag | name  | body                                      |
+//! |-----|-------|-------------------------------------------|
+//! | 0   | LABEL | `u32` cluster label                       |
+//! | 1   | HITS  | `u32 count`, `count × (u32 id, f32 d²)`   |
+//! | 2   | TEXT  | UTF-8 text (STATS payload)                |
+//! | 3   | PONG  | (empty)                                   |
+//! | 4   | ERROR | UTF-8 message                             |
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Hard cap on one frame's payload (16 MiB): large enough for a
+/// [`MAX_QUERY_DIM`]-component query, small enough that a garbage
+/// length prefix cannot OOM the server.
+pub const MAX_FRAME: u32 = 16 << 20;
+
+/// Sanity cap on query dimensionality (matches the store layer's cap).
+pub const MAX_QUERY_DIM: usize = 1 << 20;
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Nearest-centroid assignment for one query vector.
+    Predict { query: Vec<f32> },
+    /// Graph-ANN top-`topk` search; `ef = 0` means the server default.
+    Search { query: Vec<f32>, topk: u32, ef: u32 },
+    /// Serving metrics snapshot.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Graceful server stop.
+    Shutdown,
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// PREDICT result.
+    Label(u32),
+    /// SEARCH result: ascending-distance `(id, d²)` pairs (global ids
+    /// when the server shards).
+    Hits(Vec<(u32, f32)>),
+    /// STATS text.
+    Text(String),
+    /// PING reply.
+    Pong,
+    /// Typed failure: the request was understood to be broken, or the
+    /// query could not be served (degraded row, worker panic, …).
+    Error(String),
+}
+
+const VERB_PREDICT: u8 = 1;
+const VERB_SEARCH: u8 = 2;
+const VERB_STATS: u8 = 3;
+const VERB_PING: u8 = 4;
+const VERB_SHUTDOWN: u8 = 5;
+
+const TAG_LABEL: u8 = 0;
+const TAG_HITS: u8 = 1;
+const TAG_TEXT: u8 = 2;
+const TAG_PONG: u8 = 3;
+const TAG_ERROR: u8 = 4;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Byte-stream reader with bounds checking (every decode error is a
+/// `String` the server can echo back as a typed ERROR frame).
+struct Take<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Take<'a> {
+    fn new(buf: &'a [u8]) -> Take<'a> {
+        Take { buf, pos: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        let b = *self.buf.get(self.pos).ok_or("truncated frame")?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let end = self.pos + 4;
+        if end > self.buf.len() {
+            return Err("truncated frame".into());
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let need = n.checked_mul(4).ok_or("vector length overflows")?;
+        if self.pos + need > self.buf.len() {
+            return Err("truncated frame".into());
+        }
+        let mut out = Vec::with_capacity(n);
+        for c in self.buf[self.pos..self.pos + need].chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        self.pos += need;
+        Ok(out)
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let r = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        r
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after message", self.buf.len() - self.pos))
+        }
+    }
+}
+
+fn check_dim(dim: u32) -> Result<usize, String> {
+    let d = dim as usize;
+    if d == 0 || d > MAX_QUERY_DIM {
+        return Err(format!("implausible query dim {d}"));
+    }
+    Ok(d)
+}
+
+/// Encode a request payload (no length prefix — [`write_frame`] adds it).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Predict { query } => {
+            out.push(VERB_PREDICT);
+            put_u32(&mut out, query.len() as u32);
+            for &v in query {
+                put_f32(&mut out, v);
+            }
+        }
+        Request::Search { query, topk, ef } => {
+            out.push(VERB_SEARCH);
+            put_u32(&mut out, *topk);
+            put_u32(&mut out, *ef);
+            put_u32(&mut out, query.len() as u32);
+            for &v in query {
+                put_f32(&mut out, v);
+            }
+        }
+        Request::Stats => out.push(VERB_STATS),
+        Request::Ping => out.push(VERB_PING),
+        Request::Shutdown => out.push(VERB_SHUTDOWN),
+    }
+    out
+}
+
+/// Decode a request payload.  Every failure names what was wrong — the
+/// server echoes it back as a typed ERROR frame before closing.
+pub fn decode_request(payload: &[u8]) -> Result<Request, String> {
+    let mut t = Take::new(payload);
+    let req = match t.u8().map_err(|_| "empty frame")? {
+        VERB_PREDICT => {
+            let dim = check_dim(t.u32()?)?;
+            Request::Predict { query: t.f32s(dim)? }
+        }
+        VERB_SEARCH => {
+            let topk = t.u32()?;
+            if topk == 0 {
+                return Err("topk must be positive".into());
+            }
+            let ef = t.u32()?;
+            let dim = check_dim(t.u32()?)?;
+            Request::Search { query: t.f32s(dim)?, topk, ef }
+        }
+        VERB_STATS => Request::Stats,
+        VERB_PING => Request::Ping,
+        VERB_SHUTDOWN => Request::Shutdown,
+        v => return Err(format!("unknown request verb {v}")),
+    };
+    t.done()?;
+    Ok(req)
+}
+
+/// Encode a response payload (no length prefix).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Response::Label(l) => {
+            out.push(TAG_LABEL);
+            put_u32(&mut out, *l);
+        }
+        Response::Hits(hits) => {
+            out.push(TAG_HITS);
+            put_u32(&mut out, hits.len() as u32);
+            for &(id, d) in hits {
+                put_u32(&mut out, id);
+                put_f32(&mut out, d);
+            }
+        }
+        Response::Text(s) => {
+            out.push(TAG_TEXT);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Response::Pong => out.push(TAG_PONG),
+        Response::Error(msg) => {
+            out.push(TAG_ERROR);
+            out.extend_from_slice(msg.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a response payload.
+pub fn decode_response(payload: &[u8]) -> Result<Response, String> {
+    let mut t = Take::new(payload);
+    let resp = match t.u8().map_err(|_| "empty frame")? {
+        TAG_LABEL => Response::Label(t.u32()?),
+        TAG_HITS => {
+            let n = t.u32()? as usize;
+            if n > MAX_FRAME as usize / 8 {
+                return Err(format!("implausible hit count {n}"));
+            }
+            let mut hits = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                let id = t.u32()?;
+                let d = t.f32()?;
+                hits.push((id, d));
+            }
+            Response::Hits(hits)
+        }
+        TAG_TEXT => Response::Text(String::from_utf8_lossy(t.rest()).into_owned()),
+        TAG_PONG => Response::Pong,
+        TAG_ERROR => Response::Error(String::from_utf8_lossy(t.rest()).into_owned()),
+        v => return Err(format!("unknown response tag {v}")),
+    };
+    t.done()?;
+    Ok(resp)
+}
+
+/// Whether an I/O error is a read-timeout tick (the server polls with
+/// a read timeout so idle connections can observe shutdown).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one frame.  `Ok(None)` = clean EOF before a length prefix (the
+/// peer hung up between requests).  A length prefix above [`MAX_FRAME`]
+/// fails with `ErrorKind::InvalidData` *without reading the body* — the
+/// caller answers with a typed error and closes.
+///
+/// A read timeout (`WouldBlock`/`TimedOut`) surfaces as `Err` only when
+/// it hits *before any byte* of the length prefix — an idle-poll tick
+/// the server uses to check its shutdown flag.  Mid-frame timeouts
+/// retry, so a slow sender cannot desync the stream.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // distinguish clean EOF (no bytes at all) from a truncated prefix
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-frame (length prefix)",
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) && got > 0 => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut filled = 0;
+    while filled < payload.len() {
+        match r.read(&mut payload[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame (payload)",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted || is_timeout(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME as usize);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Blocking client for one `gkm-serve` connection.  One request is in
+/// flight at a time (the server answers in order); open several clients
+/// for concurrency — that is exactly what the micro-batcher coalesces.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a serving address (`host:port`).
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response, String> {
+        let payload = encode_request(req);
+        write_frame(&mut self.stream, &payload).map_err(|e| format!("send: {e}"))?;
+        let resp = read_frame(&mut self.stream)
+            .map_err(|e| format!("recv: {e}"))?
+            .ok_or("server closed the connection")?;
+        decode_response(&resp)
+    }
+
+    /// Nearest-centroid label for `query`.
+    pub fn predict(&mut self, query: &[f32]) -> Result<u32, String> {
+        match self.roundtrip(&Request::Predict { query: query.to_vec() })? {
+            Response::Label(l) => Ok(l),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Top-`topk` ANN hits for `query` (`ef = 0` → server default).
+    /// Returns ascending-distance `(id, d²)` pairs.
+    pub fn search(
+        &mut self,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+    ) -> Result<Vec<(u32, f32)>, String> {
+        let req = Request::Search { query: query.to_vec(), topk: topk as u32, ef: ef as u32 };
+        match self.roundtrip(&req)? {
+            Response::Hits(h) => Ok(h),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Serving metrics snapshot (`key=value` lines).
+    pub fn stats(&mut self) -> Result<String, String> {
+        match self.roundtrip(&Request::Stats)? {
+            Response::Text(s) => Ok(s),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), String> {
+        match self.roundtrip(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Ask the server to stop accepting, drain, and exit.
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        match self.roundtrip(&Request::Shutdown)? {
+            Response::Pong => Ok(()),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+}
+
+/// Parse one `key=value` line out of a STATS text blob (convenience for
+/// benches/CI scripts asserting on specific metrics).
+pub fn stats_value(stats: &str, key: &str) -> Option<f64> {
+    for line in stats.lines() {
+        if let Some((k, v)) = line.split_once('=') {
+            if k.trim() == key {
+                return v.trim().parse().ok();
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Predict { query: vec![1.0, -2.5, 3.25] },
+            Request::Search { query: vec![0.5; 7], topk: 10, ef: 64 },
+            Request::Stats,
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for req in &reqs {
+            let bytes = encode_request(req);
+            assert_eq!(&decode_request(&bytes).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = [
+            Response::Label(7),
+            Response::Hits(vec![(3, 0.25), (9, 1.5)]),
+            Response::Hits(Vec::new()),
+            Response::Text("qps=100\np50_us=42".into()),
+            Response::Pong,
+            Response::Error("query dim 3 != model dim 8".into()),
+        ];
+        for resp in &resps {
+            let bytes = encode_response(resp);
+            assert_eq!(&decode_response(&bytes).unwrap(), resp, "{resp:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_errors() {
+        assert!(decode_request(&[]).is_err(), "empty");
+        assert!(decode_request(&[99]).is_err(), "unknown verb");
+        // PREDICT claiming 5 components but carrying 1
+        let mut bad = vec![1u8];
+        bad.extend(5u32.to_le_bytes());
+        bad.extend(1.0f32.to_le_bytes());
+        assert!(decode_request(&bad).unwrap_err().contains("truncated"));
+        // implausible dim
+        let mut huge = vec![1u8];
+        huge.extend(u32::MAX.to_le_bytes());
+        assert!(decode_request(&huge).unwrap_err().contains("implausible"));
+        // zero topk
+        let mut zk = vec![2u8];
+        zk.extend(0u32.to_le_bytes());
+        zk.extend(0u32.to_le_bytes());
+        zk.extend(1u32.to_le_bytes());
+        zk.extend(1.0f32.to_le_bytes());
+        assert!(decode_request(&zk).unwrap_err().contains("topk"));
+        // trailing garbage after a valid PING
+        assert!(decode_request(&[4u8, 0, 0]).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_oversize_rejection() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+        // a hostile length prefix is rejected without allocating
+        let mut hostile = std::io::Cursor::new((u32::MAX).to_le_bytes().to_vec());
+        let err = read_frame(&mut hostile).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // a truncated length prefix is UnexpectedEof, not a clean None
+        let mut trunc = std::io::Cursor::new(vec![1u8, 0]);
+        assert_eq!(read_frame(&mut trunc).unwrap_err().kind(), std::io::ErrorKind::UnexpectedEof);
+        // a truncated body is UnexpectedEof
+        let mut body = Vec::new();
+        body.extend(10u32.to_le_bytes());
+        body.extend([1u8, 2, 3]);
+        let mut body = std::io::Cursor::new(body);
+        assert_eq!(read_frame(&mut body).unwrap_err().kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn stats_value_parses_lines() {
+        let s = "uptime_s=1.5\nqps=250\ncache_hit_rate=0.93\n";
+        assert_eq!(stats_value(s, "qps"), Some(250.0));
+        assert_eq!(stats_value(s, "cache_hit_rate"), Some(0.93));
+        assert_eq!(stats_value(s, "missing"), None);
+    }
+}

@@ -1,0 +1,602 @@
+//! The `gkm-serve` server: a dependency-free TCP front door wiring the
+//! protocol ([`super::proto`]), the micro-batcher ([`super::batcher`]),
+//! the shard fan-out ([`super::shard`]) and the metrics layer
+//! ([`super::metrics`]) into one process.
+//!
+//! ## Data flow
+//!
+//! ```text
+//! client ── frame ──► connection thread ── submit ──► Batcher queue
+//!                        ▲                               │ window / max_batch
+//!                        │                               ▼
+//!                     response ◄── scatter ◄── exec: group by (topk, ef)
+//!                                                ├─ ShardedIndex::search_batch
+//!                                                └─ ShardedIndex::predict_batch
+//! ```
+//!
+//! One acceptor thread hands each connection its own worker thread
+//! (bounded by [`ServeConfig::max_conns`]); workers block in
+//! [`Batcher::submit`], so concurrency across connections is recovered
+//! *inside* the batch by the model's thread pool — the design that
+//! makes batched throughput beat one-at-a-time dispatch.
+//!
+//! ## Fault containment
+//!
+//! Each connection loop runs under `catch_unwind` (the PR 6 panic-safe
+//! worker idiom): a handler panic closes that connection and nothing
+//! else.  Malformed frames get typed ERROR responses; an oversized
+//! length prefix closes the connection (the stream can no longer be
+//! trusted to be framed).  Per-query faults degrade through the
+//! `try_*` kernels and arrive as ERROR frames, counted in
+//! `degraded`.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::matrix::VecSet;
+use crate::gkm::ann::SearchParams;
+use crate::runtime::{RtError, RtResult};
+use crate::serve::batcher::Batcher;
+use crate::serve::metrics::{RequestKind, ServeMetrics};
+use crate::serve::proto::{self, Request, Response};
+use crate::serve::shard::ShardedIndex;
+
+/// Process-wide termination flag set by SIGTERM/SIGINT (see
+/// [`install_termination_handler`]) and by the SHUTDOWN verb's server.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+/// Install a SIGTERM/SIGINT handler that flips the process-wide
+/// termination flag, without any signal-handling dependency: `signal`
+/// is declared by hand (libc is linked anyway on unix) and the handler
+/// only stores to an atomic — the async-signal-safe subset.
+/// [`ServerHandle::wait`] observes the flag and drains.
+#[cfg(unix)]
+pub fn install_termination_handler() {
+    unsafe extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_term as unsafe extern "C" fn(i32) as usize;
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_termination_handler() {}
+
+/// Whether process-wide termination was requested (signal or SHUTDOWN).
+pub fn termination_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}
+
+/// Serving knobs (every one surfaced as a `gkm-serve` CLI flag).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 = ephemeral, for tests).
+    pub addr: String,
+    /// Micro-batch window: how long the dispatcher holds the first
+    /// queued query open for company (0 = dispatch immediately).
+    pub batch_window: Duration,
+    /// Execute as soon as this many queries wait (1 = no batching).
+    pub max_batch: usize,
+    /// `ef` used when a SEARCH frame passes 0.
+    pub default_ef: usize,
+    /// Override every shard's worker-thread preference (0 = keep what
+    /// the artifacts carry).
+    pub threads: usize,
+    /// Concurrent-connection cap (each connection is one thread).
+    pub max_conns: usize,
+    /// Stderr heartbeat period (None = silent).
+    pub heartbeat: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batch_window: Duration::from_micros(200),
+            max_batch: 64,
+            default_ef: 64,
+            threads: 0,
+            max_conns: 256,
+            heartbeat: None,
+        }
+    }
+}
+
+/// The queries the batcher coalesces (R = wire [`Response`]).
+enum Work {
+    Predict(Vec<f32>),
+    Search { query: Vec<f32>, topk: usize, ef: usize },
+}
+
+struct Inner {
+    index: Arc<ShardedIndex>,
+    metrics: Arc<ServeMetrics>,
+    batcher: Batcher<Work, Response>,
+    shutdown: AtomicBool,
+    active_conns: AtomicUsize,
+    dim: usize,
+}
+
+impl Inner {
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || termination_requested()
+    }
+}
+
+/// A running server.  Dropping the handle does *not* stop it — call
+/// [`ServerHandle::shutdown`] (tests) or [`ServerHandle::wait`]
+/// (the binary, which exits on SIGTERM/SHUTDOWN).
+pub struct Server;
+
+pub struct ServerHandle {
+    addr: SocketAddr,
+    inner: Arc<Inner>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    heartbeat: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Execute one coalesced batch against the index: predicts ride
+/// together, searches group by `(topk, ef)` so each group is one
+/// batched kernel call, and results scatter back in submit order.
+fn exec_batch(
+    index: &ShardedIndex,
+    metrics: &ServeMetrics,
+    seed: u64,
+    default_ef: usize,
+    batch: Vec<Work>,
+) -> Vec<Response> {
+    metrics.batch(batch.len());
+    let dim = index.dim();
+    let mut out: Vec<Option<Response>> = (0..batch.len()).map(|_| None).collect();
+
+    let mut predict_idx: Vec<usize> = Vec::new();
+    let mut predict_flat: Vec<f32> = Vec::new();
+    // (topk, ef) -> (original indices, flat queries)
+    let mut groups: Vec<((usize, usize), Vec<usize>, Vec<f32>)> = Vec::new();
+    for (i, w) in batch.into_iter().enumerate() {
+        match w {
+            Work::Predict(q) => {
+                predict_idx.push(i);
+                predict_flat.extend_from_slice(&q);
+            }
+            Work::Search { query, topk, ef } => {
+                let ef = if ef == 0 { default_ef } else { ef }.max(topk);
+                let key = (topk, ef);
+                match groups.iter_mut().find(|(k, _, _)| *k == key) {
+                    Some((_, idx, flat)) => {
+                        idx.push(i);
+                        flat.extend_from_slice(&query);
+                    }
+                    None => groups.push((key, vec![i], query)),
+                }
+            }
+        }
+    }
+
+    if !predict_idx.is_empty() {
+        let queries = VecSet::from_flat(dim, predict_flat);
+        match index.predict_batch(&queries) {
+            Ok(rows) => {
+                for (&i, row) in predict_idx.iter().zip(rows) {
+                    out[i] = Some(match row {
+                        Ok(label) => Response::Label(label),
+                        Err(e) => Response::Error(e),
+                    });
+                }
+            }
+            Err(e) => {
+                for &i in &predict_idx {
+                    out[i] = Some(Response::Error(e.to_string()));
+                }
+            }
+        }
+    }
+
+    for ((topk, ef), idx, flat) in groups {
+        let queries = VecSet::from_flat(dim, flat);
+        let params = SearchParams { ef, seed, ..SearchParams::default() };
+        match index.search_batch(&queries, topk, &params) {
+            Ok(rows) => {
+                for (&i, row) in idx.iter().zip(rows) {
+                    out[i] = Some(match row {
+                        Ok(hits) => {
+                            Response::Hits(hits.into_iter().map(|(d, id)| (id, d)).collect())
+                        }
+                        Err(e) => Response::Error(e),
+                    });
+                }
+            }
+            Err(e) => {
+                for &i in &idx {
+                    out[i] = Some(Response::Error(e.to_string()));
+                }
+            }
+        }
+    }
+
+    out.into_iter()
+        .map(|r| r.unwrap_or_else(|| Response::Error("internal: query lost in batch".into())))
+        .collect()
+}
+
+/// Serve one connection until it closes, errors, or shutdown drains it.
+fn handle_conn(inner: &Inner, mut stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    // the read timeout is the shutdown poll period for idle connections
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    loop {
+        if inner.stopping() {
+            return;
+        }
+        let payload = match proto::read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean EOF between requests
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // idle poll tick — recheck shutdown
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // hostile length prefix: answer typed, then drop the
+                // stream — it can no longer be trusted to be framed
+                inner.metrics.degraded_only();
+                let resp = proto::encode_response(&Response::Error(e.to_string()));
+                proto::write_frame(&mut stream, &resp).ok();
+                return;
+            }
+            Err(_) => return, // mid-frame disconnect or transport error
+        };
+        let req = match proto::decode_request(&payload) {
+            Ok(r) => r,
+            Err(msg) => {
+                // framing was intact, the payload was junk: typed error,
+                // connection stays usable
+                inner.metrics.degraded_only();
+                let resp = proto::encode_response(&Response::Error(format!("bad request: {msg}")));
+                if proto::write_frame(&mut stream, &resp).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let response = match req {
+            Request::Ping => Response::Pong,
+            Request::Stats => Response::Text(inner.metrics.render(inner.index.cache_totals())),
+            Request::Shutdown => {
+                inner.shutdown.store(true, Ordering::SeqCst);
+                let resp = proto::encode_response(&Response::Pong);
+                proto::write_frame(&mut stream, &resp).ok();
+                return;
+            }
+            Request::Predict { query } => {
+                if query.len() != inner.dim {
+                    inner.metrics.degraded_only();
+                    Response::Error(format!(
+                        "query dim {} != index dim {}",
+                        query.len(),
+                        inner.dim
+                    ))
+                } else {
+                    inner.metrics.begin();
+                    let t0 = Instant::now();
+                    let r = inner.batcher.submit(Work::Predict(query));
+                    let ok = !matches!(r, Response::Error(_));
+                    inner.metrics.finish(RequestKind::Predict, ok, t0.elapsed().as_micros() as u64);
+                    r
+                }
+            }
+            Request::Search { query, topk, ef } => {
+                if query.len() != inner.dim {
+                    inner.metrics.degraded_only();
+                    Response::Error(format!(
+                        "query dim {} != index dim {}",
+                        query.len(),
+                        inner.dim
+                    ))
+                } else {
+                    inner.metrics.begin();
+                    let t0 = Instant::now();
+                    let r = inner.batcher.submit(Work::Search {
+                        query,
+                        topk: topk as usize,
+                        ef: ef as usize,
+                    });
+                    let ok = !matches!(r, Response::Error(_));
+                    inner.metrics.finish(RequestKind::Search, ok, t0.elapsed().as_micros() as u64);
+                    r
+                }
+            }
+        };
+        let resp = proto::encode_response(&response);
+        if proto::write_frame(&mut stream, &resp).is_err() {
+            // the client left mid-response; the batcher already ran, so
+            // nothing is poisoned — just close
+            return;
+        }
+    }
+}
+
+impl Server {
+    /// Bind, spawn the batcher/acceptor/heartbeat, and return a handle.
+    pub fn start(mut index: ShardedIndex, cfg: &ServeConfig) -> RtResult<ServerHandle> {
+        if cfg.threads > 0 {
+            // override the worker-thread preference the artifacts carry
+            for m in index.shards_mut() {
+                m.threads = cfg.threads;
+            }
+        }
+        let index = Arc::new(index);
+        let metrics = Arc::new(ServeMetrics::new());
+        let (bi, bm) = (Arc::clone(&index), Arc::clone(&metrics));
+        let default_ef = cfg.default_ef.max(1);
+        let seed = SearchParams::default().seed;
+        let batcher = Batcher::new(
+            cfg.batch_window,
+            cfg.max_batch,
+            move |batch| exec_batch(&bi, &bm, seed, default_ef, batch),
+            |msg| Response::Error(format!("batch failed: {msg}")),
+        );
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| RtError::msg(format!("bind {}: {e}", cfg.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| RtError::msg(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| RtError::msg(format!("set_nonblocking: {e}")))?;
+
+        let dim = index.dim();
+        let inner = Arc::new(Inner {
+            index,
+            metrics,
+            batcher,
+            shutdown: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            dim,
+        });
+
+        let max_conns = cfg.max_conns.max(1);
+        let acceptor = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || {
+                while !inner.stopping() {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // honor the connection cap before spawning
+                            while inner.active_conns.load(Ordering::SeqCst) >= max_conns
+                                && !inner.stopping()
+                            {
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            if inner.stopping() {
+                                return;
+                            }
+                            inner.metrics.connection();
+                            inner.active_conns.fetch_add(1, Ordering::SeqCst);
+                            let conn_inner = Arc::clone(&inner);
+                            std::thread::spawn(move || {
+                                // a handler panic closes this connection
+                                // only — the PR 6 panic-safe worker idiom
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        handle_conn(&conn_inner, stream)
+                                    }),
+                                );
+                                if r.is_err() {
+                                    conn_inner.metrics.degraded_only();
+                                }
+                                conn_inner.active_conns.fetch_sub(1, Ordering::SeqCst);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })
+        };
+
+        let heartbeat = cfg.heartbeat.map(|period| {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || {
+                let mut last = Instant::now();
+                while !inner.stopping() {
+                    std::thread::sleep(Duration::from_millis(50));
+                    if last.elapsed() >= period {
+                        eprintln!(
+                            "{}",
+                            inner.metrics.heartbeat_line(inner.index.cache_totals())
+                        );
+                        last = Instant::now();
+                    }
+                }
+            })
+        });
+
+        Ok(ServerHandle { addr, inner, acceptor: Some(acceptor), heartbeat })
+    }
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live serving metrics (shared with the worker threads).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.inner.metrics)
+    }
+
+    /// The served index (read-only; for tests and config echo).
+    pub fn index(&self) -> Arc<ShardedIndex> {
+        Arc::clone(&self.inner.index)
+    }
+
+    /// Whether the server has begun stopping (SHUTDOWN verb, signal, or
+    /// [`ServerHandle::shutdown`]).
+    pub fn stopping(&self) -> bool {
+        self.inner.stopping()
+    }
+
+    fn drain(&mut self) {
+        if let Some(a) = self.acceptor.take() {
+            a.join().ok();
+        }
+        if let Some(h) = self.heartbeat.take() {
+            h.join().ok();
+        }
+        // connection threads observe the flag within one read-timeout
+        // tick; give them a bounded drain window
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.inner.active_conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Stop accepting, drain connections, and join the service threads.
+    pub fn shutdown(mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.drain();
+    }
+
+    /// Block until shutdown is requested (SHUTDOWN verb or signal),
+    /// then drain.  This is the binary's main loop.
+    pub fn wait(mut self) {
+        while !self.inner.stopping() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::model::{Clusterer, GkMeans, RunContext};
+    use crate::runtime::Backend;
+    use crate::serve::proto::Client;
+
+    fn serving_model() -> (crate::model::FittedModel, crate::data::matrix::VecSet) {
+        let data = blobs(&BlobSpec::quick(200, 6, 3), 11);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(2).keep_data(true);
+        let model = GkMeans::new(3).kappa(6).tau(2).xi(25).fit(&data, &ctx);
+        (model, data)
+    }
+
+    fn start_server(max_batch: usize) -> (ServerHandle, crate::data::matrix::VecSet) {
+        let (model, data) = serving_model();
+        let index = ShardedIndex::new(vec![model]).unwrap();
+        let cfg = ServeConfig {
+            batch_window: Duration::from_micros(100),
+            max_batch,
+            ..ServeConfig::default()
+        };
+        (Server::start(index, &cfg).unwrap(), data)
+    }
+
+    #[test]
+    fn ping_predict_search_stats_roundtrip() {
+        let (model, data) = serving_model();
+        let index = ShardedIndex::new(vec![model.clone()]).unwrap();
+        let cfg = ServeConfig { max_batch: 16, ..ServeConfig::default() };
+        let handle = Server::start(index, &cfg).unwrap();
+        let mut c = Client::connect(handle.addr()).unwrap();
+        c.ping().unwrap();
+        let label = c.predict(data.row(0)).unwrap();
+        assert_eq!(label, model.predict_batch(&data)[0], "served label == engine label");
+        // served search must be bit-identical to the engine's (same ef:
+        // the client's 0 resolves to the server default, which matches
+        // SearchParams::default())
+        let hits = c.search(data.row(0), 5, 0).unwrap();
+        let want = model.search(data.row(0), 5, &SearchParams::default()).unwrap();
+        let want: Vec<(u32, f32)> = want.into_iter().map(|(d, id)| (id, d)).collect();
+        assert_eq!(hits, want, "served hits == engine hits");
+        let stats = c.stats().unwrap();
+        assert_eq!(proto::stats_value(&stats, "searches"), Some(1.0), "{stats}");
+        assert_eq!(proto::stats_value(&stats, "predicts"), Some(1.0));
+        assert!(proto::stats_value(&stats, "lat_p50_us").unwrap() > 0.0, "{stats}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_verb_stops_the_server() {
+        let (handle, _data) = start_server(4);
+        let addr = handle.addr();
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        handle.wait(); // must return promptly, not hang
+        // subsequent connects are refused once the listener is gone
+        std::thread::sleep(Duration::from_millis(50));
+        let again = Client::connect(addr);
+        if let Ok(mut c2) = again {
+            assert!(c2.ping().is_err(), "server must not answer after shutdown");
+        }
+    }
+
+    #[test]
+    fn garbage_bytes_do_not_kill_the_worker() {
+        use std::io::Write as _;
+        let (handle, data) = start_server(8);
+        // connection 1: a hostile length prefix (4 GiB frame)
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let resp = proto::read_frame(&mut s).unwrap().unwrap();
+        match proto::decode_response(&resp).unwrap() {
+            Response::Error(e) => assert!(e.contains("cap"), "{e}"),
+            other => panic!("expected typed error, got {other:?}"),
+        }
+        // connection 2: a well-framed junk payload — typed error, and the
+        // *same* connection keeps serving
+        let mut c = Client::connect(handle.addr()).unwrap();
+        // (reach into the stream via a raw frame)
+        let mut s2 = std::net::TcpStream::connect(handle.addr()).unwrap();
+        proto::write_frame(&mut s2, &[99u8, 1, 2, 3]).unwrap();
+        let resp = proto::read_frame(&mut s2).unwrap().unwrap();
+        assert!(matches!(proto::decode_response(&resp).unwrap(), Response::Error(_)));
+        proto::write_frame(&mut s2, &proto::encode_request(&Request::Ping)).unwrap();
+        let resp = proto::read_frame(&mut s2).unwrap().unwrap();
+        assert!(matches!(proto::decode_response(&resp).unwrap(), Response::Pong));
+        // connection 3: disconnect mid-frame — server must keep serving
+        let mut s3 = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s3.write_all(&100u32.to_le_bytes()).unwrap();
+        s3.write_all(&[1, 2, 3]).unwrap();
+        drop(s3);
+        std::thread::sleep(Duration::from_millis(50));
+        // the healthy client still gets answers after all of the above
+        assert!(c.search(data.row(1), 3, 0).is_ok());
+        let mut fresh = Client::connect(handle.addr()).unwrap();
+        fresh.ping().unwrap();
+        let stats = fresh.stats().unwrap();
+        assert!(proto::stats_value(&stats, "degraded").unwrap() >= 2.0, "{stats}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn dim_mismatch_is_a_typed_error_not_a_panic() {
+        let (handle, _data) = start_server(4);
+        let mut c = Client::connect(handle.addr()).unwrap();
+        let err = c.search(&[1.0, 2.0], 3, 0).unwrap_err();
+        assert!(err.contains("dim"), "{err}");
+        let err = c.predict(&[1.0]).unwrap_err();
+        assert!(err.contains("dim"), "{err}");
+        c.ping().unwrap(); // connection survives
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,261 @@
+//! Sharded serving: one logical ANN index fanned across several
+//! [`FittedModel`] artifacts, with scatter-gather top-k merging.
+//!
+//! ## Why shards
+//!
+//! A fit over a dataset that does not fit one machine's fit budget (or
+//! whose artifact should stay under a size cap) is run as several
+//! independent fits over contiguous row ranges; each produces its own
+//! GKMODEL artifact with its own KNN graph over its own rows.  The
+//! serve layer loads all of them and presents the union: a query fans
+//! out to every shard with the *same* `topk`/`ef`, each shard answers
+//! from its local graph, and the gather step merges the per-shard hits
+//! into one global top-k.
+//!
+//! ## Id space and merge order
+//!
+//! Shard `s` holds rows `[base(s), base(s) + n_train(s))` of the union,
+//! where `base` is the cumulative row count of the shards *in load
+//! order* — so global ids depend only on the order models are given to
+//! [`ShardedIndex::new`].  The merge sorts by `(d², global id)`
+//! ascending — exactly the tie-break
+//! [`TopK::into_sorted`](crate::core_ops::topk::TopK) uses — so a
+//! sharded search over a split dataset returns *identically* what a
+//! single-model search over the union returns whenever the per-shard
+//! searches are exact (pinned by `tests/serve.rs`).
+
+use crate::data::matrix::VecSet;
+use crate::gkm::ann::SearchParams;
+use crate::model::FittedModel;
+use crate::runtime::{RtError, RtResult};
+
+/// One logical index over one or more model shards.
+#[derive(Debug)]
+pub struct ShardedIndex {
+    shards: Vec<FittedModel>,
+    /// `bases[s]` = global id of shard `s`'s row 0 (cumulative rows).
+    bases: Vec<u32>,
+    total_rows: usize,
+    dim: usize,
+}
+
+impl ShardedIndex {
+    /// Assemble an index from shards in global-id order.  All shards
+    /// must agree on dimensionality; every shard must be able to serve
+    /// ANN queries (graph + retained vectors) for `search` to work —
+    /// that precondition is checked lazily per call, like
+    /// [`FittedModel::search`] does.
+    pub fn new(shards: Vec<FittedModel>) -> RtResult<ShardedIndex> {
+        if shards.is_empty() {
+            return Err(RtError::msg("a sharded index needs at least one model"));
+        }
+        let dim = shards[0].dim;
+        let mut bases = Vec::with_capacity(shards.len());
+        let mut total: usize = 0;
+        for (s, m) in shards.iter().enumerate() {
+            if m.dim != dim {
+                return Err(RtError::msg(format!(
+                    "shard {s} has dim {} but shard 0 has dim {dim}",
+                    m.dim
+                )));
+            }
+            if total + m.n_train > u32::MAX as usize {
+                return Err(RtError::msg("union exceeds the u32 id space"));
+            }
+            bases.push(total as u32);
+            total += m.n_train;
+        }
+        Ok(ShardedIndex { shards, bases, total_rows: total, dim })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Rows in the union (sum of shard training sets).
+    pub fn total_rows(&self) -> usize {
+        self.total_rows
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Borrow the shard models (read-only; the serve loop uses this for
+    /// cache-stats aggregation and config echo).
+    pub fn shards(&self) -> &[FittedModel] {
+        &self.shards
+    }
+
+    /// Mutably borrow the shard models (the server uses this to apply a
+    /// `--threads` override before serving starts; geometry fields must
+    /// not change — `bases`/`dim` are fixed at construction).
+    pub fn shards_mut(&mut self) -> &mut [FittedModel] {
+        &mut self.shards
+    }
+
+    /// Whether any shard pages its vectors from disk.
+    pub fn any_disk_backed(&self) -> bool {
+        self.shards.iter().any(|m| m.cache_stats().is_some())
+    }
+
+    /// Aggregate chunk-cache ledger `(hits, misses)` across disk-backed
+    /// shards; `None` when everything is resident.
+    pub fn cache_totals(&self) -> Option<(u64, u64)> {
+        let mut any = false;
+        let (mut h, mut m) = (0u64, 0u64);
+        for shard in &self.shards {
+            if let Some(cs) = shard.cache_stats() {
+                any = true;
+                h += cs.hits();
+                m += cs.misses();
+            }
+        }
+        any.then_some((h, m))
+    }
+
+    /// Batched nearest-centroid assignment.  Shards are independent
+    /// *fits*, so their centroid sets differ; by convention the logical
+    /// index answers `predict` from shard 0's centroids (the primary
+    /// model — single-shard deployments get exactly
+    /// [`FittedModel::try_predict_batch`]).
+    pub fn predict_batch(&self, queries: &VecSet) -> RtResult<Vec<Result<u32, String>>> {
+        self.shards[0].try_predict_batch(queries)
+    }
+
+    /// Scatter-gather batched ANN search: every shard runs the degraded
+    /// batch kernel with the same `topk`/`params`, local hit ids are
+    /// lifted to global ids, and each query's per-shard hit lists merge
+    /// into one ascending `(d², global id)` top-k.
+    ///
+    /// A query that failed on *any* shard reports `Err` (its global
+    /// top-k can no longer be guaranteed); other queries in the batch
+    /// are unaffected.  The outer `Err` is a worker dying outside the
+    /// per-query guards.
+    pub fn search_batch(
+        &self,
+        queries: &VecSet,
+        topk: usize,
+        params: &SearchParams,
+    ) -> RtResult<Vec<Result<Vec<(f32, u32)>, String>>> {
+        let nq = queries.rows();
+        if nq == 0 {
+            return Ok(Vec::new());
+        }
+        // scatter: shards run sequentially here — each shard's batch
+        // kernel already fans its queries across the worker pool, so
+        // nesting another thread layer would only oversubscribe
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let res = shard
+                .try_search_batch(queries, topk, params)
+                .map_err(|e| e.context(format!("shard {s}")))?;
+            per_shard.push(res);
+        }
+        // gather: merge each query's shard hit lists
+        let mut out = Vec::with_capacity(nq);
+        for q in 0..nq {
+            let mut merged: Vec<(f32, u32)> = Vec::with_capacity(topk * self.shards.len());
+            let mut failure: Option<String> = None;
+            for (s, res) in per_shard.iter().enumerate() {
+                match &res[q] {
+                    Ok(hits) => {
+                        let base = self.bases[s];
+                        merged.extend(hits.iter().map(|&(d, id)| (d, base + id)));
+                    }
+                    Err(e) => {
+                        failure = Some(format!("shard {s}: {e}"));
+                        break;
+                    }
+                }
+            }
+            out.push(match failure {
+                Some(e) => Err(e),
+                None => {
+                    // the TopK tie-break: distance ascending, id ascending
+                    merged.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+                    merged.truncate(topk);
+                    Ok(merged)
+                }
+            });
+        }
+        Ok(out)
+    }
+
+    /// Single-query convenience over [`ShardedIndex::search_batch`].
+    pub fn search(
+        &self,
+        query: &[f32],
+        topk: usize,
+        params: &SearchParams,
+    ) -> Result<Vec<(f32, u32)>, String> {
+        if query.len() != self.dim {
+            return Err(format!("query dim {} != index dim {}", query.len(), self.dim));
+        }
+        let queries = VecSet::from_flat(self.dim, query.to_vec());
+        let mut out = self
+            .search_batch(&queries, topk, params)
+            .map_err(|e| e.to_string())?;
+        out.pop().expect("one query in, one result out")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::model::{Clusterer, GkMeans, RunContext};
+    use crate::runtime::Backend;
+
+    fn fit_shard(data: &VecSet, seed_k: usize) -> FittedModel {
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(2).keep_data(true);
+        GkMeans::new(seed_k).kappa(6).tau(2).xi(25).fit(data, &ctx)
+    }
+
+    #[test]
+    fn bases_cover_the_union_in_load_order() {
+        let a = blobs(&BlobSpec::quick(120, 5, 3), 1);
+        let c = blobs(&BlobSpec::quick(80, 5, 3), 2);
+        let idx = ShardedIndex::new(vec![fit_shard(&a, 3), fit_shard(&c, 3)]).unwrap();
+        assert_eq!(idx.num_shards(), 2);
+        assert_eq!(idx.total_rows(), 200);
+        assert_eq!(idx.bases, vec![0, 120]);
+        assert_eq!(idx.dim(), 5);
+        assert!(!idx.any_disk_backed());
+        assert!(idx.cache_totals().is_none());
+    }
+
+    #[test]
+    fn mismatched_dims_are_rejected() {
+        let a = blobs(&BlobSpec::quick(60, 4, 2), 3);
+        let c = blobs(&BlobSpec::quick(60, 6, 2), 4);
+        let err = ShardedIndex::new(vec![fit_shard(&a, 2), fit_shard(&c, 2)]).unwrap_err();
+        assert!(err.to_string().contains("dim"), "{err}");
+        assert!(ShardedIndex::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn single_shard_search_matches_the_model() {
+        let data = blobs(&BlobSpec::quick(150, 6, 4), 5);
+        let model = fit_shard(&data, 4);
+        let params = SearchParams::default();
+        let want = model.search(data.row(3), 5, &params).unwrap();
+        let idx = ShardedIndex::new(vec![model]).unwrap();
+        let got = idx.search(data.row(3), 5, &params).unwrap();
+        assert_eq!(got, want, "one shard must behave exactly like the bare model");
+    }
+
+    #[test]
+    fn predict_routes_to_the_primary_shard() {
+        let data = blobs(&BlobSpec::quick(100, 4, 3), 6);
+        let model = fit_shard(&data, 3);
+        let want = model.predict_batch(&data);
+        let idx = ShardedIndex::new(vec![model]).unwrap();
+        let got = idx.predict_batch(&data).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(*g.as_ref().unwrap(), *w);
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! End-to-end tests for the `gkm-serve` subsystem (PR 7): the sharded
+//! scatter-gather equivalence, the micro-batcher's coalesced ≡
+//! sequential guarantee over the wire, protocol hardening against
+//! garbage bytes, and disk-backed serving with live cache stats.
+
+use std::time::Duration;
+
+use gkmeans::coordinator::job::Method;
+use gkmeans::data::matrix::VecSet;
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::gkm::ann::SearchParams;
+use gkmeans::graph::brute;
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, ModelVectors, RunContext};
+use gkmeans::runtime::Backend;
+use gkmeans::serve::proto::{self, stats_value, Client, Request, Response};
+use gkmeans::serve::{ServeConfig, Server, ShardedIndex};
+
+/// A minimal servable model over `data` whose KNN graph is *complete*
+/// (κ = n−1): greedy graph search expands every node from the first
+/// frontier pop, so `search` is exact for any `ef ≥ topk` — which is
+/// what lets the sharded-vs-union test demand bitwise equality rather
+/// than recall overlap.
+fn exact_model(data: &VecSet) -> FittedModel {
+    let n = data.rows();
+    let backend = Backend::native();
+    let graph = brute::build(data, n - 1, &backend);
+    FittedModel {
+        method: Method::GkMeans,
+        k: 1,
+        dim: data.dim(),
+        n_train: n,
+        threads: 1,
+        centroids: VecSet::zeros(1, data.dim()),
+        labels: vec![0; n],
+        history: Vec::new(),
+        total_seconds: 0.0,
+        init_seconds: 0.0,
+        graph_seconds: 0.0,
+        graph: Some(graph),
+        data: Some(ModelVectors::Ram(data.clone())),
+    }
+}
+
+/// Split `data`'s rows into `parts` contiguous slices.
+fn split_rows(data: &VecSet, parts: usize) -> Vec<VecSet> {
+    let n = data.rows();
+    let d = data.dim();
+    let chunk = (n + parts - 1) / parts;
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let mut flat = Vec::with_capacity((hi - lo) * d);
+        for i in lo..hi {
+            flat.extend_from_slice(data.row(i));
+        }
+        out.push(VecSet::from_flat(d, flat));
+        lo = hi;
+    }
+    out
+}
+
+#[test]
+fn sharded_search_equals_union_search() {
+    // 240 rows so 2/3/4 shards all split evenly-ish; complete graphs
+    // make every per-shard search exact, so the scatter-gather merge
+    // must reproduce the union model's top-k *exactly* — ids, distances
+    // and (dist, id) tie-break order included.
+    let data = blobs(&BlobSpec::quick(240, 8, 5), 17);
+    let union_model = exact_model(&data);
+    let queries: Vec<Vec<f32>> = (0..12)
+        .map(|i| data.row(i * 17 % data.rows()).to_vec())
+        .collect();
+    for shards in [1usize, 2, 3, 4] {
+        let parts = split_rows(&data, shards);
+        let index =
+            ShardedIndex::new(parts.iter().map(exact_model).collect()).expect("index");
+        assert_eq!(index.total_rows(), data.rows());
+        for ef in [8usize, 32, 64] {
+            for topk in [1usize, 5, 8] {
+                let params = SearchParams { ef: ef.max(topk), ..SearchParams::default() };
+                for q in &queries {
+                    let want = union_model.search(q, topk, &params).unwrap();
+                    let got = index.search(q, topk, &params).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "shards={shards} ef={ef} topk={topk}: sharded result diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_artifacts_from_disk_equal_union() {
+    // the production path: each shard saved as a GKMODEL artifact and
+    // re-loaded (vectors paged from disk), then merged — must still
+    // equal the in-RAM union search, and the chunk cache must record
+    // traffic
+    let data = blobs(&BlobSpec::quick(160, 6, 4), 23);
+    let union_model = exact_model(&data);
+    let dir = std::env::temp_dir().join(format!("gkm_serve_shards_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut loaded = Vec::new();
+    for (s, part) in split_rows(&data, 2).iter().enumerate() {
+        let path = dir.join(format!("shard{s}.gkm"));
+        exact_model(part).save(&path).expect("save shard");
+        let m = FittedModel::load(&path).expect("load shard");
+        assert!(
+            matches!(m.data, Some(ModelVectors::Disk(_))),
+            "v2 artifact must page vectors from disk"
+        );
+        loaded.push(m);
+    }
+    let index = ShardedIndex::new(loaded).expect("index");
+    assert!(index.any_disk_backed());
+    let params = SearchParams::default();
+    for i in 0..10 {
+        let q = data.row(i * 13 % data.rows());
+        let want = union_model.search(q, 6, &params).unwrap();
+        let got = index.search(q, 6, &params).unwrap();
+        assert_eq!(got, want, "query {i}: disk-backed sharded result diverged");
+    }
+    let (hits, misses) = index.cache_totals().expect("disk shards expose cache stats");
+    assert!(hits + misses > 0, "searches must touch the chunk cache");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn fitted_serving_model() -> (FittedModel, VecSet) {
+    let data = blobs(&BlobSpec::quick(300, 6, 4), 31);
+    let b = Backend::native();
+    let ctx = RunContext::new(&b).max_iters(3).keep_data(true);
+    let model = GkMeans::new(4).kappa(8).tau(2).xi(30).fit(&data, &ctx);
+    (model, data)
+}
+
+#[test]
+fn coalesced_batches_equal_sequential_singles() {
+    // the micro-batcher contract, end to end over TCP: N concurrent
+    // clients inside one wide window get *bitwise* the answers a lone
+    // sequential client gets, at any window / max_batch setting
+    let (model, data) = fitted_serving_model();
+    let engine_params = SearchParams::default();
+    let queries: Vec<Vec<f32>> = (0..24).map(|i| data.row(i * 7).to_vec()).collect();
+    let expected: Vec<Vec<(u32, f32)>> = queries
+        .iter()
+        .map(|q| {
+            model
+                .search(q, 5, &engine_params)
+                .unwrap()
+                .into_iter()
+                .map(|(d, id)| (id, d))
+                .collect()
+        })
+        .collect();
+    for (window_us, max_batch) in [(0u64, 1usize), (2000, 8), (5000, 64)] {
+        let index = ShardedIndex::new(vec![model.clone()]).unwrap();
+        let cfg = ServeConfig {
+            batch_window: Duration::from_micros(window_us),
+            max_batch,
+            ..ServeConfig::default()
+        };
+        let handle = Server::start(index, &cfg).expect("start");
+        let addr = handle.addr();
+        // concurrent: one client thread per query, all in flight together
+        let got: Vec<Vec<(u32, f32)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = queries
+                .iter()
+                .map(|q| {
+                    s.spawn(move || {
+                        let mut c = Client::connect(addr).expect("connect");
+                        c.search(q, 5, 0).expect("search")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            got, expected,
+            "window={window_us}us max_batch={max_batch}: coalesced != sequential"
+        );
+        // batching actually happened where it was allowed to
+        let stats = Client::connect(addr).unwrap().stats().unwrap();
+        let batches = stats_value(&stats, "batches").unwrap();
+        assert!(batches >= 1.0, "{stats}");
+        if max_batch == 1 {
+            assert_eq!(stats_value(&stats, "batch_max"), Some(1.0), "{stats}");
+        }
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn disk_backed_server_reports_cache_stats_and_percentiles() {
+    let (model, data) = fitted_serving_model();
+    let path = std::env::temp_dir().join(format!("gkm_serve_disk_{}.gkm", std::process::id()));
+    model.save(&path).expect("save");
+    let served = FittedModel::load(&path).expect("load");
+    assert!(served.cache_stats().is_some());
+    let index = ShardedIndex::new(vec![served]).unwrap();
+    let cfg = ServeConfig { max_batch: 8, ..ServeConfig::default() };
+    let handle = Server::start(index, &cfg).expect("start");
+    let mut c = Client::connect(handle.addr()).unwrap();
+    for i in 0..30 {
+        c.search(data.row(i * 3), 5, 0).expect("search");
+    }
+    let stats = c.stats().unwrap();
+    assert!(stats_value(&stats, "lat_p50_us").unwrap() > 0.0, "{stats}");
+    assert!(stats_value(&stats, "lat_p99_us").unwrap() > 0.0, "{stats}");
+    assert_eq!(stats_value(&stats, "searches"), Some(30.0), "{stats}");
+    let rate = stats_value(&stats, "cache_hit_rate").expect("disk config exposes cache rate");
+    assert!(
+        rate > 0.0 && rate <= 1.0,
+        "repeated searches over one chunked file must hit the cache: {stats}"
+    );
+    handle.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn garbage_and_disconnects_leave_the_server_healthy() {
+    use std::io::Write as _;
+    let (model, data) = fitted_serving_model();
+    let index = ShardedIndex::new(vec![model]).unwrap();
+    let cfg = ServeConfig { max_batch: 8, ..ServeConfig::default() };
+    let handle = Server::start(index, &cfg).expect("start");
+    let addr = handle.addr();
+    // a long-lived healthy client that must survive everything below
+    let mut healthy = Client::connect(addr).unwrap();
+    healthy.ping().unwrap();
+
+    // 1. pseudorandom garbage streams (no valid framing at all)
+    let mut seed = 0x9E37_79B9u32;
+    for round in 0..5 {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let mut junk = Vec::with_capacity(64);
+        for _ in 0..64 {
+            seed = seed.wrapping_mul(1664525).wrapping_add(1013904223 + round);
+            junk.push((seed >> 24) as u8);
+        }
+        s.write_all(&junk).ok();
+        drop(s); // disconnect without reading the (possible) error reply
+    }
+    // 2. a well-framed junk payload, then a valid request on the same
+    //    connection — the typed error must not poison the stream
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    proto::write_frame(&mut s, &[0xAB, 0xCD, 0xEF]).unwrap();
+    let r = proto::read_frame(&mut s).unwrap().unwrap();
+    assert!(matches!(proto::decode_response(&r).unwrap(), Response::Error(_)));
+    proto::write_frame(&mut s, &proto::encode_request(&Request::Ping)).unwrap();
+    let r = proto::read_frame(&mut s).unwrap().unwrap();
+    assert!(matches!(proto::decode_response(&r).unwrap(), Response::Pong));
+    // 3. a client that sends a length prefix and dies mid-payload
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(&64u32.to_le_bytes()).unwrap();
+    s.write_all(&[1u8, 2, 3]).unwrap();
+    drop(s);
+    // 4. an oversized frame announcement
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+    let r = proto::read_frame(&mut s).unwrap().unwrap();
+    match proto::decode_response(&r).unwrap() {
+        Response::Error(e) => assert!(e.contains("cap"), "{e}"),
+        other => panic!("expected typed error, got {other:?}"),
+    }
+
+    // the original connection still serves real queries afterwards
+    std::thread::sleep(Duration::from_millis(100));
+    let hits = healthy.search(data.row(0), 5, 0).expect("healthy client survives");
+    assert!(!hits.is_empty());
+    let stats = healthy.stats().unwrap();
+    assert!(
+        stats_value(&stats, "degraded").unwrap() >= 1.0,
+        "protocol abuse must be counted: {stats}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn degraded_batch_reports_per_query_errors_not_poison() {
+    // a predict whose dim matches but whose batch neighbor is fine:
+    // send a search and a predict through one server; then check a
+    // wrong-dim request produces a typed error while the connection and
+    // subsequent requests keep working (the satellite-6 regression)
+    let (model, data) = fitted_serving_model();
+    let index = ShardedIndex::new(vec![model.clone()]).unwrap();
+    let handle = Server::start(index, &ServeConfig::default()).expect("start");
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let err = c.search(&[1.0, 2.0, 3.0], 4, 0).unwrap_err();
+    assert!(err.contains("dim"), "{err}");
+    let label = c.predict(data.row(0)).expect("predict after error");
+    assert_eq!(label, model.predict_batch(&data)[0]);
+    handle.shutdown();
+}
