@@ -52,16 +52,21 @@ impl ServeMetrics {
         }
     }
 
-    /// A query entered the front door.
+    /// A query entered the front door.  The returned guard decrements
+    /// the `in_flight` gauge when dropped — including by panic
+    /// unwinding, so a handler that dies mid-request cannot inflate the
+    /// gauge permanently.
     #[inline]
-    pub fn begin(&self) {
+    pub fn begin(&self) -> InFlight<'_> {
         self.in_flight.fetch_add(1, Ordering::Relaxed);
+        InFlight { metrics: self }
     }
 
     /// A query's response hit the socket; `kind` is `"predict"` or
     /// `"search"`, `ok` is whether it carried a result (vs. ERROR).
+    /// (The `in_flight` gauge is decremented by the [`InFlight`] guard
+    /// from [`ServeMetrics::begin`], not here.)
     pub fn finish(&self, kind: RequestKind, ok: bool, latency_us: u64) {
-        self.in_flight.fetch_sub(1, Ordering::Relaxed);
         self.requests.fetch_add(1, Ordering::Relaxed);
         match kind {
             RequestKind::Predict => self.predicts.fetch_add(1, Ordering::Relaxed),
@@ -185,6 +190,20 @@ impl Default for ServeMetrics {
     }
 }
 
+/// RAII in-flight marker from [`ServeMetrics::begin`]: the gauge is
+/// decremented on drop, so it stays accurate on every exit path —
+/// normal completion *and* a panic unwinding out of the handler.
+#[must_use = "dropping immediately would record an empty in-flight window"]
+pub struct InFlight<'a> {
+    metrics: &'a ServeMetrics,
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Which serving verb a completed request was (for per-verb counters).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestKind {
@@ -201,11 +220,13 @@ mod tests {
     fn render_reports_counts_and_percentiles() {
         let m = ServeMetrics::new();
         for i in 0..50u64 {
-            m.begin();
+            let guard = m.begin();
             m.finish(RequestKind::Search, true, 100 + i);
+            drop(guard);
         }
-        m.begin();
+        let guard = m.begin();
         m.finish(RequestKind::Predict, false, 10_000);
+        drop(guard);
         m.batch(8);
         m.batch(1);
         let s = m.render(Some((90, 10)));
@@ -222,6 +243,23 @@ mod tests {
         assert!(p99 >= p50);
         assert!(stats_value(&s, "qps").unwrap() >= 0.0);
         assert!(!m.heartbeat_line(Some((90, 10))).is_empty());
+    }
+
+    #[test]
+    fn in_flight_gauge_survives_a_panicking_handler() {
+        let m = ServeMetrics::new();
+        {
+            let _live = m.begin();
+            assert_eq!(m.in_flight(), 1);
+        }
+        assert_eq!(m.in_flight(), 0, "guard drop without finish must decrement");
+        // the panic path: the guard unwinds with the handler
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _live = m.begin();
+            panic!("handler died mid-request");
+        }));
+        assert!(r.is_err());
+        assert_eq!(m.in_flight(), 0, "a panicking handler must not leak the gauge");
     }
 
     #[test]

@@ -48,6 +48,55 @@ pub const MAX_FRAME: u32 = 16 << 20;
 /// Sanity cap on query dimensionality (matches the store layer's cap).
 pub const MAX_QUERY_DIM: usize = 1 << 20;
 
+/// Sanity cap on SEARCH `topk`.  The server sizes result buffers from
+/// this field (`topk × shards` merge slots), so it is validated at
+/// decode time like [`MAX_QUERY_DIM`] — a hostile `u32::MAX` must be a
+/// typed error, never an allocation.  The server additionally clamps
+/// `topk` to the number of indexed rows.
+pub const MAX_TOPK: u32 = 1 << 16;
+
+/// Sanity cap on SEARCH `ef`.  `ef` sizes the per-worker candidate
+/// heap, so like [`MAX_TOPK`] it is bounded before any allocation; the
+/// server further clamps it to the indexed row count (a larger beam
+/// than the dataset cannot improve recall).
+pub const MAX_EF: u32 = 1 << 20;
+
+/// Consecutive zero-progress read-timeout ticks [`read_frame`] tolerates
+/// in the middle of a frame before giving up with a [`is_frame_stall`]
+/// error (~5 s at the server's 50 ms poll tick).  Without this bound a
+/// client that sends a partial frame and stalls would pin its connection
+/// thread forever — holding a `max_conns` slot and ignoring shutdown
+/// (the slowloris pattern).
+pub const MAX_STALL_TICKS: u32 = 100;
+
+/// Marker error source for a mid-frame stall abort, so the server can
+/// tell "peer stalled mid-frame, drop it" from the idle poll tick
+/// (which surfaces only before any byte of a frame) without relying on
+/// platform-specific `ErrorKind`s.
+#[derive(Debug)]
+struct FrameStall;
+
+impl std::fmt::Display for FrameStall {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer stalled mid-frame for {MAX_STALL_TICKS} read-timeout ticks")
+    }
+}
+
+impl std::error::Error for FrameStall {}
+
+fn frame_stall_error() -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::TimedOut, FrameStall)
+}
+
+/// Whether an I/O error is [`read_frame`] giving up on a mid-frame
+/// stall (vs. the pre-frame idle tick, which keeps the connection).
+pub fn is_frame_stall(e: &std::io::Error) -> bool {
+    match e.get_ref() {
+        Some(inner) => inner.is::<FrameStall>(),
+        None => false,
+    }
+}
+
 /// A decoded request frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -206,10 +255,13 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, String> {
         }
         VERB_SEARCH => {
             let topk = t.u32()?;
-            if topk == 0 {
-                return Err("topk must be positive".into());
+            if topk == 0 || topk > MAX_TOPK {
+                return Err(format!("topk {topk} out of range 1..={MAX_TOPK}"));
             }
             let ef = t.u32()?;
+            if ef > MAX_EF {
+                return Err(format!("ef {ef} exceeds the {MAX_EF} cap"));
+            }
             let dim = check_dim(t.u32()?)?;
             Request::Search { query: t.f32s(dim)?, topk, ef }
         }
@@ -292,11 +344,15 @@ fn is_timeout(e: &std::io::Error) -> bool {
 /// A read timeout (`WouldBlock`/`TimedOut`) surfaces as `Err` only when
 /// it hits *before any byte* of the length prefix — an idle-poll tick
 /// the server uses to check its shutdown flag.  Mid-frame timeouts
-/// retry, so a slow sender cannot desync the stream.
+/// retry (a slow sender cannot desync the stream) but only up to
+/// [`MAX_STALL_TICKS`] consecutive zero-progress ticks; past that the
+/// read fails with an [`is_frame_stall`] error so a stalled peer cannot
+/// pin its connection thread forever.
 pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     // distinguish clean EOF (no bytes at all) from a truncated prefix
     let mut got = 0;
+    let mut stalls = 0u32;
     while got < 4 {
         match r.read(&mut len_buf[got..]) {
             Ok(0) => {
@@ -309,9 +365,17 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
                     ))
                 };
             }
-            Ok(n) => got += n,
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) if is_timeout(&e) && got > 0 => continue,
+            Err(e) if is_timeout(&e) && got > 0 => {
+                stalls += 1;
+                if stalls >= MAX_STALL_TICKS {
+                    return Err(frame_stall_error());
+                }
+            }
             Err(e) => return Err(e),
         }
     }
@@ -324,6 +388,7 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
     }
     let mut payload = vec![0u8; len as usize];
     let mut filled = 0;
+    stalls = 0;
     while filled < payload.len() {
         match r.read(&mut payload[filled..]) {
             Ok(0) => {
@@ -332,8 +397,17 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
                     "connection closed mid-frame (payload)",
                 ));
             }
-            Ok(n) => filled += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted || is_timeout(&e) => continue,
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                stalls += 1;
+                if stalls >= MAX_STALL_TICKS {
+                    return Err(frame_stall_error());
+                }
+            }
             Err(e) => return Err(e),
         }
     }
@@ -493,6 +567,28 @@ mod tests {
         zk.extend(1u32.to_le_bytes());
         zk.extend(1.0f32.to_le_bytes());
         assert!(decode_request(&zk).unwrap_err().contains("topk"));
+        // hostile topk: must be rejected at decode, before any buffer
+        // is sized from it
+        let mut hk = vec![2u8];
+        hk.extend(u32::MAX.to_le_bytes());
+        hk.extend(0u32.to_le_bytes());
+        hk.extend(1u32.to_le_bytes());
+        hk.extend(1.0f32.to_le_bytes());
+        assert!(decode_request(&hk).unwrap_err().contains("topk"));
+        // hostile ef: same treatment
+        let mut he = vec![2u8];
+        he.extend(1u32.to_le_bytes());
+        he.extend(u32::MAX.to_le_bytes());
+        he.extend(1u32.to_le_bytes());
+        he.extend(1.0f32.to_le_bytes());
+        assert!(decode_request(&he).unwrap_err().contains("ef"));
+        // the caps themselves are accepted
+        let mut ok = vec![2u8];
+        ok.extend(MAX_TOPK.to_le_bytes());
+        ok.extend(MAX_EF.to_le_bytes());
+        ok.extend(1u32.to_le_bytes());
+        ok.extend(1.0f32.to_le_bytes());
+        assert!(decode_request(&ok).is_ok());
         // trailing garbage after a valid PING
         assert!(decode_request(&[4u8, 0, 0]).unwrap_err().contains("trailing"));
     }
@@ -519,6 +615,53 @@ mod tests {
         body.extend([1u8, 2, 3]);
         let mut body = std::io::Cursor::new(body);
         assert_eq!(read_frame(&mut body).unwrap_err().kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    /// A reader that yields its bytes, then times out on every read —
+    /// the shape of a client that stalls mid-frame with its socket open.
+    struct StallingReader {
+        data: Vec<u8>,
+        pos: usize,
+        ticks: u32,
+    }
+
+    impl Read for StallingReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos < self.data.len() {
+                let n = buf.len().min(self.data.len() - self.pos);
+                buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+                self.pos += n;
+                Ok(n)
+            } else {
+                self.ticks += 1;
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "tick"))
+            }
+        }
+    }
+
+    #[test]
+    fn mid_frame_stall_fails_after_a_bounded_number_of_ticks() {
+        // partial payload, then an endless stall: read_frame must give
+        // up after MAX_STALL_TICKS instead of spinning forever
+        let mut data = Vec::new();
+        data.extend(10u32.to_le_bytes());
+        data.extend([1u8, 2, 3]);
+        let mut r = StallingReader { data, pos: 0, ticks: 0 };
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(is_frame_stall(&err), "{err}");
+        assert_eq!(r.ticks, MAX_STALL_TICKS, "must stop retrying at the budget");
+
+        // a partial length prefix stalls the same way
+        let mut r = StallingReader { data: vec![1u8, 0], pos: 0, ticks: 0 };
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(is_frame_stall(&err), "{err}");
+
+        // but a timeout before ANY byte is the idle poll tick: it
+        // surfaces immediately and is NOT a stall abort
+        let mut r = StallingReader { data: Vec::new(), pos: 0, ticks: 0 };
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(!is_frame_stall(&err), "{err}");
+        assert_eq!(r.ticks, 1, "idle tick must surface on the first timeout");
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //! worker idiom): a handler panic closes that connection and nothing
 //! else.  Malformed frames get typed ERROR responses; an oversized
 //! length prefix closes the connection (the stream can no longer be
-//! trusted to be framed).  Per-query faults degrade through the
+//! trusted to be framed); a peer that stalls mid-frame is dropped after
+//! the [`proto::MAX_STALL_TICKS`] stall budget so it cannot pin a
+//! `max_conns` slot or block shutdown (slowloris).  SEARCH `topk`/`ef`
+//! are bounded at decode time and clamped to the indexed row count
+//! before they size anything.  Per-query faults degrade through the
 //! `try_*` kernels and arrive as ERROR frames, counted in
 //! `degraded`.
 
@@ -241,6 +245,13 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
         let payload = match proto::read_frame(&mut stream) {
             Ok(Some(p)) => p,
             Ok(None) => return, // clean EOF between requests
+            Err(e) if proto::is_frame_stall(&e) => {
+                // the peer stalled mid-frame past the stall budget
+                // (slowloris): drop it so this thread frees its
+                // max_conns slot and observes shutdown
+                inner.metrics.degraded_only();
+                return;
+            }
             Err(e)
                 if matches!(
                     e.kind(),
@@ -290,7 +301,7 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
                         inner.dim
                     ))
                 } else {
-                    inner.metrics.begin();
+                    let _live = inner.metrics.begin();
                     let t0 = Instant::now();
                     let r = inner.batcher.submit(Work::Predict(query));
                     let ok = !matches!(r, Response::Error(_));
@@ -307,13 +318,18 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
                         inner.dim
                     ))
                 } else {
-                    inner.metrics.begin();
+                    // decode already bounded topk/ef (MAX_TOPK/MAX_EF);
+                    // clamp both to the data so a wire value can never
+                    // size an allocation past the dataset itself (more
+                    // hits than rows cannot exist, and a beam wider
+                    // than the union cannot improve recall).  ef == 0
+                    // stays 0 — the server-default sentinel.
+                    let rows = inner.index.total_rows().max(1);
+                    let topk = (topk as usize).clamp(1, rows);
+                    let ef = (ef as usize).min(rows);
+                    let _live = inner.metrics.begin();
                     let t0 = Instant::now();
-                    let r = inner.batcher.submit(Work::Search {
-                        query,
-                        topk: topk as usize,
-                        ef: ef as usize,
-                    });
+                    let r = inner.batcher.submit(Work::Search { query, topk, ef });
                     let ok = !matches!(r, Response::Error(_));
                     inner.metrics.finish(RequestKind::Search, ok, t0.elapsed().as_micros() as u64);
                     r

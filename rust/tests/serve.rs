@@ -278,6 +278,56 @@ fn garbage_and_disconnects_leave_the_server_healthy() {
 }
 
 #[test]
+fn hostile_topk_and_ef_cannot_size_allocations() {
+    // the OOM regression: a single small SEARCH frame carrying
+    // topk=u32::MAX used to reach Vec::with_capacity(topk * shards) and
+    // TopK::new(ef) and abort the process on allocation failure.  Now
+    // the decode layer rejects anything past MAX_TOPK/MAX_EF with a
+    // typed error, and in-range values are clamped to the row count.
+    let (model, data) = fitted_serving_model();
+    let rows = data.rows();
+    let index = ShardedIndex::new(vec![model]).unwrap();
+    let handle = Server::start(index, &ServeConfig::default()).expect("start");
+    let addr = handle.addr();
+
+    let raw_search = |topk: u32, ef: u32| {
+        let mut payload = vec![2u8]; // VERB_SEARCH
+        payload.extend(topk.to_le_bytes());
+        payload.extend(ef.to_le_bytes());
+        payload.extend((data.dim() as u32).to_le_bytes());
+        for &v in data.row(0) {
+            payload.extend(v.to_le_bytes());
+        }
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        proto::write_frame(&mut s, &payload).unwrap();
+        let r = proto::read_frame(&mut s).unwrap().unwrap();
+        proto::decode_response(&r).unwrap()
+    };
+
+    match raw_search(u32::MAX, 0) {
+        Response::Error(e) => assert!(e.contains("topk"), "{e}"),
+        other => panic!("hostile topk must be a typed error, got {other:?}"),
+    }
+    match raw_search(1, u32::MAX) {
+        Response::Error(e) => assert!(e.contains("ef"), "{e}"),
+        other => panic!("hostile ef must be a typed error, got {other:?}"),
+    }
+    // in-range but larger than the dataset: clamped to the row count,
+    // served normally (never more hits than rows exist)
+    match raw_search(proto::MAX_TOPK, proto::MAX_EF) {
+        Response::Hits(hits) => {
+            assert!(!hits.is_empty() && hits.len() <= rows, "{} hits", hits.len());
+        }
+        other => panic!("clamped search must succeed, got {other:?}"),
+    }
+    // the server is still healthy after all of the above
+    let mut c = Client::connect(addr).unwrap();
+    c.ping().unwrap();
+    assert!(!c.search(data.row(1), 5, 0).unwrap().is_empty());
+    handle.shutdown();
+}
+
+#[test]
 fn degraded_batch_reports_per_query_errors_not_poison() {
     // a predict whose dim matches but whose batch neighbor is fine:
     // send a search and a predict through one server; then check a
