@@ -134,6 +134,14 @@ fn main() {
     //         (the pre-batch Δℐ / GK-means* inner loop since PR 1),
     //         isolating the pure tiling+gather win from the norm-identity
     //         saving that loop already had
+    //     cand_eval_batched pins the *portable* tiled kernel
+    //     (d2_batch_scalar) so the row stays comparable across feature
+    //     sets; cand_eval_simd is the dispatched entry point (identical
+    //     without `--features simd`, the runtime-detected tier with it —
+    //     acceptance: ≥ 1.5× over cand_eval_batched at d ≥ 128 on an
+    //     AVX2/NEON host); cand_eval_sq8 runs the same gather+evaluate
+    //     shape over u8 codes (d bytes of candidate bandwidth instead of
+    //     4d — the quantized serving hot path, see data::quant).
     for (d, kappa) in [(128usize, 10usize), (128, 50), (512, 20)] {
         let k = 256; // candidate pool the κ candidates are drawn from
         let centroids: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
@@ -177,7 +185,43 @@ fn main() {
                 block[j * d..(j + 1) * d].copy_from_slice(&centroids[c * d..(c + 1) * d]);
                 nsel[j] = cnorms[c];
             }
+            dist::d2_batch_scalar(&x, xx, &block, &nsel, d, &mut out);
+            let mut best = f32::INFINITY;
+            let mut best_c = 0usize;
+            for (j, &v) in out.iter().enumerate() {
+                if v < best {
+                    best = v;
+                    best_c = cand[j];
+                }
+            }
+            std::hint::black_box((best, best_c));
+        });
+        let (r_simd, it_v) = rate(budget, || {
+            for (j, &c) in cand.iter().enumerate() {
+                block[j * d..(j + 1) * d].copy_from_slice(&centroids[c * d..(c + 1) * d]);
+                nsel[j] = cnorms[c];
+            }
             dist::d2_batch(&x, xx, &block, &nsel, d, &mut out);
+            let mut best = f32::INFINITY;
+            let mut best_c = 0usize;
+            for (j, &v) in out.iter().enumerate() {
+                if v < best {
+                    best = v;
+                    best_c = cand[j];
+                }
+            }
+            std::hint::black_box((best, best_c));
+        });
+        // SQ8 path: codes gathered per candidate (d bytes, not 4d), one
+        // asymmetric kernel call — the quantized serving shape
+        let qs = gkmeans::data::quant::QuantizedVecStore::from_store(
+            &gkmeans::data::matrix::VecSet::from_flat(d, centroids.clone()),
+            0,
+        );
+        let cand_ids: Vec<u32> = cand.iter().map(|&c| c as u32).collect();
+        let mut cbuf: Vec<u8> = Vec::new();
+        let (r_sq8, it_q) = rate(budget, || {
+            qs.d2_gather(&x, &cand_ids, &mut cbuf, &mut out);
             let mut best = f32::INFINITY;
             let mut best_c = 0usize;
             for (j, &v) in out.iter().enumerate() {
@@ -192,6 +236,8 @@ fn main() {
             ("cand_eval_scalar", r_scalar, it_s),
             ("cand_eval_scalar_dot", r_dot, it_d),
             ("cand_eval_batched", r_batch, it_b),
+            ("cand_eval_simd", r_simd, it_v),
+            ("cand_eval_sq8", r_sq8, it_q),
         ] {
             records.push(gkmeans::bench_util::GkBenchRecord {
                 name: name.into(),
@@ -212,9 +258,9 @@ fn main() {
             ]);
         }
         println!(
-            "cand_eval d={d} kappa={kappa}: l2 {r_scalar:.0}/s, dot {r_dot:.0}/s, batched {r_batch:.0}/s ({:.2}x vs l2, {:.2}x vs dot)",
+            "cand_eval d={d} kappa={kappa}: l2 {r_scalar:.0}/s, dot {r_dot:.0}/s, batched {r_batch:.0}/s ({:.2}x vs l2), simd {r_simd:.0}/s ({:.2}x vs batched), sq8 {r_sq8:.0}/s",
             r_batch / r_scalar.max(1e-12),
-            r_batch / r_dot.max(1e-12)
+            r_simd / r_batch.max(1e-12)
         );
     }
 

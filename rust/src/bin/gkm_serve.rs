@@ -4,14 +4,17 @@
 //! gkm-serve model.gkm [more-shards.gkm ...] \
 //!     [--addr 127.0.0.1:7070] [--batch-window-us 200] [--max-batch 64] \
 //!     [--ef 64] [--threads 0] [--max-conns 256] [--heartbeat-s 10] \
-//!     [--resident]
+//!     [--resident] [--quantize]
 //! ```
 //!
 //! Several model paths shard one logical index: global ids are assigned
 //! in argument order (shard 0's rows first).  Vectors page from disk by
 //! default (GKMODEL v2 lazy loading); `--resident` materializes them
-//! into RAM at startup.  The process exits cleanly on SIGTERM/SIGINT or
-//! a protocol SHUTDOWN frame.
+//! into RAM at startup, and `--quantize` trains an SQ8 code store per
+//! shard so searches traverse RAM-resident u8 codes (exact f32 re-rank
+//! pages only the `ef` surviving rows) — a no-op for artifacts that
+//! already carry a QVECTORS section.  The process exits cleanly on
+//! SIGTERM/SIGINT or a protocol SHUTDOWN frame.
 
 use std::time::Duration;
 
@@ -23,7 +26,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: gkm-serve MODEL.gkm [SHARD2.gkm ...] [--addr HOST:PORT] \
          [--batch-window-us N] [--max-batch N] [--ef N] [--threads N] \
-         [--max-conns N] [--heartbeat-s N] [--resident]"
+         [--max-conns N] [--heartbeat-s N] [--resident] [--quantize]"
     );
     std::process::exit(2);
 }
@@ -53,6 +56,7 @@ fn main() {
         usage();
     }
     let resident = args.flag("resident");
+    let quantize = args.flag("quantize");
 
     let mut shards = Vec::with_capacity(paths.len());
     for p in &paths {
@@ -68,13 +72,25 @@ fn main() {
                 model.data = Some(ModelVectors::Ram(data.to_vecset()));
             }
         }
+        // artifacts saved with `cluster --quantize sq8` already carry
+        // codes; otherwise train a quantizer here (one streaming pass)
+        if quantize && model.quantized.is_none() {
+            if let Err(e) = model.quantize_sq8(0) {
+                eprintln!("gkm-serve: cannot quantize {p}: {e}");
+                std::process::exit(1);
+            }
+        }
         let backing = match &model.data {
             Some(d) if d.is_resident() => "resident",
             Some(_) => "disk",
             None => "no-vectors (predict only)",
         };
+        let codes = match &model.quantized {
+            Some(q) => format!(", sq8 codes {} bytes", q.resident_bytes()),
+            None => String::new(),
+        };
         eprintln!(
-            "[gkm-serve] loaded {p}: {} n={} dim={} k={} [{backing}]",
+            "[gkm-serve] loaded {p}: {} n={} dim={} k={} [{backing}{codes}]",
             model.method.name(),
             model.n_train,
             model.dim,

@@ -21,6 +21,20 @@ pub fn block_l2(x: &[f32], y: &[f32], d: usize, out: &mut [f32]) {
     let xs: Vec<f32> = x.chunks_exact(d).map(norm2).collect();
     let ys: Vec<f32> = y.chunks_exact(d).map(norm2).collect();
 
+    // With the `simd` feature and a detected tier, route each x-row
+    // through the dispatched FMA kernel instead of the portable tile —
+    // same norm-identity math, same tolerance class, wider registers.
+    // Per-row arithmetic is deterministic, so `block_l2_parallel`'s
+    // serial ≡ parallel bit-identity is preserved across tiers.
+    #[cfg(feature = "simd")]
+    if crate::core_ops::simd::active() && crate::core_ops::dist::batch_eligible(d, n) {
+        for i in 0..m {
+            let xi = &x[i * d..(i + 1) * d];
+            crate::core_ops::dist::d2_batch(xi, xs[i], y, &ys, d, &mut out[i * n..(i + 1) * n]);
+        }
+        return;
+    }
+
     // X·Yᵀ with 1×4 register tiling over j.  §Perf note: a 2×4 tile was
     // tried and measured 5% SLOWER (10.3 vs 11.1 GFLOP/s at 256×256×128 —
     // the operands are already L1-resident at these block sizes, so the

@@ -18,6 +18,15 @@
 //! exploits precomputed norms via [`d2_via_dot`] and is allowed to shift
 //! at f32 rounding (GK-means\*'s tolerance class).  `cargo bench --bench
 //! hotpath_micro` records the batched-vs-scalar gap in `BENCH_gkm.json`.
+//!
+//! Each batched entry point is a thin dispatcher: under the `simd` cargo
+//! feature it consults the runtime-detected kernel tier
+//! (`core_ops::simd`) once and routes to AVX2/NEON
+//! implementations; otherwise (and on hosts without the ISA) it runs the
+//! portable `*_scalar` sibling, which is the reference tier every other
+//! tier is pinned against.  [`d2_batch_sq8`] is the asymmetric
+//! f32-query × u8-candidate kernel backing the SQ8 quantized store
+//! (`data::quant`).
 
 /// Squared Euclidean distance ‖a − b‖².
 #[inline]
@@ -125,7 +134,30 @@ pub fn batch_eligible(d: usize, w: usize) -> bool {
 /// bit-identical to the seed implementation) can therefore batch without
 /// shifting a single ulp; the unit tests assert equality of the raw bit
 /// patterns.
+///
+/// Under the `simd` feature this entry point dispatches to the hand
+/// written tier (`core_ops::simd`) when the host CPU supports
+/// it; the SIMD implementation reproduces the same accumulation order,
+/// so the bit-identity contract holds across tiers.  Without the
+/// feature it *is* [`dot_batch_scalar`].
 pub fn dot_batch(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(block.len(), w * d, "block is not w × d");
+    #[cfg(feature = "simd")]
+    if let Some(k) = crate::core_ops::simd::kernels() {
+        // SAFETY: the tier was selected by runtime CPU-feature detection
+        // and the slice extents were validated above.
+        unsafe { (k.dot_batch)(x, block, d, out) };
+        return;
+    }
+    dot_batch_scalar(x, block, d, out);
+}
+
+/// The portable scalar tier of [`dot_batch`] (the reference
+/// implementation every other tier is pinned against).  Public so
+/// benches and tests can compare tiers inside one process.
+pub fn dot_batch_scalar(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
     let w = out.len();
     assert_eq!(x.len(), d, "x is not d-dimensional");
     assert_eq!(block.len(), w * d, "block is not w × d");
@@ -188,6 +220,12 @@ pub fn dot_batch(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
 /// shapes.  The two paths round differently at f32 (the same tolerance
 /// class as the blocked kernels; see [`d2_via_dot`]); callers that must
 /// not move an ulp use [`dot_batch`] or [`d2_batch_exact`] instead.
+///
+/// Under the `simd` feature the *tiled* path dispatches to the FMA
+/// implementation in `core_ops::simd` when the host supports it
+/// — `d2_batch` is tolerance-class by contract, so the wider registers
+/// and fused rounding are free; the one-shot scalar fallback below the
+/// eligibility thresholds is taken before dispatch and never moves.
 pub fn d2_batch(x: &[f32], xx: f32, block: &[f32], norms: &[f32], d: usize, out: &mut [f32]) {
     let w = out.len();
     assert_eq!(x.len(), d, "x is not d-dimensional");
@@ -199,7 +237,34 @@ pub fn d2_batch(x: &[f32], xx: f32, block: &[f32], norms: &[f32], d: usize, out:
         }
         return;
     }
-    dot_batch(x, block, d, out);
+    #[cfg(feature = "simd")]
+    if let Some(k) = crate::core_ops::simd::kernels() {
+        // SAFETY: tier selected by runtime CPU-feature detection; slice
+        // extents validated above; eligibility checked above.
+        unsafe { (k.d2_batch)(x, xx, block, norms, d, out) };
+        return;
+    }
+    dot_batch_scalar(x, block, d, out);
+    for (o, &nn) in out.iter_mut().zip(norms) {
+        *o = d2_via_dot(xx, nn, *o);
+    }
+}
+
+/// The portable scalar tier of [`d2_batch`] (identical semantics,
+/// including the one-shot fallback).  Public so benches and tests can
+/// compare tiers inside one process.
+pub fn d2_batch_scalar(x: &[f32], xx: f32, block: &[f32], norms: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(block.len(), w * d, "block is not w × d");
+    assert_eq!(norms.len(), w, "one precomputed norm per candidate");
+    if !batch_eligible(d, w) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = d2(x, &block[j * d..(j + 1) * d]);
+        }
+        return;
+    }
+    dot_batch_scalar(x, block, d, out);
     for (o, &nn) in out.iter_mut().zip(norms) {
         *o = d2_via_dot(xx, nn, *o);
     }
@@ -214,7 +279,26 @@ pub fn d2_batch(x: &[f32], xx: f32, block: &[f32], norms: &[f32], d: usize, out:
 /// batching without the norm identity's rounding shift and without
 /// precomputed norms — the ANN frontier expansion, whose results (and
 /// `search` ≡ `search_batch` equivalence) must not move under batching.
+///
+/// Like [`dot_batch`], the `simd`-feature tier replicates the scalar
+/// accumulation order exactly, so dispatch never moves a bit.
 pub fn d2_batch_exact(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(block.len(), w * d, "block is not w × d");
+    #[cfg(feature = "simd")]
+    if let Some(k) = crate::core_ops::simd::kernels() {
+        // SAFETY: tier selected by runtime CPU-feature detection; slice
+        // extents validated above.
+        unsafe { (k.d2_batch_exact)(x, block, d, out) };
+        return;
+    }
+    d2_batch_exact_scalar(x, block, d, out);
+}
+
+/// The portable scalar tier of [`d2_batch_exact`].  Public so benches
+/// and tests can compare tiers inside one process.
+pub fn d2_batch_exact_scalar(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
     let w = out.len();
     assert_eq!(x.len(), d, "x is not d-dimensional");
     assert_eq!(block.len(), w * d, "block is not w × d");
@@ -262,6 +346,74 @@ pub fn d2_batch_exact(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
     while j < w {
         out[j] = d2(x, &block[j * d..(j + 1) * d]);
         j += 1;
+    }
+}
+
+/// Batched **asymmetric** SQ8 distances: the query stays f32, the
+/// candidates stay quantized — `out[j] ≈ ‖x − decode(codes_j)‖²` where
+/// `decode(c)[t] = min[t] + scale[t] · c[t]` (the per-dimension affine
+/// of [`crate::data::quant::Sq8Quantizer`]).  Codes are never expanded
+/// to an f32 block in memory, which is the point: a candidate row costs
+/// `d` bytes of bandwidth instead of `4d`.
+///
+/// Tolerance class: the result equals the f32 distance to the *decoded*
+/// row up to f32 rounding (the SIMD tier widens u8→f32 and uses FMA);
+/// the quantization error itself is bounded by the quantizer's step
+/// size, which is why serving re-ranks survivors with the exact f32
+/// kernel (see `gkm::ann`).
+pub fn d2_batch_sq8(x: &[f32], codes: &[u8], min: &[f32], scale: &[f32], d: usize, out: &mut [f32]) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(codes.len(), w * d, "codes is not w × d");
+    assert_eq!(min.len(), d, "one min per dimension");
+    assert_eq!(scale.len(), d, "one scale per dimension");
+    #[cfg(feature = "simd")]
+    if let Some(k) = crate::core_ops::simd::kernels() {
+        // SAFETY: tier selected by runtime CPU-feature detection; slice
+        // extents validated above.
+        unsafe { (k.d2_batch_sq8)(x, codes, min, scale, d, out) };
+        return;
+    }
+    d2_batch_sq8_scalar(x, codes, min, scale, d, out);
+}
+
+/// The portable scalar tier of [`d2_batch_sq8`]: per row, the same
+/// four-chain unrolling as [`d2`] with an inline dequantize.  Public so
+/// benches and tests can compare tiers inside one process.
+pub fn d2_batch_sq8_scalar(
+    x: &[f32],
+    codes: &[u8],
+    min: &[f32],
+    scale: &[f32],
+    d: usize,
+    out: &mut [f32],
+) {
+    let w = out.len();
+    assert_eq!(x.len(), d, "x is not d-dimensional");
+    assert_eq!(codes.len(), w * d, "codes is not w × d");
+    assert_eq!(min.len(), d, "one min per dimension");
+    assert_eq!(scale.len(), d, "one scale per dimension");
+    let chunks = d / 4;
+    for (j, o) in out.iter_mut().enumerate() {
+        let row = &codes[j * d..(j + 1) * d];
+        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+        for i in 0..chunks {
+            let b = i * 4;
+            let e0 = x[b] - (min[b] + scale[b] * f32::from(row[b]));
+            let e1 = x[b + 1] - (min[b + 1] + scale[b + 1] * f32::from(row[b + 1]));
+            let e2 = x[b + 2] - (min[b + 2] + scale[b + 2] * f32::from(row[b + 2]));
+            let e3 = x[b + 3] - (min[b + 3] + scale[b + 3] * f32::from(row[b + 3]));
+            s0 += e0 * e0;
+            s1 += e1 * e1;
+            s2 += e2 * e2;
+            s3 += e3 * e3;
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for t in chunks * 4..d {
+            let e = x[t] - (min[t] + scale[t] * f32::from(row[t]));
+            s += e * e;
+        }
+        *o = s;
     }
 }
 
@@ -451,5 +603,56 @@ mod tests {
         assert!(got > 50.0, "must report a value above the bound");
         // and it may be less than the exact distance (early exit)
         assert!(got <= d2(&a, &b));
+    }
+
+    #[test]
+    fn d2_batch_sq8_matches_decoded_f32_distance() {
+        // the asymmetric kernel against the obvious spec: decode every
+        // code row to f32, then take the plain d2
+        let mut rng = crate::util::rng::Rng::new(12);
+        for d in [1usize, 3, 8, 100, 128] {
+            for w in [1usize, 2, 4, 7] {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let codes: Vec<u8> = (0..w * d).map(|_| rng.below(256) as u8).collect();
+                let min: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let scale: Vec<f32> = (0..d).map(|_| rng.normal().abs() * 0.01 + 1e-4).collect();
+                let mut out = vec![0f32; w];
+                d2_batch_sq8(&x, &codes, &min, &scale, d, &mut out);
+                for j in 0..w {
+                    let decoded: Vec<f32> = (0..d)
+                        .map(|t| min[t] + scale[t] * f32::from(codes[j * d + t]))
+                        .collect();
+                    let want = d2(&x, &decoded);
+                    assert!(
+                        (out[j] - want).abs() <= 1e-3 * (1.0 + want),
+                        "d={d} w={w} col {j}: got {} want {want}",
+                        out[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tiers_are_the_dispatched_kernels_without_the_feature() {
+        // with `simd` off these are literally the same code path; with it
+        // on, the exact kernels must still agree to the bit (tolerance
+        // kernels are covered in core_ops::simd's own tests)
+        let mut rng = crate::util::rng::Rng::new(13);
+        let (d, w) = (100usize, 7usize);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+        let mut a = vec![0f32; w];
+        let mut b = vec![0f32; w];
+        dot_batch(&x, &block, d, &mut a);
+        dot_batch_scalar(&x, &block, d, &mut b);
+        for j in 0..w {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "dot col {j}");
+        }
+        d2_batch_exact(&x, &block, d, &mut a);
+        d2_batch_exact_scalar(&x, &block, d, &mut b);
+        for j in 0..w {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "d2 col {j}");
+        }
     }
 }

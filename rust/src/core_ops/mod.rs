@@ -7,4 +7,6 @@
 pub mod argmin;
 pub mod blockdist;
 pub mod dist;
+#[cfg(feature = "simd")]
+pub mod simd;
 pub mod topk;

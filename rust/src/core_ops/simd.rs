@@ -1,0 +1,676 @@
+//! Explicit SIMD tier for the batched distance kernels (feature `simd`).
+//!
+//! The portable kernels in [`dist`](crate::core_ops::dist) are written so
+//! LLVM autovectorizes them, but autovectorization neither guarantees the
+//! widest ISA the host offers nor lets the tolerance-class kernels use
+//! FMA.  This module provides hand-written AVX2 (x86_64) and NEON
+//! (aarch64) implementations behind **one runtime dispatch**: the first
+//! kernel call probes the CPU (`is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`), caches a function table in a
+//! [`OnceLock`], and every later call is an atomic load plus an indirect
+//! call.  Hosts without the required features (and builds without the
+//! `simd` feature) run the scalar tier unchanged.
+//!
+//! ## Exactness contract (the PR 5 split, preserved per tier)
+//!
+//! | kernel            | class      | SIMD implementation                      |
+//! |-------------------|------------|------------------------------------------|
+//! | `dot_batch`       | exact bits | 4-lane mul+add = the scalar chains       |
+//! | `d2_batch_exact`  | exact bits | 4-lane sub/mul/add = the scalar chains   |
+//! | `d2_batch`        | tolerance  | 8-lane FMA (AVX2) / 4-lane FMA (NEON)    |
+//! | `d2_batch_sq8`    | tolerance  | u8→f32 widen + FMA                       |
+//!
+//! The scalar kernels keep **four independent accumulator chains** and
+//! reduce them as `((s0 + s1) + s2) + s3`; chain *l* holds the elements
+//! with index ≡ *l* (mod 4).  That is exactly one 4-lane SIMD register
+//! accumulated with vertical `mul`+`add` and reduced lane 0 → lane 3, so
+//! the exact-bits kernels here reproduce the scalar tier **bit for bit**
+//! on every input (asserted by the tests below) — the Δℐ GK-means scan
+//! and ANN search contracts survive the tier switch.  `d2_batch` and
+//! `d2_batch_sq8` are tolerance-class by contract, which frees them to
+//! use wider registers and fused multiply-add (FMA contracts `a*b + c`
+//! into one rounding, moving results by ulps — why the exact kernels
+//! must not use it).
+//!
+//! Set `GKMEANS_NO_SIMD=1` to force the scalar tier at runtime (used by
+//! `benches/hotpath_micro.rs` notes and for A/B debugging).
+
+use std::sync::OnceLock;
+
+/// Function table for one detected tier.  Entries take the same
+/// arguments as their [`dist`](crate::core_ops::dist) siblings; callers
+/// (the `dist::` entry points) validate lengths *before* dispatching, so
+/// the implementations may assume `x.len() == d`,
+/// `block.len() == out.len() * d`, etc.
+pub(crate) struct KernelTier {
+    pub(crate) name: &'static str,
+    pub(crate) dot_batch: unsafe fn(&[f32], &[f32], usize, &mut [f32]),
+    pub(crate) d2_batch_exact: unsafe fn(&[f32], &[f32], usize, &mut [f32]),
+    /// Tiled norm-identity path only — the caller has already checked
+    /// [`dist::batch_eligible`](crate::core_ops::dist::batch_eligible)
+    /// and takes the scalar fallback itself below the thresholds.
+    pub(crate) d2_batch: unsafe fn(&[f32], f32, &[f32], &[f32], usize, &mut [f32]),
+    pub(crate) d2_batch_sq8: unsafe fn(&[f32], &[u8], &[f32], &[f32], usize, &mut [f32]),
+}
+
+static TIER: OnceLock<Option<KernelTier>> = OnceLock::new();
+
+/// The cached tier, or `None` when the host offers no supported ISA (or
+/// `GKMEANS_NO_SIMD` is set).  First call performs detection.
+pub(crate) fn kernels() -> Option<&'static KernelTier> {
+    TIER.get_or_init(detect).as_ref()
+}
+
+/// Name of the active kernel tier: `"avx2"`, `"neon"`, or `"scalar"`.
+/// Logged by `gkm-serve` and recorded by `benches/hotpath_micro.rs`.
+pub fn tier() -> &'static str {
+    kernels().map_or("scalar", |k| k.name)
+}
+
+/// Whether a SIMD tier is active (feature compiled in *and* the host CPU
+/// supports it *and* no `GKMEANS_NO_SIMD` override).
+pub fn active() -> bool {
+    kernels().is_some()
+}
+
+fn detect() -> Option<KernelTier> {
+    if std::env::var_os("GKMEANS_NO_SIMD").is_some_and(|v| v != "0") {
+        return None;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return Some(KernelTier {
+                name: "avx2",
+                dot_batch: x86::dot_batch_sse2,
+                d2_batch_exact: x86::d2_batch_exact_sse2,
+                d2_batch: x86::d2_batch_avx2,
+                d2_batch_sq8: x86::d2_batch_sq8_avx2,
+            });
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(KernelTier {
+                name: "neon",
+                dot_batch: neon::dot_batch_neon,
+                d2_batch_exact: neon::d2_batch_exact_neon,
+                d2_batch: neon::d2_batch_neon,
+                d2_batch_sq8: neon::d2_batch_sq8_neon,
+            });
+        }
+    }
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! x86_64 kernels.  The exact-bits pair uses 128-bit SSE2 (baseline
+    //! on x86_64 — detection is only kept uniform with the AVX2 pair):
+    //! the four scalar accumulator chains *are* one `__m128`, and
+    //! separate `mul`/`add` keeps scalar rounding.  The tolerance pair
+    //! uses 256-bit AVX2 FMA.
+
+    use crate::core_ops::dist;
+    use core::arch::x86_64::*;
+
+    /// Reduce the 4 lanes (= the 4 scalar accumulator chains) in the
+    /// scalar kernels' exact order: `((s0 + s1) + s2) + s3`.
+    #[target_feature(enable = "sse2")]
+    unsafe fn chain_sum(v: __m128) -> f32 {
+        let mut t = [0f32; 4];
+        _mm_storeu_ps(t.as_mut_ptr(), v);
+        ((t[0] + t[1]) + t[2]) + t[3]
+    }
+
+    /// Any-order horizontal sum of a 256-bit accumulator (tolerance
+    /// class only).
+    #[target_feature(enable = "avx")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let mut t = [0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), v);
+        ((t[0] + t[4]) + (t[1] + t[5])) + ((t[2] + t[6]) + (t[3] + t[7]))
+    }
+
+    /// Bit-identical [`dist::dot_batch`]: 4-column tile, one `__m128`
+    /// accumulator per column, mul+add (never FMA).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dot_batch_sse2(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let chunks = d / 4;
+        let mut j = 0usize;
+        while j + 4 <= w {
+            let y0 = block.as_ptr().add(j * d);
+            let y1 = block.as_ptr().add((j + 1) * d);
+            let y2 = block.as_ptr().add((j + 2) * d);
+            let y3 = block.as_ptr().add((j + 3) * d);
+            let mut s0 = _mm_setzero_ps();
+            let mut s1 = _mm_setzero_ps();
+            let mut s2 = _mm_setzero_ps();
+            let mut s3 = _mm_setzero_ps();
+            for i in 0..chunks {
+                let b = i * 4;
+                let xv = _mm_loadu_ps(xp.add(b));
+                s0 = _mm_add_ps(s0, _mm_mul_ps(xv, _mm_loadu_ps(y0.add(b))));
+                s1 = _mm_add_ps(s1, _mm_mul_ps(xv, _mm_loadu_ps(y1.add(b))));
+                s2 = _mm_add_ps(s2, _mm_mul_ps(xv, _mm_loadu_ps(y2.add(b))));
+                s3 = _mm_add_ps(s3, _mm_mul_ps(xv, _mm_loadu_ps(y3.add(b))));
+            }
+            let mut r = [chain_sum(s0), chain_sum(s1), chain_sum(s2), chain_sum(s3)];
+            for t in chunks * 4..d {
+                let xv = *xp.add(t);
+                r[0] += xv * *y0.add(t);
+                r[1] += xv * *y1.add(t);
+                r[2] += xv * *y2.add(t);
+                r[3] += xv * *y3.add(t);
+            }
+            out[j..j + 4].copy_from_slice(&r);
+            j += 4;
+        }
+        while j < w {
+            out[j] = dist::dot(x, &block[j * d..(j + 1) * d]);
+            j += 1;
+        }
+    }
+
+    /// Bit-identical [`dist::d2_batch_exact`]: sub, mul, add — the
+    /// scalar chains on 4 lanes.
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn d2_batch_exact_sse2(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let chunks = d / 4;
+        let mut j = 0usize;
+        while j + 4 <= w {
+            let y0 = block.as_ptr().add(j * d);
+            let y1 = block.as_ptr().add((j + 1) * d);
+            let y2 = block.as_ptr().add((j + 2) * d);
+            let y3 = block.as_ptr().add((j + 3) * d);
+            let mut s0 = _mm_setzero_ps();
+            let mut s1 = _mm_setzero_ps();
+            let mut s2 = _mm_setzero_ps();
+            let mut s3 = _mm_setzero_ps();
+            for i in 0..chunks {
+                let b = i * 4;
+                let xv = _mm_loadu_ps(xp.add(b));
+                let e0 = _mm_sub_ps(xv, _mm_loadu_ps(y0.add(b)));
+                let e1 = _mm_sub_ps(xv, _mm_loadu_ps(y1.add(b)));
+                let e2 = _mm_sub_ps(xv, _mm_loadu_ps(y2.add(b)));
+                let e3 = _mm_sub_ps(xv, _mm_loadu_ps(y3.add(b)));
+                s0 = _mm_add_ps(s0, _mm_mul_ps(e0, e0));
+                s1 = _mm_add_ps(s1, _mm_mul_ps(e1, e1));
+                s2 = _mm_add_ps(s2, _mm_mul_ps(e2, e2));
+                s3 = _mm_add_ps(s3, _mm_mul_ps(e3, e3));
+            }
+            let mut r = [chain_sum(s0), chain_sum(s1), chain_sum(s2), chain_sum(s3)];
+            for t in chunks * 4..d {
+                let xv = *xp.add(t);
+                let e0 = xv - *y0.add(t);
+                let e1 = xv - *y1.add(t);
+                let e2 = xv - *y2.add(t);
+                let e3 = xv - *y3.add(t);
+                r[0] += e0 * e0;
+                r[1] += e1 * e1;
+                r[2] += e2 * e2;
+                r[3] += e3 * e3;
+            }
+            out[j..j + 4].copy_from_slice(&r);
+            j += 4;
+        }
+        while j < w {
+            out[j] = dist::d2(x, &block[j * d..(j + 1) * d]);
+            j += 1;
+        }
+    }
+
+    /// Tolerance-class [`dist::d2_batch`] tiled path: 4-column tile with
+    /// one 256-bit FMA accumulator per column, norms folded through
+    /// [`dist::d2_via_dot`].  Caller guarantees `batch_eligible`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn d2_batch_avx2(
+        x: &[f32],
+        xx: f32,
+        block: &[f32],
+        norms: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let chunks8 = d / 8;
+        let mut j = 0usize;
+        while j + 4 <= w {
+            let y0 = block.as_ptr().add(j * d);
+            let y1 = block.as_ptr().add((j + 1) * d);
+            let y2 = block.as_ptr().add((j + 2) * d);
+            let y3 = block.as_ptr().add((j + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            for i in 0..chunks8 {
+                let b = i * 8;
+                let xv = _mm256_loadu_ps(xp.add(b));
+                a0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(y0.add(b)), a0);
+                a1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(y1.add(b)), a1);
+                a2 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(y2.add(b)), a2);
+                a3 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(y3.add(b)), a3);
+            }
+            let mut r = [hsum256(a0), hsum256(a1), hsum256(a2), hsum256(a3)];
+            for t in chunks8 * 8..d {
+                let xv = *xp.add(t);
+                r[0] += xv * *y0.add(t);
+                r[1] += xv * *y1.add(t);
+                r[2] += xv * *y2.add(t);
+                r[3] += xv * *y3.add(t);
+            }
+            out[j] = dist::d2_via_dot(xx, norms[j], r[0]);
+            out[j + 1] = dist::d2_via_dot(xx, norms[j + 1], r[1]);
+            out[j + 2] = dist::d2_via_dot(xx, norms[j + 2], r[2]);
+            out[j + 3] = dist::d2_via_dot(xx, norms[j + 3], r[3]);
+            j += 4;
+        }
+        while j < w {
+            let xy = dist::dot(x, &block[j * d..(j + 1) * d]);
+            out[j] = dist::d2_via_dot(xx, norms[j], xy);
+            j += 1;
+        }
+    }
+
+    /// Tolerance-class asymmetric SQ8 distance: widen 8 codes at a time
+    /// (`u8 → i32 → f32`), dequantize with one FMA (`min + scale·code`),
+    /// accumulate `(x − y)²` with a second FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn d2_batch_sq8_avx2(
+        x: &[f32],
+        codes: &[u8],
+        min: &[f32],
+        scale: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let mp = min.as_ptr();
+        let sp = scale.as_ptr();
+        let chunks8 = d / 8;
+        for (j, o) in out.iter_mut().enumerate() {
+            let row = codes.as_ptr().add(j * d);
+            let mut acc = _mm256_setzero_ps();
+            for i in 0..chunks8 {
+                let b = i * 8;
+                let cv = _mm_loadl_epi64(row.add(b) as *const __m128i);
+                let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(cv));
+                let y = _mm256_fmadd_ps(cf, _mm256_loadu_ps(sp.add(b)), _mm256_loadu_ps(mp.add(b)));
+                let e = _mm256_sub_ps(_mm256_loadu_ps(xp.add(b)), y);
+                acc = _mm256_fmadd_ps(e, e, acc);
+            }
+            let mut s = hsum256(acc);
+            for t in chunks8 * 8..d {
+                let y = *mp.add(t) + *sp.add(t) * f32::from(*row.add(t));
+                let e = *xp.add(t) - y;
+                s += e * e;
+            }
+            *o = s;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! aarch64 NEON kernels, mirroring the x86 structure: 128-bit
+    //! vectors are 4 lanes = the scalar accumulator chains, so the
+    //! exact-bits pair uses `vmulq`/`vaddq` (never fused) and the
+    //! tolerance pair uses `vfmaq`.
+
+    use crate::core_ops::dist;
+    use core::arch::aarch64::*;
+
+    /// `((s0 + s1) + s2) + s3` — the scalar reduction order.
+    #[target_feature(enable = "neon")]
+    unsafe fn chain_sum(v: float32x4_t) -> f32 {
+        ((vgetq_lane_f32::<0>(v) + vgetq_lane_f32::<1>(v)) + vgetq_lane_f32::<2>(v))
+            + vgetq_lane_f32::<3>(v)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_batch_neon(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let chunks = d / 4;
+        let mut j = 0usize;
+        while j + 4 <= w {
+            let y0 = block.as_ptr().add(j * d);
+            let y1 = block.as_ptr().add((j + 1) * d);
+            let y2 = block.as_ptr().add((j + 2) * d);
+            let y3 = block.as_ptr().add((j + 3) * d);
+            let mut s0 = vdupq_n_f32(0.0);
+            let mut s1 = vdupq_n_f32(0.0);
+            let mut s2 = vdupq_n_f32(0.0);
+            let mut s3 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let b = i * 4;
+                let xv = vld1q_f32(xp.add(b));
+                s0 = vaddq_f32(s0, vmulq_f32(xv, vld1q_f32(y0.add(b))));
+                s1 = vaddq_f32(s1, vmulq_f32(xv, vld1q_f32(y1.add(b))));
+                s2 = vaddq_f32(s2, vmulq_f32(xv, vld1q_f32(y2.add(b))));
+                s3 = vaddq_f32(s3, vmulq_f32(xv, vld1q_f32(y3.add(b))));
+            }
+            let mut r = [chain_sum(s0), chain_sum(s1), chain_sum(s2), chain_sum(s3)];
+            for t in chunks * 4..d {
+                let xv = *xp.add(t);
+                r[0] += xv * *y0.add(t);
+                r[1] += xv * *y1.add(t);
+                r[2] += xv * *y2.add(t);
+                r[3] += xv * *y3.add(t);
+            }
+            out[j..j + 4].copy_from_slice(&r);
+            j += 4;
+        }
+        while j < w {
+            out[j] = dist::dot(x, &block[j * d..(j + 1) * d]);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn d2_batch_exact_neon(x: &[f32], block: &[f32], d: usize, out: &mut [f32]) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let chunks = d / 4;
+        let mut j = 0usize;
+        while j + 4 <= w {
+            let y0 = block.as_ptr().add(j * d);
+            let y1 = block.as_ptr().add((j + 1) * d);
+            let y2 = block.as_ptr().add((j + 2) * d);
+            let y3 = block.as_ptr().add((j + 3) * d);
+            let mut s0 = vdupq_n_f32(0.0);
+            let mut s1 = vdupq_n_f32(0.0);
+            let mut s2 = vdupq_n_f32(0.0);
+            let mut s3 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let b = i * 4;
+                let xv = vld1q_f32(xp.add(b));
+                let e0 = vsubq_f32(xv, vld1q_f32(y0.add(b)));
+                let e1 = vsubq_f32(xv, vld1q_f32(y1.add(b)));
+                let e2 = vsubq_f32(xv, vld1q_f32(y2.add(b)));
+                let e3 = vsubq_f32(xv, vld1q_f32(y3.add(b)));
+                s0 = vaddq_f32(s0, vmulq_f32(e0, e0));
+                s1 = vaddq_f32(s1, vmulq_f32(e1, e1));
+                s2 = vaddq_f32(s2, vmulq_f32(e2, e2));
+                s3 = vaddq_f32(s3, vmulq_f32(e3, e3));
+            }
+            let mut r = [chain_sum(s0), chain_sum(s1), chain_sum(s2), chain_sum(s3)];
+            for t in chunks * 4..d {
+                let xv = *xp.add(t);
+                let e0 = xv - *y0.add(t);
+                let e1 = xv - *y1.add(t);
+                let e2 = xv - *y2.add(t);
+                let e3 = xv - *y3.add(t);
+                r[0] += e0 * e0;
+                r[1] += e1 * e1;
+                r[2] += e2 * e2;
+                r[3] += e3 * e3;
+            }
+            out[j..j + 4].copy_from_slice(&r);
+            j += 4;
+        }
+        while j < w {
+            out[j] = dist::d2(x, &block[j * d..(j + 1) * d]);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn d2_batch_neon(
+        x: &[f32],
+        xx: f32,
+        block: &[f32],
+        norms: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        let w = out.len();
+        let xp = x.as_ptr();
+        let chunks = d / 4;
+        let mut j = 0usize;
+        while j + 4 <= w {
+            let y0 = block.as_ptr().add(j * d);
+            let y1 = block.as_ptr().add((j + 1) * d);
+            let y2 = block.as_ptr().add((j + 2) * d);
+            let y3 = block.as_ptr().add((j + 3) * d);
+            let mut a0 = vdupq_n_f32(0.0);
+            let mut a1 = vdupq_n_f32(0.0);
+            let mut a2 = vdupq_n_f32(0.0);
+            let mut a3 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let b = i * 4;
+                let xv = vld1q_f32(xp.add(b));
+                a0 = vfmaq_f32(a0, xv, vld1q_f32(y0.add(b)));
+                a1 = vfmaq_f32(a1, xv, vld1q_f32(y1.add(b)));
+                a2 = vfmaq_f32(a2, xv, vld1q_f32(y2.add(b)));
+                a3 = vfmaq_f32(a3, xv, vld1q_f32(y3.add(b)));
+            }
+            let mut r = [vaddvq_f32(a0), vaddvq_f32(a1), vaddvq_f32(a2), vaddvq_f32(a3)];
+            for t in chunks * 4..d {
+                let xv = *xp.add(t);
+                r[0] += xv * *y0.add(t);
+                r[1] += xv * *y1.add(t);
+                r[2] += xv * *y2.add(t);
+                r[3] += xv * *y3.add(t);
+            }
+            out[j] = dist::d2_via_dot(xx, norms[j], r[0]);
+            out[j + 1] = dist::d2_via_dot(xx, norms[j + 1], r[1]);
+            out[j + 2] = dist::d2_via_dot(xx, norms[j + 2], r[2]);
+            out[j + 3] = dist::d2_via_dot(xx, norms[j + 3], r[3]);
+            j += 4;
+        }
+        while j < w {
+            let xy = dist::dot(x, &block[j * d..(j + 1) * d]);
+            out[j] = dist::d2_via_dot(xx, norms[j], xy);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn d2_batch_sq8_neon(
+        x: &[f32],
+        codes: &[u8],
+        min: &[f32],
+        scale: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        let xp = x.as_ptr();
+        let mp = min.as_ptr();
+        let sp = scale.as_ptr();
+        let chunks8 = d / 8;
+        for (j, o) in out.iter_mut().enumerate() {
+            let row = codes.as_ptr().add(j * d);
+            let mut acc = vdupq_n_f32(0.0);
+            for i in 0..chunks8 {
+                let b = i * 8;
+                // widen 8 codes: u8x8 → u16x8 → two u32x4 → two f32x4
+                let c8 = vld1_u8(row.add(b));
+                let c16 = vmovl_u8(c8);
+                let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(c16)));
+                let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(c16)));
+                let ylo = vfmaq_f32(vld1q_f32(mp.add(b)), lo, vld1q_f32(sp.add(b)));
+                let yhi = vfmaq_f32(vld1q_f32(mp.add(b + 4)), hi, vld1q_f32(sp.add(b + 4)));
+                let elo = vsubq_f32(vld1q_f32(xp.add(b)), ylo);
+                let ehi = vsubq_f32(vld1q_f32(xp.add(b + 4)), yhi);
+                acc = vfmaq_f32(acc, elo, elo);
+                acc = vfmaq_f32(acc, ehi, ehi);
+            }
+            let mut s = vaddvq_f32(acc);
+            for t in chunks8 * 8..d {
+                let y = *mp.add(t) + *sp.add(t) * f32::from(*row.add(t));
+                let e = *xp.add(t) - y;
+                s += e * e;
+            }
+            *o = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core_ops::dist;
+    use crate::util::rng::Rng;
+
+    // The ISSUE's ragged-dimension sweep; widths straddle the tile.
+    const DIMS: [usize; 5] = [3, 8, 100, 128, 512];
+    const WIDTHS: [usize; 6] = [1, 3, 4, 5, 8, 11];
+
+    #[test]
+    fn simd_dot_batch_bit_identical_to_scalar() {
+        let Some(k) = kernels() else { return };
+        let mut rng = Rng::new(31);
+        for d in DIMS {
+            for w in WIDTHS {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+                let mut want = vec![0f32; w];
+                dist::dot_batch_scalar(&x, &block, d, &mut want);
+                let mut got = vec![0f32; w];
+                // SAFETY: `kernels()` only returns a tier the host supports.
+                unsafe { (k.dot_batch)(&x, &block, d, &mut got) };
+                for j in 0..w {
+                    assert_eq!(
+                        got[j].to_bits(),
+                        want[j].to_bits(),
+                        "tier {} d={d} w={w} col {j}: {} vs {}",
+                        k.name,
+                        got[j],
+                        want[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_d2_batch_exact_bit_identical_to_scalar() {
+        let Some(k) = kernels() else { return };
+        let mut rng = Rng::new(32);
+        for d in DIMS {
+            for w in WIDTHS {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+                let mut want = vec![0f32; w];
+                dist::d2_batch_exact_scalar(&x, &block, d, &mut want);
+                let mut got = vec![0f32; w];
+                // SAFETY: `kernels()` only returns a tier the host supports.
+                unsafe { (k.d2_batch_exact)(&x, &block, d, &mut got) };
+                for j in 0..w {
+                    assert_eq!(
+                        got[j].to_bits(),
+                        want[j].to_bits(),
+                        "tier {} d={d} w={w} col {j}",
+                        k.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_d2_batch_matches_scalar_within_tolerance() {
+        let Some(k) = kernels() else { return };
+        let mut rng = Rng::new(33);
+        for d in DIMS {
+            for w in WIDTHS {
+                if !dist::batch_eligible(d, w) {
+                    continue; // the wrapper never dispatches these shapes
+                }
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+                let xx = dist::norm2(&x);
+                let norms: Vec<f32> = block.chunks_exact(d).map(dist::norm2).collect();
+                let mut got = vec![0f32; w];
+                // SAFETY: `kernels()` only returns a tier the host supports.
+                unsafe { (k.d2_batch)(&x, xx, &block, &norms, d, &mut got) };
+                for j in 0..w {
+                    let want = dist::d2(&x, &block[j * d..(j + 1) * d]);
+                    assert!(
+                        (got[j] - want).abs() <= 1e-3 * (1.0 + want),
+                        "tier {} d={d} w={w} col {j}: got {} want {want}",
+                        k.name,
+                        got[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_d2_batch_sq8_matches_scalar_kernel() {
+        let Some(k) = kernels() else { return };
+        let mut rng = Rng::new(34);
+        for d in DIMS {
+            for w in WIDTHS {
+                let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let codes: Vec<u8> = (0..w * d).map(|_| (rng.below(256)) as u8).collect();
+                let min: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let scale: Vec<f32> = (0..d).map(|_| rng.normal().abs() * 0.01 + 1e-3).collect();
+                let mut want = vec![0f32; w];
+                dist::d2_batch_sq8_scalar(&x, &codes, &min, &scale, d, &mut want);
+                let mut got = vec![0f32; w];
+                // SAFETY: `kernels()` only returns a tier the host supports.
+                unsafe { (k.d2_batch_sq8)(&x, &codes, &min, &scale, d, &mut got) };
+                for j in 0..w {
+                    let (g, wv) = (got[j], want[j]);
+                    assert!(
+                        (g - wv).abs() <= 1e-3 * (1.0 + wv.abs()),
+                        "tier {} d={d} w={w} col {j}: got {g} want {wv}",
+                        k.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_name_is_consistent_with_active() {
+        if active() {
+            assert_ne!(tier(), "scalar");
+        } else {
+            assert_eq!(tier(), "scalar");
+        }
+    }
+
+    #[test]
+    fn dispatched_entry_points_agree_with_scalar_tier() {
+        // end-to-end through the public dist:: wrappers (which dispatch
+        // here when the feature is on): exact kernels at exact bits,
+        // d2_batch within the documented tolerance class
+        let mut rng = Rng::new(35);
+        let (d, w) = (128usize, 9usize);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let block: Vec<f32> = (0..w * d).map(|_| rng.normal()).collect();
+        let mut a = vec![0f32; w];
+        let mut b = vec![0f32; w];
+        dist::dot_batch(&x, &block, d, &mut a);
+        dist::dot_batch_scalar(&x, &block, d, &mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        dist::d2_batch_exact(&x, &block, d, &mut a);
+        dist::d2_batch_exact_scalar(&x, &block, d, &mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let xx = dist::norm2(&x);
+        let norms: Vec<f32> = block.chunks_exact(d).map(dist::norm2).collect();
+        dist::d2_batch(&x, xx, &block, &norms, d, &mut a);
+        dist::d2_batch_scalar(&x, xx, &block, &norms, d, &mut b);
+        for j in 0..w {
+            assert!((a[j] - b[j]).abs() <= 1e-3 * (1.0 + b[j]), "col {j}");
+        }
+    }
+}

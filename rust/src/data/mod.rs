@@ -1,10 +1,12 @@
 //! Datasets: container, the out-of-core storage layer ([`store`]) and
-//! its locality-aware scan planner ([`plan`]), synthetic generators for
-//! the paper's four benchmark sets, and fvecs/bvecs interchange I/O.
+//! its locality-aware scan planner ([`plan`]), SQ8 scalar quantization
+//! ([`quant`]), synthetic generators for the paper's four benchmark
+//! sets, and fvecs/bvecs interchange I/O.
 
 pub mod io;
 pub mod matrix;
 pub mod plan;
+pub mod quant;
 pub mod store;
 pub mod synth;
 

@@ -1,0 +1,431 @@
+//! SQ8 scalar quantization: u8 codes + a per-dimension affine, the ~4×
+//! working-set shrink that makes the paper's 10M × 512-d regime
+//! RAM-resident (~5 GB of codes vs ~20 GB of f32).
+//!
+//! ## Model
+//!
+//! A trained [`Sq8Quantizer`] holds per-dimension `min[t]` and `scale[t]`
+//! (the step per code unit, `(max − min) / 255` over a training sample);
+//! a vector quantizes as `code[t] = round((v[t] − min[t]) / scale[t])`
+//! clamped to `[0, 255]`, and decodes as `min[t] + scale[t] · code[t]`.
+//! Data that is already u8 (bvecs) round-trips **losslessly** through
+//! the identity quantizer (`min = 0`, `scale = 1`) — undoing the 4×
+//! inflation `ChunkedVecStore` pays when it promotes bvecs rows to f32.
+//!
+//! ## Serving contract
+//!
+//! Distances against codes are **asymmetric** (f32 query × u8 base,
+//! [`crate::core_ops::dist::d2_batch_sq8`]) and carry the quantization
+//! error, which is bounded per dimension by `scale[t] / 2`.  Candidate
+//! *selection* over codes is therefore approximate; callers that promise
+//! exact-distance results (ANN serving) re-rank the surviving candidates
+//! with the exact f32 kernel — see `gkm::ann::search_sq8`, which re-ranks
+//! the whole `ef` pool so the returned distances are true f32 `d²`.
+//!
+//! A [`QuantizedVecStore`] implements [`VecStore`], so every scan loop
+//! (fit, predict, refinement) can also run directly over codes: cursors
+//! decode rows on the fly into per-cursor scratch (tolerance-class
+//! results — the decoded value is the quantizer's reconstruction).
+
+use crate::core_ops::dist;
+use crate::data::store::{StoreCursor, VecStore};
+
+/// Per-dimension affine scalar quantizer (`f32 → u8`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sq8Quantizer {
+    min: Vec<f32>,
+    /// Step per code unit; `0` for dimensions that were constant in the
+    /// training sample (those encode to 0 and decode back to `min`).
+    scale: Vec<f32>,
+    /// Precomputed `1 / scale` (`0` where `scale == 0`).
+    inv_scale: Vec<f32>,
+}
+
+impl Sq8Quantizer {
+    /// Quantizer from explicit per-dimension parameters (the serde load
+    /// path).  `scale` entries must be finite and non-negative.
+    pub fn from_parts(min: Vec<f32>, scale: Vec<f32>) -> Result<Sq8Quantizer, String> {
+        if min.len() != scale.len() {
+            return Err(format!(
+                "quantizer min/scale length mismatch: {} vs {}",
+                min.len(),
+                scale.len()
+            ));
+        }
+        if min.iter().any(|v| !v.is_finite()) || scale.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            return Err("quantizer parameters must be finite (scale non-negative)".to_string());
+        }
+        let inv_scale = scale.iter().map(|&s| if s > 0.0 { 1.0 / s } else { 0.0 }).collect();
+        Ok(Sq8Quantizer { min, scale, inv_scale })
+    }
+
+    /// The lossless passthrough for data that is already u8 (bvecs):
+    /// `min = 0`, `scale = 1`, so `encode(decode(c)) == c` exactly.
+    pub fn identity(dim: usize) -> Sq8Quantizer {
+        Sq8Quantizer { min: vec![0.0; dim], scale: vec![1.0; dim], inv_scale: vec![1.0; dim] }
+    }
+
+    /// Train on a deterministic sample of `store`: per-dimension min/max
+    /// over up to `sample_rows` rows taken at an even stride (no RNG —
+    /// the same store always yields the same quantizer).  `sample_rows =
+    /// 0` means the full pass.
+    pub fn train(store: &dyn VecStore, sample_rows: usize) -> Sq8Quantizer {
+        let (n, d) = (store.rows(), store.dim());
+        assert!(n > 0, "cannot train a quantizer on an empty store");
+        let take = if sample_rows == 0 { n } else { sample_rows.min(n) };
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        let mut cur = store.open();
+        for s in 0..take {
+            // even-stride sample: rows 0, n/take, 2n/take, …
+            let i = s * n / take;
+            let row = cur.row(i);
+            for (t, &v) in row.iter().enumerate() {
+                lo[t] = lo[t].min(v);
+                hi[t] = hi[t].max(v);
+            }
+        }
+        let scale: Vec<f32> = lo.iter().zip(&hi).map(|(&l, &h)| (h - l) / 255.0).collect();
+        let inv_scale = scale.iter().map(|&s| if s > 0.0 { 1.0 / s } else { 0.0 }).collect();
+        Sq8Quantizer { min: lo, scale, inv_scale }
+    }
+
+    /// Dimensionality this quantizer was trained for.
+    pub fn dim(&self) -> usize {
+        self.min.len()
+    }
+
+    /// Per-dimension minima (the affine offset).
+    pub fn min(&self) -> &[f32] {
+        &self.min
+    }
+
+    /// Per-dimension step sizes (the affine scale per code unit).
+    pub fn scale(&self) -> &[f32] {
+        &self.scale
+    }
+
+    /// Whether this is the lossless u8 passthrough.
+    pub fn is_identity(&self) -> bool {
+        self.min.iter().all(|&v| v == 0.0) && self.scale.iter().all(|&v| v == 1.0)
+    }
+
+    /// Encode one f32 row (`row.len() == dim`) into codes.  Values
+    /// outside the trained range clamp to the nearest code.
+    pub fn encode_row(&self, row: &[f32], out: &mut [u8]) {
+        assert_eq!(row.len(), self.dim(), "row/quantizer dim mismatch");
+        assert_eq!(out.len(), self.dim(), "out/quantizer dim mismatch");
+        for (t, (&v, o)) in row.iter().zip(out.iter_mut()).enumerate() {
+            let q = (v - self.min[t]) * self.inv_scale[t];
+            *o = q.round().clamp(0.0, 255.0) as u8;
+        }
+    }
+
+    /// Decode codes back to the f32 reconstruction.
+    pub fn decode_row(&self, codes: &[u8], out: &mut [f32]) {
+        assert_eq!(codes.len(), self.dim(), "codes/quantizer dim mismatch");
+        assert_eq!(out.len(), self.dim(), "out/quantizer dim mismatch");
+        for (t, (&c, o)) in codes.iter().zip(out.iter_mut()).enumerate() {
+            *o = self.min[t] + self.scale[t] * f32::from(c);
+        }
+    }
+
+    /// Worst-case per-dimension reconstruction error: half the largest
+    /// step (quantize → dequantize moves a value at most `scale[t]/2`
+    /// when it was inside the trained range).
+    pub fn max_step(&self) -> f32 {
+        self.scale.iter().fold(0f32, |a, &s| a.max(s))
+    }
+}
+
+/// A RAM-resident SQ8-quantized vector store: `rows × dim` u8 codes plus
+/// the [`Sq8Quantizer`] that produced them — one quarter the bytes of
+/// the f32 original.  Implements [`VecStore`] (cursors decode on the
+/// fly); the fast serving path skips decoding entirely via
+/// [`QuantizedVecStore::d2_gather`].
+#[derive(Debug, Clone)]
+pub struct QuantizedVecStore {
+    rows: usize,
+    dim: usize,
+    codes: Vec<u8>,
+    quant: Sq8Quantizer,
+}
+
+impl QuantizedVecStore {
+    /// Quantize every row of `store`: train on an even-stride sample of
+    /// up to `sample_rows` rows (0 = full pass), then encode all rows.
+    pub fn from_store(store: &dyn VecStore, sample_rows: usize) -> QuantizedVecStore {
+        let quant = Sq8Quantizer::train(store, sample_rows);
+        Self::encode_with(store, quant)
+    }
+
+    /// Encode every row of `store` with a caller-supplied quantizer
+    /// (bvecs passthrough uses [`Sq8Quantizer::identity`]).
+    pub fn encode_with(store: &dyn VecStore, quant: Sq8Quantizer) -> QuantizedVecStore {
+        let (n, d) = (store.rows(), store.dim());
+        assert_eq!(quant.dim(), d, "quantizer/store dim mismatch");
+        let mut codes = vec![0u8; n * d];
+        let mut cur = store.open();
+        for i in 0..n {
+            quant.encode_row(cur.row(i), &mut codes[i * d..(i + 1) * d]);
+        }
+        QuantizedVecStore { rows: n, dim: d, codes, quant }
+    }
+
+    /// Reassemble from persisted parts (the GKMODEL `QVECTORS` loader).
+    pub fn from_parts(
+        rows: usize,
+        dim: usize,
+        codes: Vec<u8>,
+        quant: Sq8Quantizer,
+    ) -> Result<QuantizedVecStore, String> {
+        if quant.dim() != dim {
+            return Err(format!("quantizer dim {} != store dim {dim}", quant.dim()));
+        }
+        if codes.len() != rows * dim {
+            return Err(format!(
+                "code buffer holds {} bytes, want rows·dim = {}",
+                codes.len(),
+                rows * dim
+            ));
+        }
+        Ok(QuantizedVecStore { rows, dim, codes, quant })
+    }
+
+    /// Number of code rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The quantizer (persisted alongside the codes).
+    pub fn quantizer(&self) -> &Sq8Quantizer {
+        &self.quant
+    }
+
+    /// The raw `rows · dim` code buffer (persisted by model save).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Resident bytes of the code matrix — the working set the 4×
+    /// shrink claim is about (quantizer parameters add `8·dim` bytes).
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Code row `i`.
+    pub fn code_row(&self, i: usize) -> &[u8] {
+        &self.codes[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Decode row `i` into `out` (`out.len() == dim`).
+    pub fn decode_into(&self, i: usize, out: &mut [f32]) {
+        self.quant.decode_row(self.code_row(i), out);
+    }
+
+    /// Asymmetric distances from f32 query `x` to the (non-contiguous)
+    /// code rows `ids`: gathers the u8 rows into `buf` (reused scratch)
+    /// and runs one [`dist::d2_batch_sq8`] over the gathered block.
+    /// `out.len() == ids.len()`.
+    pub fn d2_gather(&self, x: &[f32], ids: &[u32], buf: &mut Vec<u8>, out: &mut [f32]) {
+        assert_eq!(x.len(), self.dim, "query/store dim mismatch");
+        assert_eq!(ids.len(), out.len(), "one output per candidate");
+        buf.clear();
+        for &id in ids {
+            buf.extend_from_slice(self.code_row(id as usize));
+        }
+        dist::d2_batch_sq8(x, buf, self.quant.min(), self.quant.scale(), self.dim, out);
+    }
+}
+
+impl VecStore for QuantizedVecStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn open(&self) -> StoreCursor<'_> {
+        StoreCursor::Quant(QuantCursor {
+            store: self,
+            row_buf: vec![0f32; self.dim],
+            pair_buf: vec![0f32; self.dim],
+            block_buf: Vec::new(),
+        })
+    }
+}
+
+/// Decoding cursor over a [`QuantizedVecStore`]: rows and blocks are
+/// reconstructed into per-cursor scratch on each access (the store stays
+/// u8-resident; only the working row/block is ever f32).
+pub struct QuantCursor<'a> {
+    store: &'a QuantizedVecStore,
+    row_buf: Vec<f32>,
+    pair_buf: Vec<f32>,
+    block_buf: Vec<f32>,
+}
+
+impl QuantCursor<'_> {
+    /// Decode row `i` into the cursor's row scratch.
+    pub fn row(&mut self, i: usize) -> &[f32] {
+        self.store.decode_into(i, &mut self.row_buf);
+        &self.row_buf
+    }
+
+    /// Decode rows `[lo, hi)` into the cursor's block scratch.
+    pub fn block(&mut self, lo: usize, hi: usize) -> &[f32] {
+        let d = self.store.dim;
+        self.block_buf.resize((hi - lo) * d, 0.0);
+        for (s, i) in (lo..hi).enumerate() {
+            let dst = &mut self.block_buf[s * d..(s + 1) * d];
+            self.store.decode_into(i, dst);
+        }
+        &self.block_buf
+    }
+
+    /// Squared distance between decoded rows `i` and `j`.
+    pub fn d2_pair(&mut self, i: usize, j: usize) -> f32 {
+        self.store.decode_into(i, &mut self.row_buf);
+        self.store.decode_into(j, &mut self.pair_buf);
+        dist::d2(&self.row_buf, &self.pair_buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::VecSet;
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VecSet {
+        let mut rng = Rng::new(seed);
+        VecSet::from_flat(d, (0..n * d).map(|_| rng.normal() * 3.0).collect())
+    }
+
+    #[test]
+    fn roundtrip_error_is_bounded_by_half_a_step() {
+        let data = random_set(200, 24, 1);
+        let q = Sq8Quantizer::train(&data, 0);
+        let mut codes = vec![0u8; 24];
+        let mut back = vec![0f32; 24];
+        for i in 0..200 {
+            let row = data.row(i);
+            q.encode_row(row, &mut codes);
+            q.decode_row(&codes, &mut back);
+            for t in 0..24 {
+                let err = (row[t] - back[t]).abs();
+                // in-range values land within half a quantization step
+                // (+ f32 slack for the affine arithmetic)
+                assert!(
+                    err <= 0.5 * q.scale()[t] + 1e-5,
+                    "row {i} dim {t}: err {err} > step/2 {}",
+                    0.5 * q.scale()[t]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identity_quantizer_is_lossless_on_u8_data() {
+        let mut rng = Rng::new(2);
+        let d = 16;
+        let flat: Vec<f32> = (0..50 * d).map(|_| rng.below(256) as f32).collect();
+        let data = VecSet::from_flat(d, flat.clone());
+        let q = Sq8Quantizer::identity(d);
+        assert!(q.is_identity());
+        let store = QuantizedVecStore::encode_with(&data, q);
+        let mut back = vec![0f32; d];
+        for i in 0..50 {
+            store.decode_into(i, &mut back);
+            assert_eq!(back, data.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn trained_quantizer_beats_constant_dims_and_outliers() {
+        // constant dimension -> scale 0 -> decodes exactly to min;
+        // out-of-range values clamp instead of wrapping
+        let d = 3;
+        let flat = vec![1.0f32, -2.0, 7.5, 1.0, 3.0, 7.5, 1.0, 0.5, 7.5];
+        let data = VecSet::from_flat(d, flat);
+        let q = Sq8Quantizer::train(&data, 0);
+        assert_eq!(q.scale()[0], 0.0);
+        assert_eq!(q.scale()[2], 0.0);
+        let mut codes = vec![0u8; d];
+        let mut back = vec![0f32; d];
+        q.encode_row(&[1.0, 100.0, 7.5], &mut codes);
+        assert_eq!(codes[1], 255, "out-of-range clamps to the top code");
+        q.decode_row(&codes, &mut back);
+        assert_eq!(back[0], 1.0);
+        assert_eq!(back[2], 7.5);
+    }
+
+    #[test]
+    fn quantized_store_cursor_matches_explicit_decode() {
+        let data = random_set(60, 10, 3);
+        let store = QuantizedVecStore::from_store(&data, 0);
+        assert_eq!(VecStore::rows(&store), 60);
+        assert_eq!(VecStore::dim(&store), 10);
+        assert_eq!(store.resident_bytes(), 600);
+        let mut cur = store.open();
+        let mut want = vec![0f32; 10];
+        for i in [0usize, 7, 31, 59] {
+            store.decode_into(i, &mut want);
+            assert_eq!(cur.row(i), &want[..], "row {i}");
+        }
+        // block = the concatenation of decoded rows
+        let blk = cur.block(5, 9).to_vec();
+        for (s, i) in (5..9).enumerate() {
+            store.decode_into(i, &mut want);
+            assert_eq!(&blk[s * 10..(s + 1) * 10], &want[..], "block row {i}");
+        }
+        // d2_pair = d2 over decoded rows
+        let mut a = vec![0f32; 10];
+        let mut b = vec![0f32; 10];
+        store.decode_into(2, &mut a);
+        store.decode_into(40, &mut b);
+        assert_eq!(cur.d2_pair(2, 40).to_bits(), dist::d2(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn d2_gather_matches_per_row_asymmetric_kernel() {
+        let data = random_set(80, 32, 4);
+        let store = QuantizedVecStore::from_store(&data, 20);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let ids: Vec<u32> = vec![3, 77, 0, 41, 41, 12];
+        let mut buf = Vec::new();
+        let mut out = vec![0f32; ids.len()];
+        store.d2_gather(&x, &ids, &mut buf, &mut out);
+        for (t, &id) in ids.iter().enumerate() {
+            let mut one = [0f32; 1];
+            dist::d2_batch_sq8(
+                &x,
+                store.code_row(id as usize),
+                store.quantizer().min(),
+                store.quantizer().scale(),
+                32,
+                &mut one,
+            );
+            assert_eq!(out[t].to_bits(), one[0].to_bits(), "candidate {t} (row {id})");
+        }
+    }
+
+    #[test]
+    fn from_parts_validates_geometry() {
+        let q = Sq8Quantizer::identity(4);
+        assert!(QuantizedVecStore::from_parts(2, 4, vec![0; 8], q.clone()).is_ok());
+        assert!(QuantizedVecStore::from_parts(2, 4, vec![0; 7], q.clone()).is_err());
+        assert!(QuantizedVecStore::from_parts(2, 3, vec![0; 6], q).is_err());
+        assert!(Sq8Quantizer::from_parts(vec![0.0; 3], vec![1.0; 2]).is_err());
+        assert!(Sq8Quantizer::from_parts(vec![0.0; 2], vec![f32::NAN, 1.0]).is_err());
+        assert!(Sq8Quantizer::from_parts(vec![0.0; 2], vec![-1.0, 1.0]).is_err());
+    }
+}

@@ -500,6 +500,22 @@ impl ChunkedVecStore {
         self
     }
 
+    /// Compress this store into a RAM-resident SQ8 code matrix
+    /// ([`crate::data::quant::QuantizedVecStore`], ~4× smaller than the
+    /// f32 rows).  A bvecs-backed store (`u8` components promoted to
+    /// f32 on read) passes through the **identity** quantizer and
+    /// round-trips losslessly; f32-backed stores train a per-dimension
+    /// min/max affine on an even-stride sample of up to `sample_rows`
+    /// rows (`0` = full pass).  Panics on mid-stream read failure, like
+    /// every other full-scan loop.
+    pub fn quantize_sq8(&self, sample_rows: usize) -> crate::data::quant::QuantizedVecStore {
+        use crate::data::quant::{QuantizedVecStore, Sq8Quantizer};
+        if self.elem == Elem::U8 {
+            return QuantizedVecStore::encode_with(self, Sq8Quantizer::identity(self.dim));
+        }
+        QuantizedVecStore::from_store(self, sample_rows)
+    }
+
     /// The backing file.
     pub fn path(&self) -> &Path {
         &self.path
@@ -784,6 +800,11 @@ pub enum StoreCursor<'a> {
     },
     /// Paged view of a [`ChunkedVecStore`].
     Chunked(ChunkedCursor<'a>),
+    /// Decoding view of an SQ8-quantized store
+    /// ([`crate::data::quant::QuantizedVecStore`]): rows are
+    /// reconstructed into per-cursor scratch on access.  Resident and
+    /// infallible — the `try_*` flavors never return `Err`.
+    Quant(crate::data::quant::QuantCursor<'a>),
 }
 
 impl StoreCursor<'_> {
@@ -794,6 +815,7 @@ impl StoreCursor<'_> {
         match self {
             StoreCursor::Ram { flat, dim } => &flat[i * *dim..(i + 1) * *dim],
             StoreCursor::Chunked(c) => c.try_row(i).unwrap_or_else(|e| panic!("{e}")),
+            StoreCursor::Quant(q) => q.row(i),
         }
     }
 
@@ -805,6 +827,7 @@ impl StoreCursor<'_> {
         match self {
             StoreCursor::Ram { flat, dim } => Ok(&flat[i * *dim..(i + 1) * *dim]),
             StoreCursor::Chunked(c) => c.try_row(i),
+            StoreCursor::Quant(q) => Ok(q.row(i)),
         }
     }
 
@@ -815,6 +838,7 @@ impl StoreCursor<'_> {
         match self {
             StoreCursor::Ram { flat, dim } => &flat[lo * *dim..hi * *dim],
             StoreCursor::Chunked(c) => c.try_block(lo, hi).unwrap_or_else(|e| panic!("{e}")),
+            StoreCursor::Quant(q) => q.block(lo, hi),
         }
     }
 
@@ -824,6 +848,7 @@ impl StoreCursor<'_> {
         match self {
             StoreCursor::Ram { flat, dim } => Ok(&flat[lo * *dim..hi * *dim]),
             StoreCursor::Chunked(c) => c.try_block(lo, hi),
+            StoreCursor::Quant(q) => Ok(q.block(lo, hi)),
         }
     }
 
@@ -843,6 +868,7 @@ impl StoreCursor<'_> {
                 d2(&flat[i * d..(i + 1) * d], &flat[j * d..(j + 1) * d])
             }
             StoreCursor::Chunked(c) => c.try_d2_pair(i, j).unwrap_or_else(|e| panic!("{e}")),
+            StoreCursor::Quant(q) => q.d2_pair(i, j),
         }
     }
 
@@ -855,6 +881,7 @@ impl StoreCursor<'_> {
                 Ok(d2(&flat[i * d..(i + 1) * d], &flat[j * d..(j + 1) * d]))
             }
             StoreCursor::Chunked(c) => c.try_d2_pair(i, j),
+            StoreCursor::Quant(q) => Ok(q.d2_pair(i, j)),
         }
     }
 }

@@ -14,8 +14,9 @@
 //! column to the scalar `d2`, results and stats are exactly those of the
 //! historical per-neighbor loop.
 
-use crate::core_ops::dist::{d2, d2_batch_exact};
+use crate::core_ops::dist::{d2, d2_batch_exact, d2_batch_sq8};
 use crate::core_ops::topk::TopK;
+use crate::data::quant::QuantizedVecStore;
 use crate::data::store::VecStore;
 use crate::graph::knn::KnnGraph;
 use crate::util::rng::Rng;
@@ -60,6 +61,9 @@ pub struct SearchScratch {
     batch_rows: Vec<f32>,
     /// Per-gathered-neighbor squared distances from `d2_batch_exact`.
     batch_d2: Vec<f32>,
+    /// SQ8 code rows gathered for one frontier expansion
+    /// ([`search_sq8_with_scratch`]'s mirror of `batch_rows`).
+    batch_codes: Vec<u8>,
 }
 
 impl SearchScratch {
@@ -72,6 +76,7 @@ impl SearchScratch {
             batch_ids: Vec::new(),
             batch_rows: Vec::new(),
             batch_d2: Vec::new(),
+            batch_codes: Vec::new(),
         }
     }
 
@@ -207,6 +212,128 @@ pub fn search_with_scratch(
     (out, stats)
 }
 
+/// Asymmetric distance from an f32 query to one SQ8 code row.
+fn d2_sq8_one(store: &QuantizedVecStore, query: &[f32], id: u32) -> f32 {
+    let mut out = [0f32; 1];
+    let q = store.quantizer();
+    d2_batch_sq8(query, store.code_row(id as usize), q.min(), q.scale(), query.len(), &mut out);
+    out[0]
+}
+
+/// [`search`] over SQ8 codes: the greedy traversal evaluates every
+/// candidate against the quantized store (¼ the memory traffic of the
+/// f32 rows), then the surviving `ef`-pool is **re-ranked with exact
+/// f32 distances** from `exact` before the top-`k` cut — so the
+/// returned distances are true squared distances and recall tracks the
+/// f32 search (the pool is `ef ≥ k` wide, which absorbs quantization
+/// reorderings near the cut).  Allocates fresh scratch per call; batch
+/// callers use [`search_sq8_with_scratch`].
+pub fn search_sq8(
+    store: &QuantizedVecStore,
+    exact: &dyn VecStore,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    rng: &mut Rng,
+) -> (Vec<(f32, u32)>, SearchStats) {
+    assert_eq!(store.rows(), graph.n(), "quantized store/graph size mismatch");
+    assert_eq!(exact.rows(), graph.n(), "exact store/graph size mismatch");
+    let mut scratch = SearchScratch::new(store.rows());
+    let mut cur = exact.open();
+    search_sq8_with_scratch(store, &mut cur, graph, query, k, params, rng, &mut scratch)
+}
+
+/// [`search_sq8`] with caller-owned scratch and re-rank cursor.  The
+/// traversal never touches `exact` — only the final pool re-rank reads
+/// f32 rows (≤ `ef` of them per query), so a disk-backed `exact` store
+/// costs a handful of page hits while the scan bandwidth all comes from
+/// the RAM-resident codes.  `stats.dist_evals` counts both the SQ8
+/// evaluations and the exact re-rank distances.
+#[allow(clippy::too_many_arguments)]
+pub fn search_sq8_with_scratch(
+    store: &QuantizedVecStore,
+    exact: &mut crate::data::store::StoreCursor<'_>,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    rng: &mut Rng,
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
+    let n = graph.n();
+    let ef = params.ef.max(k);
+    let mut stats = SearchStats::default();
+    scratch.begin(n);
+    let mut pool = TopK::new(ef);
+
+    for _ in 0..params.entries.max(1) {
+        let e = rng.below(n);
+        if !scratch.visit(e) {
+            continue;
+        }
+        let dd = d2_sq8_one(store, query, e as u32);
+        stats.dist_evals += 1;
+        pool.push(dd, e as u32);
+        scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+    }
+
+    while let Some(std::cmp::Reverse((od, node))) = scratch.frontier.pop() {
+        let dcur = od.0;
+        if dcur > pool.threshold() {
+            break;
+        }
+        stats.hops += 1;
+        scratch.batch_ids.clear();
+        for &nb in graph.neighbors(node as usize) {
+            if nb == u32::MAX {
+                continue;
+            }
+            if !scratch.visit(nb as usize) {
+                continue;
+            }
+            scratch.batch_ids.push(nb);
+        }
+        stats.dist_evals += scratch.batch_ids.len();
+        if scratch.batch_ids.len() < crate::core_ops::dist::BATCH_TILE {
+            for &nb in &scratch.batch_ids {
+                let dd = d2_sq8_one(store, query, nb);
+                if dd < pool.threshold() {
+                    pool.push(dd, nb);
+                    scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), nb)));
+                }
+            }
+            continue;
+        }
+        scratch.batch_d2.clear();
+        scratch.batch_d2.resize(scratch.batch_ids.len(), 0.0);
+        store.d2_gather(query, &scratch.batch_ids, &mut scratch.batch_codes, &mut scratch.batch_d2);
+        for (t, &nb) in scratch.batch_ids.iter().enumerate() {
+            let dd = scratch.batch_d2[t];
+            if dd < pool.threshold() {
+                pool.push(dd, nb);
+                scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), nb)));
+            }
+        }
+    }
+
+    // Exact re-rank: replace every pooled (approximate) distance with the
+    // true f32 distance, then re-sort and cut to k.  The pool is ef ≥ k
+    // wide, so candidates the quantization error pushed just past the
+    // would-be top-k boundary get pulled back in here.
+    let mut out: Vec<(f32, u32)> = pool
+        .into_sorted()
+        .into_iter()
+        .map(|c| {
+            stats.dist_evals += 1;
+            (d2(query, exact.row(c.id as usize)), c.id)
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    out.truncate(k);
+    (out, stats)
+}
+
 /// Total-ordered f32 wrapper for the frontier heap.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Ordered(pub f32);
@@ -283,6 +410,60 @@ mod tests {
             let mut cur = crate::data::store::VecStore::open(&data);
             let (reused, rs) =
                 search_with_scratch(&mut cur, &graph, &q, 5, &params, &mut rng_b, &mut scratch);
+            assert_eq!(fresh, reused, "query {qi}");
+            assert_eq!(fs.dist_evals, rs.dist_evals);
+            assert_eq!(fs.hops, rs.hops);
+        }
+    }
+
+    #[test]
+    fn sq8_search_rerank_returns_exact_distances() {
+        let data = blobs(&BlobSpec::quick(400, 8, 6), 9);
+        let graph = brute::build(&data, 8, &Backend::native());
+        let store = QuantizedVecStore::from_store(&data, 0);
+        let params = SearchParams { entries: 16, ..Default::default() };
+        let mut agree = 0;
+        for qi in (0..400).step_by(17) {
+            let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.01).collect();
+            let mut rng_a = Rng::new(qi as u64);
+            let mut rng_b = Rng::new(qi as u64);
+            let (f32_res, _) = search(&data, &graph, &q, 5, &params, &mut rng_a);
+            let (sq8_res, _) = search_sq8(&store, &data, &graph, &q, 5, &params, &mut rng_b);
+            assert_eq!(sq8_res.len(), 5, "query {qi}");
+            assert!(sq8_res.windows(2).all(|w| w[0].0 <= w[1].0), "query {qi}: unsorted");
+            // re-ranked distances are true f32 distances, bit for bit
+            for &(dd, id) in &sq8_res {
+                assert_eq!(
+                    dd.to_bits(),
+                    d2(&q, data.row(id as usize)).to_bits(),
+                    "query {qi} id {id}: re-rank must be exact"
+                );
+            }
+            if sq8_res[0].1 == f32_res[0].1 {
+                agree += 1;
+            }
+        }
+        // same traversal over mildly-perturbed distances: the top hit
+        // overwhelmingly agrees with the f32 search
+        assert!(agree >= 20, "sq8 top-1 agreed on {agree}/24 queries");
+    }
+
+    #[test]
+    fn sq8_search_scratch_reuse_matches_fresh() {
+        let data = blobs(&BlobSpec::quick(300, 6, 5), 11);
+        let graph = brute::build(&data, 8, &Backend::native());
+        let store = QuantizedVecStore::from_store(&data, 50);
+        let mut scratch = SearchScratch::new(300);
+        let params = SearchParams::default();
+        for qi in (0..300).step_by(31) {
+            let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.02).collect();
+            let mut rng_a = Rng::new(qi as u64);
+            let mut rng_b = Rng::new(qi as u64);
+            let (fresh, fs) = search_sq8(&store, &data, &graph, &q, 4, &params, &mut rng_a);
+            let mut cur = crate::data::store::VecStore::open(&data);
+            let (reused, rs) = search_sq8_with_scratch(
+                &store, &mut cur, &graph, &q, 4, &params, &mut rng_b, &mut scratch,
+            );
             assert_eq!(fresh, reused, "query {qi}");
             assert_eq!(fs.dist_evals, rs.dist_evals);
             assert_eq!(fs.hops, rs.hops);

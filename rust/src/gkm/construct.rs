@@ -8,7 +8,8 @@
 //! → better cells → … (paper Fig. 2/3).  τ = 10 suffices for clustering;
 //! up to 32 for ANNS-grade graphs (§4.4).
 
-use crate::data::store::VecStore;
+use crate::core_ops::dist;
+use crate::data::store::{StoreCursor, VecStore};
 use crate::gkm::gkmeans::{self, GkMeansParams};
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{Clustering, KmeansParams};
@@ -120,6 +121,105 @@ pub fn build(data: &dyn VecStore, params: &ConstructParams, backend: &Backend) -
     GraphBuildOutput { graph, history, total_seconds: timer.elapsed_s(), last_partition }
 }
 
+/// How a refinement scan consumes surviving candidate pairs.  The serial
+/// scan folds straight into the live graph (so bounds tighten mid-cell);
+/// threaded workers prune against a threshold *snapshot* and record the
+/// pair for the ordered serial merge.  Emitted distances are always
+/// complete sums — the early-exit path only truncates values that then
+/// fail the bound filter — so both sinks observe identical distances and
+/// the merge reproduces the serial fold exactly (see
+/// [`refine_cells_threaded`]).
+trait PairSink {
+    /// Pruning bound for a pair: the looser of the two rows' current
+    /// κ-th-neighbor distances (`∞` while either row has free slots).
+    fn bound(&self, ia: usize, ib: usize) -> f32;
+    /// A pair whose full distance beat [`PairSink::bound`] at scan time.
+    fn emit(&mut self, a: u32, b: u32, dd: f32);
+}
+
+/// Serial sink: fold into the live graph, counting applied updates.
+struct FoldSink<'a> {
+    graph: &'a mut KnnGraph,
+    updates: &'a mut usize,
+}
+
+impl PairSink for FoldSink<'_> {
+    fn bound(&self, ia: usize, ib: usize) -> f32 {
+        self.graph.threshold(ia).max(self.graph.threshold(ib))
+    }
+    fn emit(&mut self, a: u32, b: u32, dd: f32) {
+        if self.graph.update_pair(a as usize, b as usize, dd) {
+            *self.updates += 1;
+        }
+    }
+}
+
+/// Worker sink: prune against a snapshot, gather for the ordered merge.
+struct GatherSink<'a> {
+    graph: &'a KnnGraph,
+    out: &'a mut Vec<(u32, u32, f32)>,
+}
+
+impl PairSink for GatherSink<'_> {
+    fn bound(&self, ia: usize, ib: usize) -> f32 {
+        self.graph.threshold(ia).max(self.graph.threshold(ib))
+    }
+    fn emit(&mut self, a: u32, b: u32, dd: f32) {
+        self.out.push((a, b, dd));
+    }
+}
+
+/// Oversized-cell pair scan (cells past the dense m×m cutoff, where an
+/// m×m distance buffer would be quadratic).  The cell's rows gather once
+/// into a contiguous block; each anchor row then evaluates its tail
+/// `[a+1, m)` through the batched bit-exact kernel
+/// ([`dist::d2_batch_exact`] — one load of the anchor serves four
+/// candidates, and the `simd` feature tier widens that further), with
+/// the per-pair bound filter applied to the results.  Tails too narrow
+/// to fill a tile — and every scan below [`dist::BATCH_MIN_DIM`] — keep
+/// the historical early-exit partial-distance path
+/// ([`dist::d2_bounded`]), where the bound check every 16 components
+/// beats batching.
+fn scan_oversized_cell(
+    cell: &[u32],
+    d: usize,
+    cur: &mut StoreCursor<'_>,
+    gathered: &mut Vec<f32>,
+    d2s: &mut Vec<f32>,
+    sink: &mut impl PairSink,
+) {
+    let m = cell.len();
+    gathered.clear();
+    gathered.reserve(m * d);
+    for &i in cell {
+        gathered.extend_from_slice(cur.row(i as usize));
+    }
+    for a in 0..m - 1 {
+        let ia = cell[a] as usize;
+        let w = m - a - 1;
+        let (xa, tail) = gathered[a * d..m * d].split_at(d);
+        if dist::batch_eligible(d, w) {
+            d2s.resize(w, 0.0);
+            dist::d2_batch_exact(xa, tail, d, d2s);
+            for (t, &dd) in d2s.iter().enumerate() {
+                let ib = cell[a + 1 + t] as usize;
+                if dd < sink.bound(ia, ib) {
+                    sink.emit(cell[a], cell[a + 1 + t], dd);
+                }
+            }
+        } else {
+            for (t, yb) in tail.chunks_exact(d).enumerate() {
+                let ib = cell[a + 1 + t] as usize;
+                let bound = sink.bound(ia, ib);
+                let dd = dist::d2_bounded(xa, yb, bound);
+                if dd < bound {
+                    sink.emit(cell[a], cell[a + 1 + t], dd);
+                }
+            }
+        }
+    }
+}
+
 /// Exhaustive pairwise comparison inside each cell, folding every pair
 /// into the graph.  Cells up to the small-block size go through the
 /// backend's pairwise kernel; larger ones are chunked.
@@ -129,17 +229,22 @@ pub fn refine_cells(
     graph: &mut KnnGraph,
     backend: &Backend,
 ) -> usize {
-    // §Perf: two strategies were measured — (a) dense m×m block via
+    // §Perf: three strategies measured — (a) dense m×m block via
     // backend.pairwise_among + upper-triangle fold, (b) scalar pairs with
-    // early-exit bounded distances.  (b)-everywhere measured ~8% SLOWER
-    // end-to-end at n=5000/d=128: the every-16-components bound check
-    // breaks vectorization and the prune rate doesn't recover it at these
-    // dims.  Dense blocks stay the ξ-cell path; (b) handles oversized
-    // cells where an m×m buffer would be quadratic.
+    // early-exit bounded distances, (c) gathered anchor tails through the
+    // batched bit-exact kernel, bound filter applied afterwards.
+    // (b)-everywhere measured ~8% SLOWER end-to-end at n=5000/d=128: the
+    // every-16-components bound check breaks vectorization and the prune
+    // rate doesn't recover it at these dims.  Dense blocks stay the
+    // ξ-cell path; oversized cells (the equal-size init can't always hit
+    // ξ exactly) run (c), falling back to (b) for tile-starved tails and
+    // tiny dims — see [`scan_oversized_cell`].
     let mut updates = 0usize;
     let mut buf = Vec::new();
+    let mut gathered = Vec::new();
+    let mut d2s = Vec::new();
     let mut cur = data.open();
-    let mut xa = vec![0f32; data.dim()];
+    let d = data.dim();
     for cell in members {
         let m = cell.len();
         if m < 2 {
@@ -156,20 +261,8 @@ pub fn refine_cells(
                 }
             }
         } else {
-            // bounded scalar pairs (also handles oversized cells: the
-            // equal-size init can't always hit ξ exactly)
-            for a in 0..m {
-                let ia = cell[a] as usize;
-                cur.read_row_into(ia, &mut xa);
-                for b in (a + 1)..m {
-                    let ib = cell[b] as usize;
-                    let bound = graph.threshold(ia).max(graph.threshold(ib));
-                    let dd = crate::core_ops::dist::d2_bounded(&xa, cur.row(ib), bound);
-                    if dd < bound && graph.update_pair(ia, ib, dd) {
-                        updates += 1;
-                    }
-                }
-            }
+            let mut sink = FoldSink { graph: &mut *graph, updates: &mut updates };
+            scan_oversized_cell(cell, d, &mut cur, &mut gathered, &mut d2s, &mut sink);
         }
     }
     updates
@@ -203,8 +296,8 @@ pub fn refine_cells_threaded(
         let mut out: Vec<(u32, u32, f32)> = Vec::new();
         let mut buf = Vec::new();
         let mut gathered = Vec::new();
+        let mut d2s = Vec::new();
         let mut cur = data.open();
-        let mut xa = vec![0f32; d];
         for cell in &members[range] {
             let m = cell.len();
             if m < 2 {
@@ -225,19 +318,9 @@ pub fn refine_cells_threaded(
                     }
                 }
             } else {
-                // bounded scalar pairs against the threshold snapshot
-                for a in 0..m {
-                    let ia = cell[a] as usize;
-                    cur.read_row_into(ia, &mut xa);
-                    for b in (a + 1)..m {
-                        let ib = cell[b] as usize;
-                        let bound = graph_ref.threshold(ia).max(graph_ref.threshold(ib));
-                        let dd = crate::core_ops::dist::d2_bounded(&xa, cur.row(ib), bound);
-                        if dd < bound {
-                            out.push((cell[a], cell[b], dd));
-                        }
-                    }
-                }
+                // batched tails pruned against the threshold snapshot
+                let mut sink = GatherSink { graph: graph_ref, out: &mut out };
+                scan_oversized_cell(cell, d, &mut cur, &mut gathered, &mut d2s, &mut sink);
             }
         }
         out
@@ -324,6 +407,46 @@ mod tests {
             for i in 0..400 {
                 assert_eq!(serial.neighbors(i), par.neighbors(i), "row {i}");
                 assert_eq!(serial.distances(i), par.distances(i), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_batched_tails_match_serial_exactly() {
+        // d ≥ BATCH_MIN_DIM with cells past the dense cutoff drives the
+        // batched-tail branch of scan_oversized_cell (the existing
+        // threaded_refine test stays on the d2_bounded fallback at d=6);
+        // serial and snapshot-bound threaded scans must still agree to
+        // the bit, and the kept distances must be the exact d2.
+        let data = blobs(&BlobSpec::quick(300, 24, 4), 13);
+        let members = vec![
+            (0..150u32).collect::<Vec<_>>(),
+            (150..280u32).collect::<Vec<_>>(),
+            (280..300u32).collect::<Vec<_>>(), // small cell: dense path
+        ];
+        let mut rng = Rng::new(6);
+        let base = KnnGraph::random(300, 5, &mut rng);
+        let mut serial = base.clone();
+        let su = refine_cells(&data, &members, &mut serial, &Backend::native());
+        assert!(su > 0);
+        serial.check_invariants().unwrap();
+        for threads in [2usize, 3] {
+            let mut par = base.clone();
+            let pu = refine_cells_threaded(&data, &members, &mut par, &Backend::native(), threads);
+            assert_eq!(su, pu, "update counts diverged at threads={threads}");
+            for i in 0..300 {
+                assert_eq!(serial.neighbors(i), par.neighbors(i), "row {i}");
+                assert_eq!(serial.distances(i), par.distances(i), "row {i}");
+            }
+        }
+        for i in (0..280).step_by(17) {
+            for (t, &j) in serial.neighbors(i).iter().enumerate() {
+                if j == u32::MAX {
+                    continue;
+                }
+                let want = crate::core_ops::dist::d2(data.row(i), data.row(j as usize));
+                let got = serial.distances(i)[t];
+                assert!((got - want).abs() <= 1e-3 * (1.0 + want), "({i},{j})");
             }
         }
     }

@@ -34,7 +34,7 @@ use gkmeans::util::timer::{fmt_secs, Timer};
 const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
     "topk", "ef", "config", "recall-samples", "threads", "save", "model", "scan-order",
-    "checkpoint", "checkpoint-every",
+    "checkpoint", "checkpoint-every", "quantize",
 ];
 
 fn main() {
@@ -59,7 +59,8 @@ gkmeans — fast k-means driven by a KNN graph (Deng & Zhao 2017)
 
 USAGE:
   gkmeans cluster --data <spec> --k <k> [--method gkmeans] [--save FILE [--keep-data]]
-                  [--stream] [--checkpoint DIR [--checkpoint-every N] [--resume]] [options]
+                  [--quantize sq8] [--stream]
+                  [--checkpoint DIR [--checkpoint-every N] [--resume]] [options]
   gkmeans predict --model FILE --data <spec> [--out labels.ivecs]
   gkmeans graph   --data <spec> [--kappa 50 --tau 10 --xi 50] [--recall]
   gkmeans search  --data <spec> | --model FILE  [--queries 100 --topk 10 --ef 64]
@@ -83,6 +84,11 @@ COMMON OPTIONS:
                                --model page the vectors from disk)
   --keep-data                  carry the training vectors in the artifact
                                (required for `search --model`)
+  --quantize sq8               attach an SQ8 code store to the model
+                               (needs --keep-data): searches traverse
+                               RAM-resident u8 codes (~4× smaller than
+                               f32) and re-rank candidates exactly;
+                               persisted in the artifact (QVECTORS)
   --stream                     cluster file-backed datasets out-of-core
                                (fixed-size row blocks + resident cache
                                instead of one in-RAM buffer)
@@ -235,8 +241,24 @@ fn cmd_cluster(args: &Args) -> i32 {
             }
         }
     };
-    let (model, rec) = pipeline::fit_job(&job, data.as_ref(), &backend);
+    let (mut model, rec) = pipeline::fit_job(&job, data.as_ref(), &backend);
     print_result(&pipeline::result_from_model(&model, rec));
+    if let Some(mode) = args.get("quantize") {
+        if mode != "sq8" {
+            eprintln!("error: unknown --quantize mode {mode:?} (supported: sq8)");
+            return 2;
+        }
+        if let Err(e) = model.quantize_sq8(0) {
+            eprintln!("error: {e}");
+            return 1;
+        }
+        let q = model.quantized.as_ref().expect("quantize_sq8 just succeeded");
+        println!(
+            "quantized: sq8 codes resident ({} bytes{})",
+            q.resident_bytes(),
+            if q.quantizer().is_identity() { ", lossless u8 passthrough" } else { "" }
+        );
+    }
     if let Some(path) = args.get("save") {
         if let Err(e) = model.save(Path::new(path)) {
             eprintln!("error: {e}");

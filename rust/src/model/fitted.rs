@@ -13,6 +13,7 @@ use std::path::Path;
 
 use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
+use crate::data::quant::QuantizedVecStore;
 use crate::data::store::{self, ChunkedVecStore, StoreCursor, VecStore};
 use crate::gkm::ann;
 use crate::graph::knn::KnnGraph;
@@ -162,6 +163,12 @@ pub struct FittedModel {
     /// artifact opened with [`FittedModel::load`] pages these from disk
     /// ([`ModelVectors::Disk`]) instead of holding them in RAM.
     pub data: Option<ModelVectors>,
+    /// SQ8-compressed copy of the indexed vectors
+    /// ([`FittedModel::quantize_sq8`]): when present, ANN search scans
+    /// these RAM-resident codes (~¼ the bytes of `data`) and re-ranks
+    /// the candidate pool with exact f32 distances from `data`.
+    /// Persisted as the GKMODEL `QVECTORS` section.
+    pub quantized: Option<QuantizedVecStore>,
 }
 
 /// The vectors a fitted model retains under [`RunContext::keep_data`]:
@@ -227,6 +234,7 @@ impl FittedModel {
             graph_seconds,
             graph,
             data: kept_data(data, ctx),
+            quantized: None,
         }
     }
 
@@ -260,7 +268,31 @@ impl FittedModel {
             graph_seconds,
             graph,
             data: kept_data(data, ctx),
+            quantized: None,
         }
+    }
+
+    /// Quantize the retained vectors to SQ8 ([`QuantizedVecStore`]):
+    /// subsequent [`FittedModel::search`] / [`FittedModel::search_batch`]
+    /// calls traverse the RAM-resident codes (~¼ the memory traffic) and
+    /// re-rank the candidate pool with exact f32 distances, and
+    /// [`FittedModel::save`] persists the codes as a `QVECTORS` section
+    /// so a reloaded model serves quantized immediately.  `sample_rows`
+    /// bounds the quantizer-training pass (`0` = scan everything); data
+    /// that streams from a bvecs file is encoded losslessly through the
+    /// identity quantizer.  Errors when the model retains no vectors
+    /// (fit with [`RunContext::keep_data`]).
+    pub fn quantize_sq8(&mut self, sample_rows: usize) -> Result<(), String> {
+        let data = self.data.as_ref().ok_or_else(|| {
+            "model does not embed the indexed vectors; fit with \
+             RunContext::keep_data(true) before quantizing"
+                .to_string()
+        })?;
+        self.quantized = Some(match data {
+            ModelVectors::Disk(c) => c.quantize_sq8(sample_rows),
+            ModelVectors::Ram(v) => QuantizedVecStore::from_store(v, sample_rows),
+        });
+        Ok(())
     }
 
     /// The chunk-cache hit/miss ledger of a disk-backed model's vectors
@@ -470,6 +502,9 @@ impl FittedModel {
         }
         // deterministic per-model entry points: same query, same answer
         let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+        if let Some(q) = &self.quantized {
+            return Ok(ann::search_sq8(q, data, graph, query, topk, params, &mut rng));
+        }
         Ok(ann::search(data, graph, query, topk, params, &mut rng))
     }
 
@@ -531,6 +566,7 @@ impl FittedModel {
         }
         let threads = pool::resolve_threads(self.threads).min(nq);
         let n = data.rows();
+        let quant = self.quantized.as_ref();
         let results = pool::par_map_chunks(threads.max(1), nq, |_, r| {
             let mut scratch = ann::SearchScratch::new(n);
             let mut cur = data.open();
@@ -539,15 +575,27 @@ impl FittedModel {
                 // fresh per-query RNG with the `search` derivation keeps
                 // batch results equal to repeated single calls
                 let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
-                let (res, _) = ann::search_with_scratch(
-                    &mut cur,
-                    graph,
-                    queries.row(q),
-                    topk,
-                    params,
-                    &mut rng,
-                    &mut scratch,
-                );
+                let (res, _) = match quant {
+                    Some(qs) => ann::search_sq8_with_scratch(
+                        qs,
+                        &mut cur,
+                        graph,
+                        queries.row(q),
+                        topk,
+                        params,
+                        &mut rng,
+                        &mut scratch,
+                    ),
+                    None => ann::search_with_scratch(
+                        &mut cur,
+                        graph,
+                        queries.row(q),
+                        topk,
+                        params,
+                        &mut rng,
+                        &mut scratch,
+                    ),
+                };
                 out.push(res);
             }
             out
@@ -584,6 +632,7 @@ impl FittedModel {
         }
         let threads = pool::resolve_threads(self.threads).min(nq);
         let n = data.rows();
+        let quant = self.quantized.as_ref();
         let parts = pool::try_par_map_chunks(threads.max(1), nq, |_, r| {
             let mut scratch: Option<ann::SearchScratch> = None;
             let mut cur: Option<crate::data::store::StoreCursor<'_>> = None;
@@ -593,15 +642,27 @@ impl FittedModel {
                 let mut c = cur.take().unwrap_or_else(|| data.open());
                 let guarded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
-                    let (res, _) = ann::search_with_scratch(
-                        &mut c,
-                        graph,
-                        queries.row(q),
-                        topk,
-                        params,
-                        &mut rng,
-                        &mut s,
-                    );
+                    let (res, _) = match quant {
+                        Some(qs) => ann::search_sq8_with_scratch(
+                            qs,
+                            &mut c,
+                            graph,
+                            queries.row(q),
+                            topk,
+                            params,
+                            &mut rng,
+                            &mut s,
+                        ),
+                        None => ann::search_with_scratch(
+                            &mut c,
+                            graph,
+                            queries.row(q),
+                            topk,
+                            params,
+                            &mut rng,
+                            &mut s,
+                        ),
+                    };
                     res
                 }));
                 match guarded {

@@ -23,6 +23,7 @@
 //! | 4    | GRAPH     | u64 n, u64 kappa, n·κ × u32 ids, n·κ × f32 dists   |
 //! | 5    | VECTORS   | u64 rows, rows·dim × f32                           |
 //! | 6    | CRC       | per-section { kind u32, crc32 u32 } records        |
+//! | 7    | QVECTORS  | u64 rows, dim × f32 min, dim × f32 scale, rows·dim × u8 codes |
 //!
 //! The CRC section (always written last) holds a CRC-32 (IEEE) of every
 //! other section's payload bytes; the vectors checksum is accumulated
@@ -62,6 +63,7 @@ use std::path::Path;
 
 use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
+use crate::data::quant::{QuantizedVecStore, Sq8Quantizer};
 use crate::data::store::{ChunkedVecStore, VecStore};
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::IterStat;
@@ -80,6 +82,9 @@ const SEC_CENTROIDS: u32 = 3;
 const SEC_GRAPH: u32 = 4;
 const SEC_VECTORS: u32 = 5;
 const SEC_CRC: u32 = 6;
+/// SQ8-quantized vectors (PR 8).  Appended after SEC_CRC was assigned,
+/// so pre-quantization readers skip it as an unknown kind.
+const SEC_QVECTORS: u32 = 7;
 
 /// Section alignment: offsets are multiples of 64 so payloads start on
 /// cache-line boundaries and the vectors region can be paged directly.
@@ -152,6 +157,20 @@ fn graph_payload(g: &KnnGraph) -> Vec<u8> {
     buf
 }
 
+fn qvectors_payload(q: &QuantizedVecStore) -> Vec<u8> {
+    let quant = q.quantizer();
+    let mut buf = Vec::with_capacity(8 + 8 * q.dim() + q.codes().len());
+    put_u64(&mut buf, q.rows() as u64);
+    for &v in quant.min() {
+        put_f32(&mut buf, v);
+    }
+    for &v in quant.scale() {
+        put_f32(&mut buf, v);
+    }
+    buf.extend_from_slice(q.codes());
+    buf
+}
+
 /// Write a model in the v2 layout to any sink, streaming the vectors
 /// section in [`VEC_STREAM_ROWS`]-row blocks.
 fn write_v2<W: Write>(
@@ -164,6 +183,7 @@ fn write_v2<W: Write>(
     let centroids = centroids_payload(m);
     let graph = m.graph.as_ref().map(graph_payload);
     let vec_len = vectors.map(|v| 8 + 4 * (v.rows() as u64) * (v.dim() as u64));
+    let qvectors = m.quantized.as_ref().map(qvectors_payload);
 
     let mut sections: Vec<(u32, u64)> = vec![
         (SEC_META, meta.len() as u64),
@@ -176,6 +196,9 @@ fn write_v2<W: Write>(
     if let Some(len) = vec_len {
         sections.push((SEC_VECTORS, len));
     }
+    if let Some(q) = &qvectors {
+        sections.push((SEC_QVECTORS, q.len() as u64));
+    }
     // One { kind, crc } record per payload section; the in-RAM payloads
     // hash now, vectors hash as they stream, and the CRC section itself
     // (always last in table and file) is written once every record is in.
@@ -186,6 +209,9 @@ fn write_v2<W: Write>(
     ];
     if let Some(g) = &graph {
         crc_records.push((SEC_GRAPH, crc32(g)));
+    }
+    if let Some(q) = &qvectors {
+        crc_records.push((SEC_QVECTORS, crc32(q)));
     }
     sections.push((SEC_CRC, 8 * sections.len() as u64));
 
@@ -263,6 +289,11 @@ fn write_v2<W: Write>(
                 }
                 written += 8 + 4 * (n as u64) * (d as u64);
                 crc_records.push((SEC_VECTORS, hasher.finish()));
+            }
+            SEC_QVECTORS => {
+                let q = qvectors.as_ref().expect("qvectors section implies a quantized store");
+                w.write_all(q)?;
+                written += q.len() as u64;
             }
             SEC_CRC => {
                 let mut payload = Vec::with_capacity(8 * crc_records.len());
@@ -373,6 +404,20 @@ fn parse_vectors_eager(bytes: &[u8], n_train: usize, dim: usize) -> Result<VecSe
     Ok(VecSet::from_flat(dim, flat))
 }
 
+fn parse_qvectors(bytes: &[u8], n_train: usize, dim: usize) -> Result<QuantizedVecStore, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let rows = r.len_u64("quantized rows")?;
+    if rows != n_train {
+        return Err(format!("quantized {rows} vectors but the model trained on {n_train}"));
+    }
+    let min = r.f32_vec(dim)?;
+    let scale = r.f32_vec(dim)?;
+    let codes = r.take(checked_mul(rows, dim, "code buffer")?)?.to_vec();
+    r.done("QVECTORS")?;
+    let quant = Sq8Quantizer::from_parts(min, scale)?;
+    QuantizedVecStore::from_parts(rows, dim, codes, quant)
+}
+
 /// One parsed v2 table entry.
 struct Section {
     kind: u32,
@@ -432,6 +477,7 @@ fn sec_name(kind: u32) -> String {
         SEC_GRAPH => "GRAPH".into(),
         SEC_VECTORS => "VECTORS".into(),
         SEC_CRC => "CRC".into(),
+        SEC_QVECTORS => "QVECTORS".into(),
         other => format!("kind {other}"),
     }
 }
@@ -470,6 +516,7 @@ fn assemble(
     centroids: VecSet,
     graph: Option<KnnGraph>,
     data: Option<ModelVectors>,
+    quantized: Option<QuantizedVecStore>,
 ) -> FittedModel {
     FittedModel {
         method: meta.method,
@@ -485,6 +532,7 @@ fn assemble(
         graph_seconds: meta.graph_seconds,
         graph,
         data,
+        quantized,
     }
 }
 
@@ -559,6 +607,10 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                 )?)),
                 None => None,
             };
+            let quantized = match section(&sections, SEC_QVECTORS) {
+                Some(s) => Some(parse_qvectors(get(s), meta.n_train, meta.dim)?),
+                None => None,
+            };
             if labels.len() != meta.n_train {
                 return Err(format!(
                     "label count {} != n_train {}",
@@ -566,7 +618,7 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                     meta.n_train
                 ));
             }
-            Ok(assemble(meta, labels, centroids, graph, data))
+            Ok(assemble(meta, labels, centroids, graph, data, quantized))
         }
         other => Err(format!("unsupported model version {other} (this build reads 1 and 2)")),
     }
@@ -717,6 +769,15 @@ pub fn load(path: &Path) -> RtResult<FittedModel> {
         ),
         None => None,
     };
+    // QVECTORS load eagerly: the codes being RAM-resident is the point
+    // (the f32 vectors stay lazily paged for the exact re-rank reads).
+    let quantized = match section(&sections, SEC_QVECTORS) {
+        Some(s) => Some(
+            parse_qvectors(&read_verified(s)?, meta.n_train, meta.dim)
+                .map_err(|e| corrupt("QVECTORS", e))?,
+        ),
+        None => None,
+    };
     let data = match section(&sections, SEC_VECTORS) {
         Some(s) => {
             if s.len < 8 {
@@ -791,7 +852,7 @@ pub fn load(path: &Path) -> RtResult<FittedModel> {
             format!("label count {} != n_train {}", labels.len(), meta.n_train),
         ));
     }
-    Ok(assemble(meta, labels, centroids, graph, data))
+    Ok(assemble(meta, labels, centroids, graph, data, quantized))
 }
 
 // --- v1 (legacy) --------------------------------------------------------
@@ -940,6 +1001,7 @@ fn decode_v1(bytes: &[u8]) -> Result<FittedModel, String> {
         graph_seconds,
         graph,
         data,
+        quantized: None,
     })
 }
 
@@ -1083,6 +1145,11 @@ mod tests {
             for (x, y) in da.flat().iter().zip(db.flat()) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
+        }
+        assert_eq!(a.quantized.is_some(), b.quantized.is_some());
+        if let (Some(qa), Some(qb)) = (&a.quantized, &b.quantized) {
+            assert_eq!(qa.codes(), qb.codes(), "SQ8 codes must round-trip bytewise");
+            assert_eq!(qa.quantizer(), qb.quantizer());
         }
     }
 
@@ -1288,6 +1355,32 @@ mod tests {
         std::fs::write(&path, &old).unwrap();
         let loaded = FittedModel::load(&path).unwrap();
         assert_models_bit_identical(&model, &loaded);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quantized_model_roundtrips_and_is_checksummed() {
+        let mut model = graph_model();
+        model.quantize_sq8(0).unwrap();
+        // bytes round trip
+        let back = decode(&encode(&model)).unwrap();
+        assert_models_bit_identical(&model, &back);
+        // file round trip: QVECTORS loads eagerly, vectors stay lazy
+        let path = tmp("quant.gkm");
+        model.save(&path).unwrap();
+        let loaded = FittedModel::load(&path).unwrap();
+        assert!(loaded.quantized.is_some());
+        assert!(!loaded.data.as_ref().unwrap().is_resident());
+        assert_models_bit_identical(&model, &loaded);
+        // a flipped code byte is caught by the QVECTORS checksum
+        let clean = std::fs::read(&path).unwrap();
+        let (off, len) = table_entry(&clean, SEC_QVECTORS);
+        let mut bad = clean.clone();
+        bad[off + len - 1] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = FittedModel::load(&path).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+        assert!(err.to_string().contains("QVECTORS"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -115,6 +115,73 @@ fn search_recall_beats_floor_at_kappa_10() {
     );
 }
 
+#[test]
+fn sq8_search_recall_is_within_one_percent_of_f32() {
+    let n = 1_500;
+    let data = sift_like(n, 31);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    let mut model = GkMeans::new((n / 50).max(2)).kappa(10).tau(8).fit(&data, &ctx);
+
+    let sp = SearchParams { ef: 64, entries: 48, seed: 3 };
+    let nq = 100;
+    let recall_of = |m: &FittedModel| {
+        let mut rng = Rng::new(77);
+        let mut hits = 0usize;
+        for _ in 0..nq {
+            let qi = rng.below(n);
+            let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.001).collect();
+            let res = m.search(&q, 1, &sp).unwrap();
+            if res.first().map(|r| r.1) == Some(qi as u32) {
+                hits += 1;
+            }
+        }
+        hits as f64 / nq as f64
+    };
+    let exact = recall_of(&model);
+    model.quantize_sq8(0).unwrap();
+    assert!(model.quantized.is_some());
+    // traversal now runs over u8 codes; the exact re-rank of the ef pool
+    // must absorb the quantization error at the top of the result list
+    let quant = recall_of(&model);
+    assert!(
+        quant >= exact - 0.01,
+        "sq8 recall {quant} fell more than 1% below the f32 recall {exact}"
+    );
+    assert!(quant >= 0.6, "sq8 recall {quant} below the 0.6 floor");
+}
+
+#[test]
+fn quantized_artifact_roundtrips_and_serves_identically() {
+    let data = sift_like(400, 71);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(3).keep_data(true);
+    let mut model = GkMeans::new(8).kappa(8).tau(3).fit(&data, &ctx);
+    model.quantize_sq8(64).unwrap();
+
+    let path = tmp("sq8_roundtrip.gkm");
+    model.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let (mq, lq) = (model.quantized.as_ref().unwrap(), loaded.quantized.as_ref().unwrap());
+    assert_eq!(mq.codes(), lq.codes());
+    assert_eq!(mq.quantizer(), lq.quantizer());
+    // the loaded artifact pages its f32 vectors from disk while the codes
+    // stay resident; search must serve identical results either way
+    // (traversal over identical codes, re-rank over bit-identical rows)
+    assert!(!loaded.data.as_ref().unwrap().is_resident());
+    let sp = SearchParams { ef: 32, entries: 16, seed: 9 };
+    for qi in [0usize, 57, 201, 399] {
+        let q: Vec<f32> = data.row(qi).iter().map(|v| v + 0.0005).collect();
+        assert_eq!(
+            model.search(&q, 5, &sp).unwrap(),
+            loaded.search(&q, 5, &sp).unwrap(),
+            "query {qi}"
+        );
+    }
+}
+
 // The old free-function API must keep old call sites compiling and
 // produce the same numbers the trait surface does (threads=1 paths are
 // deterministic).

@@ -38,6 +38,7 @@ fn exact_model(data: &VecSet) -> FittedModel {
         graph_seconds: 0.0,
         graph: Some(graph),
         data: Some(ModelVectors::Ram(data.clone())),
+        quantized: None,
     }
 }
 
