@@ -282,6 +282,60 @@ fn main() {
         t.row(&["topk_push".into(), "k=50".into(), "native".into(), "-".into(), f(r2)]);
     }
 
+    // --- routed vs flat single-query predict at large k ---
+    // The routing-tree hot path: one query against k=2048 centroids,
+    // flat O(k) assign_blocks vs O(depth·branch·beam) tree descent at
+    // the default beam.  Random centroids are the worst case for the
+    // tree (no cluster structure to exploit), so the speedup here is a
+    // floor; clustered fits route strictly better.
+    {
+        let k = 2048usize;
+        let d = 128usize;
+        let flat_c: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let centroids = gkmeans::data::matrix::VecSet::from_flat(d, flat_c);
+        let backend = Backend::native();
+        let tree = gkmeans::gkm::tree::RouteTree::build(
+            &centroids,
+            &gkmeans::gkm::tree::RouteTreeParams::default(),
+            &backend,
+        );
+        let beam = tree.default_beam as usize;
+        let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let (r_flat, it_f) = rate(budget, || {
+            std::hint::black_box(backend.assign_blocks(&q, centroids.flat(), d, k));
+        });
+        let mut scratch = gkmeans::gkm::tree::RouteScratch::new();
+        let (r_routed, it_r) = rate(budget, || {
+            std::hint::black_box(tree.predict_one(&q, &centroids, beam, &backend, &mut scratch));
+        });
+        for (name, r, iters) in
+            [("predict_flat", r_flat, it_f), ("predict_routed", r_routed, it_r)]
+        {
+            records.push(gkmeans::bench_util::GkBenchRecord {
+                name: name.into(),
+                n: 1,
+                d,
+                k,
+                kappa: beam,
+                threads: 1,
+                epochs: iters,
+                samples_per_s: r,
+            });
+            t.row(&[
+                name.into(),
+                format!("k={k},d={d},beam={beam}"),
+                "native".into(),
+                "-".into(),
+                f(r),
+            ]);
+        }
+        println!(
+            "predict k={k} d={d}: flat {r_flat:.0}/s, routed {r_routed:.0}/s ({:.2}x, beam={beam}, depth={})",
+            r_routed / r_flat.max(1e-12),
+            tree.depth()
+        );
+    }
+
     // --- GK-means epoch throughput: serial vs the parallel layer ---
     // The threads sweep is the perf trajectory future PRs compare against;
     // records land in BENCH_gkm.json (acceptance: threads >= 4 shows >= 2x

@@ -7,14 +7,25 @@
 //! Paper's reading: GK-means total ≈ ½ closure's and ~6× faster than
 //! KGraph+GK-means (NN-Descent dominates its init); GK-means distortion
 //! lowest despite its graph's *lower* raw recall — the Alg. 3 graph
-//! carries clustering structure.  Regenerate:
-//! `cargo bench --bench table2_million`.
+//! carries clustering structure.
+//!
+//! The second half exercises the extreme-k serving story: a routing
+//! tree is built over the fitted centroids and routed `predict` is
+//! timed against the flat O(k) scan, with assignment agreement
+//! (recall@1 of the routed label vs. the exact flat label) measured on
+//! the same queries.  Results land in `BENCH_route.json`
+//! (`$GKMEANS_BENCH_ROUTE_JSON` overrides the path) so CI can track
+//! the routed-vs-flat trajectory.  Runs at every scale —
+//! `GKMEANS_BENCH_FAST=1 cargo bench --bench table2_million` is the
+//! CI smoke invocation.
 
 use gkmeans::bench_util;
 use gkmeans::coordinator::job::{ClusterJob, Method};
 use gkmeans::coordinator::pipeline;
 use gkmeans::data::DatasetSpec;
 use gkmeans::eval::report::Table;
+use gkmeans::gkm::tree::RouteTreeParams;
+use gkmeans::util::timer::Timer;
 
 fn main() {
     bench_util::banner("Tab.2", "extreme cluster count: k = n/10 on vlad_like");
@@ -70,4 +81,77 @@ fn main() {
     t.write_csv(&gkmeans::eval::report::results_dir().join("table2.csv")).ok();
     println!("paper shape checks: GK-means fastest total; distortion: GK < KGraph+GK < closure;");
     println!("GK recall < KGraph recall yet GK distortion lower (structure transfer).");
+
+    // --- routed vs flat predict at extreme k ----------------------------
+    // Fit once more through the model API, attach the routing tree, and
+    // time `predict` both ways over the training vectors.  Agreement is
+    // recall@1 of the routed assignment against the exact flat argmin.
+    println!();
+    println!("routed predict at extreme k (routing tree vs flat O(k) scan):");
+    let mut job = ClusterJob::new(
+        DatasetSpec::Synth { kind: "vlad".into(), n, seed: 20170707 },
+        Method::GkMeans,
+        k,
+    );
+    job.kappa = 20;
+    job.tau = 6;
+    job.base.max_iters = 10;
+    let (mut model, _) = pipeline::fit_job(&job, &data, &backend);
+    let build_timer = Timer::start();
+    model.build_route(&RouteTreeParams::default());
+    let build_secs = build_timer.elapsed_s();
+    let tree = model.route.clone();
+    let (branch, beam, nodes, depth) = {
+        let t = tree.as_ref().expect("build_route just ran");
+        (t.branch, t.default_beam, t.nodes(), t.depth())
+    };
+    println!(
+        "tree: branch={branch} beam={beam} nodes={nodes} depth={depth} built in {}",
+        gkmeans::util::timer::fmt_secs(build_secs)
+    );
+
+    model.route = None;
+    let timer = Timer::start();
+    let flat = model.predict(&data);
+    let flat_secs = timer.elapsed_s().max(1e-12);
+
+    model.route = tree;
+    model.route_min_k = 0; // force routing even at smoke-scale k
+    let timer = Timer::start();
+    let routed = model.predict(&data);
+    let routed_secs = timer.elapsed_s().max(1e-12);
+
+    let agree =
+        flat.iter().zip(&routed).filter(|(a, b)| a == b).count() as f64 / n.max(1) as f64;
+    let flat_rate = n as f64 / flat_secs;
+    let routed_rate = n as f64 / routed_secs;
+    println!(
+        "flat:   {:>10.0} samples/s ({})",
+        flat_rate,
+        gkmeans::util::timer::fmt_secs(flat_secs)
+    );
+    println!(
+        "routed: {:>10.0} samples/s ({}) — {:.1}x, agreement(recall@1)={:.4}",
+        routed_rate,
+        gkmeans::util::timer::fmt_secs(routed_secs),
+        flat_secs / routed_secs,
+        agree
+    );
+
+    let d = data.dim();
+    let lines = vec![
+        format!(
+            "{{\"name\":\"predict_flat\",\"n\":{n},\"d\":{d},\"k\":{k},\"branch\":0,\"beam\":0,\"samples_per_s\":{flat_rate:.1},\"agreement\":1.0}}"
+        ),
+        format!(
+            "{{\"name\":\"predict_routed\",\"n\":{n},\"d\":{d},\"k\":{k},\"branch\":{branch},\"beam\":{beam},\"samples_per_s\":{routed_rate:.1},\"agreement\":{agree:.4}}}"
+        ),
+    ];
+    let path = std::env::var("GKMEANS_BENCH_ROUTE_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("BENCH_route.json"));
+    match bench_util::write_json_array(&path, &lines) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("warning: could not write {}: {e}", path.display()),
+    }
 }

@@ -124,6 +124,19 @@ pub fn search(
     search_with_scratch(&mut cur, graph, query, k, params, rng, &mut scratch)
 }
 
+/// How a search picks its graph entry points.
+///
+/// `Random` is the historical behavior (`entries` draws from the query
+/// RNG).  `Seeds` starts from caller-chosen rows instead — the routing
+/// tree ([`crate::gkm::tree::RouteTree`]) descends to the nearest
+/// clusters and hands their representative rows here, which replaces
+/// O(k)-ish random placement with O(depth·branch) routed placement.
+/// Out-of-range or duplicate seed rows are skipped.
+enum EntrySel<'a> {
+    Random { rng: &'a mut Rng, count: usize },
+    Seeds(&'a [u32]),
+}
+
 /// [`search`] with caller-owned cursor and scratch: identical results,
 /// no per-query O(n) allocation, and (for disk-backed stores) the
 /// cursor's block cache stays warm across a batch of queries.
@@ -136,6 +149,35 @@ pub fn search_with_scratch(
     rng: &mut Rng,
     scratch: &mut SearchScratch,
 ) -> (Vec<(f32, u32)>, SearchStats) {
+    let entry = EntrySel::Random { rng, count: params.entries };
+    search_core(cur, graph, query, k, params, entry, scratch)
+}
+
+/// [`search_with_scratch`] starting from caller-chosen entry rows
+/// (routed seeding) instead of random draws.  `seeds` must be
+/// non-empty; invalid rows are skipped, and if every seed is invalid
+/// the result is empty — callers fall back to the random variant.
+pub fn search_seeded_with_scratch(
+    cur: &mut crate::data::store::StoreCursor<'_>,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    seeds: &[u32],
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
+    search_core(cur, graph, query, k, params, EntrySel::Seeds(seeds), scratch)
+}
+
+fn search_core(
+    cur: &mut crate::data::store::StoreCursor<'_>,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    entry: EntrySel<'_>,
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
     let n = graph.n();
     let ef = params.ef.max(k);
     let mut stats = SearchStats::default();
@@ -143,15 +185,31 @@ pub fn search_with_scratch(
     // candidate min-queue (dist, id): BinaryHeap is a max-heap, use Reverse
     let mut pool = TopK::new(ef);
 
-    for _ in 0..params.entries.max(1) {
-        let e = rng.below(n);
-        if !scratch.visit(e) {
-            continue;
+    match entry {
+        EntrySel::Random { rng, count } => {
+            for _ in 0..count.max(1) {
+                let e = rng.below(n);
+                if !scratch.visit(e) {
+                    continue;
+                }
+                let dd = d2(query, cur.row(e));
+                stats.dist_evals += 1;
+                pool.push(dd, e as u32);
+                scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+            }
         }
-        let dd = d2(query, cur.row(e));
-        stats.dist_evals += 1;
-        pool.push(dd, e as u32);
-        scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+        EntrySel::Seeds(rows) => {
+            for &r in rows {
+                let e = r as usize;
+                if e >= n || !scratch.visit(e) {
+                    continue;
+                }
+                let dd = d2(query, cur.row(e));
+                stats.dist_evals += 1;
+                pool.push(dd, e as u32);
+                scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+            }
+        }
     }
 
     while let Some(std::cmp::Reverse((od, node))) = scratch.frontier.pop() {
@@ -261,21 +319,68 @@ pub fn search_sq8_with_scratch(
     rng: &mut Rng,
     scratch: &mut SearchScratch,
 ) -> (Vec<(f32, u32)>, SearchStats) {
+    let entry = EntrySel::Random { rng, count: params.entries };
+    search_sq8_core(store, exact, graph, query, k, params, entry, scratch)
+}
+
+/// [`search_sq8_with_scratch`] starting from caller-chosen entry rows
+/// (routed seeding); see [`search_seeded_with_scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn search_sq8_seeded_with_scratch(
+    store: &QuantizedVecStore,
+    exact: &mut crate::data::store::StoreCursor<'_>,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    seeds: &[u32],
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
+    search_sq8_core(store, exact, graph, query, k, params, EntrySel::Seeds(seeds), scratch)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn search_sq8_core(
+    store: &QuantizedVecStore,
+    exact: &mut crate::data::store::StoreCursor<'_>,
+    graph: &KnnGraph,
+    query: &[f32],
+    k: usize,
+    params: &SearchParams,
+    entry: EntrySel<'_>,
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
     let n = graph.n();
     let ef = params.ef.max(k);
     let mut stats = SearchStats::default();
     scratch.begin(n);
     let mut pool = TopK::new(ef);
 
-    for _ in 0..params.entries.max(1) {
-        let e = rng.below(n);
-        if !scratch.visit(e) {
-            continue;
+    match entry {
+        EntrySel::Random { rng, count } => {
+            for _ in 0..count.max(1) {
+                let e = rng.below(n);
+                if !scratch.visit(e) {
+                    continue;
+                }
+                let dd = d2_sq8_one(store, query, e as u32);
+                stats.dist_evals += 1;
+                pool.push(dd, e as u32);
+                scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+            }
         }
-        let dd = d2_sq8_one(store, query, e as u32);
-        stats.dist_evals += 1;
-        pool.push(dd, e as u32);
-        scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+        EntrySel::Seeds(rows) => {
+            for &r in rows {
+                let e = r as usize;
+                if e >= n || !scratch.visit(e) {
+                    continue;
+                }
+                let dd = d2_sq8_one(store, query, e as u32);
+                stats.dist_evals += 1;
+                pool.push(dd, e as u32);
+                scratch.frontier.push(std::cmp::Reverse((ordered_from(dd), e as u32)));
+            }
+        }
     }
 
     while let Some(std::cmp::Reverse((od, node))) = scratch.frontier.pop() {
@@ -467,6 +572,62 @@ mod tests {
             assert_eq!(fresh, reused, "query {qi}");
             assert_eq!(fs.dist_evals, rs.dist_evals);
             assert_eq!(fs.hops, rs.hops);
+        }
+    }
+
+    #[test]
+    fn seeded_search_starts_where_told() {
+        let data = blobs(&BlobSpec::quick(500, 8, 8), 1);
+        let graph = brute::build(&data, 10, &Backend::native());
+        let params = SearchParams::default();
+        let mut scratch = SearchScratch::new(500);
+        for qi in (0..500).step_by(41) {
+            let q = data.row(qi).to_vec();
+            let mut cur = crate::data::store::VecStore::open(&data);
+            let (res, _) = search_seeded_with_scratch(
+                &mut cur,
+                &graph,
+                &q,
+                1,
+                &params,
+                &[qi as u32],
+                &mut scratch,
+            );
+            // entry IS the true NN: no random-component luck needed
+            assert_eq!(res[0].1 as usize, qi);
+        }
+        // out-of-range seeds are skipped; all-invalid ⇒ empty result so
+        // the caller can fall back to random entries
+        let q = data.row(0).to_vec();
+        let mut cur = crate::data::store::VecStore::open(&data);
+        let seeds = [u32::MAX];
+        let (res, stats) =
+            search_seeded_with_scratch(&mut cur, &graph, &q, 3, &params, &seeds, &mut scratch);
+        assert!(res.is_empty());
+        assert_eq!(stats.dist_evals, 0);
+    }
+
+    #[test]
+    fn seeded_sq8_search_starts_where_told() {
+        let data = blobs(&BlobSpec::quick(300, 8, 6), 9);
+        let graph = brute::build(&data, 8, &Backend::native());
+        let store = QuantizedVecStore::from_store(&data, 0);
+        let params = SearchParams::default();
+        let mut scratch = SearchScratch::new(300);
+        for qi in (0..300).step_by(37) {
+            let q = data.row(qi).to_vec();
+            let mut cur = crate::data::store::VecStore::open(&data);
+            let (res, _) = search_sq8_seeded_with_scratch(
+                &store,
+                &mut cur,
+                &graph,
+                &q,
+                1,
+                &params,
+                &[qi as u32],
+                &mut scratch,
+            );
+            assert_eq!(res[0].1 as usize, qi);
         }
     }
 

@@ -12,6 +12,7 @@
 pub mod ann;
 pub mod construct;
 pub mod gkmeans;
+pub mod tree;
 pub mod variant;
 
 use crate::data::matrix::VecSet;

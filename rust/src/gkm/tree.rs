@@ -1,0 +1,709 @@
+//! Hierarchical cluster **routing tree** — O(depth·branch) coarse→fine
+//! assignment for very large k.
+//!
+//! The paper's most striking structural move is that the KNN graph is
+//! built by *recursively calling fast k-means itself*.  This module makes
+//! that recursion a first-class, persisted artifact: a top-down tree over
+//! the final k centroids, built with the same 2M-tree bisection + BKM
+//! polish ([`crate::kmeans::two_means`]) the fits already use.  Each
+//! internal node holds one routing vector (the mean of its subtree's
+//! centroids); each leaf holds ≤ `branch` centroid ids.
+//!
+//! Routed `predict` descends with a beam: at every level the query is
+//! scored against the children of the surviving frontier nodes — one
+//! [`Backend::candidate_d2`] call per node over a *contiguous* block of
+//! routing vectors (children are laid out consecutively, see below) —
+//! the best `beam` nodes survive, and at the bottom the union of the
+//! frontier leaves' members is evaluated exactly.  Cost is
+//! O(beam·branch·depth + beam·branch) distances instead of O(k): at
+//! k = 1M, branch = 32, beam = 8 that is ~10³ distance evaluations per
+//! query, not 10⁶.
+//!
+//! **Exactness dial**: `beam ≥ k` means the frontier is never truncated
+//! (a frontier is an antichain of subtrees, each owning ≥ 1 of the k
+//! centroids, so it can never exceed k entries), every leaf is reached,
+//! and the candidate set is all k centroids — [`RouteTree::predict_one`]
+//! special-cases this to the *identical* flat
+//! [`Backend::assign_blocks`] scan, so routed assignment is bit-for-bit
+//! the flat assignment.  Smaller beams trade agreement for speed;
+//! `beam = 8` keeps agreement ≥ 0.95 on clustered data (pinned by
+//! `tests/route.rs`).
+//!
+//! **Layout invariant**: nodes are numbered in BFS order and a node's
+//! children occupy consecutive ids, so the routing vectors of one
+//! node's children are contiguous in `node_vecs` — the descent scores
+//! them with a single batched-kernel call and zero gathers.  Children
+//! always have larger ids than their parent, which also makes descent
+//! termination a structural property (checked on load).
+//!
+//! The tree rides in GKMODEL v2 as the append-only `RTREE` section
+//! (kind 8, CRC'd, skipped by older readers); see
+//! [`crate::model::serde`].
+
+use crate::core_ops::dist::{d2_batch_exact, norm2};
+use crate::data::matrix::VecSet;
+use crate::kmeans::two_means::{self, TwoMeansParams};
+use crate::runtime::Backend;
+use std::collections::VecDeque;
+
+/// Default fan-out per internal node.  32 keeps the per-level
+/// `candidate_d2` block comfortably inside the batched kernels' sweet
+/// spot while holding depth to ⌈log₃₂ k⌉ (4 levels at k = 1M).
+pub const DEFAULT_BRANCH: usize = 32;
+
+/// Default beam width.  8 × 32 = 256 routing evaluations per level —
+/// cheap — while keeping assignment agreement ≥ 0.95 on clustered data.
+pub const DEFAULT_BEAM: usize = 8;
+
+/// Below this k the flat scan is already fast enough that routing only
+/// adds overhead; [`crate::model::FittedModel`] ignores an attached
+/// tree for smaller models unless forced (`--route tree` at predict
+/// time sets the threshold to 0).
+pub const ROUTE_MIN_K: usize = 1024;
+
+/// Build-time knobs for [`RouteTree::build`].
+#[derive(Debug, Clone)]
+pub struct RouteTreeParams {
+    /// Fan-out per internal node (≥ 2).
+    pub branch: usize,
+    /// Default beam width stored on the tree (query-time overridable).
+    pub beam: usize,
+    /// Seed for the per-node 2M-tree splits (each node derives its own
+    /// stream, so the build is deterministic per `(seed, threads)`).
+    pub seed: u64,
+    /// Worker threads handed to the per-node splits (`0` = auto).
+    pub threads: usize,
+}
+
+impl Default for RouteTreeParams {
+    fn default() -> RouteTreeParams {
+        RouteTreeParams {
+            branch: DEFAULT_BRANCH,
+            beam: DEFAULT_BEAM,
+            seed: 20170707,
+            threads: 1,
+        }
+    }
+}
+
+/// Per-query (or per-worker) reusable buffers for descent — keeps the
+/// routed hot path allocation-free across queries.
+#[derive(Debug, Default)]
+pub struct RouteScratch {
+    dists: Vec<f32>,
+    frontier: Vec<(f32, u32)>,
+    next: Vec<(f32, u32)>,
+    cand: Vec<u32>,
+    gather: Vec<f32>,
+}
+
+impl RouteScratch {
+    pub fn new() -> RouteScratch {
+        RouteScratch::default()
+    }
+}
+
+/// The routing tree: BFS-ordered nodes whose leaves partition the k
+/// centroid ids.  Immutable after build/load; all query state lives in
+/// [`RouteScratch`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteTree {
+    pub dim: usize,
+    pub k: usize,
+    pub branch: u32,
+    pub default_beam: u32,
+    /// `nodes × dim` routing vectors, node 0 = root; a node's children
+    /// are contiguous rows starting at `first_child`.
+    pub(crate) node_vecs: Vec<f32>,
+    /// ‖routing vector‖² per node — recomputed on load, not serialized.
+    pub(crate) node_norms: Vec<f32>,
+    /// First child node id (0 for leaves — node 0 is the root, never a
+    /// child, so 0 is unambiguous as "none").
+    pub(crate) first_child: Vec<u32>,
+    /// Number of children (0 = leaf).
+    pub(crate) child_count: Vec<u32>,
+    /// CSR offsets into `member_ids`, length `nodes + 1`; internal
+    /// nodes own empty ranges.
+    pub(crate) member_start: Vec<u32>,
+    /// Centroid ids owned by each leaf; the leaves partition `0..k`.
+    pub(crate) member_ids: Vec<u32>,
+    /// `reps[c]` = a training row whose label is `c` (`u32::MAX` if the
+    /// cluster is empty) — used to seed graph-ANN search at the routed
+    /// entry clusters.  Empty when the model kept no labels.
+    pub(crate) reps: Vec<u32>,
+}
+
+impl RouteTree {
+    /// Build the tree over `centroids` by recursive `branch`-way
+    /// 2M-tree splits (largest-first bisection + BKM polish — the same
+    /// engine the fits use for initialization).  Deterministic per
+    /// `(params.seed, params.threads)`.
+    pub fn build(centroids: &VecSet, params: &RouteTreeParams, backend: &Backend) -> RouteTree {
+        let k = centroids.rows();
+        let dim = centroids.dim();
+        assert!(k >= 1, "routing tree over zero centroids");
+        assert!(params.branch >= 2, "branch factor must be ≥ 2");
+        let branch = params.branch;
+
+        let mut node_vecs: Vec<f32> = Vec::new();
+        let mut first_child: Vec<u32> = Vec::new();
+        let mut child_count: Vec<u32> = Vec::new();
+        let mut member_start: Vec<u32> = vec![0];
+        let mut member_ids: Vec<u32> = Vec::new();
+
+        // BFS so children get consecutive ids ⇒ contiguous routing
+        // vectors per node (the descent's zero-gather invariant).
+        let mut pending: VecDeque<Vec<u32>> = VecDeque::new();
+        pending.push_back((0..k as u32).collect());
+        let mut next_id = 1usize;
+        while let Some(members) = pending.pop_front() {
+            let node = first_child.len();
+            // routing vector = f64-accumulated mean of member centroids
+            let mut acc = vec![0f64; dim];
+            for &c in &members {
+                for (a, &v) in acc.iter_mut().zip(centroids.row(c as usize)) {
+                    *a += f64::from(v);
+                }
+            }
+            let inv = 1.0 / members.len() as f64;
+            node_vecs.extend(acc.iter().map(|a| (*a * inv) as f32));
+
+            if members.len() <= branch {
+                first_child.push(0);
+                child_count.push(0);
+                member_ids.extend_from_slice(&members);
+            } else {
+                let seed = params
+                    .seed
+                    .wrapping_add((node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let parts =
+                    split_members(centroids, &members, branch, seed, params.threads, backend);
+                first_child.push(next_id as u32);
+                child_count.push(parts.len() as u32);
+                next_id += parts.len();
+                for p in parts {
+                    pending.push_back(p);
+                }
+            }
+            member_start.push(member_ids.len() as u32);
+        }
+
+        RouteTree::from_parts(
+            dim,
+            k,
+            branch as u32,
+            params.beam.max(1) as u32,
+            node_vecs,
+            first_child,
+            child_count,
+            member_start,
+            member_ids,
+            Vec::new(),
+        )
+        .expect("freshly built routing tree must validate")
+    }
+
+    /// Assemble (and fully validate) a tree from raw parts — the single
+    /// constructor both [`build`](RouteTree::build) and the GKMODEL
+    /// `RTREE` parser go through, so a hostile artifact can never
+    /// produce a structurally unsound tree (descent termination and
+    /// slice bounds are all checked here, once).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        dim: usize,
+        k: usize,
+        branch: u32,
+        default_beam: u32,
+        node_vecs: Vec<f32>,
+        first_child: Vec<u32>,
+        child_count: Vec<u32>,
+        member_start: Vec<u32>,
+        member_ids: Vec<u32>,
+        reps: Vec<u32>,
+    ) -> Result<RouteTree, String> {
+        let nn = child_count.len();
+        if dim == 0 || k == 0 {
+            return Err("empty routing tree geometry".into());
+        }
+        if branch < 2 {
+            return Err(format!("branch factor {branch} < 2"));
+        }
+        if default_beam == 0 {
+            return Err("beam width 0".into());
+        }
+        if nn == 0 || first_child.len() != nn || member_start.len() != nn + 1 {
+            return Err(format!(
+                "inconsistent node arrays: {} nodes, {} first_child, {} member_start",
+                nn,
+                first_child.len(),
+                member_start.len()
+            ));
+        }
+        if node_vecs.len() != nn * dim {
+            return Err(format!(
+                "routing vectors: {} floats for {nn} nodes × {dim} dims",
+                node_vecs.len()
+            ));
+        }
+        if member_ids.len() != k {
+            return Err(format!("{} leaf members for k={k}", member_ids.len()));
+        }
+        if member_start[0] != 0 || member_start[nn] as usize != member_ids.len() {
+            return Err("member offsets do not span the member table".into());
+        }
+        let mut seen = vec![false; k];
+        for (node, w) in member_start.windows(2).enumerate() {
+            let (a, b) = (w[0] as usize, w[1] as usize);
+            if a > b {
+                return Err(format!("member offsets decrease at node {node}"));
+            }
+            let cc = child_count[node] as usize;
+            let fc = first_child[node] as usize;
+            if cc == 0 {
+                if first_child[node] != 0 {
+                    return Err(format!("leaf {node} has a first_child"));
+                }
+            } else {
+                // children strictly after the parent (BFS layout):
+                // guarantees descent terminates on any loaded artifact.
+                if fc <= node || fc + cc > nn {
+                    return Err(format!(
+                        "node {node}: children [{fc}, {}) out of order or out of range",
+                        fc + cc
+                    ));
+                }
+                if a != b {
+                    return Err(format!("internal node {node} owns leaf members"));
+                }
+            }
+            for &c in &member_ids[a..b] {
+                let c = c as usize;
+                if c >= k {
+                    return Err(format!("member id {c} ≥ k={k}"));
+                }
+                if seen[c] {
+                    return Err(format!("centroid {c} owned by two leaves"));
+                }
+                seen[c] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaves do not cover all k centroids".into());
+        }
+        if !reps.is_empty() && reps.len() != k {
+            return Err(format!("{} reps for k={k}", reps.len()));
+        }
+        let node_norms: Vec<f32> = node_vecs.chunks(dim).map(norm2).collect();
+        Ok(RouteTree {
+            dim,
+            k,
+            branch,
+            default_beam,
+            node_vecs,
+            node_norms,
+            first_child,
+            child_count,
+            member_start,
+            member_ids,
+            reps,
+        })
+    }
+
+    /// Number of nodes (internal + leaf).
+    pub fn nodes(&self) -> usize {
+        self.child_count.len()
+    }
+
+    /// Longest root→leaf path (root alone = 1).
+    pub fn depth(&self) -> usize {
+        let mut depth = vec![0u32; self.nodes()];
+        depth[0] = 1;
+        let mut max = 1;
+        // BFS order ⇒ parents precede children, one forward pass suffices
+        for n in 0..self.nodes() {
+            let (fc, cc) = (self.first_child[n] as usize, self.child_count[n] as usize);
+            for c in fc..fc + cc {
+                depth[c] = depth[n] + 1;
+                max = max.max(depth[c]);
+            }
+        }
+        max as usize
+    }
+
+    /// Whether `reps` (routed search seeding) is populated.
+    pub fn has_reps(&self) -> bool {
+        !self.reps.is_empty()
+    }
+
+    /// Attach per-cluster representative rows (first training row of
+    /// each cluster), enabling routed seeding of the graph-ANN search.
+    pub fn set_reps(&mut self, reps: Vec<u32>) {
+        assert!(reps.is_empty() || reps.len() == self.k, "reps must cover all k clusters");
+        self.reps = reps;
+    }
+
+    /// Beam descent: fill `s.cand` with the candidate centroid ids
+    /// (ascending) owned by the best `beam` leaves for query `q`.
+    fn descend(&self, q: &[f32], beam: usize, backend: &Backend, s: &mut RouteScratch) {
+        debug_assert_eq!(q.len(), self.dim);
+        let beam = beam.max(1);
+        let qq = norm2(q);
+        s.frontier.clear();
+        s.frontier.push((0.0, 0));
+        loop {
+            s.next.clear();
+            let mut any_internal = false;
+            for &(dd, nid) in s.frontier.iter() {
+                let n = nid as usize;
+                let cc = self.child_count[n] as usize;
+                if cc == 0 {
+                    // leaves keep competing against deeper levels
+                    s.next.push((dd, nid));
+                    continue;
+                }
+                any_internal = true;
+                let fc = self.first_child[n] as usize;
+                let block = &self.node_vecs[fc * self.dim..(fc + cc) * self.dim];
+                let norms = &self.node_norms[fc..fc + cc];
+                s.dists.resize(cc, 0.0);
+                backend.candidate_d2(q, qq, block, norms, self.dim, &mut s.dists);
+                for (j, &dj) in s.dists.iter().enumerate() {
+                    s.next.push((dj, (fc + j) as u32));
+                }
+            }
+            if !any_internal {
+                break;
+            }
+            s.next
+                .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            s.next.truncate(beam);
+            std::mem::swap(&mut s.frontier, &mut s.next);
+        }
+        s.cand.clear();
+        for &(_, nid) in s.frontier.iter() {
+            let n = nid as usize;
+            let (a, b) = (self.member_start[n] as usize, self.member_start[n + 1] as usize);
+            s.cand.extend_from_slice(&self.member_ids[a..b]);
+        }
+        // leaves own disjoint members, so this is dedup-free; ascending
+        // order gives the flat scan's lowest-id tie-break within the
+        // candidate set (assign_blocks keeps the first strict minimum).
+        s.cand.sort_unstable();
+    }
+
+    /// Routed nearest-centroid assignment for one query.
+    ///
+    /// With `beam ≥ k` the candidate set is provably all k centroids
+    /// and the evaluation is the verbatim flat
+    /// [`Backend::assign_blocks`] scan — bit-identical to unrouted
+    /// `predict`.
+    pub fn predict_one(
+        &self,
+        q: &[f32],
+        centroids: &VecSet,
+        beam: usize,
+        backend: &Backend,
+        s: &mut RouteScratch,
+    ) -> u32 {
+        self.descend(q, beam, backend, s);
+        let RouteScratch { ref cand, ref mut gather, .. } = *s;
+        if cand.len() == self.k {
+            return backend.assign_blocks(q, centroids.flat(), self.dim, self.k).idx[0];
+        }
+        gather.clear();
+        for &c in cand.iter() {
+            gather.extend_from_slice(centroids.row(c as usize));
+        }
+        let local = backend.assign_blocks(q, gather, self.dim, cand.len()).idx[0];
+        cand[local as usize]
+    }
+
+    /// Routed candidate centroids for one query, nearest-first, capped
+    /// at `want` — the coarse half of routed graph-ANN seeding.
+    /// Distances use [`d2_batch_exact`], ties break on lower id.
+    fn top_candidates(
+        &self,
+        q: &[f32],
+        centroids: &VecSet,
+        beam: usize,
+        want: usize,
+        backend: &Backend,
+        s: &mut RouteScratch,
+    ) -> Vec<u32> {
+        self.descend(q, beam, backend, s);
+        let RouteScratch { ref cand, ref mut gather, ref mut dists, .. } = *s;
+        gather.clear();
+        for &c in cand.iter() {
+            gather.extend_from_slice(centroids.row(c as usize));
+        }
+        dists.resize(cand.len(), 0.0);
+        d2_batch_exact(q, gather, self.dim, dists);
+        let mut order: Vec<(f32, u32)> =
+            dists.iter().zip(cand.iter()).map(|(&d, &c)| (d, c)).collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        order.truncate(want.max(1));
+        order.into_iter().map(|(_, c)| c).collect()
+    }
+
+    /// Entry rows for routed graph-ANN search: descend to the nearest
+    /// clusters and return each one's representative training row.
+    /// Empty when `reps` is absent (caller falls back to random
+    /// entries) or every routed cluster is empty.
+    pub fn seed_rows(
+        &self,
+        q: &[f32],
+        centroids: &VecSet,
+        beam: usize,
+        entries: usize,
+        backend: &Backend,
+        s: &mut RouteScratch,
+    ) -> Vec<u32> {
+        if self.reps.is_empty() {
+            return Vec::new();
+        }
+        self.top_candidates(q, centroids, beam, entries.max(1), backend, s)
+            .into_iter()
+            .filter_map(|c| {
+                let r = self.reps[c as usize];
+                (r != u32::MAX).then_some(r)
+            })
+            .collect()
+    }
+}
+
+/// `reps[c]` = lowest training row labelled `c` (`u32::MAX` for empty
+/// clusters) — the routed search's per-cluster graph entry points.
+pub fn reps_from_labels(labels: &[u32], k: usize) -> Vec<u32> {
+    let mut reps = vec![u32::MAX; k];
+    for (i, &l) in labels.iter().enumerate() {
+        let l = l as usize;
+        if l < k && reps[l] == u32::MAX {
+            reps[l] = i as u32;
+        }
+    }
+    reps
+}
+
+/// Partition `members` into ≤ `branch` non-empty groups by running the
+/// 2M-tree initializer over the gathered member centroids.  Falls back
+/// to an equal-size chunked split if the bisection degenerates (e.g.
+/// all-duplicate centroids).
+fn split_members(
+    centroids: &VecSet,
+    members: &[u32],
+    branch: usize,
+    seed: u64,
+    threads: usize,
+    backend: &Backend,
+) -> Vec<Vec<u32>> {
+    let idx: Vec<usize> = members.iter().map(|&c| c as usize).collect();
+    let sub = centroids.gather(&idx);
+    let params = TwoMeansParams { seed, threads, ..Default::default() };
+    let labels = two_means::run(&sub, branch, &params, backend);
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); branch];
+    for (i, &l) in labels.iter().enumerate() {
+        parts[l as usize].push(members[i]);
+    }
+    parts.retain(|p| !p.is_empty());
+    if parts.len() < 2 {
+        let chunk = members.len().div_ceil(branch).max(1);
+        parts = members.chunks(chunk).map(<[u32]>::to_vec).collect();
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_centroids(k: usize, d: usize, seed: u64) -> VecSet {
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0f32; k * d];
+        for v in flat.iter_mut() {
+            *v = rng.f32() * 2.0 - 1.0;
+        }
+        VecSet::from_flat(d, flat)
+    }
+
+    fn flat_argmin(q: &[f32], c: &VecSet) -> u32 {
+        Backend::Native.assign_blocks(q, c.flat(), c.dim(), c.rows()).idx[0]
+    }
+
+    #[test]
+    fn build_produces_valid_partition_and_contiguous_children() {
+        let c = random_centroids(300, 24, 7);
+        let params = RouteTreeParams { branch: 8, ..Default::default() };
+        let t = RouteTree::build(&c, &params, &Backend::Native);
+        assert_eq!(t.k, 300);
+        assert_eq!(t.dim, 24);
+        assert!(t.depth() >= 2);
+        // from_parts already revalidated the partition; spot-check the
+        // BFS child-contiguity invariant drives real fan-out
+        let internal = t.child_count.iter().filter(|&&cc| cc > 0).count();
+        assert!(internal >= 1);
+        assert_eq!(t.member_ids.len(), 300);
+    }
+
+    #[test]
+    fn beam_at_least_k_routes_to_every_centroid() {
+        let c = random_centroids(150, 16, 11);
+        let t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 5, ..Default::default() },
+            &Backend::Native,
+        );
+        let mut s = RouteScratch::new();
+        let q: Vec<f32> = c.row(3).to_vec();
+        t.descend(&q, t.k, &Backend::Native, &mut s);
+        assert_eq!(s.cand.len(), t.k, "untruncated beam must reach every leaf");
+        assert!(s.cand.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn full_beam_predict_is_bit_identical_to_flat() {
+        let c = random_centroids(200, 32, 3);
+        let t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 6, ..Default::default() },
+            &Backend::Native,
+        );
+        let mut s = RouteScratch::new();
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let mut q = vec![0f32; 32];
+            for v in q.iter_mut() {
+                *v = rng.f32() * 2.0 - 1.0;
+            }
+            let routed = t.predict_one(&q, &c, t.k, &Backend::Native, &mut s);
+            assert_eq!(routed, flat_argmin(&q, &c));
+        }
+    }
+
+    #[test]
+    fn default_beam_finds_exact_centroid_queries() {
+        // querying a centroid itself must route back to it: its leaf's
+        // routing ancestors are the nearest at every level
+        let c = random_centroids(128, 16, 21);
+        let t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 4, ..Default::default() },
+            &Backend::Native,
+        );
+        let mut s = RouteScratch::new();
+        let mut hits = 0;
+        for i in 0..128 {
+            if t.predict_one(c.row(i), &c, DEFAULT_BEAM, &Backend::Native, &mut s) == i as u32 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 122, "only {hits}/128 centroid self-queries routed home");
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let c = random_centroids(120, 8, 5);
+        let p = RouteTreeParams { branch: 4, ..Default::default() };
+        let a = RouteTree::build(&c, &p, &Backend::Native);
+        let b = RouteTree::build(&c, &p, &Backend::Native);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn duplicate_centroids_fall_back_to_chunked_split() {
+        let c = VecSet::from_flat(4, vec![1.0; 40 * 4]);
+        let t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 4, ..Default::default() },
+            &Backend::Native,
+        );
+        assert_eq!(t.member_ids.len(), 40);
+        let mut s = RouteScratch::new();
+        let lbl = t.predict_one(&[1.0; 4], &c, DEFAULT_BEAM, &Backend::Native, &mut s);
+        assert!(lbl < 40);
+    }
+
+    #[test]
+    fn from_parts_rejects_malformed_trees() {
+        let c = random_centroids(50, 8, 1);
+        let t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 4, ..Default::default() },
+            &Backend::Native,
+        );
+        // child pointing at or before its parent (cycle risk)
+        let mut fc = t.first_child.clone();
+        let node = t.child_count.iter().position(|&cc| cc > 0).unwrap();
+        fc[node] = node as u32;
+        assert!(RouteTree::from_parts(
+            t.dim,
+            t.k,
+            t.branch,
+            t.default_beam,
+            t.node_vecs.clone(),
+            fc,
+            t.child_count.clone(),
+            t.member_start.clone(),
+            t.member_ids.clone(),
+            Vec::new(),
+        )
+        .is_err());
+        // duplicated member
+        let mut mid = t.member_ids.clone();
+        mid[0] = mid[1];
+        assert!(RouteTree::from_parts(
+            t.dim,
+            t.k,
+            t.branch,
+            t.default_beam,
+            t.node_vecs.clone(),
+            t.first_child.clone(),
+            t.child_count.clone(),
+            t.member_start.clone(),
+            mid,
+            Vec::new(),
+        )
+        .is_err());
+        // reps of the wrong length
+        assert!(RouteTree::from_parts(
+            t.dim,
+            t.k,
+            t.branch,
+            t.default_beam,
+            t.node_vecs.clone(),
+            t.first_child.clone(),
+            t.child_count.clone(),
+            t.member_start.clone(),
+            t.member_ids.clone(),
+            vec![0; 3],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reps_from_labels_picks_first_row_per_cluster() {
+        let reps = reps_from_labels(&[2, 0, 2, 1], 4);
+        assert_eq!(reps, vec![1, 3, 0, u32::MAX]);
+    }
+
+    #[test]
+    fn seed_rows_maps_through_reps_and_skips_empties() {
+        let c = random_centroids(60, 8, 13);
+        let mut t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 4, ..Default::default() },
+            &Backend::Native,
+        );
+        let mut s = RouteScratch::new();
+        assert!(t.seed_rows(c.row(0), &c, DEFAULT_BEAM, 4, &Backend::Native, &mut s).is_empty());
+        let mut reps = vec![u32::MAX; 60];
+        for (i, r) in reps.iter_mut().enumerate().skip(1) {
+            *r = (i * 10) as u32;
+        }
+        t.set_reps(reps);
+        let rows = t.seed_rows(c.row(5), &c, t.k, 60, &Backend::Native, &mut s);
+        // cluster 0 has no rep and must be skipped
+        assert_eq!(rows.len(), 59);
+        assert!(rows.iter().all(|&r| r % 10 == 0 && r > 0));
+    }
+}

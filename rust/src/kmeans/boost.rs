@@ -17,13 +17,18 @@
 //! materializing, and a resident fit keeps the historical global shuffle
 //! bit-for-bit.
 
-use crate::core_ops::dist::{dot, norm2};
+use crate::core_ops::dist::{batch_eligible, dot, dot_batch, norm2};
 use crate::data::matrix::VecSet;
 use crate::data::plan::ScanPlan;
 use crate::data::store::VecStore;
 use crate::kmeans::common::{Clustering, EpochState, FitHooks, IterStat, KmeansOutput, KmeansParams};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
+
+/// Columns per [`dot_batch`] call in the k-wide candidate scan: bounds
+/// the dots scratch while keeping each call far above the batch
+/// kernels' minimum width.
+const SCAN_TILE: usize = 512;
 
 /// Per-cluster cached state for fast Δℐ evaluation: the composite-norm
 /// cache `‖D_r‖²` the batched candidate kernels rely on.
@@ -258,6 +263,20 @@ pub fn run_from_hooked(
         }
     };
 
+    // The composite block is already flat k × dim, so the k-wide scan's
+    // dots come from SCAN_TILE-column dot_batch passes — one mini-GEMM
+    // tile at a time, with a bounded scratch — instead of k strided
+    // scalar dots.  dot_batch is pinned bit-identical per column to
+    // `dot` (and gain_from_dot/leave_from_dot to their scalar entry
+    // points), so the epoch is bit-for-bit the historical scan.
+    // Narrow geometries (d < BATCH_MIN_DIM, or a ragged tail tile under
+    // BATCH_TILE columns) keep the scalar dots.  Note bound-based
+    // candidate pruning (the d2_bounded idiom from the graph-refinement
+    // tails) is deliberately NOT applied here: Δℐ compares sign-
+    // indefinite dots against per-cluster counts and *incrementally
+    // maintained* norms, so a Cauchy–Schwarz skip is not exact the way
+    // a monotone partial-distance bound is.
+    let mut dots = vec![0f32; SCAN_TILE.min(c.k)];
     for iter in start_iter..=params.max_iters {
         plan.shuffle_epoch(&mut order, &mut rng);
         let mut moves = 0usize;
@@ -269,15 +288,35 @@ pub fn run_from_hooked(
             // full scan over clusters: the BKM bottleneck
             let mut best_v = u;
             let mut best_delta = 0f64;
-            for v in 0..c.k {
-                if v == u {
-                    continue;
+            let mut lo = 0usize;
+            while lo < c.k {
+                let hi = (lo + SCAN_TILE).min(c.k);
+                if batch_eligible(c.dim, hi - lo) {
+                    let tile = &c.composite[lo * c.dim..hi * c.dim];
+                    dot_batch(x, tile, c.dim, &mut dots[..hi - lo]);
+                    for v in lo..hi {
+                        if v == u {
+                            continue;
+                        }
+                        let delta = cache.gain_from_dot(&c, xx, v, dots[v - lo] as f64) + leave;
+                        if delta > best_delta {
+                            best_delta = delta;
+                            best_v = v;
+                        }
+                    }
+                } else {
+                    for v in lo..hi {
+                        if v == u {
+                            continue;
+                        }
+                        let delta = cache.gain(&c, x, xx, v) + leave;
+                        if delta > best_delta {
+                            best_delta = delta;
+                            best_v = v;
+                        }
+                    }
                 }
-                let delta = cache.gain(&c, x, xx, v) + leave;
-                if delta > best_delta {
-                    best_delta = delta;
-                    best_v = v;
-                }
+                lo = hi;
             }
             if best_v != u && best_delta > 0.0 {
                 cache.commit_move(&mut c, i, x, xx, u, best_v);
@@ -415,6 +454,53 @@ mod tests {
                 cache.leave(&c, x, xx, u).to_bits(),
                 cache.leave_from_dot(&c, xx, u, dux).to_bits()
             );
+        }
+    }
+
+    #[test]
+    fn batched_scan_selects_the_same_move_as_the_scalar_scan() {
+        // the epoch loop's tiled dot_batch scan must pick the identical
+        // (best_v, best_delta) the historical scalar scan picked —
+        // dot_batch is bit-identical per column to `dot`, and the
+        // *_from_dot entry points are bit-identical to their scalar
+        // counterparts, so the selection can never diverge
+        let mut rng = Rng::new(31);
+        let data = blobs(&BlobSpec::quick(200, 32, 24), 13);
+        let labels: Vec<u32> = (0..200).map(|_| rng.below(24) as u32).collect();
+        let c = Clustering::from_labels(&data, labels, 24);
+        let cache = DeltaCache::new(&c);
+        assert!(batch_eligible(c.dim, c.k));
+        let mut dots = vec![0f32; c.k];
+        for i in (0..200).step_by(7) {
+            let x = data.row(i);
+            let u = c.labels[i] as usize;
+            let xx = norm2(x) as f64;
+            let leave = cache.leave(&c, x, xx, u);
+            let (mut sv, mut sd) = (u, 0f64);
+            for v in 0..c.k {
+                if v == u {
+                    continue;
+                }
+                let delta = cache.gain(&c, x, xx, v) + leave;
+                if delta > sd {
+                    sd = delta;
+                    sv = v;
+                }
+            }
+            dot_batch(x, &c.composite, c.dim, &mut dots);
+            let (mut bv, mut bd) = (u, 0f64);
+            for v in 0..c.k {
+                if v == u {
+                    continue;
+                }
+                let delta = cache.gain_from_dot(&c, xx, v, dots[v] as f64) + leave;
+                if delta > bd {
+                    bd = delta;
+                    bv = v;
+                }
+            }
+            assert_eq!(sv, bv, "sample {i}");
+            assert_eq!(sd.to_bits(), bd.to_bits(), "sample {i}");
         }
     }
 

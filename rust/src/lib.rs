@@ -99,6 +99,7 @@ pub mod prelude {
     pub use crate::data::synth::{blobs, BlobSpec};
     pub use crate::data::DatasetSpec;
     pub use crate::gkm::ann::SearchParams;
+    pub use crate::gkm::tree::{RouteScratch, RouteTree, RouteTreeParams};
     pub use crate::graph::knn::KnnGraph;
     pub use crate::kmeans::common::{Clustering, IterStat};
     pub use crate::model::{

@@ -34,7 +34,7 @@ use gkmeans::util::timer::{fmt_secs, Timer};
 const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
     "topk", "ef", "config", "recall-samples", "threads", "save", "model", "scan-order",
-    "checkpoint", "checkpoint-every", "quantize",
+    "checkpoint", "checkpoint-every", "quantize", "route", "route-beam", "route-branch",
 ];
 
 fn main() {
@@ -97,6 +97,17 @@ COMMON OPTIONS:
                                stores, global on resident data), global
                                (historical full shuffle everywhere), or
                                superblock (request locality planning)
+  --route tree                 (cluster) build a hierarchical routing tree
+                               over the centroids and persist it in the
+                               artifact (RTREE): predict/search descend
+                               O(depth·branch) instead of scanning all k —
+                               the large-k fast path (engages at k ≥ 1024)
+  --route tree|off             (predict/search) force routing on for any k,
+                               or disable a persisted tree for this run
+  --route-branch N             (cluster) tree fan-out per node (default 32)
+  --route-beam B               beam width: nodes kept per level (default 8;
+                               larger = closer to the exact flat scan,
+                               B ≥ k is bit-identical to it)
   --checkpoint DIR             write a fit.gkckpt checkpoint into DIR
                                periodically during the fit (crash-safe:
                                temp file + fsync + rename)
@@ -259,6 +270,36 @@ fn cmd_cluster(args: &Args) -> i32 {
             if q.quantizer().is_identity() { ", lossless u8 passthrough" } else { "" }
         );
     }
+    match args.get("route") {
+        Some("tree") => {
+            let branch = args.usize_or("route-branch", gkmeans::gkm::tree::DEFAULT_BRANCH);
+            if branch < 2 {
+                eprintln!("error: --route-branch must be ≥ 2 (got {branch})");
+                return 2;
+            }
+            let params = gkmeans::gkm::tree::RouteTreeParams {
+                branch,
+                beam: args.usize_or("route-beam", gkmeans::gkm::tree::DEFAULT_BEAM).max(1),
+                seed: args.u64_or("seed", 20170707),
+                threads: args.usize_or("threads", 1),
+            };
+            model.build_route(&params);
+            let t = model.route.as_ref().expect("build_route just ran");
+            println!(
+                "route: tree built (branch={}, beam={}, nodes={}, depth={}{})",
+                t.branch,
+                t.default_beam,
+                t.nodes(),
+                t.depth(),
+                if t.has_reps() { ", seeded" } else { "" }
+            );
+        }
+        Some("off") | None => {}
+        Some(other) => {
+            eprintln!("error: unknown --route mode {other:?} (supported: tree, off)");
+            return 2;
+        }
+    }
     if let Some(path) = args.get("save") {
         if let Err(e) = model.save(Path::new(path)) {
             eprintln!("error: {e}");
@@ -273,6 +314,39 @@ fn cmd_cluster(args: &Args) -> i32 {
         }
     }
     0
+}
+
+/// Apply `--route` / `--route-beam` serving overrides to a loaded model:
+/// `off` drops a persisted tree for this run, `tree` forces routing on
+/// regardless of k, and `--route-beam` retunes the persisted beam width.
+fn apply_route_flags(model: &mut FittedModel, args: &Args) -> Result<(), String> {
+    match args.get("route") {
+        Some("off") => model.route = None,
+        Some("tree") => {
+            if model.route.is_none() {
+                return Err(
+                    "model carries no routing tree (refit with `cluster --route tree`)".into(),
+                );
+            }
+            model.route_min_k = 0;
+        }
+        None => {}
+        Some(other) => {
+            return Err(format!("unknown --route mode {other:?} (supported: tree, off)"))
+        }
+    }
+    if let Some(raw) = args.get("route-beam") {
+        let beam: u32 = raw
+            .parse()
+            .ok()
+            .filter(|&b| b >= 1)
+            .ok_or_else(|| format!("--route-beam must be a positive integer (got {raw:?})"))?;
+        match model.route.as_mut() {
+            Some(t) => t.default_beam = beam,
+            None => return Err("--route-beam needs a model with a routing tree".into()),
+        }
+    }
+    Ok(())
 }
 
 fn cmd_predict(args: &Args) -> i32 {
@@ -292,6 +366,19 @@ fn cmd_predict(args: &Args) -> i32 {
         }
     };
     model.threads = args.usize_or("threads", model.threads);
+    if let Err(e) = apply_route_flags(&mut model, &args) {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    if model.routing_active() {
+        let t = model.route.as_ref().expect("routing_active implies a tree");
+        println!(
+            "routing: tree (branch={}, beam={}, depth={})",
+            t.branch,
+            t.default_beam,
+            t.depth()
+        );
+    }
     let data = match dataset_of(&args).load() {
         Ok(d) => d,
         Err(e) => {
@@ -421,6 +508,19 @@ fn search_model(args: &Args) -> i32 {
         }
     };
     model.threads = args.usize_or("threads", model.threads);
+    if let Err(e) = apply_route_flags(&mut model, args) {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    if model.routing_active() {
+        let t = model.route.as_ref().expect("routing_active implies a tree");
+        println!(
+            "routing: tree seeding (branch={}, beam={}{})",
+            t.branch,
+            t.default_beam,
+            if t.has_reps() { "" } else { ", no reps — falling back to random entries" }
+        );
+    }
     let vecs = match model.data.as_ref() {
         Some(v) => v,
         None => {

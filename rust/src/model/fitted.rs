@@ -16,6 +16,7 @@ use crate::data::matrix::VecSet;
 use crate::data::quant::QuantizedVecStore;
 use crate::data::store::{self, ChunkedVecStore, StoreCursor, VecStore};
 use crate::gkm::ann;
+use crate::gkm::tree::{self, RouteScratch, RouteTree, RouteTreeParams};
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::{IterStat, KmeansOutput};
 use crate::model::RunContext;
@@ -169,6 +170,16 @@ pub struct FittedModel {
     /// the candidate pool with exact f32 distances from `data`.
     /// Persisted as the GKMODEL `QVECTORS` section.
     pub quantized: Option<QuantizedVecStore>,
+    /// Hierarchical routing tree over the centroids
+    /// ([`FittedModel::build_route`]): when present and `k ≥
+    /// route_min_k`, `predict`/`search` descend O(depth·branch) with a
+    /// beam instead of scanning all k centroids.  Persisted as the
+    /// GKMODEL `RTREE` section.
+    pub route: Option<RouteTree>,
+    /// Routing engages only at `k ≥ route_min_k` (default
+    /// [`tree::ROUTE_MIN_K`]); runtime-only — `0` forces routing, a
+    /// huge value disables it without dropping the tree.
+    pub route_min_k: usize,
 }
 
 /// The vectors a fitted model retains under [`RunContext::keep_data`]:
@@ -235,6 +246,8 @@ impl FittedModel {
             graph,
             data: kept_data(data, ctx),
             quantized: None,
+            route: None,
+            route_min_k: tree::ROUTE_MIN_K,
         }
     }
 
@@ -269,7 +282,36 @@ impl FittedModel {
             graph,
             data: kept_data(data, ctx),
             quantized: None,
+            route: None,
+            route_min_k: tree::ROUTE_MIN_K,
         }
+    }
+
+    /// Build the hierarchical routing tree over this model's centroids
+    /// ([`RouteTree::build`]) and attach it: subsequent
+    /// `predict`/`search` calls route coarse→fine when `k ≥
+    /// route_min_k`, and [`FittedModel::save`] persists the tree as an
+    /// `RTREE` section so a reloaded model routes immediately.  Also
+    /// records one representative training row per cluster (from the
+    /// labels) so routed ANN search can enter the graph at the routed
+    /// clusters instead of random rows.
+    pub fn build_route(&mut self, params: &RouteTreeParams) {
+        let mut t = RouteTree::build(&self.centroids, params, &Backend::Native);
+        if self.labels.len() == self.n_train && !self.labels.is_empty() {
+            t.set_reps(tree::reps_from_labels(&self.labels, self.k));
+        }
+        self.route = Some(t);
+    }
+
+    /// The routing tree, if one is attached *and* engaged
+    /// (`k ≥ route_min_k`).
+    fn active_route(&self) -> Option<&RouteTree> {
+        self.route.as_ref().filter(|_| self.k >= self.route_min_k)
+    }
+
+    /// Whether `predict`/`search` will route through the tree.
+    pub fn routing_active(&self) -> bool {
+        self.active_route().is_some()
     }
 
     /// Quantize the retained vectors to SQ8 ([`QuantizedVecStore`]):
@@ -338,6 +380,9 @@ impl FittedModel {
         if n == 0 {
             return Vec::new();
         }
+        if let Some(t) = self.active_route() {
+            return self.predict_routed(queries, t, backend);
+        }
         let threads = pool::resolve_threads(self.threads).min(n);
         if threads <= 1 {
             return backend
@@ -353,6 +398,33 @@ impl FittedModel {
                     self.k,
                 )
                 .idx
+        });
+        parts.concat()
+    }
+
+    /// Routed [`FittedModel::predict_on`]: per-query O(depth·branch)
+    /// beam descent, sharded across the model's worker threads with one
+    /// reusable [`RouteScratch`] per worker.  Per-query results are
+    /// deterministic (no RNG in the descent), so any thread count — and
+    /// [`FittedModel::predict_batch`] — returns identical labels.
+    fn predict_routed(&self, queries: &VecSet, t: &RouteTree, backend: &Backend) -> Vec<u32> {
+        let n = queries.rows();
+        let beam = t.default_beam as usize;
+        let threads = pool::resolve_threads(self.threads).min(n);
+        if threads <= 1 {
+            let mut s = RouteScratch::new();
+            return (0..n)
+                .map(|i| t.predict_one(queries.row(i), &self.centroids, beam, backend, &mut s))
+                .collect();
+        }
+        let parts = pool::par_map_chunks(threads, n, |_, r| {
+            let mut s = RouteScratch::new();
+            let mut out = Vec::with_capacity(r.len());
+            for i in r {
+                let q = queries.row(i);
+                out.push(t.predict_one(q, &self.centroids, beam, &Backend::Native, &mut s));
+            }
+            out
         });
         parts.concat()
     }
@@ -389,6 +461,22 @@ impl FittedModel {
         );
         if queries.rows() == 0 {
             return Vec::new();
+        }
+        if let Some(t) = self.active_route() {
+            let n = queries.rows();
+            let beam = t.default_beam as usize;
+            let threads = pool::resolve_threads(self.threads).min(n).max(1);
+            let parts = pool::par_map_chunks(threads, n, |_, r| {
+                let mut cur = queries.open();
+                let mut s = RouteScratch::new();
+                let mut out = Vec::with_capacity(r.len());
+                for i in r {
+                    let q = cur.row(i);
+                    out.push(t.predict_one(q, &self.centroids, beam, &Backend::Native, &mut s));
+                }
+                out
+            });
+            return parts.concat();
         }
         crate::kmeans::lloyd::assign_threaded(
             queries,
@@ -427,36 +515,62 @@ impl FittedModel {
         }
         const BLOCK: usize = 1024;
         let threads = pool::resolve_threads(self.threads).min(n);
+        let route = self.active_route();
         let parts = pool::try_par_map_chunks(threads.max(1), n, |_, r| {
             let mut cur = queries.open();
+            let mut rs = RouteScratch::new();
             let mut out: Vec<Result<u32, String>> = Vec::with_capacity(r.len());
             let mut lo = r.start;
             while lo < r.end {
                 let hi = (lo + BLOCK).min(r.end);
                 match cur.try_block(lo, hi) {
-                    Ok(block) => {
-                        let sub = Backend::Native.assign_blocks(
-                            block,
-                            self.centroids.flat(),
-                            self.dim,
-                            self.k,
-                        );
-                        out.extend(sub.idx.into_iter().map(Ok));
-                    }
+                    Ok(block) => match route {
+                        Some(t) => {
+                            let beam = t.default_beam as usize;
+                            for row in block.chunks(self.dim) {
+                                out.push(Ok(t.predict_one(
+                                    row,
+                                    &self.centroids,
+                                    beam,
+                                    &Backend::Native,
+                                    &mut rs,
+                                )));
+                            }
+                        }
+                        None => {
+                            let sub = Backend::Native.assign_blocks(
+                                block,
+                                self.centroids.flat(),
+                                self.dim,
+                                self.k,
+                            );
+                            out.extend(sub.idx.into_iter().map(Ok));
+                        }
+                    },
                     Err(_) => {
                         // the block spans a bad region: degrade to
                         // row-at-a-time so intact rows still get answers
                         for i in lo..hi {
                             match cur.try_row(i) {
-                                Ok(row) => {
-                                    let sub = Backend::Native.assign_blocks(
+                                Ok(row) => out.push(Ok(match route {
+                                    Some(t) => t.predict_one(
                                         row,
-                                        self.centroids.flat(),
-                                        self.dim,
-                                        self.k,
-                                    );
-                                    out.push(Ok(sub.idx[0]));
-                                }
+                                        &self.centroids,
+                                        t.default_beam as usize,
+                                        &Backend::Native,
+                                        &mut rs,
+                                    ),
+                                    None => {
+                                        Backend::Native
+                                            .assign_blocks(
+                                                row,
+                                                self.centroids.flat(),
+                                                self.dim,
+                                                self.k,
+                                            )
+                                            .idx[0]
+                                    }
+                                })),
                                 Err(e) => out.push(Err(e)),
                             }
                         }
@@ -499,6 +613,35 @@ impl FittedModel {
         let (graph, data) = self.serving_parts()?;
         if query.len() != self.dim {
             return Err(format!("query dim {} != model dim {}", query.len(), self.dim));
+        }
+        // routed entry points: descend the tree to the nearest clusters
+        // and enter the graph at their representative rows — O(depth·
+        // branch) placement instead of random draws.  Deterministic per
+        // query, so search ≡ search_batch still holds.
+        if let Some(t) = self.active_route() {
+            if t.has_reps() {
+                let mut rs = RouteScratch::new();
+                let seeds = t.seed_rows(
+                    query,
+                    &self.centroids,
+                    t.default_beam as usize,
+                    params.entries.max(1),
+                    &Backend::Native,
+                    &mut rs,
+                );
+                if !seeds.is_empty() {
+                    let mut scratch = ann::SearchScratch::new(data.rows());
+                    let mut cur = data.open();
+                    if let Some(qs) = &self.quantized {
+                        return Ok(ann::search_sq8_seeded_with_scratch(
+                            qs, &mut cur, graph, query, topk, params, &seeds, &mut scratch,
+                        ));
+                    }
+                    return Ok(ann::search_seeded_with_scratch(
+                        &mut cur, graph, query, topk, params, &seeds, &mut scratch,
+                    ));
+                }
+            }
         }
         // deterministic per-model entry points: same query, same answer
         let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
@@ -567,34 +710,75 @@ impl FittedModel {
         let threads = pool::resolve_threads(self.threads).min(nq);
         let n = data.rows();
         let quant = self.quantized.as_ref();
+        let route = self.active_route().filter(|t| t.has_reps());
         let results = pool::par_map_chunks(threads.max(1), nq, |_, r| {
             let mut scratch = ann::SearchScratch::new(n);
+            let mut rs = RouteScratch::new();
             let mut cur = data.open();
             let mut out = Vec::with_capacity(r.len());
             for q in r {
-                // fresh per-query RNG with the `search` derivation keeps
-                // batch results equal to repeated single calls
-                let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
-                let (res, _) = match quant {
-                    Some(qs) => ann::search_sq8_with_scratch(
-                        qs,
-                        &mut cur,
-                        graph,
-                        queries.row(q),
-                        topk,
-                        params,
-                        &mut rng,
-                        &mut scratch,
-                    ),
-                    None => ann::search_with_scratch(
-                        &mut cur,
-                        graph,
-                        queries.row(q),
-                        topk,
-                        params,
-                        &mut rng,
-                        &mut scratch,
-                    ),
+                let query = queries.row(q);
+                // routed seeding is deterministic per query, so batch
+                // results stay equal to repeated single `search` calls
+                let seeds = route
+                    .map(|t| {
+                        t.seed_rows(
+                            query,
+                            &self.centroids,
+                            t.default_beam as usize,
+                            params.entries.max(1),
+                            &Backend::Native,
+                            &mut rs,
+                        )
+                    })
+                    .unwrap_or_default();
+                let (res, _) = if !seeds.is_empty() {
+                    match quant {
+                        Some(qs) => ann::search_sq8_seeded_with_scratch(
+                            qs,
+                            &mut cur,
+                            graph,
+                            query,
+                            topk,
+                            params,
+                            &seeds,
+                            &mut scratch,
+                        ),
+                        None => ann::search_seeded_with_scratch(
+                            &mut cur,
+                            graph,
+                            query,
+                            topk,
+                            params,
+                            &seeds,
+                            &mut scratch,
+                        ),
+                    }
+                } else {
+                    // fresh per-query RNG with the `search` derivation keeps
+                    // batch results equal to repeated single calls
+                    let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+                    match quant {
+                        Some(qs) => ann::search_sq8_with_scratch(
+                            qs,
+                            &mut cur,
+                            graph,
+                            query,
+                            topk,
+                            params,
+                            &mut rng,
+                            &mut scratch,
+                        ),
+                        None => ann::search_with_scratch(
+                            &mut cur,
+                            graph,
+                            query,
+                            topk,
+                            params,
+                            &mut rng,
+                            &mut scratch,
+                        ),
+                    }
                 };
                 out.push(res);
             }
@@ -633,6 +817,7 @@ impl FittedModel {
         let threads = pool::resolve_threads(self.threads).min(nq);
         let n = data.rows();
         let quant = self.quantized.as_ref();
+        let route = self.active_route().filter(|t| t.has_reps());
         let parts = pool::try_par_map_chunks(threads.max(1), nq, |_, r| {
             let mut scratch: Option<ann::SearchScratch> = None;
             let mut cur: Option<crate::data::store::StoreCursor<'_>> = None;
@@ -641,27 +826,54 @@ impl FittedModel {
                 let mut s = scratch.take().unwrap_or_else(|| ann::SearchScratch::new(n));
                 let mut c = cur.take().unwrap_or_else(|| data.open());
                 let guarded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
-                    let (res, _) = match quant {
-                        Some(qs) => ann::search_sq8_with_scratch(
-                            qs,
-                            &mut c,
-                            graph,
-                            queries.row(q),
-                            topk,
-                            params,
-                            &mut rng,
-                            &mut s,
-                        ),
-                        None => ann::search_with_scratch(
-                            &mut c,
-                            graph,
-                            queries.row(q),
-                            topk,
-                            params,
-                            &mut rng,
-                            &mut s,
-                        ),
+                    let query = queries.row(q);
+                    // routing scratch stays inside the guard: a caught
+                    // panic drops it with the rest of the query state
+                    let seeds = route
+                        .map(|t| {
+                            let mut rs = RouteScratch::new();
+                            t.seed_rows(
+                                query,
+                                &self.centroids,
+                                t.default_beam as usize,
+                                params.entries.max(1),
+                                &Backend::Native,
+                                &mut rs,
+                            )
+                        })
+                        .unwrap_or_default();
+                    let (res, _) = if !seeds.is_empty() {
+                        match quant {
+                            Some(qs) => ann::search_sq8_seeded_with_scratch(
+                                qs, &mut c, graph, query, topk, params, &seeds, &mut s,
+                            ),
+                            None => ann::search_seeded_with_scratch(
+                                &mut c, graph, query, topk, params, &seeds, &mut s,
+                            ),
+                        }
+                    } else {
+                        let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
+                        match quant {
+                            Some(qs) => ann::search_sq8_with_scratch(
+                                qs,
+                                &mut c,
+                                graph,
+                                query,
+                                topk,
+                                params,
+                                &mut rng,
+                                &mut s,
+                            ),
+                            None => ann::search_with_scratch(
+                                &mut c,
+                                graph,
+                                query,
+                                topk,
+                                params,
+                                &mut rng,
+                                &mut s,
+                            ),
+                        }
                     };
                     res
                 }));

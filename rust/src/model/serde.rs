@@ -24,6 +24,7 @@
 //! | 5    | VECTORS   | u64 rows, rows·dim × f32                           |
 //! | 6    | CRC       | per-section { kind u32, crc32 u32 } records        |
 //! | 7    | QVECTORS  | u64 rows, dim × f32 min, dim × f32 scale, rows·dim × u8 codes |
+//! | 8    | RTREE     | u32 branch, u32 beam, u64 dim/k/nodes, routing vectors + topology + leaf members + reps (see [`SEC_RTREE`]) |
 //!
 //! The CRC section (always written last) holds a CRC-32 (IEEE) of every
 //! other section's payload bytes; the vectors checksum is accumulated
@@ -65,6 +66,7 @@ use crate::coordinator::job::Method;
 use crate::data::matrix::VecSet;
 use crate::data::quant::{QuantizedVecStore, Sq8Quantizer};
 use crate::data::store::{ChunkedVecStore, VecStore};
+use crate::gkm::tree::{RouteTree, ROUTE_MIN_K};
 use crate::graph::knn::KnnGraph;
 use crate::kmeans::common::IterStat;
 use crate::model::fitted::ModelVectors;
@@ -85,6 +87,13 @@ const SEC_CRC: u32 = 6;
 /// SQ8-quantized vectors (PR 8).  Appended after SEC_CRC was assigned,
 /// so pre-quantization readers skip it as an unknown kind.
 const SEC_QVECTORS: u32 = 7;
+/// Hierarchical routing tree (PR 9).  Append-only like QVECTORS:
+/// pre-routing readers skip it as an unknown kind and serve the flat
+/// scan.  Payload: `u32 branch, u32 beam, u64 dim, u64 k, u64 nodes,
+/// nodes·dim × f32 routing vectors, nodes × u32 first_child,
+/// nodes × u32 child_count, (nodes+1) × u32 member offsets,
+/// u64 member count + u32 member ids, u64 rep count + u32 rep rows`.
+const SEC_RTREE: u32 = 8;
 
 /// Section alignment: offsets are multiples of 64 so payloads start on
 /// cache-line boundaries and the vectors region can be paged directly.
@@ -171,6 +180,89 @@ fn qvectors_payload(q: &QuantizedVecStore) -> Vec<u8> {
     buf
 }
 
+fn rtree_payload(t: &RouteTree) -> Vec<u8> {
+    let nn = t.nodes();
+    let mut buf = Vec::with_capacity(48 + 4 * (nn * (t.dim + 3) + 1 + t.k * 2));
+    put_u32(&mut buf, t.branch);
+    put_u32(&mut buf, t.default_beam);
+    put_u64(&mut buf, t.dim as u64);
+    put_u64(&mut buf, t.k as u64);
+    put_u64(&mut buf, nn as u64);
+    for &v in &t.node_vecs {
+        put_f32(&mut buf, v);
+    }
+    for &v in &t.first_child {
+        put_u32(&mut buf, v);
+    }
+    for &v in &t.child_count {
+        put_u32(&mut buf, v);
+    }
+    for &v in &t.member_start {
+        put_u32(&mut buf, v);
+    }
+    put_u64(&mut buf, t.member_ids.len() as u64);
+    for &v in &t.member_ids {
+        put_u32(&mut buf, v);
+    }
+    put_u64(&mut buf, t.reps.len() as u64);
+    for &v in &t.reps {
+        put_u32(&mut buf, v);
+    }
+    buf
+}
+
+/// Parse the RTREE payload.  All structural validation (descent
+/// termination, slice bounds, leaf partition of `0..k`) happens in
+/// [`RouteTree::from_parts`] — the one constructor every tree goes
+/// through — so a hostile artifact can fail but never mis-route.
+fn parse_rtree(bytes: &[u8], k: usize, dim: usize) -> Result<RouteTree, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let branch = r.u32()?;
+    let default_beam = r.u32()?;
+    let tdim = r.len_u64("routing tree dim")?;
+    if tdim != dim {
+        return Err(format!("routing tree dim {tdim} != model dim {dim}"));
+    }
+    let tk = r.len_u64("routing tree k")?;
+    if tk != k {
+        return Err(format!("routing tree over {tk} centroids but the model has k={k}"));
+    }
+    let nn = r.len_u64("routing tree nodes")?;
+    // A valid tree (every internal node ≥ 2 children, leaves ≥ 1
+    // member) has at most 2k − 1 nodes; reject anything claiming more
+    // before touching the node arrays.
+    if nn == 0 || nn > 2 * k {
+        return Err(format!("implausible routing tree node count {nn} for k={k}"));
+    }
+    let node_vecs = r.f32_vec(checked_mul(nn, dim, "routing vector buffer")?)?;
+    let first_child = r.u32_vec(nn)?;
+    let child_count = r.u32_vec(nn)?;
+    let member_start = r.u32_vec(nn + 1)?;
+    let mlen = r.len_u64("leaf member count")?;
+    if mlen != k {
+        return Err(format!("{mlen} leaf members for k={k}"));
+    }
+    let member_ids = r.u32_vec(mlen)?;
+    let rlen = r.len_u64("rep count")?;
+    if rlen != 0 && rlen != k {
+        return Err(format!("{rlen} reps for k={k}"));
+    }
+    let reps = r.u32_vec(rlen)?;
+    r.done("RTREE")?;
+    RouteTree::from_parts(
+        dim,
+        k,
+        branch,
+        default_beam,
+        node_vecs,
+        first_child,
+        child_count,
+        member_start,
+        member_ids,
+        reps,
+    )
+}
+
 /// Write a model in the v2 layout to any sink, streaming the vectors
 /// section in [`VEC_STREAM_ROWS`]-row blocks.
 fn write_v2<W: Write>(
@@ -184,6 +276,7 @@ fn write_v2<W: Write>(
     let graph = m.graph.as_ref().map(graph_payload);
     let vec_len = vectors.map(|v| 8 + 4 * (v.rows() as u64) * (v.dim() as u64));
     let qvectors = m.quantized.as_ref().map(qvectors_payload);
+    let rtree = m.route.as_ref().map(rtree_payload);
 
     let mut sections: Vec<(u32, u64)> = vec![
         (SEC_META, meta.len() as u64),
@@ -199,6 +292,9 @@ fn write_v2<W: Write>(
     if let Some(q) = &qvectors {
         sections.push((SEC_QVECTORS, q.len() as u64));
     }
+    if let Some(t) = &rtree {
+        sections.push((SEC_RTREE, t.len() as u64));
+    }
     // One { kind, crc } record per payload section; the in-RAM payloads
     // hash now, vectors hash as they stream, and the CRC section itself
     // (always last in table and file) is written once every record is in.
@@ -212,6 +308,9 @@ fn write_v2<W: Write>(
     }
     if let Some(q) = &qvectors {
         crc_records.push((SEC_QVECTORS, crc32(q)));
+    }
+    if let Some(t) = &rtree {
+        crc_records.push((SEC_RTREE, crc32(t)));
     }
     sections.push((SEC_CRC, 8 * sections.len() as u64));
 
@@ -294,6 +393,11 @@ fn write_v2<W: Write>(
                 let q = qvectors.as_ref().expect("qvectors section implies a quantized store");
                 w.write_all(q)?;
                 written += q.len() as u64;
+            }
+            SEC_RTREE => {
+                let t = rtree.as_ref().expect("rtree section implies a routing tree");
+                w.write_all(t)?;
+                written += t.len() as u64;
             }
             SEC_CRC => {
                 let mut payload = Vec::with_capacity(8 * crc_records.len());
@@ -478,6 +582,7 @@ fn sec_name(kind: u32) -> String {
         SEC_VECTORS => "VECTORS".into(),
         SEC_CRC => "CRC".into(),
         SEC_QVECTORS => "QVECTORS".into(),
+        SEC_RTREE => "RTREE".into(),
         other => format!("kind {other}"),
     }
 }
@@ -517,6 +622,7 @@ fn assemble(
     graph: Option<KnnGraph>,
     data: Option<ModelVectors>,
     quantized: Option<QuantizedVecStore>,
+    route: Option<RouteTree>,
 ) -> FittedModel {
     FittedModel {
         method: meta.method,
@@ -533,6 +639,8 @@ fn assemble(
         graph,
         data,
         quantized,
+        route,
+        route_min_k: ROUTE_MIN_K,
     }
 }
 
@@ -611,6 +719,10 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                 Some(s) => Some(parse_qvectors(get(s), meta.n_train, meta.dim)?),
                 None => None,
             };
+            let route = match section(&sections, SEC_RTREE) {
+                Some(s) => Some(parse_rtree(get(s), meta.k, meta.dim)?),
+                None => None,
+            };
             if labels.len() != meta.n_train {
                 return Err(format!(
                     "label count {} != n_train {}",
@@ -618,7 +730,7 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                     meta.n_train
                 ));
             }
-            Ok(assemble(meta, labels, centroids, graph, data, quantized))
+            Ok(assemble(meta, labels, centroids, graph, data, quantized, route))
         }
         other => Err(format!("unsupported model version {other} (this build reads 1 and 2)")),
     }
@@ -778,6 +890,15 @@ pub fn load(path: &Path) -> RtResult<FittedModel> {
         ),
         None => None,
     };
+    // RTREE loads eagerly too — routing state must be RAM-resident for
+    // the descent's contiguous-block kernel calls.
+    let route = match section(&sections, SEC_RTREE) {
+        Some(s) => Some(
+            parse_rtree(&read_verified(s)?, meta.k, meta.dim)
+                .map_err(|e| corrupt("RTREE", e))?,
+        ),
+        None => None,
+    };
     let data = match section(&sections, SEC_VECTORS) {
         Some(s) => {
             if s.len < 8 {
@@ -852,7 +973,7 @@ pub fn load(path: &Path) -> RtResult<FittedModel> {
             format!("label count {} != n_train {}", labels.len(), meta.n_train),
         ));
     }
-    Ok(assemble(meta, labels, centroids, graph, data, quantized))
+    Ok(assemble(meta, labels, centroids, graph, data, quantized, route))
 }
 
 // --- v1 (legacy) --------------------------------------------------------
@@ -1002,6 +1123,8 @@ fn decode_v1(bytes: &[u8]) -> Result<FittedModel, String> {
         graph,
         data,
         quantized: None,
+        route: None,
+        route_min_k: ROUTE_MIN_K,
     })
 }
 
@@ -1151,6 +1274,7 @@ mod tests {
             assert_eq!(qa.codes(), qb.codes(), "SQ8 codes must round-trip bytewise");
             assert_eq!(qa.quantizer(), qb.quantizer());
         }
+        assert_eq!(a.route, b.route, "routing tree must round-trip exactly");
     }
 
     #[test]
@@ -1382,6 +1506,110 @@ mod tests {
         assert!(err.is_corrupt(), "{err}");
         assert!(err.to_string().contains("QVECTORS"), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    /// `graph_model()` (k = 4) with a branch-2 routing tree attached —
+    /// multi-level, with reps populated from the training labels.
+    fn routed_model() -> crate::model::FittedModel {
+        let mut model = graph_model();
+        let params = crate::gkm::tree::RouteTreeParams { branch: 2, ..Default::default() };
+        model.build_route(&params);
+        let t = model.route.as_ref().unwrap();
+        assert!(t.nodes() > 1, "branch-2 tree over k=4 must actually split");
+        assert!(t.has_reps(), "labels are present, reps must be attached");
+        model
+    }
+
+    #[test]
+    fn routed_model_roundtrips_and_is_checksummed() {
+        let model = routed_model();
+        // bytes round trip (assert_models_bit_identical checks `route`)
+        let back = decode(&encode(&model)).unwrap();
+        assert_models_bit_identical(&model, &back);
+        // file round trip: RTREE loads eagerly alongside lazy vectors
+        let path = tmp("routed.gkm");
+        model.save(&path).unwrap();
+        let loaded = FittedModel::load(&path).unwrap();
+        assert!(loaded.route.is_some());
+        assert!(!loaded.data.as_ref().unwrap().is_resident());
+        assert_models_bit_identical(&model, &loaded);
+        // a flipped routing-vector byte is caught by the RTREE checksum
+        let clean = std::fs::read(&path).unwrap();
+        let (off, len) = table_entry(&clean, SEC_RTREE);
+        let mut bad = clean.clone();
+        bad[off + len / 2] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = FittedModel::load(&path).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+        assert!(err.to_string().contains("RTREE"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_routing_readers_skip_the_rtree_section() {
+        // Simulate an older reader (no SEC_RTREE) on a routed artifact:
+        // relabel the RTREE table entry — and its CRC record — as an
+        // unknown kind.  The model must load with the tree dropped and
+        // everything else intact, which is exactly what a pre-routing
+        // binary does with the real kind-8 entry.
+        let model = routed_model();
+        let bytes = encode(&model);
+        const UNKNOWN: u32 = 99;
+        let mut old = bytes.clone();
+        let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let mut patched = false;
+        for t in 0..count {
+            let at = 16 + 24 * t;
+            if u32::from_le_bytes(old[at..at + 4].try_into().unwrap()) == SEC_RTREE {
+                old[at..at + 4].copy_from_slice(&UNKNOWN.to_le_bytes());
+                patched = true;
+            }
+        }
+        assert!(patched, "routed artifact must carry an RTREE table entry");
+        let (crc_off, crc_len) = table_entry(&old, SEC_CRC);
+        for rec in 0..crc_len / 8 {
+            let at = crc_off + 8 * rec;
+            if u32::from_le_bytes(old[at..at + 4].try_into().unwrap()) == SEC_RTREE {
+                old[at..at + 4].copy_from_slice(&UNKNOWN.to_le_bytes());
+            }
+        }
+        let back = decode(&old).unwrap();
+        assert!(back.route.is_none(), "unknown section kinds must be skipped");
+        assert_eq!(back.labels, model.labels);
+        assert_eq!(back.centroids.flat(), model.centroids.flat());
+        let path = tmp("preroute.gkm");
+        std::fs::write(&path, &old).unwrap();
+        let loaded = FittedModel::load(&path).unwrap();
+        assert!(loaded.route.is_none());
+        assert_eq!(loaded.labels, model.labels);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rtree_parser_rejects_structurally_corrupt_trees() {
+        // Strip the CRC section (count − 1: it is the last table entry)
+        // so the byte flip reaches the parser, then break a leaf member
+        // id: from_parts must reject it — hostile routing payloads can
+        // fail to load but never mis-route.
+        let model = routed_model();
+        let bytes = encode(&model);
+        let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let last = 16 + 24 * (count - 1);
+        assert_eq!(
+            u32::from_le_bytes(bytes[last..last + 4].try_into().unwrap()),
+            SEC_CRC,
+            "CRC section must be the last table entry"
+        );
+        let mut bad = bytes.clone();
+        bad[12..16].copy_from_slice(&((count - 1) as u32).to_le_bytes());
+        assert!(decode(&bad).is_ok(), "CRC-stripped routed artifact must still load");
+        // payload tail: …, u64 mlen, k × u32 member_ids, u64 rlen,
+        // k × u32 reps — poke the high byte of the last member id
+        let (off, len) = table_entry(&bad, SEC_RTREE);
+        let k = model.k;
+        bad[off + len - 8 - 4 * k - 1] = 0xFF;
+        let err = decode(&bad).unwrap_err();
+        assert!(err.contains("member id"), "{err}");
     }
 
     #[test]

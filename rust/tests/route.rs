@@ -1,0 +1,127 @@
+//! Integration tests for the hierarchical routing tree: exactness of the
+//! beam ≥ k contract through the public `FittedModel` surface, assignment
+//! agreement at the default beam on clustered data, the `route_min_k`
+//! dispatch gate, and the routed artifact round trip (save → load →
+//! predict/search from the loaded model).
+
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::gkm::ann::SearchParams;
+use gkmeans::gkm::tree::{RouteTreeParams, ROUTE_MIN_K};
+use gkmeans::model::{Clusterer, FittedModel, GkMeans, RunContext};
+use gkmeans::runtime::Backend;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gkm_route_{}_{name}", std::process::id()))
+}
+
+/// A fitted GK-means model with retained data and an attached routing
+/// tree.  `branch` is kept small so the tree is genuinely multi-level
+/// even at test-scale k.
+fn routed_fit(n: usize, d: usize, k: usize, branch: usize, seed: u64) -> FittedModel {
+    let data = blobs(&BlobSpec::quick(n, d, k), seed);
+    let backend = Backend::native();
+    let ctx = RunContext::new(&backend).max_iters(5).keep_data(true);
+    let mut model = GkMeans::new(k).kappa(8).tau(3).fit(&data, &ctx);
+    model.build_route(&RouteTreeParams { branch, ..Default::default() });
+    let tree = model.route.as_ref().expect("build_route attaches a tree");
+    assert!(tree.depth() > 1, "branch={branch} k={k} must yield a multi-level tree");
+    assert!(tree.has_reps(), "labels cover the training set, so reps attach");
+    model
+}
+
+#[test]
+fn routed_predict_with_beam_geq_k_is_bit_identical_to_flat() {
+    let k = 48;
+    let mut model = routed_fit(1500, 12, k, 4, 42);
+    let queries = blobs(&BlobSpec::quick(400, 12, k), 43);
+
+    let tree = model.route.clone();
+    model.route = None;
+    let flat = model.predict(&queries);
+
+    model.route = tree;
+    model.route_min_k = 0; // engage routing below the default k threshold
+    model.route.as_mut().unwrap().default_beam = k as u32; // beam ≥ k ⇒ exact
+    let routed = model.predict(&queries);
+
+    assert_eq!(routed, flat, "beam ≥ k must reproduce the flat scan bit-for-bit");
+    // … and through the streaming entry point too
+    assert_eq!(model.predict_batch(&queries), flat);
+}
+
+#[test]
+fn default_beam_keeps_assignment_agreement_high_on_clustered_data() {
+    let k = 64;
+    let mut model = routed_fit(2000, 16, k, 4, 7);
+    let queries = blobs(&BlobSpec::quick(600, 16, k), 8);
+
+    let tree = model.route.clone();
+    model.route = None;
+    let flat = model.predict(&queries);
+
+    model.route = tree;
+    model.route_min_k = 0;
+    let routed = model.predict(&queries);
+
+    let agree = flat.iter().zip(&routed).filter(|(a, b)| a == b).count() as f64
+        / flat.len() as f64;
+    assert!(
+        agree >= 0.95,
+        "default-beam routed assignment agreement {agree:.4} < 0.95"
+    );
+}
+
+#[test]
+fn route_min_k_gates_routed_dispatch() {
+    let model = routed_fit(1200, 12, 32, 4, 11);
+    // test-scale k is far below the engagement threshold: the tree is
+    // attached but dormant, and predict is the flat scan
+    assert!(model.route.is_some());
+    assert_eq!(model.route_min_k, ROUTE_MIN_K);
+    assert!(!model.routing_active(), "k=32 < ROUTE_MIN_K must stay flat");
+
+    let mut forced = model.clone();
+    forced.route_min_k = 0;
+    assert!(forced.routing_active());
+
+    let mut off = model.clone();
+    off.route = None;
+    off.route_min_k = 0;
+    assert!(!off.routing_active(), "no tree ⇒ never active");
+}
+
+#[test]
+fn routed_artifact_roundtrip_predicts_and_searches() {
+    let k = 48;
+    let mut model = routed_fit(1500, 12, k, 4, 99);
+    model.route_min_k = 0;
+
+    let path = tmp("routed_roundtrip.gkm");
+    model.save(&path).unwrap();
+    let mut loaded = FittedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.route, model.route, "routing tree must round-trip exactly");
+    // route_min_k is an in-memory dispatch knob, not part of the artifact
+    loaded.route_min_k = 0;
+
+    let queries = blobs(&BlobSpec::quick(300, 12, k), 100);
+    assert_eq!(
+        loaded.predict(&queries),
+        model.predict(&queries),
+        "routed predict must be bit-identical across the round trip"
+    );
+
+    // routed graph-ANN search from the loaded artifact: seeded entries
+    // come from the tree's per-leaf representatives
+    assert!(loaded.routing_active() && loaded.route.as_ref().unwrap().has_reps());
+    let sp = SearchParams { ef: 64, entries: 8, seed: 5 };
+    let q = queries.row(17);
+    let hits = loaded.search(q, 10, &sp).expect("routed search serves");
+    assert_eq!(hits.len(), 10);
+    assert_eq!(
+        hits,
+        model.search(q, 10, &sp).unwrap(),
+        "routed search must be deterministic across the round trip"
+    );
+}

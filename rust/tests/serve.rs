@@ -39,6 +39,8 @@ fn exact_model(data: &VecSet) -> FittedModel {
         graph: Some(graph),
         data: Some(ModelVectors::Ram(data.clone())),
         quantized: None,
+        route: None,
+        route_min_k: gkmeans::gkm::tree::ROUTE_MIN_K,
     }
 }
 
