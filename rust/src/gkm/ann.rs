@@ -37,6 +37,28 @@ impl Default for SearchParams {
     }
 }
 
+impl SearchParams {
+    /// Set the result-pool width (quality/latency knob).
+    pub fn with_ef(mut self, ef: usize) -> Self {
+        self.ef = ef;
+        self
+    }
+
+    /// Set the number of entry points (random draws, or seed rows kept
+    /// when the caller routes).
+    pub fn with_entries(mut self, entries: usize) -> Self {
+        self.entries = entries;
+        self
+    }
+
+    /// Set the per-query RNG seed (random-entry selection only; seeded
+    /// searches draw no randomness).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
 /// Search statistics (distance evaluations = the latency proxy the
 /// paper's "3 ms / query" claim is about).
 #[derive(Debug, Clone, Default)]

@@ -268,6 +268,52 @@ pub fn refine_cells(
     updates
 }
 
+/// One localized NN-Descent join round around row `g`: compare `g`
+/// against its neighbors' neighbors (the classic NN-Descent local join
+/// restricted to a single row's neighborhood) and fold improvements
+/// into the graph with [`KnnGraph::update_pair`] — both directions, so
+/// old rows adopt the new one too.  `seen` is caller-owned scratch
+/// (cleared here) that bounds the round to ≤ κ² distance evaluations.
+/// Serial and deterministic: candidates are visited in neighbor-list
+/// order.  Returns the number of accepted updates; `0` means the
+/// neighborhood is locally converged and the caller can stop iterating.
+///
+/// This is the repair primitive behind
+/// [`crate::model::FittedModel::extend`]: a freshly appended row gets
+/// its candidate pool from a seeded graph search, then a few of these
+/// rounds stitch it into the mutual-neighbor structure.
+pub fn local_join(
+    graph: &mut KnnGraph,
+    cur: &mut StoreCursor<'_>,
+    g: usize,
+    seen: &mut std::collections::HashSet<u32>,
+) -> usize {
+    let mut updates = 0usize;
+    seen.clear();
+    seen.insert(g as u32);
+    seen.extend(graph.neighbors(g).iter().copied().filter(|&u| u != u32::MAX));
+    let hood: Vec<u32> =
+        graph.neighbors(g).iter().copied().filter(|&u| u != u32::MAX).collect();
+    for u in hood {
+        let second: Vec<u32> = graph
+            .neighbors(u as usize)
+            .iter()
+            .copied()
+            .filter(|&w| w != u32::MAX && !seen.contains(&w))
+            .collect();
+        for w in second {
+            seen.insert(w);
+            let dd = cur.d2_pair(g, w as usize);
+            if (dd < graph.threshold(g) || dd < graph.threshold(w as usize))
+                && graph.update_pair(g, w as usize, dd)
+            {
+                updates += 1;
+            }
+        }
+    }
+    updates
+}
+
 /// Multi-threaded [`refine_cells`]: cells partition the samples, so the
 /// graph rows touched by different cells are disjoint — but `KnnGraph` is
 /// deliberately lock-free, so workers gather candidate pairs against a

@@ -445,6 +445,132 @@ impl RouteTree {
         order.into_iter().map(|(_, c)| c).collect()
     }
 
+    /// Append centroid id `k` (the freshly pushed last row of
+    /// `centroids`) as a new leaf member — the incremental-extend path
+    /// for cells the drift trigger split.  Greedy-descends to the
+    /// nearest leaf, inserts the id there, folds the new centroid into
+    /// the routing vectors along the descent path, and — once the leaf
+    /// outgrows `2·branch` members — re-splits **just that leaf** into
+    /// tail-appended child nodes (subtree-local: every other node keeps
+    /// its id, vector, and members).  Clears `reps` (stale per-cluster
+    /// rows would be indexed out of bounds at the new k); callers
+    /// re-attach via [`RouteTree::set_reps`].  Deterministic.
+    pub fn insert_centroid(&mut self, centroids: &VecSet, backend: &Backend) {
+        assert_eq!(
+            centroids.rows(),
+            self.k + 1,
+            "insert_centroid expects exactly one appended centroid"
+        );
+        assert_eq!(centroids.dim(), self.dim, "centroid dim mismatch");
+        let new_id = self.k as u32;
+        let q = centroids.row(self.k);
+        let qq = norm2(q);
+
+        // pre-insert subtree member counts: children follow parents, so
+        // one reverse pass folds leaves upward
+        let nn = self.nodes();
+        let mut sizes = vec![0u64; nn];
+        for node in (0..nn).rev() {
+            let cc = self.child_count[node] as usize;
+            sizes[node] = if cc == 0 {
+                u64::from(self.member_start[node + 1] - self.member_start[node])
+            } else {
+                let fc = self.first_child[node] as usize;
+                (fc..fc + cc).map(|c| sizes[c]).sum()
+            };
+        }
+
+        // greedy descent to the nearest leaf (ties break on lower id)
+        let mut path = vec![0u32];
+        let mut dists: Vec<f32> = Vec::new();
+        let mut node = 0usize;
+        while self.child_count[node] > 0 {
+            let fc = self.first_child[node] as usize;
+            let cc = self.child_count[node] as usize;
+            let block = &self.node_vecs[fc * self.dim..(fc + cc) * self.dim];
+            let norms = &self.node_norms[fc..fc + cc];
+            dists.resize(cc, 0.0);
+            backend.candidate_d2(q, qq, block, norms, self.dim, &mut dists);
+            let mut best = 0usize;
+            for (j, &dj) in dists.iter().enumerate().skip(1) {
+                if dj < dists[best] {
+                    best = j;
+                }
+            }
+            node = fc + best;
+            path.push(node as u32);
+        }
+        let leaf = node;
+
+        // the new id is the largest, so appending at the end of the
+        // leaf's range keeps member order intact
+        let end = self.member_start[leaf + 1] as usize;
+        self.member_ids.insert(end, new_id);
+        for ms in self.member_start[leaf + 1..].iter_mut() {
+            *ms += 1;
+        }
+        self.k += 1;
+
+        // fold q into the routing means on the descent path:
+        // mean' = (mean·s + q) / (s + 1)
+        for &p in &path {
+            let p = p as usize;
+            let s = sizes[p] as f64;
+            let row = &mut self.node_vecs[p * self.dim..(p + 1) * self.dim];
+            for (m, &v) in row.iter_mut().zip(q) {
+                *m = ((f64::from(*m) * s + f64::from(v)) / (s + 1.0)) as f32;
+            }
+            self.node_norms[p] = norm2(&self.node_vecs[p * self.dim..(p + 1) * self.dim]);
+        }
+
+        // subtree-local re-split once the leaf overflows 2·branch
+        let (a, b) = (self.member_start[leaf] as usize, self.member_start[leaf + 1] as usize);
+        if b - a > 2 * self.branch as usize {
+            let members: Vec<u32> = self.member_ids.drain(a..b).collect();
+            let removed = members.len() as u32;
+            for ms in self.member_start[leaf + 1..].iter_mut() {
+                *ms -= removed;
+            }
+            let seed = 20170707u64
+                .wrapping_add((self.nodes() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let parts = split_members(centroids, &members, self.branch as usize, seed, 1, backend);
+            self.first_child[leaf] = self.nodes() as u32;
+            self.child_count[leaf] = parts.len() as u32;
+            for part in parts {
+                let mut acc = vec![0f64; self.dim];
+                for &c in &part {
+                    for (av, &v) in acc.iter_mut().zip(centroids.row(c as usize)) {
+                        *av += f64::from(v);
+                    }
+                }
+                let inv = 1.0 / part.len() as f64;
+                let start = self.node_vecs.len();
+                self.node_vecs.extend(acc.iter().map(|av| (*av * inv) as f32));
+                self.node_norms.push(norm2(&self.node_vecs[start..]));
+                self.first_child.push(0);
+                self.child_count.push(0);
+                self.member_ids.extend_from_slice(&part);
+                self.member_start.push(self.member_ids.len() as u32);
+            }
+        }
+        self.reps.clear();
+
+        #[cfg(debug_assertions)]
+        RouteTree::from_parts(
+            self.dim,
+            self.k,
+            self.branch,
+            self.default_beam,
+            self.node_vecs.clone(),
+            self.first_child.clone(),
+            self.child_count.clone(),
+            self.member_start.clone(),
+            self.member_ids.clone(),
+            Vec::new(),
+        )
+        .expect("insert_centroid must preserve tree invariants");
+    }
+
     /// Entry rows for routed graph-ANN search: descend to the nearest
     /// clusters and return each one's representative training row.
     /// Empty when `reps` is absent (caller falls back to random
@@ -678,6 +804,72 @@ mod tests {
             vec![0; 3],
         )
         .is_err());
+    }
+
+    #[test]
+    fn insert_centroid_appends_leaf_member_and_keeps_routing_exact() {
+        let mut c = random_centroids(100, 12, 31);
+        let mut t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 5, ..Default::default() },
+            &Backend::Native,
+        );
+        t.set_reps((0..100).collect());
+        c.push_row(&vec![0.75; 12]);
+        t.insert_centroid(&c, &Backend::Native);
+        assert_eq!(t.k, 101);
+        assert_eq!(t.member_ids.len(), 101);
+        assert!(!t.has_reps(), "stale reps must be dropped");
+        // full-beam routed predict stays bit-identical to flat over the
+        // grown centroid set — the partition still covers 0..k
+        let mut s = RouteScratch::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..25 {
+            let mut q = vec![0f32; 12];
+            for v in q.iter_mut() {
+                *v = rng.f32() * 2.0 - 1.0;
+            }
+            assert_eq!(t.predict_one(&q, &c, t.k, &Backend::Native, &mut s), flat_argmin(&q, &c));
+        }
+        // the new centroid routes home under the default beam
+        assert_eq!(t.predict_one(c.row(100), &c, DEFAULT_BEAM, &Backend::Native, &mut s), 100);
+    }
+
+    #[test]
+    fn insert_centroid_resplits_overflowing_leaf_locally() {
+        // tiny branch so repeated inserts overflow a leaf quickly
+        let mut c = random_centroids(6, 8, 17);
+        let mut t = RouteTree::build(
+            &c,
+            &RouteTreeParams { branch: 2, ..Default::default() },
+            &Backend::Native,
+        );
+        let nodes_before = t.nodes();
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let mut row = vec![0f32; 8];
+            for v in row.iter_mut() {
+                *v = rng.f32() * 2.0 - 1.0;
+            }
+            c.push_row(&row);
+            t.insert_centroid(&c, &Backend::Native);
+        }
+        assert_eq!(t.k, 26);
+        assert!(t.nodes() > nodes_before, "overflowing leaves must re-split");
+        // every leaf honours the 2·branch cap after local re-splits
+        for n in 0..t.nodes() {
+            if t.child_count[n] == 0 {
+                let m = (t.member_start[n + 1] - t.member_start[n]) as usize;
+                assert!(m <= 2 * t.branch as usize, "leaf {n} holds {m} members");
+            }
+        }
+        let mut s = RouteScratch::new();
+        for i in 0..26 {
+            assert_eq!(
+                t.predict_one(c.row(i), &c, t.k, &Backend::Native, &mut s),
+                flat_argmin(c.row(i), &c)
+            );
+        }
     }
 
     #[test]

@@ -183,6 +183,15 @@ impl KnnGraph {
         a || b
     }
 
+    /// Append `m` vacant rows (ids `u32::MAX`, distances `+∞`) — the
+    /// incremental-extend path grows the graph first, then repairs the
+    /// new rows with localized joins ([`crate::model::FittedModel::extend`]).
+    pub fn grow(&mut self, m: usize) {
+        self.n += m;
+        self.ids.resize(self.n * self.kappa, u32::MAX);
+        self.dists.resize(self.n * self.kappa, f32::INFINITY);
+    }
+
     /// Move the rows of `part` into `self` starting at global row `lo`.
     /// `part`'s neighbor ids must already be global.  Row-sharded parallel
     /// builds (e.g. `graph::brute::build_threaded`) assemble their result
@@ -302,6 +311,19 @@ mod tests {
         assert_eq!(g.threshold(0), f32::INFINITY, "still a vacant slot");
         g.update(0, 2, 3.0);
         assert_eq!(g.threshold(0), 5.0);
+    }
+
+    #[test]
+    fn grow_appends_vacant_rows() {
+        let mut g = KnnGraph::empty(2, 3);
+        g.update_pair(0, 1, 0.25);
+        g.grow(2);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.neighbors(0)[0], 1, "existing rows untouched");
+        assert_eq!(g.neighbors(2), &[u32::MAX; 3]);
+        assert_eq!(g.threshold(3), f32::INFINITY);
+        g.update_pair(3, 0, 0.5);
+        g.check_invariants().unwrap();
     }
 
     #[test]

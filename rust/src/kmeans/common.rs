@@ -124,6 +124,35 @@ impl Clustering {
         (c, centroids)
     }
 
+    /// Reassemble clustering state from parts the caller already holds
+    /// — validates shapes only, trusts the composites.  The incremental
+    /// extend path ([`crate::model::FittedModel::extend_with`]) uses
+    /// this with composites approximated as `centroid · count`, which
+    /// [`Clustering::apply_move`] then keeps incrementally exact,
+    /// without ever rescanning the full store.
+    pub fn from_parts(
+        labels: Vec<u32>,
+        composite: Vec<f32>,
+        counts: Vec<u32>,
+        k: usize,
+        dim: usize,
+    ) -> Result<Clustering, String> {
+        if composite.len() != k * dim {
+            return Err(format!("composite len {} != k*dim {}", composite.len(), k * dim));
+        }
+        if counts.len() != k {
+            return Err(format!("counts len {} != k {k}", counts.len()));
+        }
+        let total: u64 = counts.iter().map(|&c| c as u64).sum();
+        if total != labels.len() as u64 {
+            return Err(format!("counts sum {total} != {} labels", labels.len()));
+        }
+        if let Some(&l) = labels.iter().find(|&&l| l as usize >= k) {
+            return Err(format!("label {l} out of range k={k}"));
+        }
+        Ok(Clustering { labels, composite, counts, k, dim })
+    }
+
     /// Recompute composite vectors and counts from labels (one
     /// sequential pass over the store).
     pub fn rebuild(&mut self, data: &dyn VecStore) {

@@ -24,7 +24,7 @@ use gkmeans::coordinator::pipeline;
 use gkmeans::data::DatasetSpec;
 use gkmeans::eval::report::Table;
 use gkmeans::gkm::{ann, construct};
-use gkmeans::model::FittedModel;
+use gkmeans::model::{ExtendParams, FittedModel};
 use gkmeans::runtime::Backend;
 use gkmeans::util::cli::{parse_env, Args};
 use gkmeans::util::configfile::Config;
@@ -35,6 +35,7 @@ const VALUED: &[&str] = &[
     "data", "k", "kappa", "tau", "xi", "method", "backend", "seed", "iters", "out", "queries",
     "topk", "ef", "config", "recall-samples", "threads", "save", "model", "scan-order",
     "checkpoint", "checkpoint-every", "quantize", "route", "route-beam", "route-branch",
+    "refine-drift",
 ];
 
 fn main() {
@@ -42,6 +43,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("cluster") => cmd_cluster(&args),
         Some("predict") => cmd_predict(&args),
+        Some("extend") => cmd_extend(&args),
         Some("graph") => cmd_graph(&args),
         Some("search") => cmd_search(&args),
         Some("compare") => cmd_compare(&args),
@@ -62,6 +64,7 @@ USAGE:
                   [--quantize sq8] [--stream]
                   [--checkpoint DIR [--checkpoint-every N] [--resume]] [options]
   gkmeans predict --model FILE --data <spec> [--out labels.ivecs]
+  gkmeans extend  --model FILE --data <spec> [--refine-drift T]
   gkmeans graph   --data <spec> [--kappa 50 --tau 10 --xi 50] [--recall]
   gkmeans search  --data <spec> | --model FILE  [--queries 100 --topk 10 --ef 64]
   gkmeans compare --data <spec> --k <k> [--iters 30]
@@ -115,6 +118,12 @@ COMMON OPTIONS:
   --resume                     continue from DIR's checkpoint if present
                                (bit-identical to the uninterrupted fit
                                at --threads 1); starts fresh otherwise
+  --refine-drift T             (extend) re-run bounded Δℐ refinement over
+                               cells whose mean distortion drifted past
+                               baseline·(1+T) after the append; oversized
+                               dirty cells split (new centroids join the
+                               routing tree in place).  Off by default —
+                               the default extend is pinned deterministic
   --config FILE                key=value config file (CLI overrides)
   --verbose / --quiet          log level
 ";
@@ -420,6 +429,79 @@ fn cmd_predict(args: &Args) -> i32 {
         }
         println!("wrote {path}");
     }
+    0
+}
+
+/// Grow a saved artifact in place: load, assign + append the new rows,
+/// repair the graph with localized joins, optionally drift-refine, and
+/// atomically resave to the same path.
+fn cmd_extend(args: &Args) -> i32 {
+    let args = effective(args);
+    let model_path = match args.get("model") {
+        Some(p) => p,
+        None => {
+            eprintln!("error: extend needs --model FILE (from `cluster --save --keep-data`)");
+            return 2;
+        }
+    };
+    let mut model = match FittedModel::load(Path::new(model_path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    model.threads = args.usize_or("threads", model.threads);
+    let data = match dataset_of(&args).load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut params = ExtendParams { seed: args.u64_or("seed", 20170707), ..Default::default() };
+    if let Some(raw) = args.get("refine-drift") {
+        match raw.parse::<f64>() {
+            Ok(t) if t >= 0.0 => params.refine_drift = Some(t),
+            _ => {
+                eprintln!("error: --refine-drift must be a non-negative number (got {raw:?})");
+                return 2;
+            }
+        }
+    }
+    let timer = Timer::start();
+    let report = match model.extend_with(&data, &params) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let secs = timer.elapsed_s();
+    println!(
+        "extended {model_path}: {} -> {} rows (+{}) in {} ({} cells touched, {} graph updates)",
+        report.n_before,
+        report.n_after,
+        report.added,
+        fmt_secs(secs),
+        report.cells_touched,
+        report.graph_updates
+    );
+    if params.refine_drift.is_some() {
+        println!(
+            "drift: {} dirty cells, {} refinement moves, {} new centroids (k={})",
+            report.dirty_cells,
+            report.refine_moves,
+            report.new_centroids,
+            model.k
+        );
+    }
+    if let Err(e) = model.save(Path::new(model_path)) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    let bytes = std::fs::metadata(model_path).map(|m| m.len()).unwrap_or(0);
+    println!("saved model to {model_path} ({bytes} bytes, GKMODEL v2)");
     0
 }
 

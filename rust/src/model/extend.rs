@@ -1,0 +1,857 @@
+//! Incremental clustering: grow a [`FittedModel`] in place instead of
+//! refitting from scratch.
+//!
+//! [`FittedModel::extend`] turns the fitted artifact into a *living
+//! index*: new rows are assigned through the existing routed / flat
+//! prediction path, appended to the labels / vectors / SQ8 codes the
+//! model already carries, and stitched into the KNN graph with
+//! **localized joins** — each new row enters the graph by a seeded ANN
+//! search from its assigned cell's representative row (Cluster-Closure
+//! style neighborhood candidates, Wang et al.), folds the exact-distance
+//! candidate pool into its neighbor list with [`KnnGraph::update_pair`],
+//! and then runs a bounded number of NN-Descent-style
+//! neighbor-of-neighbor expansion rounds.  Nothing outside the touched
+//! neighborhoods is revisited.
+//!
+//! A **drift trigger** keeps clustering quality honest without global
+//! refits: the first drift-checked extend captures a per-cell mean
+//! distortion baseline ([`DriftState`], persisted as the GKMODEL `DRIFT`
+//! section); cells whose distortion rises past `baseline · (1 + T)`
+//! after an extend are *dirty* and get bounded Δℐ refinement epochs
+//! (the paper's Alg. 3 move rule, [`Clustering::delta_i`] /
+//! [`Clustering::apply_move`]) over their members only.  Persistently
+//! dirty, oversized cells split in two; the new centroid appends as a
+//! routing-tree leaf with a subtree-local re-split
+//! ([`RouteTree::insert_centroid`]) — never a full tree rebuild.
+//!
+//! Determinism contract (pinned by `tests/extend.rs`): with refinement
+//! off, extending by a batch is **bit-identical** to extending
+//! row-by-row — new rows are processed serially in append order, every
+//! search seed is derived from the assigned cell (no RNG anywhere on
+//! the path), and the graph/labels/codes a batch produces equal the
+//! ones m single-row extends produce.
+//!
+//! [`FittedModel::remove`] tombstones rows: they vanish from search
+//! results immediately and are physically compacted away by the next
+//! [`FittedModel::save`] (labels / vectors / codes filtered, graph
+//! remapped, reps recomputed).
+
+use std::collections::HashSet;
+
+use crate::data::matrix::VecSet;
+use crate::data::quant::QuantizedVecStore;
+use crate::data::store::VecStore;
+use crate::gkm::ann;
+use crate::gkm::construct;
+use crate::gkm::tree;
+use crate::graph::knn::KnnGraph;
+use crate::kmeans::common::Clustering;
+use crate::kmeans::two_means::{self, TwoMeansParams};
+use crate::model::fitted::ModelVectors;
+use crate::model::FittedModel;
+use crate::runtime::{Backend, RtError, RtResult};
+
+/// Knobs for [`FittedModel::extend_with`].  The default — refinement
+/// off — is the pinned-deterministic configuration.
+#[derive(Debug, Clone)]
+pub struct ExtendParams {
+    /// Drift threshold `T`: after the append, cells whose mean
+    /// distortion exceeds `baseline · (1 + T)` get Δℐ refinement.
+    /// `None` (the default) disables the drift trigger entirely.
+    pub refine_drift: Option<f64>,
+    /// Bounded refinement epochs over dirty cells (per extend).
+    pub refine_epochs: usize,
+    /// NN-Descent-style neighbor-of-neighbor expansion rounds per new
+    /// row during graph repair.
+    pub join_rounds: usize,
+    /// Candidate-pool width for the repair's seeded graph search
+    /// (`0` = auto: `max(64, 4·κ)`).
+    pub repair_ef: usize,
+    /// A still-dirty cell with `count ≥ split_factor · n/k` (and ≥ 8
+    /// members) splits into two centroids; `0.0` disables splitting.
+    /// Only consulted when `refine_drift` is set.
+    pub split_factor: f64,
+    /// Seed for the refinement-split 2-means calls (the repair path
+    /// itself draws no randomness).
+    pub seed: u64,
+}
+
+impl Default for ExtendParams {
+    fn default() -> ExtendParams {
+        ExtendParams {
+            refine_drift: None,
+            refine_epochs: 2,
+            join_rounds: 1,
+            repair_ef: 0,
+            split_factor: 2.0,
+            seed: 20170707,
+        }
+    }
+}
+
+/// What one [`FittedModel::extend_with`] call did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExtendReport {
+    /// Rows appended.
+    pub added: usize,
+    /// `n_train` before / after the append.
+    pub n_before: usize,
+    pub n_after: usize,
+    /// Distinct cells the new rows were assigned to.
+    pub cells_touched: usize,
+    /// Graph neighbor-list updates applied during repair.
+    pub graph_updates: usize,
+    /// Cells the drift trigger marked dirty (0 with refinement off).
+    pub dirty_cells: usize,
+    /// Δℐ moves applied by the refinement epochs.
+    pub refine_moves: usize,
+    /// Centroids appended by oversized-dirty-cell splits.
+    pub new_centroids: usize,
+}
+
+/// Per-cell mean-distortion baselines for the drift trigger.  `NaN`
+/// means "not captured yet" — baselines are filled in lazily, cell by
+/// cell, the first time a drift-checked extend touches the cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftState {
+    /// `baseline[c]` = mean ‖x − C_c‖² over the cell's members at the
+    /// last capture (`NaN` = unset).
+    pub baseline: Vec<f64>,
+}
+
+impl DriftState {
+    /// All-unset baselines for `k` cells.
+    pub fn unset(k: usize) -> DriftState {
+        DriftState { baseline: vec![f64::NAN; k] }
+    }
+}
+
+/// Read every row of `new` into RAM, surfacing store faults as typed
+/// errors instead of panics — a dying disk mid-extend must leave the
+/// model (and its on-disk artifact) untouched.
+fn snapshot_rows(new: &dyn VecStore) -> RtResult<VecSet> {
+    let (m, d) = (new.rows(), new.dim());
+    let mut flat = Vec::with_capacity(m * d);
+    let mut cur = new.open();
+    for i in 0..m {
+        let row = cur
+            .try_row(i)
+            .map_err(|e| RtError::msg(format!("extend: reading new row {i}: {e}")))?;
+        flat.extend_from_slice(row);
+    }
+    Ok(VecSet::from_flat(d, flat))
+}
+
+/// Mean squared distance of `rows` to `centroid` (f64 accumulation);
+/// `NAN` for an empty member list.
+fn mean_d2(
+    cur: &mut crate::data::store::StoreCursor<'_>,
+    rows: &[u32],
+    centroid: &[f32],
+) -> f64 {
+    if rows.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = 0f64;
+    for &i in rows {
+        s += crate::core_ops::dist::d2(cur.row(i as usize), centroid) as f64;
+    }
+    s / rows.len() as f64
+}
+
+impl FittedModel {
+    /// Append the rows of `new` to the model with the default
+    /// (refinement-off, pinned-deterministic) parameters: assign via
+    /// the existing predict path, append labels / vectors / SQ8 codes,
+    /// and repair the KNN graph with localized joins seeded from each
+    /// row's assigned cell.  See the [module docs](self) and
+    /// [`FittedModel::extend_with`].
+    pub fn extend(&mut self, new: &dyn VecStore) -> RtResult<ExtendReport> {
+        self.extend_with(new, &ExtendParams::default())
+    }
+
+    /// [`FittedModel::extend`] with explicit [`ExtendParams`] — enables
+    /// the drift trigger (`refine_drift`) and tunes the repair.
+    ///
+    /// The call mutates only RAM state; persisting the grown index is a
+    /// separate [`FittedModel::save`] (atomic: temp sibling + fsync +
+    /// rename), so a fault mid-extend leaves any on-disk artifact at
+    /// its pre-extend state.  A disk-backed model's vectors are
+    /// materialized into RAM on first extend (the next save streams
+    /// them back out).
+    pub fn extend_with(&mut self, new: &dyn VecStore, params: &ExtendParams) -> RtResult<ExtendReport> {
+        let m = new.rows();
+        let n0 = self.n_train;
+        if new.dim() != self.dim {
+            return Err(RtError::msg(format!(
+                "extend: new rows have dim {} but the model has dim {}",
+                new.dim(),
+                self.dim
+            )));
+        }
+        if m == 0 {
+            return Ok(ExtendReport { n_before: n0, n_after: n0, ..Default::default() });
+        }
+        if self.labels.len() != n0 {
+            return Err(RtError::msg(format!(
+                "extend: model carries {} labels for {n0} training rows",
+                self.labels.len()
+            )));
+        }
+        if n0 + m > u32::MAX as usize {
+            return Err(RtError::msg(format!(
+                "extend: {n0} + {m} rows exceeds the u32 id space"
+            )));
+        }
+        if self.graph.is_some() && self.data.is_none() {
+            return Err(RtError::msg(
+                "extend: model carries a KNN graph but no vectors; fit with \
+                 RunContext::keep_data(true) to extend a graph model",
+            ));
+        }
+
+        // Everything below works off a RAM snapshot of the new rows, so
+        // a store fault surfaces here — once — as a typed error.
+        let new_vecs = snapshot_rows(new)?;
+
+        // 1. Assign through the existing (routed or flat) predict path:
+        //    per-row deterministic at any thread count.
+        let new_labels = self.predict_batch(&new_vecs);
+        let affected: HashSet<u32> = new_labels.iter().copied().collect();
+        let refine = params.refine_drift.is_some() && self.graph.is_some() && self.data.is_some();
+
+        // 2. Capture pre-extend distortion baselines for cells that do
+        //    not have one yet (drift trigger only).
+        if refine {
+            if self.drift.is_none() {
+                self.drift = Some(DriftState::unset(self.k));
+            }
+            let need: Vec<u32> = {
+                let drift = self.drift.as_ref().unwrap();
+                let mut need: Vec<u32> = affected
+                    .iter()
+                    .copied()
+                    .filter(|&c| drift.baseline[c as usize].is_nan())
+                    .collect();
+                need.sort_unstable();
+                need
+            };
+            if !need.is_empty() {
+                let members = members_of_cells(&self.labels, &need);
+                let data = self.data.as_ref().unwrap();
+                let mut cur = data.open();
+                let drift = self.drift.as_mut().unwrap();
+                for (slot, &c) in need.iter().enumerate() {
+                    let b = mean_d2(&mut cur, &members[slot], self.centroids.row(c as usize));
+                    // empty pre-extend cell: baseline 0 ⇒ any distortion
+                    // the new rows bring counts as drift
+                    drift.baseline[c as usize] = if b.is_nan() { 0.0 } else { b };
+                }
+            }
+        }
+
+        // 3. Append vectors (materializing a disk-backed store once),
+        //    labels, and SQ8 codes.
+        if let Some(data) = &mut self.data {
+            let mut resident = match data {
+                ModelVectors::Ram(v) => std::mem::replace(v, VecSet::zeros(0, 1)),
+                ModelVectors::Disk(c) => crate::data::store::materialize(&*c),
+            };
+            for i in 0..m {
+                resident.push_row(new_vecs.row(i));
+            }
+            *data = ModelVectors::Ram(resident);
+        }
+        if let Some(q) = &self.quantized {
+            let quant = q.quantizer().clone();
+            let mut codes = q.codes().to_vec();
+            let mut row_codes = vec![0u8; self.dim];
+            for i in 0..m {
+                quant.encode_row(new_vecs.row(i), &mut row_codes);
+                codes.extend_from_slice(&row_codes);
+            }
+            self.quantized = Some(
+                QuantizedVecStore::from_parts(n0 + m, self.dim, codes, quant)
+                    .map_err(RtError::msg)?,
+            );
+        }
+        self.labels.extend_from_slice(&new_labels);
+        self.n_train = n0 + m;
+
+        // 4. Localized graph repair: serial, in append order, seeded
+        //    from each row's assigned cell — no RNG, so batch ≡
+        //    row-by-row bit-for-bit.
+        let mut graph_updates = 0usize;
+        if self.graph.is_some() {
+            graph_updates = self.repair_graph(n0, m, &new_vecs, &new_labels, params)?;
+        }
+
+        // 5. Drift trigger + bounded Δℐ refinement over dirty cells.
+        let mut dirty_cells = 0usize;
+        let mut refine_moves = 0usize;
+        let mut new_centroids = 0usize;
+        if refine {
+            let t = params.refine_drift.unwrap();
+            let (d, mv, nc) = self.refine_dirty(&affected, t, params)?;
+            dirty_cells = d;
+            refine_moves = mv;
+            new_centroids = nc;
+        }
+
+        // 6. Refresh the routed-search entry rows: new rows may be the
+        //    first members of previously empty cells.
+        if let Some(t) = &mut self.route {
+            if t.k == self.k {
+                t.set_reps(tree::reps_from_labels(&self.labels, self.k));
+            }
+        }
+
+        Ok(ExtendReport {
+            added: m,
+            n_before: n0,
+            n_after: n0 + m,
+            cells_touched: affected.len(),
+            graph_updates,
+            dirty_cells,
+            refine_moves,
+            new_centroids,
+        })
+    }
+
+    /// Stitch rows `n0..n0+m` into the KNN graph.  Per new row `g`
+    /// (ascending): seed an exact-distance graph search at the assigned
+    /// cell's representative row, fold the candidate pool into `g`'s
+    /// neighbor list (symmetric updates repair the old rows' lists
+    /// too), then run `join_rounds` neighbor-of-neighbor expansion
+    /// rounds.  Earlier new rows are already wired when later ones
+    /// search, which is exactly what makes batch ≡ row-by-row.
+    fn repair_graph(
+        &mut self,
+        n0: usize,
+        m: usize,
+        new_vecs: &VecSet,
+        new_labels: &[u32],
+        params: &ExtendParams,
+    ) -> RtResult<usize> {
+        let FittedModel { graph, data, labels, k, .. } = self;
+        let graph = graph.as_mut().expect("caller checked");
+        let data = data.as_ref().expect("caller checked");
+        graph.grow(m);
+        let kappa = graph.kappa();
+        let ef = if params.repair_ef == 0 { (4 * kappa).max(64) } else { params.repair_ef };
+        let sp = ann::SearchParams::default().with_ef(ef).with_entries(1).with_seed(params.seed);
+        // reps over the *full* post-append labels: the lowest row of a
+        // cell is the same whether the batch landed at once or row by
+        // row, so the seeds agree between the two schedules.
+        let reps = tree::reps_from_labels(labels, *k);
+        let mut scratch = ann::SearchScratch::new(n0 + m);
+        let mut cur = VecStore::open(data);
+        let mut updates = 0usize;
+        let mut seen: HashSet<u32> = HashSet::new();
+        for t in 0..m {
+            let g = (n0 + t) as u32;
+            if n0 + t == 0 {
+                continue; // first row ever: nothing to connect to
+            }
+            let query = new_vecs.row(t);
+            let mut seed = reps[new_labels[t] as usize];
+            if seed == u32::MAX || seed == g {
+                seed = if g == 0 { 1 } else { 0 };
+            }
+            let seeds = [seed];
+            let (pool, _) = ann::search_seeded_with_scratch(
+                &mut cur, graph, query, ef, &sp, &seeds, &mut scratch,
+            );
+            for &(dd, id) in &pool {
+                if id != g && graph.update_pair(g as usize, id as usize, dd) {
+                    updates += 1;
+                }
+            }
+            // bounded neighbor-of-neighbor expansion: the NN-Descent
+            // local join restricted to g's one-row neighborhood
+            for _ in 0..params.join_rounds {
+                let got = construct::local_join(graph, &mut cur, g as usize, &mut seen);
+                updates += got;
+                if got == 0 {
+                    break;
+                }
+            }
+        }
+        Ok(updates)
+    }
+
+    /// Drift check + bounded Δℐ refinement + oversized-cell splits over
+    /// the `affected` cells.  Returns `(dirty, moves, new_centroids)`.
+    fn refine_dirty(
+        &mut self,
+        affected: &HashSet<u32>,
+        threshold: f64,
+        params: &ExtendParams,
+    ) -> RtResult<(usize, usize, usize)> {
+        let n = self.n_train;
+        let dim = self.dim;
+        let mut watch: Vec<u32> = affected.iter().copied().collect();
+        watch.sort_unstable();
+
+        // which affected cells drifted past baseline · (1 + T)?
+        let mut dirty: Vec<u32> = {
+            let data = self.data.as_ref().expect("caller checked");
+            let mut cur = VecStore::open(data);
+            let members = members_of_cells(&self.labels, &watch);
+            let drift = self.drift.as_ref().expect("caller checked");
+            watch
+                .iter()
+                .enumerate()
+                .filter(|&(slot, &c)| {
+                    let post = mean_d2(&mut cur, &members[slot], self.centroids.row(c as usize));
+                    let base = drift.baseline[c as usize];
+                    post.is_finite() && post > base * (1.0 + threshold) + 1e-12
+                })
+                .map(|(_, &c)| c)
+                .collect()
+        };
+        let n_dirty = dirty.len();
+        if n_dirty == 0 {
+            self.update_baselines(&watch);
+            return Ok((0, 0, 0));
+        }
+
+        // Approximate composite state without a full data rescan: old
+        // rows contribute centroid·count (exact up to f32 rounding at
+        // fit time), and refinement moves keep it incrementally exact
+        // from here on.
+        let mut counts = vec![0u32; self.k];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        let mut composite = vec![0f32; self.k * dim];
+        for r in 0..self.k {
+            let c = self.centroids.row(r);
+            let nr = counts[r] as f32;
+            for (dst, &v) in composite[r * dim..(r + 1) * dim].iter_mut().zip(c) {
+                *dst = v * nr;
+            }
+        }
+        let labels = std::mem::take(&mut self.labels);
+        let mut clus = Clustering::from_parts(labels, composite, counts, self.k, dim)
+            .map_err(RtError::msg)?;
+
+        let mut moves = 0usize;
+        let mut touched: HashSet<u32> = dirty.iter().copied().collect();
+        {
+            let FittedModel { graph, data, .. } = &*self;
+            let graph = graph.as_ref().expect("caller checked");
+            let data = data.as_ref().expect("caller checked");
+            let mut cur = VecStore::open(data);
+            let mut x = vec![0f32; dim];
+            for _ in 0..params.refine_epochs {
+                let members = members_of_cells(&clus.labels, &dirty);
+                let mut epoch_moves = 0usize;
+                for cell in members {
+                    for &i in &cell {
+                        let i = i as usize;
+                        let u = clus.labels[i] as usize;
+                        if clus.counts[u] <= 1 {
+                            continue; // keep cells nonempty
+                        }
+                        x.copy_from_slice(cur.row(i));
+                        // candidate targets: the labels of i's graph
+                        // neighbors (the paper's cell-local move rule)
+                        let mut best_v = u;
+                        let mut best_delta = 0f64;
+                        for &j in graph.neighbors(i) {
+                            if j == u32::MAX {
+                                continue;
+                            }
+                            let v = clus.labels[j as usize] as usize;
+                            if v == u {
+                                continue;
+                            }
+                            let d = clus.delta_i(&x, u, v);
+                            if d > best_delta || (d == best_delta && d > 0.0 && v < best_v) {
+                                best_delta = d;
+                                best_v = v;
+                            }
+                        }
+                        if best_delta > 0.0 {
+                            clus.apply_move(i, &x, u, best_v);
+                            touched.insert(u as u32);
+                            touched.insert(best_v as u32);
+                            epoch_moves += 1;
+                        }
+                    }
+                }
+                moves += epoch_moves;
+                if epoch_moves == 0 {
+                    break;
+                }
+            }
+        }
+
+        // refresh the centroids of every cell a move touched
+        let mut touched: Vec<u32> = touched.into_iter().collect();
+        touched.sort_unstable();
+        for &r in &touched {
+            let r = r as usize;
+            if clus.counts[r] > 0 {
+                let inv = 1.0 / clus.counts[r] as f32;
+                let comp = clus.composite[r * dim..(r + 1) * dim].to_vec();
+                for (dst, v) in self.centroids.row_mut(r).iter_mut().zip(comp) {
+                    *dst = v * inv;
+                }
+            }
+        }
+
+        // oversized cells that are still paying for the drift split in
+        // two; the new centroid appends as a routing-tree leaf.
+        let mut new_centroids = 0usize;
+        if params.split_factor > 0.0 {
+            let quota = ((params.split_factor * n as f64 / self.k as f64).ceil() as usize).max(8);
+            dirty.retain(|&c| clus.counts[c as usize] >= quota as u32);
+            for c in dirty.clone() {
+                if new_centroids >= 16 {
+                    break; // bounded per extend
+                }
+                if self.split_cell(&mut clus, c as usize, params)? {
+                    new_centroids += 1;
+                    touched.push(c);
+                    touched.push((clus.k - 1) as u32);
+                }
+            }
+        }
+
+        self.labels = std::mem::take(&mut clus.labels);
+        self.update_baselines(&touched);
+        self.update_baselines(&watch);
+        Ok((n_dirty, moves, new_centroids))
+    }
+
+    /// Split cell `c` into two via a 2-means over its members; the new
+    /// centroid takes id `k` and — when a routing tree is attached —
+    /// appends as a leaf with a subtree-local re-split.  Returns false
+    /// when the bisection degenerates (all-duplicate members).
+    fn split_cell(
+        &mut self,
+        clus: &mut Clustering,
+        c: usize,
+        params: &ExtendParams,
+    ) -> RtResult<bool> {
+        let dim = self.dim;
+        let members: Vec<u32> = clus
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|&(_, &l)| l as usize == c)
+            .map(|(i, _)| i as u32)
+            .collect();
+        if members.len() < 2 {
+            return Ok(false);
+        }
+        let data = self.data.as_ref().expect("caller checked");
+        let mut cur = VecStore::open(data);
+        let mut flat = Vec::with_capacity(members.len() * dim);
+        for &i in &members {
+            flat.extend_from_slice(cur.row(i as usize));
+        }
+        let sub = VecSet::from_flat(dim, flat);
+        let tm = TwoMeansParams { seed: params.seed ^ (c as u64), threads: 1, ..Default::default() };
+        let side = two_means::run(&sub, 2, &tm, &Backend::Native);
+        let moved: Vec<u32> = members
+            .iter()
+            .zip(&side)
+            .filter(|&(_, &s)| s == 1)
+            .map(|(&i, _)| i)
+            .collect();
+        if moved.is_empty() || moved.len() == members.len() {
+            return Ok(false);
+        }
+        // grow the clustering state by one cell and move the side-1
+        // members over (composites stay incrementally exact)
+        let new_id = clus.k;
+        clus.k += 1;
+        clus.composite.extend(std::iter::repeat(0.0).take(dim));
+        clus.counts.push(0);
+        let mut x = vec![0f32; dim];
+        for &i in &moved {
+            x.copy_from_slice(cur.row(i as usize));
+            clus.apply_move(i as usize, &x, c, new_id);
+        }
+        drop(cur);
+        // both centroids refresh from their composites
+        self.k += 1;
+        let inv = 1.0 / clus.counts[new_id].max(1) as f32;
+        let newc: Vec<f32> =
+            clus.composite[new_id * dim..(new_id + 1) * dim].iter().map(|v| v * inv).collect();
+        self.centroids.push_row(&newc);
+        if clus.counts[c] > 0 {
+            let inv = 1.0 / clus.counts[c] as f32;
+            let comp = clus.composite[c * dim..(c + 1) * dim].to_vec();
+            for (dst, v) in self.centroids.row_mut(c).iter_mut().zip(comp) {
+                *dst = v * inv;
+            }
+        }
+        if let Some(d) = &mut self.drift {
+            d.baseline.push(f64::NAN);
+        }
+        if let Some(t) = &mut self.route {
+            t.insert_centroid(&self.centroids, &Backend::Native);
+        }
+        Ok(true)
+    }
+
+    /// Recapture the distortion baselines of `cells` from current
+    /// members + centroids (drift state must exist).
+    fn update_baselines(&mut self, cells: &[u32]) {
+        if cells.is_empty() {
+            return;
+        }
+        let members = members_of_cells(&self.labels, cells);
+        let data = self.data.as_ref().expect("caller checked");
+        let mut cur = VecStore::open(data);
+        let mut fresh = Vec::with_capacity(cells.len());
+        for (slot, &c) in cells.iter().enumerate() {
+            let b = mean_d2(&mut cur, &members[slot], self.centroids.row(c as usize));
+            fresh.push(if b.is_nan() { 0.0 } else { b });
+        }
+        let drift = self.drift.as_mut().expect("caller checked");
+        for (&c, b) in cells.iter().zip(fresh) {
+            drift.baseline[c as usize] = b;
+        }
+    }
+
+    /// Tombstone `ids`: the rows disappear from search results
+    /// immediately and are physically removed (labels / vectors / codes
+    /// filtered, graph remapped) by the next [`FittedModel::save`].
+    /// Returns the number of rows newly tombstoned; unknown ids are an
+    /// error, repeated ids are idempotent.
+    pub fn remove(&mut self, ids: &[u32]) -> RtResult<usize> {
+        for &id in ids {
+            if id as usize >= self.n_train {
+                return Err(RtError::msg(format!(
+                    "remove: row {id} out of range (n_train = {})",
+                    self.n_train
+                )));
+            }
+        }
+        let before = self.tombstones.len();
+        self.tombstones.extend_from_slice(ids);
+        self.tombstones.sort_unstable();
+        self.tombstones.dedup();
+        Ok(self.tombstones.len() - before)
+    }
+
+    /// The compacted copy [`FittedModel::save`] persists when
+    /// tombstones are pending: removed rows are dropped from labels /
+    /// vectors / codes, the graph is remapped (tombstoned neighbors
+    /// deleted, surviving ids renumbered), reps recomputed, drift
+    /// baselines kept as approximations.  Centroids are *not* refit —
+    /// removal is an index operation, not a re-clustering.
+    pub(crate) fn compacted(&self) -> RtResult<FittedModel> {
+        if self.tombstones.is_empty() {
+            return Ok(self.clone());
+        }
+        let n = self.n_train;
+        let mut remap = vec![u32::MAX; n];
+        let mut kept = 0u32;
+        for i in 0..n {
+            if self.tombstones.binary_search(&(i as u32)).is_err() {
+                remap[i] = kept;
+                kept += 1;
+            }
+        }
+        let kept = kept as usize;
+        let mut out = self.clone();
+        out.tombstones.clear();
+        out.n_train = kept;
+        out.labels = self
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| remap[i] != u32::MAX)
+            .map(|(_, &l)| l)
+            .collect();
+        if let Some(data) = &self.data {
+            let resident = data.to_vecset();
+            let mut flat = Vec::with_capacity(kept * self.dim);
+            for i in 0..n {
+                if remap[i] != u32::MAX {
+                    flat.extend_from_slice(resident.row(i));
+                }
+            }
+            out.data = Some(ModelVectors::Ram(VecSet::from_flat(self.dim, flat)));
+        }
+        if let Some(q) = &self.quantized {
+            let mut codes = Vec::with_capacity(kept * self.dim);
+            for i in 0..n {
+                if remap[i] != u32::MAX {
+                    codes.extend_from_slice(q.code_row(i));
+                }
+            }
+            out.quantized = Some(
+                QuantizedVecStore::from_parts(kept, self.dim, codes, q.quantizer().clone())
+                    .map_err(RtError::msg)?,
+            );
+        }
+        if let Some(g) = &self.graph {
+            let kappa = g.kappa();
+            let mut ids = vec![u32::MAX; kept * kappa];
+            let mut dists = vec![f32::INFINITY; kept * kappa];
+            for i in 0..n {
+                let ni = remap[i];
+                if ni == u32::MAX {
+                    continue;
+                }
+                let base = ni as usize * kappa;
+                let mut slot = 0usize;
+                for (t, &j) in g.neighbors(i).iter().enumerate() {
+                    if j == u32::MAX || remap[j as usize] == u32::MAX {
+                        continue;
+                    }
+                    ids[base + slot] = remap[j as usize];
+                    dists[base + slot] = g.distances(i)[t];
+                    slot += 1;
+                }
+            }
+            out.graph =
+                Some(KnnGraph::from_parts(kept, kappa, ids, dists).map_err(RtError::msg)?);
+        }
+        if let Some(t) = &mut out.route {
+            if t.has_reps() {
+                t.set_reps(tree::reps_from_labels(&out.labels, out.k));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Member lists of `cells` (ascending row order), one `Vec` per cell in
+/// `cells` order.  One pass over the labels.
+fn members_of_cells(labels: &[u32], cells: &[u32]) -> Vec<Vec<u32>> {
+    let mut slot = std::collections::HashMap::with_capacity(cells.len());
+    for (s, &c) in cells.iter().enumerate() {
+        slot.insert(c, s);
+    }
+    let mut out = vec![Vec::new(); cells.len()];
+    for (i, l) in labels.iter().enumerate() {
+        if let Some(&s) = slot.get(l) {
+            out[s].push(i as u32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{blobs, BlobSpec};
+    use crate::model::{Clusterer, GkMeans, Lloyd, RunContext};
+
+    fn split(data: &VecSet, n0: usize) -> (VecSet, VecSet) {
+        let d = data.dim();
+        let old = VecSet::from_flat(d, data.flat()[..n0 * d].to_vec());
+        let new = VecSet::from_flat(d, data.flat()[n0 * d..].to_vec());
+        (old, new)
+    }
+
+    #[test]
+    fn extend_appends_and_assigns() {
+        let data = blobs(&BlobSpec::quick(260, 6, 4), 3);
+        let (old, new) = split(&data, 200);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(3).keep_data(true);
+        let mut model = GkMeans::new(4).kappa(6).tau(2).xi(25).fit(&old, &ctx);
+        let report = model.extend(&new).unwrap();
+        assert_eq!(report.added, 60);
+        assert_eq!((report.n_before, report.n_after), (200, 260));
+        assert_eq!(model.n_train, 260);
+        assert_eq!(model.labels.len(), 260);
+        assert_eq!(model.graph.as_ref().unwrap().n(), 260);
+        assert!(report.graph_updates > 0, "repair must wire the new rows");
+        assert!(report.cells_touched >= 1);
+        // appended labels are the predict labels
+        assert_eq!(&model.labels[200..], &model.predict(&new)[..]);
+        model.graph.as_ref().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_rejects_dim_mismatch_and_missing_data() {
+        let data = blobs(&BlobSpec::quick(120, 4, 3), 5);
+        let b = Backend::native();
+        let mut no_data = GkMeans::new(3).kappa(4).tau(2).fit(&data, &RunContext::new(&b));
+        let err = no_data.extend(&data).unwrap_err();
+        assert!(err.to_string().contains("keep_data"), "{err}");
+        let ctx = RunContext::new(&b).max_iters(2).keep_data(true);
+        let mut model = GkMeans::new(3).kappa(4).tau(2).xi(25).fit(&data, &ctx);
+        let wrong = VecSet::zeros(4, 7);
+        assert!(model.extend(&wrong).unwrap_err().to_string().contains("dim"));
+    }
+
+    #[test]
+    fn extend_without_graph_still_assigns() {
+        let data = blobs(&BlobSpec::quick(160, 4, 3), 6);
+        let (old, new) = split(&data, 120);
+        let b = Backend::native();
+        let mut model = Lloyd::new(3).fit(&old, &RunContext::new(&b).max_iters(3));
+        let report = model.extend(&new).unwrap();
+        assert_eq!(report.added, 40);
+        assert_eq!(report.graph_updates, 0);
+        assert_eq!(model.labels.len(), 160);
+    }
+
+    #[test]
+    fn remove_tombstones_filter_search_and_compact_on_roundtrip() {
+        let data = blobs(&BlobSpec::quick(220, 5, 4), 9);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(3).keep_data(true);
+        let mut model = GkMeans::new(4).kappa(6).tau(2).xi(25).fit(&data, &ctx);
+        // row 0's own top hit is itself; after removal it must vanish
+        let hits = model.search(data.row(0), 3, &Default::default()).unwrap();
+        assert_eq!(hits[0].1, 0);
+        assert_eq!(model.remove(&[0, 5, 0]).unwrap(), 2, "dup ids are idempotent");
+        let hits = model.search(data.row(0), 3, &Default::default()).unwrap();
+        assert!(hits.iter().all(|&(_, id)| id != 0 && id != 5));
+        assert!(model.remove(&[9999]).is_err());
+        // compaction drops the rows and renumbers the survivors
+        let compact = model.compacted().unwrap();
+        assert_eq!(compact.n_train, 218);
+        assert_eq!(compact.labels.len(), 218);
+        assert!(compact.tombstones.is_empty());
+        let g = compact.graph.as_ref().unwrap();
+        assert_eq!(g.n(), 218);
+        g.check_invariants().unwrap();
+        assert_eq!(compact.data.as_ref().unwrap().rows(), 218);
+        // old row 1 is new row 0
+        let v = compact.data.as_ref().unwrap().fetch_row(0);
+        assert_eq!(v, data.row(1));
+    }
+
+    #[test]
+    fn drift_refinement_reduces_distortion_on_shifted_data() {
+        // fit on 3 of 4 blobs, extend with the 4th: the receiving cells
+        // drift and refinement must claw distortion back
+        let all = blobs(&BlobSpec { sigma: 0.3, spread: 12.0, ..BlobSpec::quick(400, 6, 4) }, 11);
+        let (old, new) = split(&all, 300);
+        let b = Backend::native();
+        let ctx = RunContext::new(&b).max_iters(4).keep_data(true);
+        let mut refined = GkMeans::new(4).kappa(8).tau(3).xi(25).fit(&old, &ctx);
+        let mut plain = refined.clone();
+        plain.extend(&new).unwrap();
+        let params = ExtendParams { refine_drift: Some(0.05), ..Default::default() };
+        let report = refined.extend_with(&new, &params).unwrap();
+        assert!(refined.drift.is_some(), "drift state must be captured");
+        let d_plain = crate::kmeans::common::distortion_exact(
+            &all,
+            &plain.labels,
+            &plain.centroids,
+        );
+        let d_ref = crate::kmeans::common::distortion_exact(
+            &all,
+            &refined.labels,
+            &refined.centroids,
+        );
+        assert!(
+            d_ref <= d_plain + 1e-9,
+            "refined extend must not be worse: {d_ref} vs {d_plain} (report {report:?})"
+        );
+    }
+}

@@ -180,6 +180,15 @@ pub struct FittedModel {
     /// [`tree::ROUTE_MIN_K`]); runtime-only — `0` forces routing, a
     /// huge value disables it without dropping the tree.
     pub route_min_k: usize,
+    /// Per-cell distortion baselines for the incremental drift trigger
+    /// ([`FittedModel::extend`]); captured lazily on the first
+    /// drift-checked extend and persisted as the GKMODEL `DRIFT`
+    /// section.  `None` until an extend with refinement enabled runs.
+    pub drift: Option<crate::model::extend::DriftState>,
+    /// Rows removed by [`FittedModel::remove`] (ascending, deduplicated).
+    /// Tombstoned rows are filtered out of search results immediately
+    /// and physically compacted away by the next [`FittedModel::save`].
+    pub tombstones: Vec<u32>,
 }
 
 /// The vectors a fitted model retains under [`RunContext::keep_data`]:
@@ -248,6 +257,8 @@ impl FittedModel {
             quantized: None,
             route: None,
             route_min_k: tree::ROUTE_MIN_K,
+            drift: None,
+            tombstones: Vec::new(),
         }
     }
 
@@ -284,6 +295,8 @@ impl FittedModel {
             quantized: None,
             route: None,
             route_min_k: tree::ROUTE_MIN_K,
+            drift: None,
+            tombstones: Vec::new(),
         }
     }
 
@@ -633,22 +646,35 @@ impl FittedModel {
                     let mut scratch = ann::SearchScratch::new(data.rows());
                     let mut cur = data.open();
                     if let Some(qs) = &self.quantized {
-                        return Ok(ann::search_sq8_seeded_with_scratch(
+                        return Ok(self.filter_hits(ann::search_sq8_seeded_with_scratch(
                             qs, &mut cur, graph, query, topk, params, &seeds, &mut scratch,
-                        ));
+                        )));
                     }
-                    return Ok(ann::search_seeded_with_scratch(
+                    return Ok(self.filter_hits(ann::search_seeded_with_scratch(
                         &mut cur, graph, query, topk, params, &seeds, &mut scratch,
-                    ));
+                    )));
                 }
             }
         }
         // deterministic per-model entry points: same query, same answer
         let mut rng = Rng::new(params.seed ^ 0x00A4_45EC);
         if let Some(q) = &self.quantized {
-            return Ok(ann::search_sq8(q, data, graph, query, topk, params, &mut rng));
+            return Ok(self.filter_hits(ann::search_sq8(q, data, graph, query, topk, params, &mut rng)));
         }
-        Ok(ann::search(data, graph, query, topk, params, &mut rng))
+        Ok(self.filter_hits(ann::search(data, graph, query, topk, params, &mut rng)))
+    }
+
+    /// Drop tombstoned rows ([`FittedModel::remove`]) from a result set.
+    /// Tombstones are kept sorted, so each hit costs one binary search.
+    #[inline]
+    fn filter_hits(
+        &self,
+        mut res: (Vec<(f32, u32)>, ann::SearchStats),
+    ) -> (Vec<(f32, u32)>, ann::SearchStats) {
+        if !self.tombstones.is_empty() {
+            res.0.retain(|&(_, id)| self.tombstones.binary_search(&id).is_err());
+        }
+        res
     }
 
     /// The graph + vectors a search needs, with the serving errors.
@@ -732,7 +758,7 @@ impl FittedModel {
                         )
                     })
                     .unwrap_or_default();
-                let (res, _) = if !seeds.is_empty() {
+                let res = if !seeds.is_empty() {
                     match quant {
                         Some(qs) => ann::search_sq8_seeded_with_scratch(
                             qs,
@@ -780,7 +806,7 @@ impl FittedModel {
                         ),
                     }
                 };
-                out.push(res);
+                out.push(self.filter_hits(res).0);
             }
             out
         });
@@ -842,7 +868,7 @@ impl FittedModel {
                             )
                         })
                         .unwrap_or_default();
-                    let (res, _) = if !seeds.is_empty() {
+                    let res = if !seeds.is_empty() {
                         match quant {
                             Some(qs) => ann::search_sq8_seeded_with_scratch(
                                 qs, &mut c, graph, query, topk, params, &seeds, &mut s,
@@ -875,7 +901,7 @@ impl FittedModel {
                             ),
                         }
                     };
-                    res
+                    self.filter_hits(res).0
                 }));
                 match guarded {
                     Ok(hits) => {

@@ -33,12 +33,14 @@
 
 pub mod checkpoint;
 pub mod clusterer;
+pub mod extend;
 pub mod fitted;
 pub mod serde;
 
 pub use clusterer::{
     Boost, ClosureKmeans, Clusterer, GkMeans, GkMeansStar, KGraphGkMeans, Lloyd, MiniBatch,
 };
+pub use extend::{DriftState, ExtendParams, ExtendReport};
 pub use fitted::{FittedModel, ModelVectors};
 
 use crate::data::plan::ScanOrder;

@@ -94,6 +94,12 @@ const SEC_QVECTORS: u32 = 7;
 /// nodes × u32 child_count, (nodes+1) × u32 member offsets,
 /// u64 member count + u32 member ids, u64 rep count + u32 rep rows`.
 const SEC_RTREE: u32 = 8;
+/// Incremental-extend drift baselines (PR 10).  Append-only like its
+/// predecessors: pre-extend readers skip it as an unknown kind.
+/// Payload: `u64 k, k × f64 per-cell mean-distortion baselines` (NaN
+/// bits = "not captured yet" — NaN round-trips bitwise through
+/// `to_le_bytes`).
+const SEC_DRIFT: u32 = 9;
 
 /// Section alignment: offsets are multiples of 64 so payloads start on
 /// cache-line boundaries and the vectors region can be paged directly.
@@ -211,6 +217,29 @@ fn rtree_payload(t: &RouteTree) -> Vec<u8> {
     buf
 }
 
+fn drift_payload(d: &crate::model::extend::DriftState) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + 8 * d.baseline.len());
+    put_u64(&mut buf, d.baseline.len() as u64);
+    for &b in &d.baseline {
+        put_f64(&mut buf, b);
+    }
+    buf
+}
+
+fn parse_drift(bytes: &[u8], k: usize) -> Result<crate::model::extend::DriftState, String> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let dk = r.len_u64("drift baseline count")?;
+    if dk != k {
+        return Err(format!("drift baselines cover {dk} cells but the model has k={k}"));
+    }
+    let mut baseline = Vec::with_capacity(dk.min(1 << 24));
+    for _ in 0..dk {
+        baseline.push(r.f64()?);
+    }
+    r.done("DRIFT")?;
+    Ok(crate::model::extend::DriftState { baseline })
+}
+
 /// Parse the RTREE payload.  All structural validation (descent
 /// termination, slice bounds, leaf partition of `0..k`) happens in
 /// [`RouteTree::from_parts`] — the one constructor every tree goes
@@ -277,6 +306,7 @@ fn write_v2<W: Write>(
     let vec_len = vectors.map(|v| 8 + 4 * (v.rows() as u64) * (v.dim() as u64));
     let qvectors = m.quantized.as_ref().map(qvectors_payload);
     let rtree = m.route.as_ref().map(rtree_payload);
+    let drift = m.drift.as_ref().map(drift_payload);
 
     let mut sections: Vec<(u32, u64)> = vec![
         (SEC_META, meta.len() as u64),
@@ -295,6 +325,9 @@ fn write_v2<W: Write>(
     if let Some(t) = &rtree {
         sections.push((SEC_RTREE, t.len() as u64));
     }
+    if let Some(d) = &drift {
+        sections.push((SEC_DRIFT, d.len() as u64));
+    }
     // One { kind, crc } record per payload section; the in-RAM payloads
     // hash now, vectors hash as they stream, and the CRC section itself
     // (always last in table and file) is written once every record is in.
@@ -311,6 +344,9 @@ fn write_v2<W: Write>(
     }
     if let Some(t) = &rtree {
         crc_records.push((SEC_RTREE, crc32(t)));
+    }
+    if let Some(d) = &drift {
+        crc_records.push((SEC_DRIFT, crc32(d)));
     }
     sections.push((SEC_CRC, 8 * sections.len() as u64));
 
@@ -398,6 +434,11 @@ fn write_v2<W: Write>(
                 let t = rtree.as_ref().expect("rtree section implies a routing tree");
                 w.write_all(t)?;
                 written += t.len() as u64;
+            }
+            SEC_DRIFT => {
+                let d = drift.as_ref().expect("drift section implies drift state");
+                w.write_all(d)?;
+                written += d.len() as u64;
             }
             SEC_CRC => {
                 let mut payload = Vec::with_capacity(8 * crc_records.len());
@@ -583,6 +624,7 @@ fn sec_name(kind: u32) -> String {
         SEC_CRC => "CRC".into(),
         SEC_QVECTORS => "QVECTORS".into(),
         SEC_RTREE => "RTREE".into(),
+        SEC_DRIFT => "DRIFT".into(),
         other => format!("kind {other}"),
     }
 }
@@ -615,6 +657,7 @@ fn crc_mismatch(kind: u32, stored: u32, computed: u32) -> String {
     )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn assemble(
     meta: Meta,
     labels: Vec<u32>,
@@ -623,6 +666,7 @@ fn assemble(
     data: Option<ModelVectors>,
     quantized: Option<QuantizedVecStore>,
     route: Option<RouteTree>,
+    drift: Option<crate::model::extend::DriftState>,
 ) -> FittedModel {
     FittedModel {
         method: meta.method,
@@ -641,6 +685,8 @@ fn assemble(
         quantized,
         route,
         route_min_k: ROUTE_MIN_K,
+        drift,
+        tombstones: Vec::new(),
     }
 }
 
@@ -649,6 +695,12 @@ fn assemble(
 /// Serialize a model to v2 bytes (vectors embedded eagerly — use
 /// [`save`] to stream them to a file instead).
 pub fn encode(m: &FittedModel) -> Vec<u8> {
+    if !m.tombstones.is_empty() {
+        // same compact-at-persistence boundary as `save`: tombstones are
+        // in-RAM state, never serialized
+        let compacted = m.compacted().expect("compacting a valid model cannot fail");
+        return encode(&compacted);
+    }
     let mut buf = Vec::new();
     let vectors = m.data.as_ref().map(|d| d as &dyn VecStore);
     write_v2(m, vectors, &mut buf).expect("writing to a Vec cannot fail");
@@ -723,6 +775,10 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                 Some(s) => Some(parse_rtree(get(s), meta.k, meta.dim)?),
                 None => None,
             };
+            let drift = match section(&sections, SEC_DRIFT) {
+                Some(s) => Some(parse_drift(get(s), meta.k)?),
+                None => None,
+            };
             if labels.len() != meta.n_train {
                 return Err(format!(
                     "label count {} != n_train {}",
@@ -730,7 +786,7 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
                     meta.n_train
                 ));
             }
-            Ok(assemble(meta, labels, centroids, graph, data, quantized, route))
+            Ok(assemble(meta, labels, centroids, graph, data, quantized, route, drift))
         }
         other => Err(format!("unsupported model version {other} (this build reads 1 and 2)")),
     }
@@ -749,6 +805,14 @@ pub fn decode(bytes: &[u8]) -> Result<FittedModel, String> {
 /// truncated mid-read, and a failed save never destroys a pre-existing
 /// artifact.
 pub fn save(m: &FittedModel, path: &Path) -> RtResult<()> {
+    // Pending removals compact at the save boundary: the persisted
+    // artifact drops tombstoned rows (labels / vectors / codes filtered,
+    // graph remapped) so readers never see them.  The in-RAM model keeps
+    // its tombstones — `save` takes `&self` — and keeps filtering.
+    if !m.tombstones.is_empty() {
+        let compacted = m.compacted()?;
+        return save(&compacted, path);
+    }
     let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
     name.push(format!(".tmp.{}", std::process::id()));
     let target = path.with_file_name(name);
@@ -899,6 +963,12 @@ pub fn load(path: &Path) -> RtResult<FittedModel> {
         ),
         None => None,
     };
+    let drift = match section(&sections, SEC_DRIFT) {
+        Some(s) => {
+            Some(parse_drift(&read_verified(s)?, meta.k).map_err(|e| corrupt("DRIFT", e))?)
+        }
+        None => None,
+    };
     let data = match section(&sections, SEC_VECTORS) {
         Some(s) => {
             if s.len < 8 {
@@ -973,7 +1043,7 @@ pub fn load(path: &Path) -> RtResult<FittedModel> {
             format!("label count {} != n_train {}", labels.len(), meta.n_train),
         ));
     }
-    Ok(assemble(meta, labels, centroids, graph, data, quantized, route))
+    Ok(assemble(meta, labels, centroids, graph, data, quantized, route, drift))
 }
 
 // --- v1 (legacy) --------------------------------------------------------
@@ -1125,6 +1195,8 @@ fn decode_v1(bytes: &[u8]) -> Result<FittedModel, String> {
         quantized: None,
         route: None,
         route_min_k: ROUTE_MIN_K,
+        drift: None,
+        tombstones: Vec::new(),
     })
 }
 

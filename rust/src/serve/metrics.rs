@@ -24,6 +24,10 @@ pub struct ServeMetrics {
     predicts: AtomicU64,
     /// Completed SEARCH requests.
     searches: AtomicU64,
+    /// Completed EXTEND requests (index mutations).
+    extends: AtomicU64,
+    /// Rows appended to the index by EXTEND requests.
+    extended_rows: AtomicU64,
     /// Requests answered with a typed ERROR frame (degraded rows,
     /// malformed frames, worker panics).
     degraded: AtomicU64,
@@ -44,6 +48,8 @@ impl ServeMetrics {
             requests: AtomicU64::new(0),
             predicts: AtomicU64::new(0),
             searches: AtomicU64::new(0),
+            extends: AtomicU64::new(0),
+            extended_rows: AtomicU64::new(0),
             degraded: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             connections: AtomicU64::new(0),
@@ -71,6 +77,7 @@ impl ServeMetrics {
         match kind {
             RequestKind::Predict => self.predicts.fetch_add(1, Ordering::Relaxed),
             RequestKind::Search => self.searches.fetch_add(1, Ordering::Relaxed),
+            RequestKind::Extend => self.extends.fetch_add(1, Ordering::Relaxed),
         };
         if !ok {
             self.degraded.fetch_add(1, Ordering::Relaxed);
@@ -83,6 +90,12 @@ impl ServeMetrics {
     #[inline]
     pub fn degraded_only(&self) {
         self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count rows appended by a completed EXTEND request.
+    #[inline]
+    pub fn extended_rows(&self, rows: u64) {
+        self.extended_rows.fetch_add(rows, Ordering::Relaxed);
     }
 
     /// Count an accepted connection.
@@ -131,6 +144,8 @@ impl ServeMetrics {
         line("requests", requests.to_string());
         line("predicts", self.predicts.load(Ordering::Relaxed).to_string());
         line("searches", self.searches.load(Ordering::Relaxed).to_string());
+        line("extends", self.extends.load(Ordering::Relaxed).to_string());
+        line("extended_rows", self.extended_rows.load(Ordering::Relaxed).to_string());
         line("degraded", self.degraded().to_string());
         line("in_flight", self.in_flight().to_string());
         line("qps", format!("{:.2}", if uptime > 0.0 { requests as f64 / uptime } else { 0.0 }));
@@ -209,6 +224,7 @@ impl Drop for InFlight<'_> {
 pub enum RequestKind {
     Predict,
     Search,
+    Extend,
 }
 
 #[cfg(test)]
@@ -229,10 +245,16 @@ mod tests {
         drop(guard);
         m.batch(8);
         m.batch(1);
+        let guard = m.begin();
+        m.finish(RequestKind::Extend, true, 5_000);
+        drop(guard);
+        m.extended_rows(64);
         let s = m.render(Some((90, 10)));
-        assert_eq!(stats_value(&s, "requests"), Some(51.0));
+        assert_eq!(stats_value(&s, "requests"), Some(52.0));
         assert_eq!(stats_value(&s, "searches"), Some(50.0));
         assert_eq!(stats_value(&s, "predicts"), Some(1.0));
+        assert_eq!(stats_value(&s, "extends"), Some(1.0));
+        assert_eq!(stats_value(&s, "extended_rows"), Some(64.0));
         assert_eq!(stats_value(&s, "degraded"), Some(1.0));
         assert_eq!(stats_value(&s, "in_flight"), Some(0.0));
         assert_eq!(stats_value(&s, "batches"), Some(2.0));

@@ -26,16 +26,18 @@
 //! | 3    | STATS    | (empty) — serving metrics as `key=value` lines  |
 //! | 4    | PING     | (empty)                                         |
 //! | 5    | SHUTDOWN | (empty) — graceful server stop (tests/benches)  |
+//! | 6    | EXTEND   | `u32 rows`, `u32 dim`, `rows × dim × f32`       |
 //!
 //! ## Responses (first payload byte = tag)
 //!
-//! | tag | name  | body                                      |
-//! |-----|-------|-------------------------------------------|
-//! | 0   | LABEL | `u32` cluster label                       |
-//! | 1   | HITS  | `u32 count`, `count × (u32 id, f32 d²)`   |
-//! | 2   | TEXT  | UTF-8 text (STATS payload)                |
-//! | 3   | PONG  | (empty)                                   |
-//! | 4   | ERROR | UTF-8 message                             |
+//! | tag | name     | body                                      |
+//! |-----|----------|-------------------------------------------|
+//! | 0   | LABEL    | `u32` cluster label                       |
+//! | 1   | HITS     | `u32 count`, `count × (u32 id, f32 d²)`   |
+//! | 2   | TEXT     | UTF-8 text (STATS payload)                |
+//! | 3   | PONG     | (empty)                                   |
+//! | 4   | ERROR    | UTF-8 message                             |
+//! | 5   | EXTENDED | `u64` total indexed rows after the append |
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -60,6 +62,13 @@ pub const MAX_TOPK: u32 = 1 << 16;
 /// server further clamps it to the indexed row count (a larger beam
 /// than the dataset cannot improve recall).
 pub const MAX_EF: u32 = 1 << 20;
+
+/// Sanity cap on EXTEND `rows` per frame.  Like [`MAX_TOPK`], it is
+/// validated at decode time so a hostile `u32::MAX` is a typed error,
+/// never an allocation; the frame cap bounds the actual payload anyway
+/// (`rows · dim · 4 ≤` [`MAX_FRAME`]).  Bigger ingests ship as several
+/// frames.
+pub const MAX_EXTEND_ROWS: u32 = 1 << 20;
 
 /// Consecutive zero-progress read-timeout ticks [`read_frame`] tolerates
 /// in the middle of a frame before giving up with a [`is_frame_stall`]
@@ -110,6 +119,9 @@ pub enum Request {
     Ping,
     /// Graceful server stop.
     Shutdown,
+    /// Append `rows` vectors (flattened row-major) to the served index.
+    /// In-memory only: the server's artifact files are not rewritten.
+    Extend { rows: u32, flat: Vec<f32> },
 }
 
 /// A decoded response frame.
@@ -127,6 +139,8 @@ pub enum Response {
     /// Typed failure: the request was understood to be broken, or the
     /// query could not be served (degraded row, worker panic, …).
     Error(String),
+    /// EXTEND result: total indexed rows after the append.
+    Extended(u64),
 }
 
 const VERB_PREDICT: u8 = 1;
@@ -134,14 +148,20 @@ const VERB_SEARCH: u8 = 2;
 const VERB_STATS: u8 = 3;
 const VERB_PING: u8 = 4;
 const VERB_SHUTDOWN: u8 = 5;
+const VERB_EXTEND: u8 = 6;
 
 const TAG_LABEL: u8 = 0;
 const TAG_HITS: u8 = 1;
 const TAG_TEXT: u8 = 2;
 const TAG_PONG: u8 = 3;
 const TAG_ERROR: u8 = 4;
+const TAG_EXTENDED: u8 = 5;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -173,6 +193,16 @@ impl<'a> Take<'a> {
             return Err("truncated frame".into());
         }
         let v = u32::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let end = self.pos + 8;
+        if end > self.buf.len() {
+            return Err("truncated frame".into());
+        }
+        let v = u64::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
         self.pos = end;
         Ok(v)
     }
@@ -240,6 +270,15 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         Request::Stats => out.push(VERB_STATS),
         Request::Ping => out.push(VERB_PING),
         Request::Shutdown => out.push(VERB_SHUTDOWN),
+        Request::Extend { rows, flat } => {
+            out.push(VERB_EXTEND);
+            put_u32(&mut out, *rows);
+            let dim = if *rows == 0 { 0 } else { flat.len() as u32 / *rows };
+            put_u32(&mut out, dim);
+            for &v in flat {
+                put_f32(&mut out, v);
+            }
+        }
     }
     out
 }
@@ -268,6 +307,17 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, String> {
         VERB_STATS => Request::Stats,
         VERB_PING => Request::Ping,
         VERB_SHUTDOWN => Request::Shutdown,
+        VERB_EXTEND => {
+            let rows = t.u32()?;
+            if rows == 0 || rows > MAX_EXTEND_ROWS {
+                return Err(format!("extend rows {rows} out of range 1..={MAX_EXTEND_ROWS}"));
+            }
+            let dim = check_dim(t.u32()?)?;
+            let total = (rows as usize)
+                .checked_mul(dim)
+                .ok_or("extend payload size overflows")?;
+            Request::Extend { rows, flat: t.f32s(total)? }
+        }
         v => return Err(format!("unknown request verb {v}")),
     };
     t.done()?;
@@ -299,6 +349,10 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             out.push(TAG_ERROR);
             out.extend_from_slice(msg.as_bytes());
         }
+        Response::Extended(total) => {
+            out.push(TAG_EXTENDED);
+            put_u64(&mut out, *total);
+        }
     }
     out
 }
@@ -324,6 +378,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, String> {
         TAG_TEXT => Response::Text(String::from_utf8_lossy(t.rest()).into_owned()),
         TAG_PONG => Response::Pong,
         TAG_ERROR => Response::Error(String::from_utf8_lossy(t.rest()).into_owned()),
+        TAG_EXTENDED => Response::Extended(t.u64()?),
         v => return Err(format!("unknown response tag {v}")),
     };
     t.done()?;
@@ -489,6 +544,25 @@ impl Client {
         }
     }
 
+    /// Append `flat` (row-major, `flat.len() / dim` rows) to the served
+    /// index; returns the total indexed rows after the append.  The
+    /// growth is in-memory only — the server's artifact files are not
+    /// rewritten.
+    pub fn extend(&mut self, flat: &[f32], dim: usize) -> Result<u64, String> {
+        if dim == 0 || flat.is_empty() || flat.len() % dim != 0 {
+            return Err(format!(
+                "extend payload of {} floats is not a whole number of dim-{dim} rows",
+                flat.len()
+            ));
+        }
+        let rows = (flat.len() / dim) as u32;
+        match self.roundtrip(&Request::Extend { rows, flat: flat.to_vec() })? {
+            Response::Extended(total) => Ok(total),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
     /// Ask the server to stop accepting, drain, and exit.
     pub fn shutdown(&mut self) -> Result<(), String> {
         match self.roundtrip(&Request::Shutdown)? {
@@ -524,6 +598,7 @@ mod tests {
             Request::Stats,
             Request::Ping,
             Request::Shutdown,
+            Request::Extend { rows: 3, flat: vec![0.25; 12] },
         ];
         for req in &reqs {
             let bytes = encode_request(req);
@@ -540,6 +615,7 @@ mod tests {
             Response::Text("qps=100\np50_us=42".into()),
             Response::Pong,
             Response::Error("query dim 3 != model dim 8".into()),
+            Response::Extended(1 << 40),
         ];
         for resp in &resps {
             let bytes = encode_response(resp);
@@ -591,6 +667,22 @@ mod tests {
         assert!(decode_request(&ok).is_ok());
         // trailing garbage after a valid PING
         assert!(decode_request(&[4u8, 0, 0]).unwrap_err().contains("trailing"));
+        // hostile extend row count: typed error before any allocation
+        let mut hx = vec![6u8];
+        hx.extend(u32::MAX.to_le_bytes());
+        hx.extend(4u32.to_le_bytes());
+        assert!(decode_request(&hx).unwrap_err().contains("rows"));
+        // zero extend rows
+        let mut zx = vec![6u8];
+        zx.extend(0u32.to_le_bytes());
+        zx.extend(4u32.to_le_bytes());
+        assert!(decode_request(&zx).unwrap_err().contains("rows"));
+        // extend claiming 2×3 floats but carrying 1
+        let mut tx = vec![6u8];
+        tx.extend(2u32.to_le_bytes());
+        tx.extend(3u32.to_le_bytes());
+        tx.extend(1.0f32.to_le_bytes());
+        assert!(decode_request(&tx).unwrap_err().contains("truncated"));
     }
 
     #[test]

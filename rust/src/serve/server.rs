@@ -11,8 +11,18 @@
 //!                        │                               ▼
 //!                     response ◄── scatter ◄── exec: group by (topk, ef)
 //!                                                ├─ ShardedIndex::search_batch
-//!                                                └─ ShardedIndex::predict_batch
+//!                                                ├─ ShardedIndex::predict_batch
+//!                                                └─ ShardedIndex::extend_rows (write lock,
+//!                                                   after the batch's queries)
 //! ```
+//!
+//! The index lives behind an `RwLock`: queries share a read lock, and
+//! EXTEND mutations take the write lock *inside the batcher's single
+//! executor thread, after the batch's queries ran* — so a batch's
+//! queries all see the same index, writers never interleave, and the
+//! read path costs one uncontended lock acquisition per batch.  EXTEND
+//! grows the in-memory index only; the artifact files on disk are not
+//! rewritten (persistence stays `gkmeans extend` / `FittedModel::save`).
 //!
 //! One acceptor thread hands each connection its own worker thread
 //! (bounded by [`ServeConfig::max_conns`]); workers block in
@@ -36,7 +46,7 @@
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::data::matrix::VecSet;
@@ -120,10 +130,13 @@ impl Default for ServeConfig {
 enum Work {
     Predict(Vec<f32>),
     Search { query: Vec<f32>, topk: usize, ef: usize },
+    /// Index mutation: applied under the write lock after the batch's
+    /// queries, so a batch is "all queries at state S, then appends".
+    Extend(VecSet),
 }
 
 struct Inner {
-    index: Arc<ShardedIndex>,
+    index: Arc<RwLock<ShardedIndex>>,
     metrics: Arc<ServeMetrics>,
     batcher: Batcher<Work, Response>,
     shutdown: AtomicBool,
@@ -152,21 +165,24 @@ pub struct ServerHandle {
 /// Execute one coalesced batch against the index: predicts ride
 /// together, searches group by `(topk, ef)` so each group is one
 /// batched kernel call, and results scatter back in submit order.
+/// EXTEND mutations apply *after* the batch's queries, one at a time
+/// under the write lock — every query in a batch sees the pre-append
+/// index.
 fn exec_batch(
-    index: &ShardedIndex,
+    index: &RwLock<ShardedIndex>,
     metrics: &ServeMetrics,
     seed: u64,
     default_ef: usize,
     batch: Vec<Work>,
 ) -> Vec<Response> {
     metrics.batch(batch.len());
-    let dim = index.dim();
     let mut out: Vec<Option<Response>> = (0..batch.len()).map(|_| None).collect();
 
     let mut predict_idx: Vec<usize> = Vec::new();
     let mut predict_flat: Vec<f32> = Vec::new();
     // (topk, ef) -> (original indices, flat queries)
     let mut groups: Vec<((usize, usize), Vec<usize>, Vec<f32>)> = Vec::new();
+    let mut extends: Vec<(usize, VecSet)> = Vec::new();
     for (i, w) in batch.into_iter().enumerate() {
         match w {
             Work::Predict(q) => {
@@ -184,47 +200,63 @@ fn exec_batch(
                     None => groups.push((key, vec![i], query)),
                 }
             }
+            Work::Extend(rows) => extends.push((i, rows)),
         }
     }
 
-    if !predict_idx.is_empty() {
-        let queries = VecSet::from_flat(dim, predict_flat);
-        match index.predict_batch(&queries) {
-            Ok(rows) => {
-                for (&i, row) in predict_idx.iter().zip(rows) {
-                    out[i] = Some(match row {
-                        Ok(label) => Response::Label(label),
-                        Err(e) => Response::Error(e),
-                    });
+    {
+        let index = index.read().unwrap_or_else(|p| p.into_inner());
+        let dim = index.dim();
+
+        if !predict_idx.is_empty() {
+            let queries = VecSet::from_flat(dim, predict_flat);
+            match index.predict_batch(&queries) {
+                Ok(rows) => {
+                    for (&i, row) in predict_idx.iter().zip(rows) {
+                        out[i] = Some(match row {
+                            Ok(label) => Response::Label(label),
+                            Err(e) => Response::Error(e),
+                        });
+                    }
+                }
+                Err(e) => {
+                    for &i in &predict_idx {
+                        out[i] = Some(Response::Error(e.to_string()));
+                    }
                 }
             }
-            Err(e) => {
-                for &i in &predict_idx {
-                    out[i] = Some(Response::Error(e.to_string()));
+        }
+
+        for ((topk, ef), idx, flat) in groups {
+            let queries = VecSet::from_flat(dim, flat);
+            let params = SearchParams { ef, seed, ..SearchParams::default() };
+            match index.search_batch(&queries, topk, &params) {
+                Ok(rows) => {
+                    for (&i, row) in idx.iter().zip(rows) {
+                        out[i] = Some(match row {
+                            Ok(hits) => {
+                                Response::Hits(hits.into_iter().map(|(d, id)| (id, d)).collect())
+                            }
+                            Err(e) => Response::Error(e),
+                        });
+                    }
+                }
+                Err(e) => {
+                    for &i in &idx {
+                        out[i] = Some(Response::Error(e.to_string()));
+                    }
                 }
             }
         }
     }
 
-    for ((topk, ef), idx, flat) in groups {
-        let queries = VecSet::from_flat(dim, flat);
-        let params = SearchParams { ef, seed, ..SearchParams::default() };
-        match index.search_batch(&queries, topk, &params) {
-            Ok(rows) => {
-                for (&i, row) in idx.iter().zip(rows) {
-                    out[i] = Some(match row {
-                        Ok(hits) => {
-                            Response::Hits(hits.into_iter().map(|(d, id)| (id, d)).collect())
-                        }
-                        Err(e) => Response::Error(e),
-                    });
-                }
-            }
-            Err(e) => {
-                for &i in &idx {
-                    out[i] = Some(Response::Error(e.to_string()));
-                }
-            }
+    if !extends.is_empty() {
+        let mut index = index.write().unwrap_or_else(|p| p.into_inner());
+        for (i, rows) in extends {
+            out[i] = Some(match index.extend_rows(&rows) {
+                Ok(_report) => Response::Extended(index.total_rows() as u64),
+                Err(e) => Response::Error(e.to_string()),
+            });
         }
     }
 
@@ -285,7 +317,10 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
         };
         let response = match req {
             Request::Ping => Response::Pong,
-            Request::Stats => Response::Text(inner.metrics.render(inner.index.cache_totals())),
+            Request::Stats => {
+                let cache = inner.index.read().unwrap_or_else(|p| p.into_inner()).cache_totals();
+                Response::Text(inner.metrics.render(cache))
+            }
             Request::Shutdown => {
                 inner.shutdown.store(true, Ordering::SeqCst);
                 let resp = proto::encode_response(&Response::Pong);
@@ -324,7 +359,12 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
                     // hits than rows cannot exist, and a beam wider
                     // than the union cannot improve recall).  ef == 0
                     // stays 0 — the server-default sentinel.
-                    let rows = inner.index.total_rows().max(1);
+                    let rows = inner
+                        .index
+                        .read()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .total_rows()
+                        .max(1);
                     let topk = (topk as usize).clamp(1, rows);
                     let ef = (ef as usize).min(rows);
                     let _live = inner.metrics.begin();
@@ -332,6 +372,29 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
                     let r = inner.batcher.submit(Work::Search { query, topk, ef });
                     let ok = !matches!(r, Response::Error(_));
                     inner.metrics.finish(RequestKind::Search, ok, t0.elapsed().as_micros() as u64);
+                    r
+                }
+            }
+            Request::Extend { rows, flat } => {
+                // decode bounded rows (MAX_EXTEND_ROWS) and the payload
+                // shape; the index's own dim is the last gate
+                if flat.len() != rows as usize * inner.dim {
+                    inner.metrics.degraded_only();
+                    Response::Error(format!(
+                        "extend rows have dim {} != index dim {}",
+                        if rows == 0 { 0 } else { flat.len() / rows as usize },
+                        inner.dim
+                    ))
+                } else {
+                    let _live = inner.metrics.begin();
+                    let t0 = Instant::now();
+                    let batch = VecSet::from_flat(inner.dim, flat);
+                    let r = inner.batcher.submit(Work::Extend(batch));
+                    let ok = !matches!(r, Response::Error(_));
+                    if ok {
+                        inner.metrics.extended_rows(rows as u64);
+                    }
+                    inner.metrics.finish(RequestKind::Extend, ok, t0.elapsed().as_micros() as u64);
                     r
                 }
             }
@@ -354,7 +417,8 @@ impl Server {
                 m.threads = cfg.threads;
             }
         }
-        let index = Arc::new(index);
+        let dim = index.dim();
+        let index = Arc::new(RwLock::new(index));
         let metrics = Arc::new(ServeMetrics::new());
         let (bi, bm) = (Arc::clone(&index), Arc::clone(&metrics));
         let default_ef = cfg.default_ef.max(1);
@@ -374,7 +438,6 @@ impl Server {
             .set_nonblocking(true)
             .map_err(|e| RtError::msg(format!("set_nonblocking: {e}")))?;
 
-        let dim = index.dim();
         let inner = Arc::new(Inner {
             index,
             metrics,
@@ -433,10 +496,12 @@ impl Server {
                 while !inner.stopping() {
                     std::thread::sleep(Duration::from_millis(50));
                     if last.elapsed() >= period {
-                        eprintln!(
-                            "{}",
-                            inner.metrics.heartbeat_line(inner.index.cache_totals())
-                        );
+                        let cache = inner
+                            .index
+                            .read()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .cache_totals();
+                        eprintln!("{}", inner.metrics.heartbeat_line(cache));
                         last = Instant::now();
                     }
                 }
@@ -458,8 +523,9 @@ impl ServerHandle {
         Arc::clone(&self.inner.metrics)
     }
 
-    /// The served index (read-only; for tests and config echo).
-    pub fn index(&self) -> Arc<ShardedIndex> {
+    /// The served index (behind the serving `RwLock` — EXTEND requests
+    /// mutate it; for tests and config echo).
+    pub fn index(&self) -> Arc<RwLock<ShardedIndex>> {
         Arc::clone(&self.inner.index)
     }
 
@@ -601,6 +667,29 @@ mod tests {
         fresh.ping().unwrap();
         let stats = fresh.stats().unwrap();
         assert!(proto::stats_value(&stats, "degraded").unwrap() >= 2.0, "{stats}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn extend_verb_grows_the_served_index() {
+        let (handle, _data) = start_server(8);
+        let mut c = Client::connect(handle.addr()).unwrap();
+        let extra = blobs(&BlobSpec::quick(20, 6, 3), 17);
+        let total = c.extend(extra.flat(), 6).unwrap();
+        assert_eq!(total, 220, "200 fitted rows + 20 appended");
+        // an appended row is immediately searchable, at the top of the
+        // global id space, as its own nearest neighbor
+        let hits = c.search(extra.row(0), 1, 0).unwrap();
+        assert_eq!(hits[0].0, 200, "appended row's global id");
+        assert!(hits[0].1 <= 1e-6, "self-hit at distance ~0, got {}", hits[0].1);
+        // a dim mismatch is a typed error and the connection survives
+        assert!(c.extend(&[1.0, 2.0, 3.0], 3).is_err());
+        c.ping().unwrap();
+        let stats = c.stats().unwrap();
+        assert_eq!(proto::stats_value(&stats, "extends"), Some(1.0), "{stats}");
+        assert_eq!(proto::stats_value(&stats, "extended_rows"), Some(20.0), "{stats}");
+        // the handle sees the grown index too
+        assert_eq!(handle.index().read().unwrap().total_rows(), 220);
         handle.shutdown();
     }
 

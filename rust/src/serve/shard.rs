@@ -26,7 +26,7 @@
 
 use crate::data::matrix::VecSet;
 use crate::gkm::ann::SearchParams;
-use crate::model::FittedModel;
+use crate::model::{ExtendReport, FittedModel};
 use crate::runtime::{RtError, RtResult};
 
 /// One logical index over one or more model shards.
@@ -92,6 +92,31 @@ impl ShardedIndex {
     /// not change — `bases`/`dim` are fixed at construction).
     pub fn shards_mut(&mut self) -> &mut [FittedModel] {
         &mut self.shards
+    }
+
+    /// Append `rows` to the union by extending the **last** shard in
+    /// place ([`FittedModel::extend`]: assign, append, localized graph
+    /// repair).  Global ids are cumulative over shards in load order, so
+    /// growing the tail is the only append that leaves every existing
+    /// global id stable — the new rows take the top of the id space.
+    /// In-memory only: the shards' artifact files are not rewritten;
+    /// persisting a grown index is [`FittedModel::save`] on the owning
+    /// model.
+    pub fn extend_rows(&mut self, rows: &VecSet) -> RtResult<ExtendReport> {
+        if rows.dim() != self.dim {
+            return Err(RtError::msg(format!(
+                "extend rows have dim {} but the index has dim {}",
+                rows.dim(),
+                self.dim
+            )));
+        }
+        if self.total_rows + rows.rows() > u32::MAX as usize {
+            return Err(RtError::msg("extend would overflow the u32 global id space"));
+        }
+        let tail = self.shards.last_mut().expect("an index has at least one shard");
+        let report = tail.extend(rows)?;
+        self.total_rows += report.added;
+        Ok(report)
     }
 
     /// Whether any shard pages its vectors from disk.
@@ -244,6 +269,27 @@ mod tests {
         let idx = ShardedIndex::new(vec![model]).unwrap();
         let got = idx.search(data.row(3), 5, &params).unwrap();
         assert_eq!(got, want, "one shard must behave exactly like the bare model");
+    }
+
+    #[test]
+    fn extend_grows_the_tail_shard_and_keeps_bases_stable() {
+        let a = blobs(&BlobSpec::quick(120, 5, 3), 7);
+        let c = blobs(&BlobSpec::quick(90, 5, 3), 8);
+        let extra = blobs(&BlobSpec::quick(30, 5, 3), 9);
+        let mut idx = ShardedIndex::new(vec![fit_shard(&a, 3), fit_shard(&c, 3)]).unwrap();
+        let report = idx.extend_rows(&extra).unwrap();
+        assert_eq!(report.added, 30);
+        assert_eq!(idx.total_rows(), 240);
+        assert_eq!(idx.bases, vec![0, 120], "existing global ids must not move");
+        assert_eq!(idx.shards()[1].n_train, 120, "the tail shard absorbs the rows");
+        // the appended rows are reachable through a union search: each
+        // extra row's global id lives in the tail shard's id range
+        let hits = idx.search(extra.row(0), 3, &SearchParams::default()).unwrap();
+        assert!(!hits.is_empty());
+        assert!(hits[0].1 >= 120, "nearest hit should be an appended (tail-shard) row");
+        // dim mismatch is a typed error
+        let wrong = blobs(&BlobSpec::quick(10, 4, 2), 10);
+        assert!(idx.extend_rows(&wrong).is_err());
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Integration tests for the incremental layer (`FittedModel::extend`):
+//! the batch ≡ row-by-row determinism contract, artifact round trips of
+//! a grown index, repaired-graph quality against from-scratch brute
+//! force, fit+extend clustering quality against a full refit, and
+//! fault-injected extends over a flaky store.
+
+use gkmeans::data::matrix::VecSet;
+use gkmeans::data::store::{ChunkedVecStore, FaultPolicy};
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::eval::cooccur;
+use gkmeans::gkm::ann::SearchParams;
+use gkmeans::graph::{brute, recall};
+use gkmeans::model::{serde, Clusterer, ExtendParams, FittedModel, GkMeans, RunContext};
+use gkmeans::runtime::Backend;
+use gkmeans::testing::fault::{FaultPlan, FaultStore};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gkm_extend_{}_{name}", std::process::id()))
+}
+
+/// Split a dataset's rows into `[0, n0)` and `[n0, n)`.
+fn split(data: &VecSet, n0: usize) -> (VecSet, VecSet) {
+    let d = data.dim();
+    let old = VecSet::from_flat(d, data.flat()[..n0 * d].to_vec());
+    let new = VecSet::from_flat(d, data.flat()[n0 * d..].to_vec());
+    (old, new)
+}
+
+fn fit(data: &VecSet, k: usize, kappa: usize) -> FittedModel {
+    let b = Backend::native();
+    let ctx = RunContext::new(&b).threads(1).max_iters(4).keep_data(true);
+    GkMeans::new(k).kappa(kappa).tau(3).xi(25).fit(data, &ctx)
+}
+
+// The determinism contract: with refinement off, one m-row extend and m
+// one-row extends must leave bit-identical models — same labels, same
+// graph after repair, same serialized artifact.
+#[test]
+fn batch_extend_equals_row_by_row_bitwise() {
+    let all = blobs(&BlobSpec::quick(280, 6, 4), 101);
+    let (old, new) = split(&all, 200);
+    let base = fit(&old, 4, 6);
+
+    let mut batch = base.clone();
+    let report = batch.extend(&new).unwrap();
+    assert_eq!(report.added, 80);
+
+    let mut serial = base;
+    let mut serial_updates = 0usize;
+    for i in 0..new.rows() {
+        let one = VecSet::from_flat(new.dim(), new.row(i).to_vec());
+        serial_updates += serial.extend(&one).unwrap().graph_updates;
+    }
+
+    assert_eq!(batch.labels, serial.labels, "assignments must agree");
+    assert_eq!(
+        report.graph_updates, serial_updates,
+        "repair must apply the identical update sequence"
+    );
+    let (bg, sg) = (batch.graph.as_ref().unwrap(), serial.graph.as_ref().unwrap());
+    assert_eq!(bg.ids_flat(), sg.ids_flat(), "graphs must agree after repair");
+    for (a, b) in bg.dists_flat().iter().zip(sg.dists_flat()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    bg.check_invariants().unwrap();
+    assert_eq!(
+        serde::encode(&batch),
+        serde::encode(&serial),
+        "batch and row-by-row extends must serialize bit-identically"
+    );
+}
+
+// Extend → save → load → save round-trips bit-exact, including the SQ8
+// codes the extend appended with the fit-time quantizer.
+#[test]
+fn extend_save_load_roundtrips_bit_exact() {
+    let all = blobs(&BlobSpec::quick(300, 5, 4), 103);
+    let (old, new) = split(&all, 240);
+    let mut model = fit(&old, 4, 6);
+    model.quantize_sq8(0).unwrap();
+    model.extend(&new).unwrap();
+    assert_eq!(model.quantized.as_ref().unwrap().rows(), 300);
+
+    let (p1, p2) = (tmp("rt1.gkm"), tmp("rt2.gkm"));
+    model.save(&p1).unwrap();
+    let loaded = FittedModel::load(&p1).unwrap();
+    loaded.save(&p2).unwrap();
+    let (b1, b2) = (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(b1, b2, "save → load → save must be bit-exact");
+
+    assert_eq!(loaded.n_train, 300);
+    assert_eq!(loaded.labels, model.labels);
+    let sp = SearchParams { ef: 48, entries: 24, seed: 7 };
+    for qi in [0usize, 250, 299] {
+        assert_eq!(
+            model.search(all.row(qi), 5, &sp).unwrap(),
+            loaded.search(all.row(qi), 5, &sp).unwrap(),
+            "query {qi}"
+        );
+    }
+}
+
+// Acceptance floor: after an extend, the graph/routed ANN search finds
+// each appended row (queried exactly) with recall ≥ 0.9.
+#[test]
+fn post_extend_search_recall_on_new_rows() {
+    let all = blobs(&BlobSpec::quick(420, 6, 5), 107);
+    let (old, new) = split(&all, 360);
+    let mut model = fit(&old, 5, 8);
+    model.extend(&new).unwrap();
+
+    let sp = SearchParams { ef: 96, entries: 64, seed: 5 };
+    let mut hits = 0usize;
+    for i in 0..new.rows() {
+        let res = model.search(new.row(i), 1, &sp).unwrap();
+        if res.first().map(|r| r.1) == Some((360 + i) as u32) {
+            hits += 1;
+        }
+    }
+    let recall = hits as f64 / new.rows() as f64;
+    assert!(
+        recall >= 0.9,
+        "post-extend search recall on new rows {recall} below the 0.9 floor"
+    );
+}
+
+// Localized repair quality: starting from an exact base graph, the
+// repaired graph over the union must keep top-1 recall ≥ 0.9 of a
+// from-scratch brute-force graph over the union.
+#[test]
+fn repaired_graph_recall_vs_from_scratch_brute_force() {
+    let b = Backend::native();
+    let all = blobs(&BlobSpec::quick(360, 6, 4), 109);
+    let (old, new) = split(&all, 300);
+    let mut model = fit(&old, 4, 8);
+    // isolate the repair: the base graph is exact, so recall lost below
+    // is attributable to the localized joins alone
+    model.graph = Some(brute::build(&old, 8, &b));
+    model.extend(&new).unwrap();
+
+    let repaired = model.graph.as_ref().unwrap();
+    assert_eq!(repaired.n(), 360);
+    repaired.check_invariants().unwrap();
+    let exact = brute::build(&all, 8, &b);
+    let r = recall::recall_at_1(repaired, &exact);
+    assert!(
+        r >= 0.9,
+        "repaired graph recall@1 {r} below 0.9 of the from-scratch graph"
+    );
+}
+
+// fit(n) + extend(m) with the drift trigger must land within a pinned
+// tolerance of fit(n+m) on clustered data, measured by KNN label
+// co-occurrence against the exact graph over the union (the paper's
+// quality proxy).
+#[test]
+fn fit_plus_extend_tracks_full_fit_quality() {
+    let b = Backend::native();
+    let all = blobs(&BlobSpec::quick(500, 6, 5), 113);
+    let (old, new) = split(&all, 400);
+
+    let mut inc = fit(&old, 5, 8);
+    let params = ExtendParams { refine_drift: Some(0.1), ..Default::default() };
+    inc.extend_with(&new, &params).unwrap();
+    let full = fit(&all, 5, 8);
+
+    let exact = brute::build(&all, 10, &b);
+    let mean = |labels: &[u32]| {
+        let series = cooccur::cooccurrence_by_rank(&exact, labels, 10);
+        series.iter().sum::<f64>() / series.len() as f64
+    };
+    let q_inc = mean(&inc.labels);
+    let q_full = mean(&full.labels);
+    let random = cooccur::random_collision_rate(&inc.labels, inc.k);
+    assert!(
+        q_inc > random + 0.2,
+        "incremental co-occurrence {q_inc} barely above random {random}"
+    );
+    assert!(
+        q_inc >= q_full - 0.15,
+        "fit+extend co-occurrence {q_inc} more than 0.15 below full fit {q_full}"
+    );
+}
+
+// A transiently-faulty store (with a retry budget) must produce the
+// bitwise-identical extend a fault-free store does: retries re-read the
+// same bytes and the repair path is deterministic.
+#[test]
+fn transient_fault_extend_is_bit_identical() {
+    let all = blobs(&BlobSpec::quick(260, 6, 4), 127);
+    let (old, new) = split(&all, 200);
+    let base = fit(&old, 4, 6);
+
+    let p = tmp("transient.fvecs");
+    gkmeans::data::io::write_fvecs(&p, &new).unwrap();
+    let open = || ChunkedVecStore::open_fvecs(&p).unwrap().chunk_rows(8).cache_chunks(2);
+
+    let mut want = base.clone();
+    want.extend(&new).unwrap();
+
+    let faulty = FaultStore::new(
+        open(),
+        FaultPlan::transient(42, 0.1),
+        FaultPolicy { retries: 12, backoff: std::time::Duration::ZERO },
+    );
+    let mut got = base;
+    got.extend(&faulty).unwrap();
+    std::fs::remove_file(&p).ok();
+
+    assert!(faulty.injected() > 0, "rate 0.1 over {} ops injected nothing", faulty.ops());
+    assert_eq!(
+        serde::encode(&got),
+        serde::encode(&want),
+        "transient-fault extend must be bitwise identical to the fault-free extend"
+    );
+}
+
+// A store that dies mid-extend surfaces a typed error, leaves the
+// in-RAM model untouched, and leaves the on-disk artifact loadable at
+// its pre-extend state.
+#[test]
+fn permanent_fault_mid_extend_leaves_artifact_at_pre_extend_state() {
+    let all = blobs(&BlobSpec::quick(260, 6, 4), 131);
+    let (old, new) = split(&all, 200);
+    let mut model = fit(&old, 4, 6);
+
+    let path = tmp("pre_extend.gkm");
+    model.save(&path).unwrap();
+    let disk_before = std::fs::read(&path).unwrap();
+    let ram_before = serde::encode(&model);
+
+    let p = tmp("dying.fvecs");
+    gkmeans::data::io::write_fvecs(&p, &new).unwrap();
+    let dying = FaultStore::new(
+        ChunkedVecStore::open_fvecs(&p).unwrap().chunk_rows(8).cache_chunks(2),
+        FaultPlan::dies_at(0, 3),
+        FaultPolicy::none(),
+    );
+    let err = model.extend(&dying).unwrap_err();
+    std::fs::remove_file(&p).ok();
+    assert!(dying.injected() > 0, "the permanent fault never fired");
+    assert!(
+        err.to_string().contains("reading new row"),
+        "extend must surface the store fault as a typed error: {err}"
+    );
+
+    // nothing mutated in RAM …
+    assert_eq!(model.n_train, 200);
+    assert_eq!(serde::encode(&model), ram_before, "a failed extend must not mutate the model");
+    // … and the artifact still loads, bit-for-bit at its pre-extend state
+    assert_eq!(std::fs::read(&path).unwrap(), disk_before);
+    let loaded = FittedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.n_train, 200);
+    assert_eq!(loaded.labels, model.labels);
+}

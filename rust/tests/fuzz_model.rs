@@ -1,0 +1,244 @@
+//! Fuzz-style robustness tests for the GKMODEL artifact loader: a
+//! seeded deterministic generator permutes, truncates, and bit-flips a
+//! maximal v2 artifact (every section kind: META, LABELS, CENTROIDS,
+//! GRAPH, VECTORS, CRC, QVECTORS, RTREE, DRIFT) and asserts the loader
+//! either succeeds bit-exact or fails with a typed error — never
+//! panics, never over-allocates on hostile length fields.
+
+use gkmeans::data::synth::{blobs, BlobSpec};
+use gkmeans::gkm::tree::RouteTreeParams;
+use gkmeans::model::{serde, Clusterer, DriftState, FittedModel, GkMeans, RunContext};
+use gkmeans::runtime::Backend;
+use gkmeans::testing::fault::splitmix64;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gkm_fuzz_{}_{name}", std::process::id()))
+}
+
+/// A model carrying every persistable section: graph, resident vectors,
+/// SQ8 codes, routing tree, and drift baselines (one NaN = "unset").
+fn maximal_model() -> FittedModel {
+    let data = blobs(&BlobSpec::quick(220, 5, 4), 17);
+    let b = Backend::native();
+    let ctx = RunContext::new(&b).threads(1).max_iters(3).keep_data(true);
+    let mut m = GkMeans::new(4).kappa(5).tau(2).xi(25).fit(&data, &ctx);
+    m.quantize_sq8(0).unwrap();
+    m.build_route(&RouteTreeParams::default());
+    let mut drift = DriftState::unset(m.k);
+    drift.baseline[0] = 0.25;
+    drift.baseline[1] = 1.5;
+    m.drift = Some(drift);
+    m
+}
+
+/// Parse the v2 section table of `bytes`: `(kind, offset, len)` per
+/// entry, in table order.  Test-side mirror of the on-disk layout
+/// (`magic 8, version u32, count u32, count × { kind u32, reserved u32,
+/// offset u64, len u64 }`).
+fn table_of(bytes: &[u8]) -> Vec<(u32, usize, usize)> {
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    (0..count)
+        .map(|i| {
+            let at = 16 + 24 * i;
+            let kind = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+            let off = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(bytes[at + 16..at + 24].try_into().unwrap()) as usize;
+            (kind, off, len)
+        })
+        .collect()
+}
+
+/// One deterministic mutation of `base`, derived only from `seed`.
+fn mutate(base: &[u8], seed: u64) -> Vec<u8> {
+    let mut bytes = base.to_vec();
+    let h1 = splitmix64(seed);
+    let h2 = splitmix64(h1 ^ 0xD1B5_4A32_D192_ED03);
+    let h3 = splitmix64(h2 ^ 0x9E37_79B9_7F4A_7C15);
+    match seed % 4 {
+        0 => {
+            // single bit flip anywhere (header, table, payload, padding)
+            let pos = (h1 as usize) % bytes.len();
+            bytes[pos] ^= 1 << (h2 % 8);
+        }
+        1 => {
+            // truncation to any prefix, including mid-header
+            bytes.truncate((h1 as usize) % bytes.len());
+        }
+        2 => {
+            // 4-byte overwrite: clobbers kinds, counts, lengths, floats
+            let pos = (h1 as usize) % (bytes.len() - 4);
+            bytes[pos..pos + 4].copy_from_slice(&(h2 as u32).to_le_bytes());
+        }
+        _ => {
+            // section-table attack: swap two whole entries, then
+            // scribble one field (kind / offset / len) of a third
+            let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+            let entry = |i: usize| 16 + 24 * i;
+            let (a, b) = ((h1 as usize) % count, (h2 as usize) % count);
+            if a != b {
+                let (lo, hi) = (a.min(b), a.max(b));
+                let (head, tail) = bytes.split_at_mut(entry(hi));
+                head[entry(lo)..entry(lo) + 24].swap_with_slice(&mut tail[..24]);
+            }
+            let c = entry((h3 as usize) % count);
+            match (h3 >> 8) % 3 {
+                0 => bytes[c..c + 4].copy_from_slice(&(h3 as u32).to_le_bytes()),
+                1 => bytes[c + 8..c + 16].copy_from_slice(&(h3 >> 16).to_le_bytes()),
+                _ => bytes[c + 16..c + 24].copy_from_slice(&(h3 >> 16).to_le_bytes()),
+            }
+        }
+    }
+    bytes
+}
+
+// ≥ 1000 seeded mutations: decode never panics; it either reproduces
+// the artifact bit-exactly (mutation hit padding, table order, or
+// another don't-care byte) or returns an error.  A sample of every
+// outcome also goes through the file loader, whose failures must be
+// typed corruption errors.
+#[test]
+fn seeded_mutations_never_panic_and_errors_are_typed() {
+    let base = serde::encode(&maximal_model());
+    let path = tmp("mutant.gkm");
+    for seed in 0..1200u64 {
+        let mutated = mutate(&base, seed);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serde::decode(&mutated)
+        }));
+        let res = match res {
+            Ok(r) => r,
+            Err(_) => panic!("decode panicked on seed {seed}"),
+        };
+        if let Ok(m) = &res {
+            assert_eq!(
+                serde::encode(m),
+                base,
+                "seed {seed}: a materially-mutated artifact decoded successfully"
+            );
+        }
+        if seed % 16 == 0 {
+            // the same mutant through the file loader
+            std::fs::write(&path, &mutated).unwrap();
+            let loaded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                FittedModel::load(&path)
+            }));
+            match loaded {
+                Err(_) => panic!("load panicked on seed {seed}"),
+                Ok(Ok(m)) => {
+                    assert!(res.is_ok(), "seed {seed}: load accepted what decode rejected");
+                    assert_eq!(serde::encode(&m), base, "seed {seed}: lossy load");
+                }
+                Ok(Err(e)) => {
+                    assert!(
+                        e.is_corrupt() || e.to_string().contains("unsupported model version"),
+                        "seed {seed}: load error is not typed corruption: {e}"
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// Deterministic per-section coverage: a bit flip in the middle of every
+// section's payload (all kinds 1–9, CRC included) must be rejected, and
+// through the file loader the rejection must carry `is_corrupt`.
+#[test]
+fn every_section_kind_rejects_a_payload_bit_flip() {
+    let base = serde::encode(&maximal_model());
+    let table = table_of(&base);
+    assert!(
+        table.len() >= 9,
+        "maximal model must carry every section kind, found {}",
+        table.len()
+    );
+    let path = tmp("flip.gkm");
+    for &(kind, off, len) in &table {
+        let mut bytes = base.clone();
+        bytes[off + len / 2] ^= 0x10;
+        let err = serde::decode(&bytes)
+            .err()
+            .unwrap_or_else(|| panic!("flip in section kind {kind} went undetected"));
+        assert!(!err.is_empty());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = FittedModel::load(&path)
+            .err()
+            .unwrap_or_else(|| panic!("load accepted flipped section kind {kind}"));
+        assert!(err.is_corrupt(), "section kind {kind}: untyped error {err}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// Hostile u64 length fields must fail through the bounds-checked reader
+// before any proportional allocation happens.  The CRC section is
+// disabled first (kind zeroed in the table) so the length guards — not
+// the checksum — are what reject the payloads.
+#[test]
+fn hostile_length_fields_fail_without_overallocating() {
+    let base = serde::encode(&maximal_model());
+    let table = table_of(&base);
+    let crc_entry = table.iter().position(|&(k, _, _)| k == 6).unwrap();
+    let mut no_crc = base.clone();
+    no_crc[16 + 24 * crc_entry..16 + 24 * crc_entry + 4].copy_from_slice(&0u32.to_le_bytes());
+    assert!(serde::decode(&no_crc).is_ok(), "zeroing the CRC entry must disable verification");
+
+    // each target: (section kind, byte offset of a u64 length field
+    // inside its payload)
+    for &(kind, field_at) in &[
+        (2u32, 0usize), // LABELS: label count
+        (4, 0),         // GRAPH: n
+        (4, 8),         // GRAPH: kappa
+        (5, 0),         // VECTORS: rows
+        (7, 0),         // QVECTORS: rows
+        (8, 24),        // RTREE: nodes (after branch u32, beam u32, dim u64, k u64)
+        (9, 0),         // DRIFT: baseline count
+    ] {
+        let (_, off, _) = *table.iter().find(|&&(k, _, _)| k == kind).unwrap();
+        for hostile in [u64::MAX, 1 << 61, 1 << 40] {
+            let mut bytes = no_crc.clone();
+            bytes[off + field_at..off + field_at + 8].copy_from_slice(&hostile.to_le_bytes());
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                serde::decode(&bytes)
+            }))
+            .unwrap_or_else(|_| panic!("kind {kind} length {hostile:#x} panicked"));
+            assert!(res.is_err(), "kind {kind} length {hostile:#x} was accepted");
+        }
+    }
+}
+
+// Folded from the old ad-hoc corruption test: blunt truncations and a
+// missing file.  Truncation is typed corruption; a missing file is a
+// plain I/O error, not corruption.
+#[test]
+fn truncations_and_missing_files_are_rejected() {
+    let base = serde::encode(&maximal_model());
+    let path = tmp("trunc.gkm");
+    for cut in [base.len() / 2, base.len() - 1, 16 + 24, 16, 12, 8, 0] {
+        std::fs::write(&path, &base[..cut]).unwrap();
+        let err = FittedModel::load(&path)
+            .err()
+            .unwrap_or_else(|| panic!("truncation to {cut} bytes went undetected"));
+        assert!(err.is_corrupt(), "truncation to {cut}: untyped error {err}");
+        assert!(serde::decode(&base[..cut]).is_err());
+    }
+    std::fs::remove_file(&path).ok();
+    let err = FittedModel::load(std::path::Path::new("/definitely/not/here.gkm")).unwrap_err();
+    assert!(!err.is_corrupt(), "a missing file is I/O, not corruption: {err}");
+}
+
+// The unmutated maximal artifact round-trips every section bit-exactly
+// (the fuzz baseline must itself be sound).
+#[test]
+fn maximal_artifact_roundtrips_bit_exact() {
+    let m = maximal_model();
+    let bytes = serde::encode(&m);
+    let back = serde::decode(&bytes).unwrap();
+    assert_eq!(serde::encode(&back), bytes);
+    assert_eq!(back.labels, m.labels);
+    assert!(back.graph.is_some() && back.quantized.is_some());
+    assert!(back.route.is_some() && back.drift.is_some());
+    let (bd, md) = (back.drift.as_ref().unwrap(), m.drift.as_ref().unwrap());
+    for (a, b) in bd.baseline.iter().zip(&md.baseline) {
+        assert_eq!(a.to_bits(), b.to_bits(), "NaN baselines must round-trip bitwise");
+    }
+}

@@ -206,20 +206,8 @@ fn deprecated_shims_still_compile_and_agree_with_the_new_surface() {
     assert!(old_e2e.distortion().is_finite());
 }
 
-#[test]
-fn corrupted_artifacts_are_rejected() {
-    let data = blobs(&BlobSpec::quick(100, 4, 3), 51);
-    let backend = Backend::native();
-    let model = Lloyd::new(3).fit(&data, &RunContext::new(&backend).max_iters(3));
-    let path = tmp("corrupt.gkm");
-    model.save(&path).unwrap();
-    let mut bytes = std::fs::read(&path).unwrap();
-    bytes.truncate(bytes.len() / 2);
-    std::fs::write(&path, &bytes).unwrap();
-    assert!(FittedModel::load(&path).is_err());
-    std::fs::remove_file(&path).ok();
-    assert!(FittedModel::load(std::path::Path::new("/definitely/not/here.gkm")).is_err());
-}
+// Corruption rejection now lives in `tests/fuzz_model.rs`, which fuzzes
+// every section kind with seeded mutations instead of one truncation.
 
 #[test]
 fn keep_data_embeds_the_training_vectors() {
